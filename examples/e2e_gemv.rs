@@ -1,0 +1,183 @@
+//! END-TO-END driver: the full three-layer stack serving an
+//! MVDRAM-style int8 GEMV workload.
+//!
+//! Everything on the request path is Rust + PJRT — Python authored the
+//! graphs once at build time:
+//!
+//! 1. the L3 coordinator calibrates a bank through the AOT
+//!    `maj5_step_*` graphs (L2 JAX embedding the L1 Pallas kernels),
+//!    one executable call per Algorithm-1 iteration;
+//! 2. mass ECR measurement runs through the scanned `maj*_ecr_*`
+//!    graphs (the paper's 8,192-random-input battery);
+//! 3. a stream of GEMV requests is dynamically batched
+//!    (`coordinator::batcher`) and evaluated through the `pud_gemv`
+//!    graph with per-output bit-flip probabilities derived from the
+//!    measured residual column error rates — translating ECR into
+//!    end-task accuracy, calibrated vs uncalibrated;
+//! 4. Eq. 1 projects the DRAM-side GEMV throughput for both configs.
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-End.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_gemv
+//! ```
+
+use anyhow::Result;
+use pudtune::calib::algorithm::CalibParams;
+use pudtune::calib::lattice::FracConfig;
+use pudtune::config::device::DeviceConfig;
+use pudtune::config::system::SystemConfig;
+use pudtune::coordinator::batcher::Batcher;
+use pudtune::coordinator::engine::{ColumnBank, PjrtEngine};
+use pudtune::prelude::ThroughputModel;
+use pudtune::runtime::{buffers, Runtime};
+use pudtune::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+const M: usize = 64; // GEMV output rows
+const K: usize = 256; // GEMV inner dimension
+const COLS: usize = 1024; // calibrated bank columns
+const REQUESTS: usize = 64;
+const BATCH: usize = 8;
+
+fn main() -> Result<()> {
+    let rt = Arc::new(Runtime::open_default()?);
+    println!("PJRT platform: {}", rt.platform());
+    let cfg = DeviceConfig::default();
+    let engine = PjrtEngine::new(rt.clone(), cfg.clone());
+    let bank = ColumnBank::new(&cfg, COLS, 0x6E37);
+
+    // ---- 1. Calibrate through the AOT stack (L3 -> L2 -> L1).
+    let tune = FracConfig::pudtune([2, 1, 0]);
+    let base = FracConfig::baseline(3);
+    let t0 = Instant::now();
+    let calib = engine.calibrate(&bank, &tune, &CalibParams::paper())?;
+    println!(
+        "calibrated {COLS} columns in {:.2}s ({} PJRT step calls)",
+        t0.elapsed().as_secs_f64(),
+        engine.metrics.counter("pjrt.step.calls")
+    );
+
+    // ---- 2. Mass ECR via the scanned graphs.
+    let base_cal = base.uncalibrated(&cfg, COLS);
+    let ecr_base = engine.measure_ecr(&bank, &base_cal, 5, 0xE)?;
+    let ecr_tune = engine.measure_ecr(&bank, &calib, 5, 0xE)?;
+    println!(
+        "MAJ5 ECR: baseline {:.1}% -> PUDTune {:.1}%",
+        ecr_base.ecr() * 100.0,
+        ecr_tune.ecr() * 100.0
+    );
+
+    // Per-output flip probability: an output is wrong if any of the
+    // K/COLS... map each GEMV output lane onto a column group; a lane
+    // inherits the error rate of its columns (residual error count /
+    // samples, aggregated).
+    let flip_p = |rep: &pudtune::analysis::ecr::EcrReport| -> Vec<f32> {
+        let per_lane = COLS / M;
+        (0..M)
+            .map(|lane| {
+                let errs: u32 = (0..per_lane)
+                    .map(|i| rep.error_counts[lane * per_lane + i])
+                    .sum();
+                (errs as f64 / (rep.samples as f64 * per_lane as f64)).min(1.0) as f32
+            })
+            .collect()
+    };
+    let flips_base = flip_p(&ecr_base);
+    let flips_tune = flip_p(&ecr_tune);
+
+    // ---- 3. Serve batched GEMV requests through the pud_gemv graph.
+    let gemv = rt.load("pud_gemv_64x256")?;
+    let mut rng = Rng::new(0x9E37);
+    let w: Vec<f32> = (0..M * K).map(|_| rng.range(-128, 128) as f32).collect();
+    let w_lit = buffers::f32_array(&w, &[M as i64, K as i64])?;
+
+    let mut batcher: Batcher<Vec<f32>> = Batcher::new(BATCH);
+    let mut latencies = Vec::new();
+    let mut exact = [0usize; 2];
+    let mut served = 0usize;
+    let mut l2err = [0f64; 2];
+    let t_serve = Instant::now();
+    let mut process = |batch: Vec<Vec<f32>>,
+                       latencies: &mut Vec<f64>,
+                       exact: &mut [usize; 2],
+                       l2err: &mut [f64; 2],
+                       served: &mut usize|
+     -> Result<()> {
+        let tb = Instant::now();
+        for x in batch {
+            let x_lit = buffers::f32_vec(&x);
+            for (which, flips) in [(0usize, &flips_base), (1usize, &flips_tune)] {
+                let out = gemv.run(&[
+                    w_lit.clone(),
+                    x_lit.clone(),
+                    buffers::f32_vec(flips),
+                    buffers::u32_scalar(*served as u32),
+                ])?;
+                let ideal = buffers::to_f32_vec(&out[0])?;
+                let faulty = buffers::to_f32_vec(&out[1])?;
+                if ideal == faulty {
+                    exact[which] += 1;
+                }
+                l2err[which] += ideal
+                    .iter()
+                    .zip(&faulty)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+            }
+            *served += 1;
+        }
+        latencies.push(tb.elapsed().as_secs_f64());
+        Ok(())
+    };
+    for _ in 0..REQUESTS {
+        let x: Vec<f32> = (0..K).map(|_| rng.range(-128, 128) as f32).collect();
+        if let Some(batch) = batcher.push(x) {
+            process(batch, &mut latencies, &mut exact, &mut l2err, &mut served)?;
+        }
+    }
+    if let Some(batch) = batcher.flush() {
+        process(batch, &mut latencies, &mut exact, &mut l2err, &mut served)?;
+    }
+    let wall = t_serve.elapsed().as_secs_f64();
+    println!(
+        "\nserved {served} GEMV requests in {:.2}s ({:.1} req/s, {} batches, occupancy {:.0}%)",
+        wall,
+        served as f64 / wall,
+        batcher.batches_emitted,
+        batcher.mean_occupancy() * 100.0
+    );
+    println!(
+        "end-task accuracy (exact outputs): baseline {}/{} | PUDTune {}/{}",
+        exact[0], served, exact[1], served
+    );
+    println!(
+        "mean L2 output error:              baseline {:8.1} | PUDTune {:8.1}",
+        l2err[0] / served as f64,
+        l2err[1] / served as f64
+    );
+
+    // ---- 4. Eq. 1 projection of DRAM-side GEMV throughput.
+    let tput = ThroughputModel::new(&SystemConfig::paper());
+    let mulc = pudtune::pud::multiplier::mul8_cost();
+    let addc = pudtune::pud::adder::add8_cost();
+    // One int8 GEMV row = K MACs; a MAC = 8-bit MUL + 16-bit ADD (~2x).
+    let mac = pudtune::pud::graph::CircuitCost {
+        maj3: mulc.maj3 + 2 * addc.maj3,
+        maj5: mulc.maj5 + 2 * addc.maj5,
+        not_ops: mulc.not_ops + 2 * addc.not_ops,
+    };
+    for (label, fc, rep) in [("baseline", &base, &ecr_base), ("PUDTune ", &tune, &ecr_tune)] {
+        let cost = tput.circuit_cost_ns(&mac, fc);
+        let macs = tput.ops_per_sec(&cost, 1.0 - rep.ecr());
+        println!(
+            "  {label}: {:.1} M MAC/s -> {:.0} GEMV(64x256)/s system-wide",
+            macs / 1e6,
+            macs / (M * K) as f64
+        );
+    }
+    println!("\n{}", engine.metrics.render());
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: calibrate one subarray and watch the error-prone
+//! columns disappear.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pudtune::prelude::*;
+
+fn main() {
+    // A simulated DDR4 subarray: 1,024 columns with seeded
+    // process-variation in the sense amplifiers.
+    let cfg = DeviceConfig::default();
+    let mut sys = SystemConfig::small();
+    sys.cols = 1024;
+    let mut sub = Subarray::new(&cfg, &sys, /*seed=*/ 7);
+    let mut engine = NativeEngine::new(cfg.clone());
+
+    // The conventional MAJ5 implementation: one Frac'd neutral row plus
+    // constant 0/1 rows (paper Fig. 1a, B_{3,0,0}).
+    let baseline = FracConfig::baseline(3);
+    let base_cal = baseline.uncalibrated(&cfg, sub.cols);
+    let ecr_base = engine.measure_ecr(&mut sub, &base_cal, 5, 8192);
+    println!(
+        "baseline  {}: ECR {:5.1}%  ({} of {} columns error-prone)",
+        baseline.label(),
+        ecr_base.ecr() * 100.0,
+        ecr_base.error_prone(),
+        ecr_base.cols()
+    );
+
+    // PUDTune: identify per-column calibration data with Algorithm 1
+    // (20 iterations x 512 random samples, the paper's settings), then
+    // measure again.
+    let tune = FracConfig::pudtune([2, 1, 0]);
+    let calib = engine.calibrate(&mut sub, &tune, &CalibParams::paper());
+    let ecr_tune = engine.measure_ecr(&mut sub, &calib, 5, 8192);
+    println!(
+        "PUDTune   {}: ECR {:5.1}%  ({} of {} columns error-prone)",
+        tune.label(),
+        ecr_tune.ecr() * 100.0,
+        ecr_tune.error_prone(),
+        ecr_tune.cols()
+    );
+
+    // Eq. 1: error-free columns / MAJ5 latency = throughput.
+    let tput = ThroughputModel::new(&SystemConfig::paper());
+    let ops_base = tput.ops_per_sec(&tput.majx(5, &baseline), 1.0 - ecr_base.ecr());
+    let ops_tune = tput.ops_per_sec(&tput.majx(5, &tune), 1.0 - ecr_tune.ecr());
+    println!(
+        "\nprojected full-system MAJ5 throughput (4ch x 16 banks x 65,536 cols):"
+    );
+    println!("  baseline: {}", pudtune::util::table::fmt_ops(ops_base));
+    println!("  PUDTune:  {}", pudtune::util::table::fmt_ops(ops_tune));
+    println!("  gain:     {:.2}x (paper: 1.81x)", ops_tune / ops_base);
+}

@@ -1,0 +1,63 @@
+//! Thermal + aging reliability study (the Fig. 6 campaign).
+//!
+//! Calibrates at nominal temperature, then sweeps the die from 40 °C
+//! to 100 °C and ages the device for a simulated week, counting *new*
+//! error-prone columns relative to calibration time.
+//!
+//! ```bash
+//! cargo run --release --example thermal_study
+//! ```
+
+use pudtune::prelude::*;
+
+fn main() {
+    let cfg = DeviceConfig::default();
+    let mut sys = SystemConfig::small();
+    sys.cols = 8192;
+    let mut engine = NativeEngine::new(cfg.clone());
+    let mut sub = Subarray::new(&cfg, &sys, 0x7E3);
+    let tune = FracConfig::pudtune([2, 1, 0]);
+
+    println!("calibrating at {:.0} C...", cfg.t_cal);
+    let calib = engine.calibrate(&mut sub, &tune, &CalibParams::paper());
+    let reference = engine.measure_ecr(&mut sub, &calib, 5, 32768); // burn-in depth
+    println!(
+        "reference ECR: {:.2}% ({} columns)\n",
+        reference.ecr() * 100.0,
+        reference.cols()
+    );
+
+    println!("temperature sweep (paper Fig. 6a: new ECR stays below 0.14%):");
+    println!("  {:>6}  {:>8}  {:>8}", "T (C)", "ECR", "new ECR");
+    for t in [40.0, 50.0, 60.0, 70.0, 80.0, 90.0, 100.0] {
+        sub.set_temperature(t);
+        let rep = engine.measure_ecr(&mut sub, &calib, 5, 8192);
+        println!(
+            "  {:>6.0}  {:>7.2}%  {:>7.3}%",
+            t,
+            rep.ecr() * 100.0,
+            rep.new_ecr_vs(&reference) * 100.0
+        );
+    }
+    sub.set_temperature(cfg.t_cal);
+
+    println!("\naging sweep (paper Fig. 6b: new ECR stays below 0.27% over a week):");
+    println!("  {:>6}  {:>8}  {:>8}", "day", "ECR", "new ECR");
+    for day in 0..=7 {
+        if day > 0 {
+            sub.advance_time(24.0);
+        }
+        let rep = engine.measure_ecr(&mut sub, &calib, 5, 8192);
+        println!(
+            "  {:>6}  {:>7.2}%  {:>7.3}%",
+            day,
+            rep.ecr() * 100.0,
+            rep.new_ecr_vs(&reference) * 100.0
+        );
+    }
+
+    println!("\nre-calibration after the campaign restores the reference ECR:");
+    let recal = engine.calibrate(&mut sub, &tune, &CalibParams::paper());
+    let rep = engine.measure_ecr(&mut sub, &recal, 5, 8192);
+    println!("  post-recalibration ECR: {:.2}%", rep.ecr() * 100.0);
+}

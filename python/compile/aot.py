@@ -1,0 +1,215 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts for Rust.
+
+Run once at build time (``make artifacts``). Emits, for every graph in
+`model.py` and every configured batch geometry, an ``artifacts/*.hlo.txt``
+file plus a ``manifest.json`` describing each artifact's exact input and
+output signature, and ``physics.json`` with the shared model constants.
+
+HLO **text** — not ``HloModuleProto.serialize()`` — is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids that the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Everything is lowered with
+``return_tuple=True`` and unwrapped with ``to_tuple*()`` on the Rust side.
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--full]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+# PRNG implementation for the sampling graphs. threefry2x32 is jax's
+# default but costs ~30 scalar ops per 32 random bits; 'rbg' lowers to
+# the native rng-bit-generator HLO (Philox) which the CPU PJRT backend
+# executes ~an order of magnitude faster. Quality is ample for random
+# test patterns + noise (EXPERIMENTS.md §Perf, L2 iteration log).
+jax.config.update("jax_default_prng_impl", "rbg")
+
+from . import model, physics
+from .kernels import frac as frac_k
+from .kernels import simra as simra_k
+
+
+def to_hlo_text(lowered):
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+F32, I32, U32 = jnp.float32, jnp.int32, jnp.uint32
+
+
+def majx_step_specs(n):
+    """Input signature of model.make_majx_step graphs."""
+    return [
+        ("seed", (), U32),
+        ("levels", (n,), I32),
+        ("bits_table", (physics.LATTICE_LEVELS, physics.CALIB_ROWS), F32),
+        ("fracs", (physics.CALIB_ROWS,), F32),
+        ("r", (), F32),
+        ("const_q", (), F32),
+        ("thr", (n,), F32),
+        ("sigma_n", (), F32),
+        ("tau", (), F32),
+        ("update", (), F32),
+    ]
+
+
+def ecr_scan_specs(n):
+    """Input signature of model.make_ecr_scan graphs."""
+    return [
+        ("seed", (), U32),
+        ("levels", (n,), I32),
+        ("bits_table", (physics.LATTICE_LEVELS, physics.CALIB_ROWS), F32),
+        ("fracs", (physics.CALIB_ROWS,), F32),
+        ("r", (), F32),
+        ("const_q", (), F32),
+        ("thr", (n,), F32),
+        ("sigma_n", (), F32),
+    ]
+
+
+def majx_eval_specs(s, m, n):
+    return [
+        ("input_bits", (s, m, n), F32),
+        ("calib_q", (n,), F32),
+        ("thr", (n,), F32),
+        ("noise", (s, n), F32),
+    ]
+
+
+def gemv_specs(m_rows, k_cols):
+    return [
+        ("w", (m_rows, k_cols), F32),
+        ("x", (k_cols,), F32),
+        ("flip_p", (m_rows,), F32),
+        ("seed", (), U32),
+    ]
+
+
+def build_catalog(full):
+    """(name, fn, input_specs, output_names, meta) for every artifact.
+
+    Geometry tiers:
+      small — pytest / cargo-test cross-validation shapes;
+      std   — default experiment shapes (single-core friendly);
+      full  — the paper's 65,536-column subarray (--full only).
+    """
+    cat = []
+    col_tiers = [("small", 1024, 128, 8), ("std", 16384, 512, 16)]
+    if full:
+        col_tiers.append(("full", 65536, 512, 16))
+    for m in (3, 5):
+        for tier, n, s, chunks in col_tiers:
+            cat.append((
+                f"maj{m}_step_{tier}",
+                model.make_majx_step(m, s, n),
+                majx_step_specs(n),
+                ["new_levels", "bias", "err"],
+                {"m": m, "samples": s, "cols": n},
+            ))
+            cat.append((
+                f"maj{m}_ecr_{tier}",
+                model.make_ecr_scan(m, chunks, s, n),
+                ecr_scan_specs(n),
+                ["err_total"],
+                {"m": m, "samples": s, "cols": n, "chunks": chunks,
+                 "total_samples": s * chunks},
+            ))
+    # Cross-validation graph: explicit inputs, no RNG, small only.
+    cat.append((
+        "maj5_eval_small",
+        model.majx_eval,
+        majx_eval_specs(32, 5, 256),
+        ["bits"],
+        {"m": 5, "samples": 32, "cols": 256},
+    ))
+    cat.append((
+        "maj3_eval_small",
+        model.majx_eval,
+        majx_eval_specs(32, 3, 256),
+        ["bits"],
+        {"m": 3, "samples": 32, "cols": 256},
+    ))
+    cat.append((
+        "pud_gemv_64x256",
+        model.make_pud_gemv(64, 256),
+        gemv_specs(64, 256),
+        ["y_ideal", "y_faulty"],
+        {"rows": 64, "cols": 256},
+    ))
+    return cat
+
+
+def physics_dict():
+    return {
+        "cc_ff": physics.CC_FF,
+        "cb_ff": physics.CB_FF,
+        "v_pre": physics.V_PRE,
+        "simra_rows": physics.SIMRA_ROWS,
+        "frac_r": physics.FRAC_R,
+        "calib_rows": physics.CALIB_ROWS,
+        "lattice_levels": physics.LATTICE_LEVELS,
+        "sigma_sa": physics.SIGMA_SA,
+        "tail_weight": physics.TAIL_WEIGHT,
+        "tail_ratio": physics.TAIL_RATIO,
+        "sigma_noise": physics.SIGMA_NOISE,
+        "bias_tau": physics.BIAS_TAU,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also emit the 65,536-column paper-scale artifacts")
+    ap.add_argument("--tiled", action="store_true",
+                    help="keep the TPU BlockSpec grid in the lowered HLO "
+                         "(default: single-tile for the CPU PJRT backend)")
+    args = ap.parse_args()
+
+    # Production artifacts run on the CPU PJRT backend where the BlockSpec
+    # grid is pure loop overhead; keep kernels single-tile unless asked.
+    simra_k.SINGLE_TILE = not args.tiled
+    frac_k.SINGLE_TILE = not args.tiled
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"artifacts": {}, "tiled": bool(args.tiled)}
+    for name, fn, in_specs, out_names, meta in build_catalog(args.full):
+        example = [spec(shape, dt) for _, shape, dt in in_specs]
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"name": nm, "shape": list(shape), "dtype": dt.__name__}
+                for nm, shape, dt in in_specs
+            ],
+            "outputs": out_names,
+            "meta": meta,
+        }
+        print(f"  {name}: {len(text)} chars")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    with open(os.path.join(args.out, "physics.json"), "w") as f:
+        json.dump(physics_dict(), f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: multi-level Frac charging of calibration rows.
+
+PUDTune's key insight (§III-C): applying f Frac operations to a cell that
+initially stores bit b leaves it at the intermediate charge
+
+    q_f(b) = 0.5 + (b - 0.5) * r**f,
+
+so different per-row Frac counts T_{x,y,z} turn 3 stored bits per column
+into one of 2^3 = 8 analog offsets. This kernel evaluates that charge for
+a (CALIB_ROWS, N) tile of stored bits given per-row Frac counts.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import physics
+
+BLOCK_N = 512
+
+# See kernels/simra.py: production CPU artifacts lower with one tile.
+SINGLE_TILE = False
+
+
+def _frac_kernel(bits_ref, decay_ref, out_ref):
+    """q = 0.5 + (b - 0.5) * r^f, with r^f precomputed per row."""
+    out_ref[...] = 0.5 + (bits_ref[...] - 0.5) * decay_ref[...]
+
+
+def frac_rows(bits, fracs, r=physics.FRAC_R):
+    """Charge of calibration rows after per-row Frac sequences.
+
+    Args:
+      bits:  f32[R, N] — stored calibration bits (0.0 or 1.0).
+      fracs: f32[R]    — Frac count applied to each row (the x, y, z of
+             a T_{x,y,z} configuration).
+      r:     Frac convergence ratio.
+
+    Returns:
+      f32[R, N] cell charges in [0, 1].
+    """
+    rrows, n = bits.shape
+    decay = jnp.power(jnp.float32(r), fracs.astype(jnp.float32))
+    decay2d = jnp.broadcast_to(decay[:, None], (rrows, n))
+    if SINGLE_TILE or n % BLOCK_N != 0:
+        grid = (1,)
+        bn = n
+    else:
+        grid = (n // BLOCK_N,)
+        bn = BLOCK_N
+    return pl.pallas_call(
+        _frac_kernel,
+        out_shape=jax.ShapeDtypeStruct((rrows, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rrows, bn), lambda j: (0, j)),
+            pl.BlockSpec((rrows, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((rrows, bn), lambda j: (0, j)),
+        interpret=True,
+    )(bits, decay2d)

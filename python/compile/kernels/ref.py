@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+Used by pytest/hypothesis to validate every kernel against a
+straight-line jax.numpy implementation of the same analog model, and by
+the L2 graphs' own unit tests.
+"""
+
+import jax.numpy as jnp
+
+from .. import physics
+
+
+def charge_sense_ref(ksum, thr, noise, rows=physics.SIMRA_ROWS):
+    """Reference SA decision: voltage divider + noisy compare."""
+    denom = rows * physics.CC_FF + physics.CB_FF
+    v = (physics.CC_FF * ksum + physics.CB_FF * physics.V_PRE) / denom
+    return (v + noise > thr[None, :]).astype(jnp.float32)
+
+
+def frac_rows_ref(bits, fracs, r=physics.FRAC_R):
+    """Reference multi-level Frac charge."""
+    decay = jnp.power(jnp.float32(r), fracs.astype(jnp.float32))
+    return 0.5 + (bits - 0.5) * decay[:, None]
+
+
+def majx_ref(input_bits, calib_q, thr, noise, rows=physics.SIMRA_ROWS):
+    """Reference MAJX: explicit operand bits -> SA decisions.
+
+    input_bits: f32[S, M, N] operand bits; calib_q: f32[N] total
+    non-operand charge; returns f32[S, N].
+    """
+    ksum = input_bits.sum(axis=1) + calib_q[None, :]
+    return charge_sense_ref(ksum, thr, noise, rows=rows)

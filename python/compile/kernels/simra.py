@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: SiMRA charge-sharing + sense-amplifier decision.
+
+This is the compute hot-spot of the whole reproduction: for every
+(sample, column) pair, share charge across the 8 opened cells of the
+column, add the per-operation noise, and compare against that column's
+sense-amplifier threshold.
+
+The kernel is written tile-wise with a BlockSpec grid over (samples,
+columns). On a real TPU the natural tiling is (8, 128)-multiples resident
+in VMEM with the whole pass fused (one HBM read of the operand count, one
+write of the output bits) — see DESIGN.md §Hardware-Adaptation. Here it
+is lowered with ``interpret=True`` so the resulting HLO runs on any PJRT
+backend, including the Rust CPU client.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import physics
+
+# Tile sizes for the (samples, columns) grid. 8 x 512 f32 tiles keep the
+# working set tiny (~16 KiB/tile) and map onto TPU-native (8, 128) lanes.
+BLOCK_S = 8
+BLOCK_N = 512
+
+# When True, lower with a single full-array tile instead of the BlockSpec
+# grid. The grid expresses the HBM<->VMEM schedule for a real TPU; under
+# interpret=True on the CPU PJRT backend the grid only adds loop overhead,
+# so `aot.py` flips this for production artifacts (see DESIGN.md §7).
+SINGLE_TILE = False
+
+
+def _sense_kernel(ksum_ref, thr_ref, noise_ref, out_ref, *, rows):
+    """One (BLOCK_S, BLOCK_N) tile: voltage divider + noisy compare.
+
+    ksum_ref:  summed cell charge per (sample, column), cell-equivalents.
+    thr_ref:   per-column SA threshold (broadcast over samples).
+    noise_ref: per-(sample, column) operation noise.
+    out_ref:   0.0/1.0 SA decisions.
+    """
+    denom = rows * physics.CC_FF + physics.CB_FF
+    v = (physics.CC_FF * ksum_ref[...] + physics.CB_FF * physics.V_PRE) / denom
+    out_ref[...] = (v + noise_ref[...] > thr_ref[...]).astype(jnp.float32)
+
+
+def charge_sense(ksum, thr, noise, rows=physics.SIMRA_ROWS):
+    """SA output bits for an (S, N) batch of SiMRA operations.
+
+    Args:
+      ksum:  f32[S, N] — total cell charge on each column per sample
+             (operand ones count + calibration charge).
+      thr:   f32[N]    — per-column effective SA thresholds.
+      noise: f32[S, N] — per-operation noise realisations.
+      rows:  number of rows opened by the SiMRA (denominator of the
+             charge-sharing divider).
+
+    Returns:
+      f32[S, N] of {0.0, 1.0} sense decisions.
+    """
+    s, n = ksum.shape
+    if SINGLE_TILE or s % BLOCK_S != 0 or n % BLOCK_N != 0:
+        # One full-array tile: for CPU-targeted artifacts and odd test
+        # shapes (see SINGLE_TILE above).
+        bs, bn = s, n
+    else:
+        bs, bn = BLOCK_S, BLOCK_N
+    grid = (s // bs, n // bn)
+    thr2d = jnp.broadcast_to(thr[None, :], (1, n))
+    return pl.pallas_call(
+        lambda a, b, c, o: _sense_kernel(a, b, c, o, rows=rows),
+        out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bs, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bs, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(ksum, thr2d, noise)

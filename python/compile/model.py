@@ -1,0 +1,190 @@
+"""L2: JAX compute graphs for PUDTune calibration and ECR measurement.
+
+Each public function here is a pure jax function that `aot.py` lowers
+once to HLO text; the Rust coordinator loads and executes the compiled
+artifacts on its PJRT CPU client — Python is never on the request path.
+
+All graphs call the L1 Pallas kernels (`kernels.simra.charge_sense`,
+`kernels.frac.frac_rows`) so the kernels lower into the same HLO.
+
+Graph inventory (see DESIGN.md §5):
+
+  majx_eval    — explicit-input MAJX evaluation (no RNG). Used by the
+                 Rust<->Python cross-validation test: the native Rust
+                 simulator must produce bit-identical outputs.
+  majx_step    — one Algorithm-1 iteration, fused: draw S random input
+                 patterns per column, apply the column's calibration
+                 offsets (bits -> Frac multi-level charges), sense,
+                 compute the per-column bias, and step the calibration
+                 level indices. One PJRT call per iteration.
+  ecr_scan     — mass error measurement: C chunks of S random patterns,
+                 accumulated error counts per column (lax.scan keeps the
+                 HLO small and the working set bounded).
+  pud_gemv     — int8-quantised GEMV with per-column error injection,
+                 used by the end-to-end example to translate column error
+                 rates into end-task accuracy.
+
+Conventions:
+  * the per-column *state* is a level index into an offset lattice of
+    2^3 = 8 bit-triples (``bits_table`` f32[8, 3], rows sorted by total
+    calibration charge, computed by the Rust side — calib::lattice);
+  * thresholds ``thr`` arrive already shifted for temperature/aging
+    (the Rust dram model owns the variation field);
+  * the majority operand count m (3 or 5) and the batch geometry are
+    baked into each artifact at lowering time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import physics
+from .kernels import frac as frac_k
+from .kernels import simra as simra_k
+
+
+def _majority_threshold(m):
+    return (m + 1) // 2
+
+
+def _draw_counts(key, m, s, n):
+    """Per-(sample, column) count of '1' operand bits, k ~ Binomial(m, 1/2).
+
+    Drawn as an m-bit random word per element + popcount so no [m, S, N]
+    intermediate is materialised.
+    """
+    word = jax.random.randint(key, (s, n), 0, 2 ** m, dtype=jnp.uint32)
+    k = jnp.zeros((s, n), jnp.uint32)
+    for b in range(m):
+        k = k + ((word >> b) & 1)
+    return k.astype(jnp.float32)
+
+
+def _calib_charge(levels, bits_table, fracs, r):
+    """Total calibration charge per column from level indices.
+
+    levels: i32[N] in [0, 8); bits_table: f32[8, 3]; fracs: f32[3].
+    Returns f32[N].
+    """
+    bits = bits_table[levels]                    # [N, 3] gather
+    q_rows = frac_k.frac_rows(bits.T, fracs, r)  # [3, N] pallas kernel
+    return q_rows.sum(axis=0)
+
+
+def majx_eval(input_bits, calib_q, thr, noise):
+    """Explicit MAJX evaluation (cross-validation path, no RNG).
+
+    input_bits: f32[S, M, N]; calib_q: f32[N] total non-operand charge;
+    thr: f32[N]; noise: f32[S, N]. Returns (bits f32[S, N],).
+    """
+    ksum = input_bits.sum(axis=1) + calib_q[None, :]
+    return (simra_k.charge_sense(ksum, thr, noise),)
+
+
+def make_majx_step(m, s, n):
+    """Build the fused Algorithm-1 iteration graph for MAJ-m at (S, N)."""
+
+    maj_t = float(_majority_threshold(m))
+
+    def majx_step(seed, levels, bits_table, fracs, r, const_q, thr,
+                  sigma_n, tau, update):
+        """One calibration iteration (paper Algorithm 1, lines 3-12).
+
+        seed u32[]: RNG seed for this iteration's random input patterns.
+        levels i32[N]: per-column lattice level indices (state).
+        bits_table f32[8,3], fracs f32[3], r f32[]: offset lattice spec.
+        const_q f32[]: charge of constant non-operand rows (0.0 for MAJ5,
+            1.0 for MAJ3 whose 8-row SiMRA also opens a 0-row and 1-row).
+        thr f32[N]: effective per-column SA thresholds.
+        sigma_n f32[]: per-operation noise std-dev.
+        tau f32[]: bias threshold of Algorithm 1.
+        update f32[]: 1.0 -> step the levels, 0.0 -> measure only.
+
+        Returns (new_levels i32[N], bias f32[N], err i32[N]).
+        """
+        key = jax.random.PRNGKey(seed)
+        kk, kn = jax.random.split(key)
+        k = _draw_counts(kk, m, s, n)
+        noise = sigma_n * jax.random.normal(kn, (s, n), jnp.float32)
+        q_extra = _calib_charge(levels, bits_table, fracs, r) + const_q
+        bits = simra_k.charge_sense(k + q_extra[None, :], thr, noise)
+        maj = (k >= maj_t).astype(jnp.float32)
+        err = jnp.sum((bits != maj).astype(jnp.int32), axis=0)
+        bias = jnp.mean(bits - maj, axis=0)
+        # bias > tau: the column outputs too many 1s -> its SA threshold
+        # sits low -> reduce the calibration charge (decrement level),
+        # and vice versa (paper Algorithm 1 lines 6-11). Columns still
+        # showing any errors are additionally nudged along the bias
+        # direction: at 512 samples a sub-threshold bias is still a
+        # reliable direction signal, and without the nudge columns stall
+        # on "just inside the margin" levels that the 8,192-sample ECR
+        # test catches (mirrors calib::algorithm on the Rust side).
+        # Levels clamp to the lattice bounds.
+        has_err = err > 0
+        dec = (bias > tau) | (has_err & (bias > 0.0))
+        inc = (bias < -tau) | (has_err & (bias < 0.0))
+        step = inc.astype(jnp.int32) - dec.astype(jnp.int32)
+        stepped = jnp.clip(levels + step, 0, physics.LATTICE_LEVELS - 1)
+        new_levels = jnp.where(update > 0, stepped, levels)
+        return new_levels, bias, err
+
+    return majx_step
+
+
+def make_ecr_scan(m, chunks, s, n):
+    """Build the mass-ECR graph: chunks x S random patterns per column."""
+
+    maj_t = float(_majority_threshold(m))
+
+    def ecr_scan(seed, levels, bits_table, fracs, r, const_q, thr, sigma_n):
+        """Total per-column error counts over ``chunks * s`` patterns.
+
+        Returns (err_total i32[N],).
+        """
+        q_extra = _calib_charge(levels, bits_table, fracs, r) + const_q
+
+        def body(carry, i):
+            key = jax.random.PRNGKey(seed + i)
+            kk, kn = jax.random.split(key)
+            k = _draw_counts(kk, m, s, n)
+            noise = sigma_n * jax.random.normal(kn, (s, n), jnp.float32)
+            bits = simra_k.charge_sense(k + q_extra[None, :], thr, noise)
+            maj = (k >= maj_t).astype(jnp.float32)
+            err = jnp.sum((bits != maj).astype(jnp.int32), axis=0)
+            return carry + err, None
+
+        init = jnp.zeros((n,), jnp.int32)
+        total, _ = jax.lax.scan(body, init, jnp.arange(chunks, dtype=jnp.uint32))
+        return (total,)
+
+    return ecr_scan
+
+
+def make_pud_gemv(m_rows, k_cols):
+    """Build the e2e GEMV graph: ideal int8 GEMV + error injection.
+
+    The end-to-end example maps an MVDRAM-style bit-serial GEMV onto the
+    calibrated device: each output element is computed by majority
+    circuits on a group of columns, so a column's residual error rate
+    translates into bit flips of the accumulated partial sums. The graph
+    returns both the ideal product (MXU path on TPU) and an
+    error-injected product given per-output flip probabilities, letting
+    the driver report end-task accuracy for calibrated vs uncalibrated
+    devices.
+    """
+
+    def pud_gemv(w, x, flip_p, seed):
+        """w: f32[M, K] int8-valued; x: f32[K] int8-valued;
+        flip_p: f32[M] probability a given output suffers a bit flip;
+        Returns (y_ideal f32[M], y_faulty f32[M])."""
+        y = jnp.dot(w, x)
+        key = jax.random.PRNGKey(seed)
+        kf, kb = jax.random.split(key)
+        # Accumulators are 2*8 + log2(K) bits wide; model one flip at a
+        # uniformly-drawn bit position of the magnitude.
+        flips = jax.random.uniform(kf, (m_rows,)) < flip_p
+        bitpos = jax.random.randint(kb, (m_rows,), 0, 16, dtype=jnp.int32)
+        delta = jnp.where(flips, jnp.exp2(bitpos.astype(jnp.float32)), 0.0)
+        sign = jnp.where(y >= 0, 1.0, -1.0)
+        return y, y + sign * delta
+
+    return pud_gemv

@@ -1,0 +1,66 @@
+"""Shared analog-physics constants for the PUD charge-sharing model.
+
+Single source of truth for the build-time (JAX/Pallas) side. `aot.py`
+exports these to ``artifacts/physics.json`` so the Rust side can assert it
+was built against the same model (see ``rust/src/config/device.rs``).
+
+All voltages are expressed in units of V_DD.
+
+The constants are pinned by the paper (PUDTune, §II-C):
+  * a cell capacitor of 30 fF and a bitline of 270 fF give a single-cell
+    read voltage of (30·1 + 270·0.5)/300 = 0.55 V_DD;
+  * MAJ5(1,1,1,0,0) with an ideally-neutral calibration charge of 1.5
+    cell-equivalents under 8-row SiMRA gives
+    (30·4.5 + 270·0.5)/(8·30 + 270) = 0.529 V_DD.
+Both checks are asserted in ``python/tests/test_physics.py`` and in the
+Rust unit tests.
+"""
+
+# Cell capacitor, femtofarads (paper §II-C).
+CC_FF = 30.0
+# Bitline capacitance, femtofarads (paper §II-C).
+CB_FF = 270.0
+# Bitline precharge voltage, in V_DD units.
+V_PRE = 0.5
+# Rows opened by one SiMRA. MAJ5 = 5 operands + 3 calibration rows;
+# MAJ3 = 3 operands + 3 calibration rows + 2 constant rows (0 and 1).
+SIMRA_ROWS = 8
+
+# Frac convergence ratio: one Frac pulls a cell charge toward neutral,
+#   q <- 0.5 + (q - 0.5) * FRAC_R.
+# FracDRAM (cited in §III-C) reports 6-10 Fracs to reach the neutral
+# state; r = 0.65 gives 0.65**8 ~= 0.032 of the initial deviation left
+# after 8 Fracs, consistent with that observation.
+FRAC_R = 0.65
+
+# Number of calibration rows reserved per subarray (paper §III-D: three
+# rows, 0.6% of a 512-row subarray).
+CALIB_ROWS = 3
+
+# Offset lattice size: 2**CALIB_ROWS bit combinations per column.
+LATTICE_LEVELS = 2 ** CALIB_ROWS
+
+
+def bitline_voltage(total_charge, rows=SIMRA_ROWS):
+    """Charge-sharing voltage (V_DD units) for `rows`-row SiMRA.
+
+    ``total_charge`` is the summed per-cell charge (cell-equivalents,
+    each in [0, 1]) over the opened rows of one column.
+    """
+    return (CC_FF * total_charge + CB_FF * V_PRE) / (rows * CC_FF + CB_FF)
+
+
+def frac_charge(initial, n_fracs, r=FRAC_R):
+    """Cell charge after ``n_fracs`` Frac operations from ``initial``."""
+    return 0.5 + (initial - 0.5) * (r ** n_fracs)
+
+
+# Default variation-model parameters (fitted once against Table I's
+# baseline by `pudtune fit-model`; see EXPERIMENTS.md §Model-Fit).
+# These are *runtime inputs* to the AOT graphs, not baked into HLO —
+# they live here so both sides share the same defaults.
+SIGMA_SA = 0.0284       # per-column SA threshold std-dev (core component)
+TAIL_WEIGHT = 0.10      # heavy-tail mixture weight of the variation field
+TAIL_RATIO = 2.5        # tail component std-dev ratio vs core
+SIGMA_NOISE = 0.0020    # per-operation bitline/SA noise std-dev
+BIAS_TAU = 0.02         # Algorithm-1 bias threshold (|bias| > tau -> step)

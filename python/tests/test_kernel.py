@@ -1,0 +1,138 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, seeds and parameter ranges; every case
+asserts exact agreement (the kernels are elementwise compare/affine
+ops — no tolerance needed beyond float equality of identical formulas).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import physics
+from compile.kernels import frac as frac_k
+from compile.kernels import ref
+from compile.kernels import simra as simra_k
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- simra
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.sampled_from([1, 3, 8, 16]),
+    n=st.sampled_from([4, 512, 1024, 640]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_charge_sense_matches_ref(s, n, seed):
+    k1, k2, k3 = (seed % 1000, seed % 997, seed % 991)
+    ksum = rand(k1, s, n) * 8.0
+    thr = 0.4 + 0.2 * rand(k2, n)
+    noise = 0.01 * (rand(k3, s, n) - 0.5)
+    got = simra_k.charge_sense(ksum, thr, noise)
+    want = ref.charge_sense_ref(ksum, thr, noise)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_charge_sense_blocked_equals_single_tile():
+    # The BlockSpec grid path and the single-tile path must agree.
+    ksum = rand(1, 16, 1024) * 8.0
+    thr = 0.45 + 0.1 * rand(2, 1024)
+    noise = 0.002 * (rand(3, 16, 1024) - 0.5)
+    tiled = simra_k.charge_sense(ksum, thr, noise)  # divisible -> grid
+    old = simra_k.SINGLE_TILE
+    try:
+        simra_k.SINGLE_TILE = True
+        single = simra_k.charge_sense(ksum, thr, noise)
+    finally:
+        simra_k.SINGLE_TILE = old
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(single))
+
+
+def test_charge_sense_paper_voltages():
+    # MAJ5(1,1,1,0,0) + neutral 1.5 must sit at 0.529 V_DD: above a
+    # 0.5 threshold, below a 0.535 threshold.
+    ksum = jnp.full((1, 2), 3.0 + 1.5)
+    thr = jnp.array([0.5, 0.535], jnp.float32)
+    noise = jnp.zeros((1, 2), jnp.float32)
+    out = np.asarray(simra_k.charge_sense(ksum, thr, noise))
+    assert out.tolist() == [[1.0, 0.0]]
+
+
+def test_charge_sense_threshold_is_strict():
+    # Exactly at threshold -> 0 (strict compare, matches Rust `>`).
+    ksum = jnp.full((1, 1), 1.5)  # V = 0.5 under 8-row SiMRA... compute
+    v = physics.bitline_voltage(1.5)
+    thr = jnp.array([v], jnp.float32)
+    noise = jnp.zeros((1, 1), jnp.float32)
+    out = np.asarray(simra_k.charge_sense(ksum, thr, noise))
+    assert out[0, 0] == 0.0
+
+
+# ----------------------------------------------------------------- frac
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.sampled_from([8, 512, 1000]),
+    fx=st.integers(0, 6),
+    fy=st.integers(0, 6),
+    fz=st.integers(0, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_frac_rows_matches_ref(n, fx, fy, fz, seed):
+    bits = (rand(seed % 4093, 3, n) > 0.5).astype(jnp.float32)
+    fracs = jnp.array([fx, fy, fz], jnp.float32)
+    got = frac_k.frac_rows(bits, fracs)
+    want = ref.frac_rows_ref(bits, fracs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_frac_rows_known_values():
+    bits = jnp.array([[1.0, 0.0], [1.0, 0.0], [1.0, 0.0]], jnp.float32)
+    fracs = jnp.array([0.0, 1.0, 2.0], jnp.float32)
+    out = np.asarray(frac_k.frac_rows(bits, fracs))
+    r = physics.FRAC_R
+    np.testing.assert_allclose(
+        out,
+        [[1.0, 0.0],
+         [0.5 + 0.5 * r, 0.5 - 0.5 * r],
+         [0.5 + 0.5 * r * r, 0.5 - 0.5 * r * r]],
+        rtol=1e-6,
+    )
+
+
+def test_frac_converges_to_neutral():
+    bits = jnp.ones((3, 4), jnp.float32)
+    fracs = jnp.array([10.0, 10.0, 10.0], jnp.float32)
+    out = np.asarray(frac_k.frac_rows(bits, fracs))
+    assert np.all(np.abs(out - 0.5) < 0.01)
+
+
+# ----------------------------------------------------------------- majx
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([3, 5]),
+    s=st.sampled_from([4, 16]),
+    n=st.sampled_from([64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_majx_ref_majority_semantics(m, s, n, seed):
+    # With ideal thresholds, zero noise and neutral calibration the
+    # reference MAJX is exactly the boolean majority.
+    key = jax.random.PRNGKey(seed % 65521)
+    bits = jax.random.bernoulli(key, 0.5, (s, m, n)).astype(jnp.float32)
+    const_q = {5: 0.0, 3: 1.0}[m]
+    calib_q = jnp.full((n,), 1.5 + const_q, jnp.float32)
+    thr = jnp.full((n,), 0.5, jnp.float32)
+    noise = jnp.zeros((s, n), jnp.float32)
+    out = np.asarray(ref.majx_ref(bits, calib_q, thr, noise))
+    want = (np.asarray(bits).sum(axis=1) >= (m + 1) // 2).astype(np.float32)
+    np.testing.assert_array_equal(out, want)

@@ -1,0 +1,164 @@
+"""L2 graph semantics: calibration step, ECR scan, GEMV."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model, physics
+
+jax.config.update("jax_platform_name", "cpu")
+
+N = 256
+S = 64
+
+
+def lattice_t210():
+    """Mirror calib::lattice::OffsetLattice::build for T_{2,1,0}."""
+    r = physics.FRAC_R
+    fracs = [2, 1, 0]
+    combos = []
+    for c in range(8):
+        bits = [(c >> i) & 1 for i in range(3)]
+        q = sum(0.5 + (b - 0.5) * r ** f for b, f in zip(bits, fracs))
+        combos.append((q, bits))
+    combos.sort(key=lambda x: x[0])
+    table = jnp.array([b for _, b in combos], jnp.float32)
+    qs = [q for q, _ in combos]
+    return table, jnp.array([2.0, 1.0, 0.0], jnp.float32), qs
+
+
+def run_step(levels, thr, seed=7, sigma_n=0.0, tau=0.02, update=1.0, m=5):
+    table, fracs, _ = lattice_t210()
+    fn = model.make_majx_step(m, S, N)
+    return fn(
+        jnp.uint32(seed),
+        levels,
+        table,
+        fracs,
+        jnp.float32(physics.FRAC_R),
+        jnp.float32(0.0 if m == 5 else 1.0),
+        thr,
+        jnp.float32(sigma_n),
+        jnp.float32(tau),
+        jnp.float32(update),
+    )
+
+
+def test_ideal_columns_have_no_errors_and_keep_levels():
+    table, fracs, qs = lattice_t210()
+    neutral = int(np.argmin([abs(q - 1.5) for q in qs]))
+    levels = jnp.full((N,), neutral, jnp.int32)
+    thr = jnp.full((N,), 0.5, jnp.float32)
+    new_levels, bias, err = run_step(levels, thr)
+    assert np.all(np.asarray(err) == 0)
+    assert np.all(np.abs(np.asarray(bias)) < 1e-6)
+    np.testing.assert_array_equal(np.asarray(new_levels), np.asarray(levels))
+
+
+def test_biased_columns_step_toward_compensation():
+    table, fracs, qs = lattice_t210()
+    neutral = int(np.argmin([abs(q - 1.5) for q in qs]))
+    levels = jnp.full((N,), neutral, jnp.int32)
+    # First half: threshold far too low (outputs 1 too often) ->
+    # decrement; second half: too high -> increment.
+    thr = jnp.concatenate([
+        jnp.full((N // 2,), 0.40, jnp.float32),
+        jnp.full((N // 2,), 0.60, jnp.float32),
+    ])
+    new_levels, bias, err = run_step(levels, thr)
+    nl = np.asarray(new_levels)
+    b = np.asarray(bias)
+    assert np.all(b[: N // 2] > 0.2)
+    assert np.all(b[N // 2:] < -0.2)
+    assert np.all(nl[: N // 2] == neutral - 1)
+    assert np.all(nl[N // 2:] == neutral + 1)
+    assert np.all(np.asarray(err) > 0)
+
+
+def test_update_flag_freezes_levels():
+    _, _, qs = lattice_t210()
+    levels = jnp.zeros((N,), jnp.int32)
+    thr = jnp.full((N,), 0.65, jnp.float32)
+    new_levels, _, _ = run_step(levels, thr, update=0.0)
+    np.testing.assert_array_equal(np.asarray(new_levels), 0)
+
+
+def test_levels_clamp_to_lattice():
+    levels = jnp.full((N,), 7, jnp.int32)
+    thr = jnp.full((N,), 0.9, jnp.float32)  # always under-reads -> inc
+    new_levels, _, _ = run_step(levels, thr)
+    assert np.all(np.asarray(new_levels) == 7)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_step_is_deterministic_in_seed(seed):
+    levels = jnp.full((N,), 3, jnp.int32)
+    thr = jnp.full((N,), 0.5, jnp.float32)
+    a = run_step(levels, thr, seed=seed % 99991, sigma_n=0.01)
+    b = run_step(levels, thr, seed=seed % 99991, sigma_n=0.01)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_ecr_scan_counts_match_step_scale():
+    table, fracs, qs = lattice_t210()
+    neutral = int(np.argmin([abs(q - 1.5) for q in qs]))
+    levels = jnp.full((N,), neutral, jnp.int32)
+    # Mildly offset thresholds: some columns err.
+    key = jax.random.PRNGKey(5)
+    thr = 0.5 + 0.03 * jax.random.normal(key, (N,), jnp.float32)
+    fn = model.make_ecr_scan(5, 4, S, N)
+    (err_total,) = fn(
+        jnp.uint32(3),
+        levels,
+        table,
+        fracs,
+        jnp.float32(physics.FRAC_R),
+        jnp.float32(0.0),
+        thr,
+        jnp.float32(0.002),
+    )
+    e = np.asarray(err_total)
+    assert e.shape == (N,)
+    assert e.min() >= 0 and e.max() <= 4 * S
+    # Columns beyond the margin must err heavily; centred ones not.
+    margin = 0.5 * physics.CC_FF / (8 * physics.CC_FF + physics.CB_FF)
+    t = np.asarray(thr) - 0.5
+    heavy = e[np.abs(t) > 2.5 * margin]
+    clean = e[np.abs(t) < 0.2 * margin]
+    assert heavy.min() > 0
+    assert np.median(clean) == 0
+
+
+def test_maj3_uses_const_rows():
+    # With const_q = 1.0 and neutral calibration, MAJ3 behaves as a
+    # majority: heavily-low thresholds output 1 always.
+    _, _, qs = lattice_t210()
+    neutral = int(np.argmin([abs(q - 1.5) for q in qs]))
+    levels = jnp.full((N,), neutral, jnp.int32)
+    thr = jnp.full((N,), 0.5, jnp.float32)
+    new_levels, bias, err = run_step(levels, thr, m=3)
+    assert np.all(np.asarray(err) == 0)
+
+
+def test_pud_gemv_ideal_and_faulty():
+    fn = model.make_pud_gemv(8, 16)
+    key = jax.random.PRNGKey(0)
+    w = jax.random.randint(key, (8, 16), -128, 127).astype(jnp.float32)
+    x = jax.random.randint(key, (16,), -128, 127).astype(jnp.float32)
+    flip_none = jnp.zeros((8,), jnp.float32)
+    flip_all = jnp.ones((8,), jnp.float32)
+    y, y_clean = fn(w, x, flip_none, jnp.uint32(1))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(w) @ np.asarray(x))
+    np.testing.assert_allclose(np.asarray(y_clean), np.asarray(y))
+    _, y_bad = fn(w, x, flip_all, jnp.uint32(1))
+    assert np.any(np.asarray(y_bad) != np.asarray(y))
+
+
+def test_physics_constants_match_paper():
+    # §II-C anchors.
+    assert abs(physics.bitline_voltage(1.0, rows=1) - 0.55) < 1e-9
+    assert abs(physics.bitline_voltage(4.5) - 0.52941) < 1e-4
+    assert abs(physics.frac_charge(1.0, 8) - 0.5) < 0.05

@@ -1,0 +1,28 @@
+//! Bench: regenerate Fig. 3 (offset variety per Frac configuration)
+//! plus lattice-construction micro-benchmarks.
+
+use pudtune::calib::lattice::{FracConfig, OffsetLattice};
+use pudtune::config::device::DeviceConfig;
+use pudtune::experiments;
+use pudtune::util::benchkit;
+
+fn main() {
+    let cfg = DeviceConfig::default();
+    println!("{}", experiments::run_fig3(&cfg));
+    println!("paper Fig. 3: T_0,0,0 wide/coarse; T_2,2,2 fine/narrow; T_2,1,0 fine AND wide\n");
+
+    // Quantify the Fig. 3 claim as numbers.
+    let t210 = OffsetLattice::build(&cfg, &FracConfig::pudtune([2, 1, 0]));
+    let t000 = OffsetLattice::build(&cfg, &FracConfig::pudtune([0, 0, 0]));
+    let t222 = OffsetLattice::build(&cfg, &FracConfig::pudtune([2, 2, 2]));
+    println!(
+        "range(T210)/range(T222) = {:.2}   gap(T000)/gap(T210) = {:.2}",
+        t210.range().1 / t222.range().1,
+        t000.max_gap() / t210.max_gap()
+    );
+
+    benchkit::bench("fig3/lattice-build", 10, 100, || {
+        let l = OffsetLattice::build(&cfg, &FracConfig::pudtune([2, 1, 0]));
+        std::hint::black_box(l.len());
+    });
+}

@@ -1,0 +1,46 @@
+//! Bench: regenerate Fig. 5 (MAJ5 ECR/throughput sensitivity to the
+//! Frac configuration).
+
+use pudtune::analysis::report;
+use pudtune::calib::lattice::FracConfig;
+use pudtune::config::device::DeviceConfig;
+use pudtune::config::experiment::ExperimentConfig;
+use pudtune::config::system::SystemConfig;
+use pudtune::experiments;
+use pudtune::util::{benchkit, table};
+
+fn main() {
+    let cfg = DeviceConfig::default();
+    let mut sys = SystemConfig::default();
+    sys.cols = 8192;
+    let exp = ExperimentConfig::default();
+
+    let mut pts = Vec::new();
+    let r = benchkit::bench("fig5/sweep-15-configs", 0, 1, || {
+        pts = experiments::run_fig5(&cfg, &sys, &exp);
+    });
+    let rows: Vec<(FracConfig, f64, f64)> =
+        pts.iter().map(|p| (p.config, p.ecr, p.maj5_ops)).collect();
+    println!("\n=== Fig. 5 (MAJ5 sensitivity to Frac times) ===\n");
+    println!("{}", report::render_sweep(&rows));
+    let chart: Vec<(String, f64)> = pts
+        .iter()
+        .map(|p| (p.config.label(), p.maj5_ops / 1e12))
+        .collect();
+    println!("{}", table::bar_chart("MAJ5 throughput", &chart, "TOPS", 40));
+
+    // Paper's headline comparisons.
+    let find = |fr: [u32; 3]| {
+        pts.iter()
+            .find(|p| p.config == FracConfig::pudtune(fr))
+            .map(|p| p.maj5_ops)
+            .unwrap_or(f64::NAN)
+    };
+    let t210 = find([2, 1, 0]);
+    println!(
+        "T_2,1,0 vs T_0,0,0: {:.2}x (paper 1.03x) | vs T_2,2,2: {:.2}x (paper 1.48x)",
+        t210 / find([0, 0, 0]),
+        t210 / find([2, 2, 2])
+    );
+    println!("sweep wall: {}", benchkit::fmt_time(r.mean_s));
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate Fig. 6 (thermal + aging reliability of the
+//! identified calibration data).
+
+use pudtune::analysis::report;
+use pudtune::config::device::DeviceConfig;
+use pudtune::config::experiment::ExperimentConfig;
+use pudtune::config::system::SystemConfig;
+use pudtune::experiments;
+use pudtune::util::benchkit;
+
+fn main() {
+    let cfg = DeviceConfig::default();
+    let mut sys = SystemConfig::default();
+    sys.cols = 8192;
+    let exp = ExperimentConfig::default();
+
+    let mut a = Vec::new();
+    let ra = benchkit::bench("fig6a/temperature-sweep", 0, 1, || {
+        a = experiments::run_fig6a(&cfg, &sys, &exp);
+    });
+    println!("\n=== Fig. 6a (temperature 40-100C; paper: new ECR < 0.14%) ===");
+    let series: Vec<(f64, f64)> = a.iter().map(|p| (p.x, p.new_ecr)).collect();
+    println!("{}", report::render_reliability("Temp (C)", &series));
+    let worst_a = a.iter().map(|p| p.new_ecr).fold(0.0, f64::max);
+    println!("worst new ECR: {:.3}% (paper bound 0.14%)\n", worst_a * 100.0);
+
+    let mut b = Vec::new();
+    let rb = benchkit::bench("fig6b/one-week-aging", 0, 1, || {
+        b = experiments::run_fig6b(&cfg, &sys, &exp);
+    });
+    println!("\n=== Fig. 6b (one week; paper: new ECR < 0.27%) ===");
+    let series: Vec<(f64, f64)> = b.iter().map(|p| (p.x, p.new_ecr)).collect();
+    println!("{}", report::render_reliability("Hours", &series));
+    let worst_b = b.iter().map(|p| p.new_ecr).fold(0.0, f64::max);
+    println!("worst new ECR: {:.3}% (paper bound 0.27%)", worst_b * 100.0);
+    println!(
+        "walls: fig6a {} fig6b {}",
+        benchkit::fmt_time(ra.mean_s),
+        benchkit::fmt_time(rb.mean_s)
+    );
+}

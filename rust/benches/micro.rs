@@ -1,0 +1,86 @@
+//! Micro-benchmarks of the hot paths (the §Perf iteration targets):
+//! native sampling batch, golden-model SiMRA, PJRT step/ECR calls,
+//! circuit evaluation, and the PRNG.
+
+use pudtune::calib::algorithm::{CalibParams, NativeEngine};
+use pudtune::calib::lattice::FracConfig;
+use pudtune::config::device::DeviceConfig;
+use pudtune::dram::subarray::Subarray;
+use pudtune::pud::adder::{eval_add, ripple_adder};
+use pudtune::runtime::Runtime;
+use pudtune::util::benchkit;
+use pudtune::util::rng::Rng;
+
+fn main() {
+    let cfg = DeviceConfig::default();
+
+    // PRNG throughput (the native engine's inner dependency).
+    let mut rng = Rng::new(1);
+    benchkit::bench("micro/rng-normal-1M", 1, 10, || {
+        let mut acc = 0.0;
+        for _ in 0..1_000_000 {
+            acc += rng.normal();
+        }
+        std::hint::black_box(acc);
+    });
+
+    // Native sampling batch: 512 samples x 8,192 columns (one
+    // Algorithm-1 iteration's work).
+    let eng = NativeEngine::new(cfg.clone());
+    let sub = Subarray::with_geometry(&cfg, 32, 8192, 3);
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let calib = fc.uncalibrated(&cfg, 8192);
+    let mut r2 = Rng::new(9);
+    benchkit::bench("micro/native-sample-batch-512x8192", 1, 10, || {
+        let acc = eng.sample_batch(&sub, &calib, 5, 512, &mut r2);
+        std::hint::black_box(acc.samples());
+    });
+
+    // Golden-model SiMRA (command-level fidelity).
+    let mut gsub = Subarray::with_geometry(&cfg, 32, 8192, 4);
+    let rows: Vec<usize> = (0..8).collect();
+    benchkit::bench("micro/golden-simra-8192cols", 2, 20, || {
+        let out = gsub.simra(&rows);
+        std::hint::black_box(out[0]);
+    });
+
+    // Full native calibration of one 8,192-column subarray.
+    let mut eng2 = NativeEngine::new(cfg.clone());
+    let mut sub2 = Subarray::with_geometry(&cfg, 32, 8192, 5);
+    benchkit::bench("micro/native-calibrate-8192cols", 0, 3, || {
+        let c = eng2.calibrate(&mut sub2, &fc, &CalibParams::paper());
+        std::hint::black_box(c.levels[0]);
+    });
+
+    // Circuit evaluation (logic-level reference).
+    let add8 = ripple_adder(8);
+    benchkit::bench("micro/adder8-logic-eval-1k", 2, 20, || {
+        let mut acc = 0u64;
+        for a in 0..32u64 {
+            for b in 0..32u64 {
+                acc = acc.wrapping_add(eval_add(&add8, 8, a, b));
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    // PJRT calls (when artifacts are present).
+    if let Ok(rt) = Runtime::open_default() {
+        let rt = std::sync::Arc::new(rt);
+        use pudtune::coordinator::engine::{ColumnBank, PjrtEngine};
+        let peng = PjrtEngine::new(rt, cfg.clone());
+        let bank = ColumnBank::new(&cfg, 16384, 6);
+        let cal = fc.uncalibrated(&cfg, 16384);
+        benchkit::bench("micro/pjrt-ecr-8192x16384", 1, 5, || {
+            let rep = peng.measure_ecr(&bank, &cal, 5, 0xB).unwrap();
+            std::hint::black_box(rep.error_free());
+        });
+        let params = CalibParams::paper();
+        benchkit::bench("micro/pjrt-calibrate-16384", 0, 2, || {
+            let c = peng.calibrate(&bank, &fc, &params).unwrap();
+            std::hint::black_box(c.levels[0]);
+        });
+    } else {
+        println!("(artifacts missing; skipping PJRT micro-benches)");
+    }
+}

@@ -1,0 +1,52 @@
+//! Bench: regenerate the paper's Table I (ECR + MAJ5/ADD/MUL
+//! throughput, baseline vs PUDTune) and time the pipeline phases.
+//!
+//! `cargo bench --bench table1` — add `-- --full` for the paper's
+//! 65,536-column geometry (slow on one core).
+
+use pudtune::calib::lattice::FracConfig;
+use pudtune::config::device::DeviceConfig;
+use pudtune::config::experiment::ExperimentConfig;
+use pudtune::config::system::SystemConfig;
+use pudtune::experiments::{self, Engine};
+use pudtune::util::benchkit;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let cfg = DeviceConfig::default();
+    // Column counts must match an AOT artifact shape (16,384 std /
+    // 65,536 full) for the PJRT engine.
+    let sys = if full { SystemConfig::paper() } else { SystemConfig::default() };
+    let mut exp = ExperimentConfig::default();
+    exp.banks = if full { 16 } else { 4 };
+
+    println!("=== Table I ({} banks x {} cols, {} ECR samples/bank) ===\n", exp.banks, sys.cols, exp.ecr_samples);
+    let engine = Engine::auto();
+    let base = FracConfig::baseline(3);
+    let tune = FracConfig::pudtune([2, 1, 0]);
+
+    let mut rendered = String::new();
+    let r = benchkit::bench("table1/full-pipeline", 0, 1, || {
+        let out = experiments::run_table1(&cfg, &sys, &exp, &engine, base, tune).unwrap();
+        rendered = out.rendered.clone();
+    });
+    println!("\n{rendered}");
+    println!("paper Table I:     ECR 46.6% / 3.3%; MAJ5 0.89 / 1.62 TOPS; ADD 50.2 / 94.6 GOPS; MUL 5.8 / 11.0 GOPS");
+    println!("pipeline wall: {}", benchkit::fmt_time(r.mean_s));
+
+    // Phase micro-timings on one bank.
+    use pudtune::calib::algorithm::{CalibParams, NativeEngine};
+    use pudtune::dram::subarray::Subarray;
+    let mut eng = NativeEngine::new(cfg.clone());
+    let mut sub = Subarray::with_geometry(&cfg, 32, sys.cols, 1);
+    let params = CalibParams::paper();
+    benchkit::bench_budget("table1/calibrate-one-bank", 3.0, || {
+        let c = eng.calibrate(&mut sub, &tune, &params);
+        std::hint::black_box(&c.levels);
+    });
+    let calib = eng.calibrate(&mut sub, &tune, &params);
+    benchkit::bench_budget("table1/ecr-8192-samples", 3.0, || {
+        let r = eng.measure_ecr(&mut sub, &calib, 5, 8192);
+        std::hint::black_box(r.ecr());
+    });
+}

@@ -1,0 +1,109 @@
+//! Error-prone column ratio (paper §IV-A).
+//!
+//! "We define ECR as the percentage of columns that output no errors
+//! across all rows in a subarray" — i.e. a column is *error-prone* if
+//! it produced at least one wrong MAJX result over the test battery
+//! (8,192 random inputs in the paper).
+
+/// Per-column error statistics of one measurement.
+#[derive(Clone, Debug)]
+pub struct EcrReport {
+    /// Errors observed per column.
+    pub error_counts: Vec<u32>,
+    /// Random patterns tested per column.
+    pub samples: u32,
+}
+
+impl EcrReport {
+    pub fn from_error_counts(error_counts: Vec<u32>, samples: u32) -> Self {
+        Self { error_counts, samples }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.error_counts.len()
+    }
+
+    /// Error-prone column ratio in [0, 1].
+    pub fn ecr(&self) -> f64 {
+        if self.error_counts.is_empty() {
+            return 0.0;
+        }
+        self.error_prone() as f64 / self.cols() as f64
+    }
+
+    /// Number of columns with at least one error.
+    pub fn error_prone(&self) -> usize {
+        self.error_counts.iter().filter(|&&e| e > 0).count()
+    }
+
+    /// Number of error-free columns (the Eq. 1 numerator).
+    pub fn error_free(&self) -> usize {
+        self.cols() - self.error_prone()
+    }
+
+    /// Per-column error-free mask.
+    pub fn error_free_mask(&self) -> Vec<bool> {
+        self.error_counts.iter().map(|&e| e == 0).collect()
+    }
+
+    /// Columns error-free in *both* measurements (arithmetic circuits
+    /// need every constituent MAJX to be reliable on a column).
+    pub fn intersect(&self, other: &EcrReport) -> EcrReport {
+        assert_eq!(self.cols(), other.cols());
+        let error_counts = self
+            .error_counts
+            .iter()
+            .zip(&other.error_counts)
+            .map(|(&a, &b)| a + b)
+            .collect();
+        EcrReport { error_counts, samples: self.samples + other.samples }
+    }
+
+    /// Columns that are error-prone here but were error-free in a
+    /// reference measurement — the "new error-prone columns" metric of
+    /// Fig. 6.
+    pub fn new_error_prone_vs(&self, reference: &EcrReport) -> usize {
+        assert_eq!(self.cols(), reference.cols());
+        self.error_counts
+            .iter()
+            .zip(&reference.error_counts)
+            .filter(|(&now, &before)| now > 0 && before == 0)
+            .count()
+    }
+
+    /// New-error ratio relative to all columns (Fig. 6 y-axis).
+    pub fn new_ecr_vs(&self, reference: &EcrReport) -> f64 {
+        self.new_error_prone_vs(reference) as f64 / self.cols() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios() {
+        let r = EcrReport::from_error_counts(vec![0, 2, 0, 1], 100);
+        assert_eq!(r.error_prone(), 2);
+        assert_eq!(r.error_free(), 2);
+        assert!((r.ecr() - 0.5).abs() < 1e-12);
+        assert_eq!(r.error_free_mask(), vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn intersection_is_conservative() {
+        let a = EcrReport::from_error_counts(vec![0, 1, 0, 0], 10);
+        let b = EcrReport::from_error_counts(vec![0, 0, 3, 0], 10);
+        let j = a.intersect(&b);
+        assert_eq!(j.error_free(), 2);
+        assert!(j.ecr() >= a.ecr().max(b.ecr()));
+    }
+
+    #[test]
+    fn new_errors_vs_reference() {
+        let before = EcrReport::from_error_counts(vec![0, 1, 0, 0], 10);
+        let after = EcrReport::from_error_counts(vec![1, 1, 0, 2], 10);
+        assert_eq!(after.new_error_prone_vs(&before), 2); // cols 0 and 3
+        assert!((after.new_ecr_vs(&before) - 0.5).abs() < 1e-12);
+    }
+}

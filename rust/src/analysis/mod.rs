@@ -1,0 +1,6 @@
+//! Analytics: error-prone-column ratio, the Eq. 1 throughput model and
+//! paper-style report rendering.
+
+pub mod ecr;
+pub mod report;
+pub mod throughput;

@@ -1,0 +1,119 @@
+//! Paper-style report rendering (Table I rows, Fig. 5/6 series) plus
+//! JSON export for downstream tooling.
+
+use crate::analysis::throughput::ThroughputReport;
+use crate::calib::lattice::FracConfig;
+use crate::util::json::Json;
+use crate::util::table::{fmt_ops, Table};
+use std::collections::BTreeMap;
+
+/// One Table-I style row.
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    pub label: String,
+    pub ecr: f64,
+    pub report: ThroughputReport,
+}
+
+/// Render rows in the paper's Table I format.
+pub fn render_table1(rows: &[TableRow]) -> String {
+    let mut t = Table::new(&["Method", "ECR", "MAJ5", "8-bit ADD", "8-bit MUL"]);
+    for r in rows {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.1}%", r.ecr * 100.0),
+            fmt_ops(r.report.maj5_ops),
+            fmt_ops(r.report.add8_ops),
+            fmt_ops(r.report.mul8_ops),
+        ]);
+    }
+    let mut out = t.render();
+    if rows.len() == 2 {
+        let (b, p) = (&rows[0], &rows[1]);
+        out.push_str(&format!(
+            "\nimprovement: MAJ5 {:.2}x, ADD {:.2}x, MUL {:.2}x (paper: 1.81x / 1.88x / 1.89x)\n",
+            p.report.maj5_ops / b.report.maj5_ops,
+            p.report.add8_ops / b.report.add8_ops,
+            p.report.mul8_ops / b.report.mul8_ops,
+        ));
+    }
+    out
+}
+
+pub fn table1_json(rows: &[TableRow]) -> Json {
+    let arr = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("method".into(), Json::Str(r.label.clone()));
+            m.insert("ecr".into(), Json::Num(r.ecr));
+            m.insert("maj5_ops".into(), Json::Num(r.report.maj5_ops));
+            m.insert("add8_ops".into(), Json::Num(r.report.add8_ops));
+            m.insert("mul8_ops".into(), Json::Num(r.report.mul8_ops));
+            Json::Obj(m)
+        })
+        .collect();
+    Json::Arr(arr)
+}
+
+/// A Fig. 5 style sweep series entry.
+pub fn render_sweep(points: &[(FracConfig, f64, f64)]) -> String {
+    let mut t = Table::new(&["Config", "ECR", "MAJ5 throughput"]);
+    for (fc, ecr, ops) in points {
+        t.row(&[fc.label(), format!("{:.1}%", ecr * 100.0), fmt_ops(*ops)]);
+    }
+    t.render()
+}
+
+/// Fig. 6 style reliability series.
+pub fn render_reliability(axis: &str, points: &[(f64, f64)]) -> String {
+    let mut t = Table::new(&[axis, "new ECR"]);
+    for (x, new_ecr) in points {
+        t.row(&[format!("{x}"), format!("{:.3}%", new_ecr * 100.0)]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::throughput::ThroughputReport;
+
+    fn row(label: &str, ecr: f64, ops: f64) -> TableRow {
+        TableRow {
+            label: label.into(),
+            ecr,
+            report: ThroughputReport {
+                error_free_columns: 1000,
+                maj5_period_ns: 2000.0,
+                maj5_ops: ops,
+                add8_ops: ops / 18.0,
+                mul8_ops: ops / 150.0,
+            },
+        }
+    }
+
+    #[test]
+    fn table1_includes_improvement_line() {
+        let rows = vec![row("Baseline (B_{3,0,0})", 0.466, 0.9e12), row("PUDTune (T_{2,1,0})", 0.033, 1.6e12)];
+        let s = render_table1(&rows);
+        assert!(s.contains("ECR"));
+        assert!(s.contains("46.6%"));
+        assert!(s.contains("improvement: MAJ5 1.78x"));
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let rows = vec![row("x", 0.1, 1e12)];
+        let j = table1_json(&rows);
+        assert_eq!(j.idx(0).get("method").as_str(), Some("x"));
+        assert!(j.idx(0).get("maj5_ops").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn reliability_rendering() {
+        let s = render_reliability("Temp (C)", &[(40.0, 0.0005), (100.0, 0.0013)]);
+        assert!(s.contains("0.050%"));
+        assert!(s.contains("0.130%"));
+    }
+}

@@ -1,0 +1,171 @@
+//! The Eq. 1 throughput model.
+//!
+//! `Throughput = #error-free columns / latency of MAJX`, with the
+//! latency of the 16-bank-parallel stream set by the rank ACT power
+//! budget (paper §IV-A). Arithmetic throughput divides further by the
+//! majority-operation cost of the circuit (MVDRAM full-adder
+//! construction), with the op counts taken from the actual circuit
+//! graphs in `pud::{adder, multiplier}`.
+
+use crate::calib::lattice::FracConfig;
+use crate::config::system::SystemConfig;
+use crate::controller::power::ActPowerModel;
+use crate::controller::timing::{majx_cost, MajxCost, PrimitiveTiming};
+use crate::pud::graph::CircuitCost;
+
+/// System-level throughput calculator.
+#[derive(Clone, Debug)]
+pub struct ThroughputModel {
+    pub sys: SystemConfig,
+    pub timing: PrimitiveTiming,
+    pub power: ActPowerModel,
+}
+
+/// Throughput numbers for one configuration (one Table I row).
+#[derive(Clone, Copy, Debug)]
+pub struct ThroughputReport {
+    /// Error-free columns in the whole system.
+    pub error_free_columns: usize,
+    /// Effective MAJ5 period per bank, ns.
+    pub maj5_period_ns: f64,
+    /// MAJ5 ops/s, system-wide (Table I "MAJ5").
+    pub maj5_ops: f64,
+    /// 8-bit additions/s (Table I "8-bit ADD").
+    pub add8_ops: f64,
+    /// 8-bit multiplications/s (Table I "8-bit MUL").
+    pub mul8_ops: f64,
+}
+
+impl ThroughputModel {
+    pub fn new(sys: &SystemConfig) -> Self {
+        Self {
+            sys: sys.clone(),
+            timing: PrimitiveTiming::from_grade(&sys.timing),
+            power: ActPowerModel::from_grade(&sys.timing),
+        }
+    }
+
+    /// Cost of one MAJ-m with the given Frac configuration.
+    pub fn majx(&self, m: usize, fc: &FracConfig) -> MajxCost {
+        majx_cost(&self.timing, m, fc.total_fracs())
+    }
+
+    /// Effective per-bank period of an operation stream whose unit op
+    /// costs `cost` (ACT-power bound across the configured banks).
+    pub fn period_ns(&self, cost: &MajxCost) -> f64 {
+        self.power
+            .op_period_ns(cost.latency_ns, cost.acts, self.sys.banks)
+    }
+
+    /// Ops/s across the system (Eq. 1): every error-free column of
+    /// every bank completes one op per effective period. The period
+    /// already folds in the rank ACT-budget serialisation across the
+    /// bank-parallel streams, so total = columns × EFC / period.
+    pub fn ops_per_sec(&self, cost: &MajxCost, error_free_frac: f64) -> f64 {
+        let columns = self.sys.total_columns() as f64 * error_free_frac;
+        columns / (self.period_ns(cost) * 1e-9)
+    }
+
+    /// Full Table-I style report.
+    ///
+    /// `ecr_maj5` / `ecr_arith`: error-prone ratios for MAJ5 alone and
+    /// for the arithmetic circuits (MAJ5 ∧ MAJ3 reliability);
+    /// `add_cost`/`mul_cost` come from `pud::{adder, multiplier}`.
+    pub fn report(
+        &self,
+        fc: &FracConfig,
+        ecr_maj5: f64,
+        ecr_arith: f64,
+        add_cost: &CircuitCost,
+        mul_cost: &CircuitCost,
+    ) -> ThroughputReport {
+        let maj5 = self.majx(5, fc);
+        let maj3 = self.majx(3, fc);
+        let efc5 = 1.0 - ecr_maj5;
+        let efc_arith = 1.0 - ecr_arith;
+        let add = self.circuit_cost_ns(add_cost, fc);
+        let mul = self.circuit_cost_ns(mul_cost, fc);
+        let _ = maj3;
+        ThroughputReport {
+            error_free_columns: (self.sys.total_columns() as f64 * efc5) as usize,
+            maj5_period_ns: self.period_ns(&maj5),
+            maj5_ops: self.ops_per_sec(&maj5, efc5),
+            add8_ops: self.ops_per_sec(&add, efc_arith),
+            mul8_ops: self.ops_per_sec(&mul, efc_arith),
+        }
+    }
+
+    /// Aggregate command cost of a majority circuit under `fc`.
+    pub fn circuit_cost_ns(&self, c: &CircuitCost, fc: &FracConfig) -> MajxCost {
+        let maj3 = self.majx(3, fc);
+        let maj5 = self.majx(5, fc);
+        // NOT: read out + write back inverted (column interface).
+        let not_ns = self.timing.readout_ns + self.timing.write_ns;
+        let not_acts = self.timing.readout_acts + self.timing.write_acts;
+        MajxCost {
+            latency_ns: c.maj3 as f64 * maj3.latency_ns
+                + c.maj5 as f64 * maj5.latency_ns
+                + c.not_ops as f64 * not_ns,
+            acts: c.maj3 * maj3.acts + c.maj5 * maj5.acts + c.not_ops * not_acts,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pud::{adder, multiplier};
+
+    fn model() -> ThroughputModel {
+        ThroughputModel::new(&SystemConfig::paper())
+    }
+
+    #[test]
+    fn baseline_maj5_lands_near_paper() {
+        // Table I baseline: ECR 46.6% -> 0.89 TOPS. The shape target:
+        // same order of magnitude, 0.6-1.3 TOPS.
+        let m = model();
+        let fc = FracConfig::baseline(3);
+        let cost = m.majx(5, &fc);
+        let tops = m.ops_per_sec(&cost, 1.0 - 0.466) / 1e12;
+        assert!((0.6..1.3).contains(&tops), "tops={tops}");
+    }
+
+    #[test]
+    fn equal_frac_configs_have_equal_latency() {
+        // B_{3,0,0} and T_{2,1,0} both apply 3 Fracs -> identical MAJ5
+        // latency -> the throughput gain equals the EFC gain (1.81x).
+        let m = model();
+        let b = m.majx(5, &FracConfig::baseline(3));
+        let t = m.majx(5, &FracConfig::pudtune([2, 1, 0]));
+        assert_eq!(b.acts, t.acts);
+        assert!((b.latency_ns - t.latency_ns).abs() < 1e-9);
+        let gain = m.ops_per_sec(&t, 1.0 - 0.033) / m.ops_per_sec(&b, 1.0 - 0.466);
+        assert!((1.7..1.95).contains(&gain), "gain={gain}");
+    }
+
+    #[test]
+    fn arithmetic_ratios_match_paper_shape() {
+        // Paper: MAJ5 0.89 TOPS vs ADD 50.2 GOPS (ratio ~17.7x) vs
+        // MUL 5.8 GOPS (ratio ~153x).
+        let m = model();
+        let fc = FracConfig::baseline(3);
+        let add = m.circuit_cost_ns(&adder::add8_cost(), &fc);
+        let mul = m.circuit_cost_ns(&multiplier::mul8_cost(), &fc);
+        let maj5 = m.majx(5, &fc);
+        let r_add = add.acts as f64 / maj5.acts as f64;
+        let r_mul = mul.acts as f64 / maj5.acts as f64;
+        assert!((12.0..25.0).contains(&r_add), "r_add={r_add}");
+        assert!((110.0..240.0).contains(&r_mul), "r_mul={r_mul}");
+        // MUL:ADD cost ratio near the paper's 153/17.7 = 8.6x.
+        assert!((6.0..14.0).contains(&(r_mul / r_add)), "{}", r_mul / r_add);
+    }
+
+    #[test]
+    fn fewer_fracs_run_faster() {
+        let m = model();
+        let t000 = m.majx(5, &FracConfig::pudtune([0, 0, 0]));
+        let t222 = m.majx(5, &FracConfig::pudtune([2, 2, 2]));
+        assert!(m.period_ns(&t000) < m.period_ns(&t222));
+    }
+}

@@ -1,0 +1,89 @@
+//! The bias metric of Algorithm 1.
+//!
+//! For each column the calibration loop records the MAJX outputs over a
+//! batch of random input patterns and compares the observed '1'
+//! proportion with the proportion expected from the true majorities:
+//! `bias = mean(output) - mean(expected)`. A positive bias means the
+//! column answers '1' too often — its SA threshold sits low — so the
+//! calibration charge must *decrease* (decrement the lattice level),
+//! and vice versa.
+
+/// Per-column output accumulator for one sampling batch.
+#[derive(Clone, Debug)]
+pub struct BiasAccumulator {
+    ones: Vec<u32>,
+    expected_ones: Vec<u32>,
+    errors: Vec<u32>,
+    samples: u32,
+}
+
+impl BiasAccumulator {
+    pub fn new(cols: usize) -> Self {
+        Self {
+            ones: vec![0; cols],
+            expected_ones: vec![0; cols],
+            errors: vec![0; cols],
+            samples: 0,
+        }
+    }
+
+    /// Record one sample's outputs and expected majorities.
+    pub fn record(&mut self, outputs: &[u8], expected: &[u8]) {
+        debug_assert_eq!(outputs.len(), self.ones.len());
+        debug_assert_eq!(expected.len(), self.ones.len());
+        self.samples += 1;
+        for c in 0..outputs.len() {
+            self.ones[c] += outputs[c] as u32;
+            self.expected_ones[c] += expected[c] as u32;
+            self.errors[c] += (outputs[c] != expected[c]) as u32;
+        }
+    }
+
+    pub fn samples(&self) -> u32 {
+        self.samples
+    }
+
+    /// Per-column bias in [-1, 1].
+    pub fn bias(&self, col: usize) -> f64 {
+        if self.samples == 0 {
+            return 0.0;
+        }
+        (self.ones[col] as f64 - self.expected_ones[col] as f64) / self.samples as f64
+    }
+
+    /// Per-column error count.
+    pub fn errors(&self, col: usize) -> u32 {
+        self.errors[col]
+    }
+
+    pub fn error_counts(&self) -> &[u32] {
+        &self.errors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_signs() {
+        let mut acc = BiasAccumulator::new(3);
+        // col 0: always over-reports 1; col 1: perfect; col 2: under.
+        acc.record(&[1, 1, 0], &[0, 1, 1]);
+        acc.record(&[1, 0, 0], &[0, 0, 1]);
+        assert!(acc.bias(0) > 0.0);
+        assert_eq!(acc.bias(1), 0.0);
+        assert!(acc.bias(2) < 0.0);
+        assert_eq!(acc.errors(0), 2);
+        assert_eq!(acc.errors(1), 0);
+        assert_eq!(acc.errors(2), 2);
+        assert_eq!(acc.samples(), 2);
+    }
+
+    #[test]
+    fn empty_accumulator_is_neutral() {
+        let acc = BiasAccumulator::new(4);
+        assert_eq!(acc.bias(2), 0.0);
+        assert_eq!(acc.errors(2), 0);
+    }
+}

@@ -1,0 +1,275 @@
+//! The multi-level offset lattice (paper §III-C/D, Fig. 3).
+//!
+//! A MAJX's three non-operand rows hold per-column calibration bits;
+//! the configuration `T_{x,y,z}` applies x, y, z Frac operations to the
+//! three rows. A stored bit b after f Fracs holds charge
+//! `q_f(b) = 0.5 + (b - 0.5) r^f`, so a column's 3 bits select one of
+//! 2^3 total charges Q — an analog offset `ΔV = Cc (Q - 1.5) / (8 Cc + Cb)`
+//! on the shared bitline. Distinct per-row Frac counts (T_{2,1,0}) give
+//! a lattice that is simultaneously fine-grained (small steps from the
+//! heavily-Frac'd rows) and wide-range (full swing from the 0-Frac row).
+//!
+//! The baseline `B_{x,0,0}` is the degenerate case: fixed pattern
+//! (Frac^x(1), const 0, const 1) with no per-column freedom.
+
+use crate::config::device::DeviceConfig;
+
+/// How the three non-operand rows are used.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConfigKind {
+    /// Conventional neutral rows: Frac^x(1), constant 0, constant 1.
+    Baseline,
+    /// Per-column calibration bits in all three rows (PUDTune).
+    PudTune,
+}
+
+/// A Frac-count configuration for the three non-operand rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FracConfig {
+    pub kind: ConfigKind,
+    /// Frac operations applied to rows 0, 1, 2 after each copy-in.
+    pub fracs: [u32; 3],
+}
+
+impl FracConfig {
+    /// The paper's baseline `B_{x,0,0}`.
+    pub fn baseline(x: u32) -> Self {
+        Self { kind: ConfigKind::Baseline, fracs: [x, 0, 0] }
+    }
+
+    /// A PUDTune configuration `T_{x,y,z}`.
+    pub fn pudtune(fracs: [u32; 3]) -> Self {
+        Self { kind: ConfigKind::PudTune, fracs }
+    }
+
+    /// Total Frac operations per MAJX execution (drives latency).
+    pub fn total_fracs(&self) -> u32 {
+        self.fracs.iter().sum()
+    }
+
+    /// Paper-style label ("B_{3,0,0}", "T_{2,1,0}").
+    pub fn label(&self) -> String {
+        let tag = match self.kind {
+            ConfigKind::Baseline => "B",
+            ConfigKind::PudTune => "T",
+        };
+        format!("{}_{{{},{},{}}}", tag, self.fracs[0], self.fracs[1], self.fracs[2])
+    }
+}
+
+/// One lattice level: a bit-triple and its analog consequences.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LatticeLevel {
+    pub bits: [u8; 3],
+    /// Total calibration charge Q of the three rows, cell-equivalents.
+    pub q_total: f64,
+    /// Offset relative to the ideal neutral charge (Q - 1.5), expressed
+    /// as bitline voltage, V_DD units.
+    pub offset_v: f64,
+}
+
+/// The sorted offset lattice of a configuration.
+#[derive(Clone, Debug)]
+pub struct OffsetLattice {
+    pub config: FracConfig,
+    /// Levels sorted ascending by `q_total`. For `Baseline` all levels
+    /// are the single fixed pattern (so level arithmetic is a no-op).
+    pub levels: Vec<LatticeLevel>,
+}
+
+/// Ideal (perfectly neutral) calibration charge: 1.5 cell-equivalents.
+pub const IDEAL_Q: f64 = 1.5;
+
+impl OffsetLattice {
+    pub fn build(cfg: &DeviceConfig, fc: &FracConfig) -> Self {
+        let rows = cfg.simra_rows;
+        let denom = rows as f64 * cfg.cc_ff + cfg.cb_ff;
+        let mut levels = Vec::with_capacity(8);
+        match fc.kind {
+            ConfigKind::Baseline => {
+                // Fixed pattern: Frac^x(1), const 0, const 1.
+                let q = cfg.frac_charge(1.0, fc.fracs[0]) + 0.0 + 1.0;
+                let lv = LatticeLevel {
+                    bits: [1, 0, 1],
+                    q_total: q,
+                    offset_v: cfg.cc_ff * (q - IDEAL_Q) / denom,
+                };
+                levels = vec![lv; 8];
+            }
+            ConfigKind::PudTune => {
+                for combo in 0..8u8 {
+                    let bits = [combo & 1, (combo >> 1) & 1, (combo >> 2) & 1];
+                    let q: f64 = (0..3)
+                        .map(|i| cfg.frac_charge(bits[i] as f64, fc.fracs[i]))
+                        .sum();
+                    levels.push(LatticeLevel {
+                        bits,
+                        q_total: q,
+                        offset_v: cfg.cc_ff * (q - IDEAL_Q) / denom,
+                    });
+                }
+                levels.sort_by(|a, b| a.q_total.partial_cmp(&b.q_total).unwrap());
+            }
+        }
+        Self { config: *fc, levels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.levels.is_empty()
+    }
+
+    /// Index of the level closest to the ideal neutral charge —
+    /// the calibration starting point.
+    pub fn neutral_level(&self) -> usize {
+        let mut best = 0;
+        let mut bestd = f64::INFINITY;
+        for (i, lv) in self.levels.iter().enumerate() {
+            let d = (lv.q_total - IDEAL_Q).abs();
+            if d < bestd {
+                bestd = d;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// The bit-triples in level order, as f32 — the `bits_table` input
+    /// of the AOT graphs (`python/compile/model.py`).
+    pub fn bits_table_f32(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.levels.len() * 3);
+        for lv in &self.levels {
+            for i in 0..3 {
+                v.push(lv.bits[i] as f32);
+            }
+        }
+        v
+    }
+
+    /// Span of the lattice: (min offset, max offset), V_DD units.
+    pub fn range(&self) -> (f64, f64) {
+        (self.levels[0].offset_v, self.levels[self.levels.len() - 1].offset_v)
+    }
+
+    /// Largest gap between adjacent distinct offsets (granularity).
+    pub fn max_gap(&self) -> f64 {
+        let mut gap: f64 = 0.0;
+        for w in self.levels.windows(2) {
+            gap = gap.max(w[1].offset_v - w[0].offset_v);
+        }
+        gap
+    }
+
+    /// Distinct offset count (duplicates collapse, e.g. T_{0,0,0}).
+    pub fn distinct_levels(&self) -> usize {
+        let mut offs: Vec<f64> = self.levels.iter().map(|l| l.offset_v).collect();
+        offs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        offs.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        offs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DeviceConfig {
+        DeviceConfig::default()
+    }
+
+    #[test]
+    fn t210_is_fine_and_wide() {
+        // Fig. 3c: distinct per-row Frac counts give 8 distinct levels
+        // covering a wide range with small gaps.
+        let l = OffsetLattice::build(&cfg(), &FracConfig::pudtune([2, 1, 0]));
+        assert_eq!(l.distinct_levels(), 8);
+        let (lo, hi) = l.range();
+        assert!(hi > 0.055 && lo < -0.055, "range ({lo}, {hi})");
+        assert!(l.max_gap() < 0.03, "gap {}", l.max_gap());
+        // Monotone non-decreasing by construction.
+        for w in l.levels.windows(2) {
+            assert!(w[1].q_total >= w[0].q_total);
+        }
+    }
+
+    #[test]
+    fn t000_is_coarse() {
+        // Fig. 3a: no Fracs -> only 4 distinct levels, coarse steps.
+        let l = OffsetLattice::build(&cfg(), &FracConfig::pudtune([0, 0, 0]));
+        assert_eq!(l.distinct_levels(), 4);
+        let wide = OffsetLattice::build(&cfg(), &FracConfig::pudtune([2, 1, 0]));
+        assert!(l.max_gap() > wide.max_gap());
+        // Same full range as any config containing a 0-Frac row... wider.
+        assert!(l.range().1 > wide.range().1);
+    }
+
+    #[test]
+    fn t222_is_fine_but_narrow() {
+        // Fig. 3b: uniform Fracs -> fine granularity, narrow range.
+        let l = OffsetLattice::build(&cfg(), &FracConfig::pudtune([2, 2, 2]));
+        let t210 = OffsetLattice::build(&cfg(), &FracConfig::pudtune([2, 1, 0]));
+        let t000 = OffsetLattice::build(&cfg(), &FracConfig::pudtune([0, 0, 0]));
+        // Narrower range than both (Fig. 3b)...
+        assert!(l.range().1 < 0.7 * t210.range().1, "narrow vs T210");
+        assert!(l.range().1 < 0.5 * t000.range().1, "narrow vs T000");
+        // ...with finer absolute steps than the no-Frac lattice.
+        assert!(l.max_gap() < 0.5 * t000.max_gap());
+        assert_eq!(l.distinct_levels(), 4); // ±3d, ±1d collapse
+    }
+
+    #[test]
+    fn baseline_has_single_fixed_level() {
+        let l = OffsetLattice::build(&cfg(), &FracConfig::baseline(3));
+        assert_eq!(l.distinct_levels(), 1);
+        assert_eq!(l.levels[0].bits, [1, 0, 1]);
+        // Small positive systematic offset: Frac^3(1) has not fully
+        // converged to neutral.
+        assert!(l.levels[0].offset_v > 0.0 && l.levels[0].offset_v < 0.01);
+        // Deeper Frac'ing converges toward zero offset.
+        let l6 = OffsetLattice::build(&cfg(), &FracConfig::baseline(6));
+        assert!(l6.levels[0].offset_v < l.levels[0].offset_v);
+    }
+
+    #[test]
+    fn neutral_level_is_nearest_to_ideal() {
+        let l = OffsetLattice::build(&cfg(), &FracConfig::pudtune([2, 1, 0]));
+        let n = l.neutral_level();
+        for lv in &l.levels {
+            assert!((l.levels[n].q_total - IDEAL_Q).abs() <= (lv.q_total - IDEAL_Q).abs() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn offsets_match_margin_scale() {
+        // The coarse T_{0,0,0} step (one full bit flip on a 0-Frac row)
+        // equals 2x the majority margin: 1 cell-equivalent / divider.
+        let c = cfg();
+        let l = OffsetLattice::build(&c, &FracConfig::pudtune([0, 0, 0]));
+        let m = c.majority_margin();
+        let step = l.levels[1].offset_v - l.levels[0].offset_v;
+        assert!((step - 2.0 * m).abs() < 1e-9, "step={step} margin={m}");
+    }
+
+    #[test]
+    fn labels_and_totals() {
+        assert_eq!(FracConfig::baseline(3).label(), "B_{3,0,0}");
+        assert_eq!(FracConfig::pudtune([2, 1, 0]).label(), "T_{2,1,0}");
+        assert_eq!(FracConfig::pudtune([2, 1, 0]).total_fracs(), 3);
+        assert_eq!(FracConfig::baseline(3).total_fracs(), 3);
+    }
+
+    #[test]
+    fn bits_table_matches_levels() {
+        let l = OffsetLattice::build(&cfg(), &FracConfig::pudtune([2, 1, 0]));
+        let t = l.bits_table_f32();
+        assert_eq!(t.len(), 24);
+        for (i, lv) in l.levels.iter().enumerate() {
+            for j in 0..3 {
+                assert_eq!(t[i * 3 + j], lv.bits[j] as f32);
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! PUDTune calibration — the paper's contribution.
+//!
+//! * [`lattice`] — the multi-level offset lattice: Frac-count
+//!   configurations `T_{x,y,z}` turn 3 stored bits per column into
+//!   2^3 analog offsets (paper §III-C/D, Fig. 3);
+//! * [`bias`] — the bias metric of Algorithm 1;
+//! * [`algorithm`] — calibration-data identification (Algorithm 1) and
+//!   ECR measurement, on the native golden model;
+//! * [`store`] — non-volatile persistence of identified calibration
+//!   data (paper §III-A: stored bit patterns are reusable across
+//!   reboots), as JSON;
+//! * [`sweep`] — Frac-configuration sweeps (Fig. 5) and the one-off
+//!   variation-model fit against Table I's baseline.
+
+pub mod algorithm;
+pub mod bias;
+pub mod lattice;
+pub mod store;
+pub mod sweep;

@@ -1,0 +1,216 @@
+//! Non-volatile calibration store (paper §III-A: "by storing the bit
+//! patterns used for calibration data generation in non-volatile
+//! memory, it can be reused across different environments and system
+//! reboots").
+//!
+//! Serialises identified calibration data per subarray — Frac
+//! configuration plus per-column level indices — as JSON. Level indices
+//! are run-length encoded: after calibration most columns sit at the
+//! neutral level, so stores stay small.
+
+use crate::calib::algorithm::Calibration;
+use crate::calib::lattice::{ConfigKind, FracConfig, OffsetLattice};
+use crate::config::device::DeviceConfig;
+use crate::dram::geometry::SubarrayId;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// A persisted calibration store for (part of) a device.
+#[derive(Clone, Debug, Default)]
+pub struct CalibStore {
+    /// Per-subarray entries.
+    pub entries: BTreeMap<SubarrayId, StoredCalib>,
+}
+
+/// One subarray's stored calibration data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoredCalib {
+    pub config: FracConfig,
+    pub levels: Vec<u8>,
+}
+
+impl CalibStore {
+    pub fn insert(&mut self, id: SubarrayId, calib: &Calibration) {
+        self.entries.insert(
+            id,
+            StoredCalib { config: calib.lattice.config, levels: calib.levels.clone() },
+        );
+    }
+
+    /// Rehydrate one subarray's calibration against a device config.
+    pub fn load(&self, id: SubarrayId, cfg: &DeviceConfig) -> Option<Calibration> {
+        let e = self.entries.get(&id)?;
+        Some(Calibration {
+            lattice: OffsetLattice::build(cfg, &e.config),
+            levels: e.levels.clone(),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut subarrays = Vec::new();
+        for (id, e) in &self.entries {
+            let mut m = BTreeMap::new();
+            m.insert("channel".into(), Json::Num(id.channel as f64));
+            m.insert("bank".into(), Json::Num(id.bank as f64));
+            m.insert("subarray".into(), Json::Num(id.subarray as f64));
+            let kind = match e.config.kind {
+                ConfigKind::Baseline => "baseline",
+                ConfigKind::PudTune => "pudtune",
+            };
+            m.insert("kind".into(), Json::Str(kind.into()));
+            m.insert(
+                "fracs".into(),
+                Json::from_f64_slice(&e.config.fracs.map(|x| x as f64)),
+            );
+            m.insert("levels_rle".into(), rle_encode(&e.levels));
+            m.insert("cols".into(), Json::Num(e.levels.len() as f64));
+            subarrays.push(Json::Obj(m));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("format".into(), Json::Str("pudtune-calib-v1".into()));
+        root.insert("subarrays".into(), Json::Arr(subarrays));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        if j.get("format").as_str() != Some("pudtune-calib-v1") {
+            return Err("unknown calibration store format".into());
+        }
+        let mut store = CalibStore::default();
+        for e in j.get("subarrays").as_arr().ok_or("missing subarrays")? {
+            let id = SubarrayId::new(
+                e.get("channel").as_usize().ok_or("bad channel")?,
+                e.get("bank").as_usize().ok_or("bad bank")?,
+                e.get("subarray").as_usize().ok_or("bad subarray")?,
+            );
+            let fr = e.get("fracs").as_arr().ok_or("bad fracs")?;
+            if fr.len() != 3 {
+                return Err("fracs must have 3 entries".into());
+            }
+            let fracs = [
+                fr[0].as_usize().ok_or("bad frac")? as u32,
+                fr[1].as_usize().ok_or("bad frac")? as u32,
+                fr[2].as_usize().ok_or("bad frac")? as u32,
+            ];
+            let config = match e.get("kind").as_str() {
+                Some("baseline") => FracConfig { kind: ConfigKind::Baseline, fracs },
+                Some("pudtune") => FracConfig { kind: ConfigKind::PudTune, fracs },
+                _ => return Err("bad kind".into()),
+            };
+            let levels = rle_decode(e.get("levels_rle"))?;
+            let cols = e.get("cols").as_usize().ok_or("bad cols")?;
+            if levels.len() != cols {
+                return Err(format!("RLE length {} != cols {cols}", levels.len()));
+            }
+            store.entries.insert(id, StoredCalib { config, levels });
+        }
+        Ok(store)
+    }
+
+    pub fn save_file(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+
+    pub fn load_file(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_json(&json::parse(&text)?)
+    }
+}
+
+/// Run-length encode level indices as [value, count, value, count, ...].
+fn rle_encode(levels: &[u8]) -> Json {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < levels.len() {
+        let v = levels[i];
+        let mut n = 1usize;
+        while i + n < levels.len() && levels[i + n] == v {
+            n += 1;
+        }
+        out.push(Json::Num(v as f64));
+        out.push(Json::Num(n as f64));
+        i += n;
+    }
+    Json::Arr(out)
+}
+
+fn rle_decode(j: &Json) -> Result<Vec<u8>, String> {
+    let arr = j.as_arr().ok_or("bad RLE array")?;
+    if arr.len() % 2 != 0 {
+        return Err("RLE array must have even length".into());
+    }
+    let mut out = Vec::new();
+    for pair in arr.chunks(2) {
+        let v = pair[0].as_usize().ok_or("bad RLE value")? as u8;
+        let n = pair[1].as_usize().ok_or("bad RLE count")?;
+        out.extend(std::iter::repeat(v).take(n));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::lattice::FracConfig;
+
+    fn sample_calib(cfg: &DeviceConfig, cols: usize) -> Calibration {
+        let fc = FracConfig::pudtune([2, 1, 0]);
+        let mut c = Calibration::uniform(OffsetLattice::build(cfg, &fc), cols);
+        for i in 0..cols {
+            c.levels[i] = ((i * 7) % 8) as u8;
+        }
+        c
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = DeviceConfig::default();
+        let mut store = CalibStore::default();
+        store.insert(SubarrayId::new(0, 3, 1), &sample_calib(&cfg, 100));
+        store.insert(SubarrayId::new(1, 0, 0), &sample_calib(&cfg, 64));
+        let j = store.to_json();
+        let back = CalibStore::from_json(&json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.entries, store.entries);
+    }
+
+    #[test]
+    fn rehydrated_calibration_matches() {
+        let cfg = DeviceConfig::default();
+        let calib = sample_calib(&cfg, 32);
+        let mut store = CalibStore::default();
+        let id = SubarrayId::new(0, 0, 0);
+        store.insert(id, &calib);
+        let back = store.load(id, &cfg).unwrap();
+        assert_eq!(back.levels, calib.levels);
+        assert_eq!(back.lattice.config, calib.lattice.config);
+        for c in 0..32 {
+            assert!((back.q_extra(c) - calib.q_extra(c)).abs() < 1e-12);
+        }
+        assert!(store.load(SubarrayId::new(9, 9, 9), &cfg).is_none());
+    }
+
+    #[test]
+    fn rle_is_compact_for_uniform_levels() {
+        let levels = vec![4u8; 65536];
+        let j = rle_encode(&levels);
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+        assert_eq!(rle_decode(&j).unwrap(), levels);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = DeviceConfig::default();
+        let mut store = CalibStore::default();
+        store.insert(SubarrayId::new(0, 0, 0), &sample_calib(&cfg, 16));
+        let path = std::env::temp_dir().join("pudtune_store_test.json");
+        store.save_file(&path).unwrap();
+        let back = CalibStore::load_file(&path).unwrap();
+        assert_eq!(back.entries, store.entries);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(CalibStore::from_json(&json::parse(r#"{"format":"nope"}"#).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Minimal CLI argument parser (std-only `clap` replacement).
+//!
+//! Grammar: `pudtune <subcommand> [--flag] [--key value|--key=value] ...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Parse raw arguments (without argv[0]). Flags listed in
+/// `boolean_flags` consume no value.
+pub fn parse(raw: &[String], boolean_flags: &[&str]) -> Result<Args, String> {
+    let mut a = Args::default();
+    let mut i = 0;
+    while i < raw.len() {
+        let tok = &raw[i];
+        if let Some(name) = tok.strip_prefix("--") {
+            if let Some((k, v)) = name.split_once('=') {
+                a.options.insert(k.to_string(), v.to_string());
+            } else if boolean_flags.contains(&name) {
+                a.flags.push(name.to_string());
+            } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                a.options.insert(name.to_string(), raw[i + 1].clone());
+                i += 1;
+            } else {
+                return Err(format!("option --{name} expects a value"));
+            }
+        } else if a.subcommand.is_none() {
+            a.subcommand = Some(tok.clone());
+        } else {
+            a.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(a)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad number '{v}'")),
+        }
+    }
+
+    /// Parse a `--fracs x,y,z` style triple.
+    pub fn fracs(&self, name: &str, default: [u32; 3]) -> Result<[u32; 3], String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                let parts: Vec<&str> = v.split(',').collect();
+                if parts.len() != 3 {
+                    return Err(format!("--{name}: expected x,y,z"));
+                }
+                let mut out = [0u32; 3];
+                for (i, p) in parts.iter().enumerate() {
+                    out[i] = p.trim().parse().map_err(|_| format!("--{name}: bad '{p}'"))?;
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = parse(&v(&["table1", "--banks", "8", "--cols=1024", "--native"]), &["native"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.usize("banks", 0).unwrap(), 8);
+        assert_eq!(a.usize("cols", 0).unwrap(), 1024);
+        assert!(a.flag("native"));
+        assert_eq!(a.usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn fracs_triple() {
+        let a = parse(&v(&["fig5", "--fracs", "2,1,0"]), &[]).unwrap();
+        assert_eq!(a.fracs("fracs", [0, 0, 0]).unwrap(), [2, 1, 0]);
+        assert_eq!(a.fracs("other", [3, 3, 3]).unwrap(), [3, 3, 3]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&v(&["x", "--key"]), &[]).is_err());
+        let a = parse(&v(&["x", "--num", "abc"]), &[]).unwrap();
+        assert!(a.usize("num", 0).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&v(&["trace", "maj5", "--fracs=1,1,1"]), &[]).unwrap();
+        assert_eq!(a.positional, vec!["maj5"]);
+    }
+}

@@ -1,0 +1,68 @@
+//! Experiment parameterisation, defaulting to the paper's §IV values.
+
+/// Parameters shared by the paper's experiments.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Master seed; every stochastic field derives from it.
+    pub seed: u64,
+    /// Calibration iterations (paper: 20).
+    pub calib_iterations: u32,
+    /// Random samples per calibration iteration (paper: 512).
+    pub calib_samples: u32,
+    /// Random inputs for ECR measurement (paper: 8,192 per bank).
+    pub ecr_samples: u32,
+    /// Number of banks measured (paper: every bank of 16 modules; we
+    /// default to one subarray per bank of the configured system).
+    pub banks: usize,
+    /// Algorithm-1 bias threshold.
+    pub bias_tau: f64,
+    /// Temperatures for Fig. 6a, °C.
+    pub temperatures: Vec<f64>,
+    /// Time checkpoints for Fig. 6b, hours.
+    pub time_checkpoints_h: Vec<f64>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x9d_2025,
+            calib_iterations: 20,
+            calib_samples: 512,
+            ecr_samples: 8192,
+            banks: 16,
+            bias_tau: 0.02,
+            temperatures: vec![40.0, 50.0, 60.0, 70.0, 80.0, 90.0, 100.0],
+            time_checkpoints_h: (0..8).map(|d| d as f64 * 24.0).collect(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Reduced-size configuration for tests (fast, same code paths).
+    pub fn quick() -> Self {
+        Self {
+            calib_iterations: 12,
+            calib_samples: 256,
+            ecr_samples: 2048,
+            banks: 2,
+            ..Self::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let e = ExperimentConfig::default();
+        assert_eq!(e.calib_iterations, 20);
+        assert_eq!(e.calib_samples, 512);
+        assert_eq!(e.ecr_samples, 8192);
+        assert_eq!(e.temperatures.first().copied(), Some(40.0));
+        assert_eq!(e.temperatures.last().copied(), Some(100.0));
+        // One week of checkpoints.
+        assert_eq!(e.time_checkpoints_h.last().copied(), Some(168.0));
+    }
+}

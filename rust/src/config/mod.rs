@@ -1,0 +1,16 @@
+//! Configuration system.
+//!
+//! * [`device`] — the analog physics model of one DRAM device (the
+//!   constants pinned by the paper plus the fitted variation model);
+//! * [`system`] — system geometry: channels, banks, subarray shape and
+//!   the DDR4 timing grade;
+//! * [`experiment`] — per-experiment knobs (sample counts, iterations,
+//!   temperatures, sweep grids), defaulting to the paper's §IV values;
+//! * [`parse`] — a small `key = value` config-file format (TOML subset)
+//!   so devices/experiments can be described in files and passed to the
+//!   CLI with `--config`.
+
+pub mod device;
+pub mod experiment;
+pub mod parse;
+pub mod system;

@@ -1,0 +1,198 @@
+//! `key = value` config-file format (a TOML subset) for the CLI.
+//!
+//! Supports comments (`#`), sections (`[device]`, `[system]`,
+//! `[experiment]`), numbers, booleans, strings and number lists
+//! (`temps = [40, 60, 80]`). Section + key pairs map onto the config
+//! structs; unknown keys are reported as errors so typos don't silently
+//! fall back to defaults.
+
+use std::collections::BTreeMap;
+
+use super::device::DeviceConfig;
+use super::experiment::ExperimentConfig;
+use super::system::SystemConfig;
+
+/// A parsed config file: section -> key -> raw value.
+#[derive(Debug, Default, Clone)]
+pub struct ConfigFile {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Num(f64),
+    Bool(bool),
+    Str(String),
+    List(Vec<f64>),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Result<Value, String> {
+        let raw = raw.trim();
+        if raw == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if raw == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Some(inner) = raw.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+            let mut xs = Vec::new();
+            for part in inner.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                xs.push(part.parse::<f64>().map_err(|_| format!("bad list item '{part}'"))?);
+            }
+            return Ok(Value::List(xs));
+        }
+        if let Some(inner) = raw.strip_prefix('"').and_then(|r| r.strip_suffix('"')) {
+            return Ok(Value::Str(inner.to_string()));
+        }
+        raw.parse::<f64>().map(Value::Num).map_err(|_| format!("bad value '{raw}'"))
+    }
+
+    fn as_f64(&self) -> Result<f64, String> {
+        match self {
+            Value::Num(x) => Ok(*x),
+            _ => Err("expected a number".into()),
+        }
+    }
+}
+
+/// Parse the text of a config file.
+pub fn parse(text: &str) -> Result<ConfigFile, String> {
+    let mut cf = ConfigFile::default();
+    let mut section = String::from("");
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            cf.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+        let value =
+            Value::parse(v).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        cf.sections
+            .entry(section.clone())
+            .or_default()
+            .insert(k.trim().to_string(), value);
+    }
+    Ok(cf)
+}
+
+/// Fully resolved configuration bundle.
+#[derive(Debug, Clone, Default)]
+pub struct Resolved {
+    pub device: DeviceConfig,
+    pub system: SystemConfig,
+    pub experiment: ExperimentConfig,
+}
+
+/// Apply a config file over the defaults; unknown keys error out.
+pub fn resolve(cf: &ConfigFile) -> Result<Resolved, String> {
+    let mut r = Resolved::default();
+    for (section, kvs) in &cf.sections {
+        for (k, v) in kvs {
+            apply(&mut r, section, k, v)
+                .map_err(|e| format!("[{section}] {k}: {e}"))?;
+        }
+    }
+    Ok(r)
+}
+
+fn apply(r: &mut Resolved, section: &str, k: &str, v: &Value) -> Result<(), String> {
+    match (section, k) {
+        ("device", "cc_ff") => r.device.cc_ff = v.as_f64()?,
+        ("device", "cb_ff") => r.device.cb_ff = v.as_f64()?,
+        ("device", "frac_r") => r.device.frac_r = v.as_f64()?,
+        ("device", "sigma_sa") => r.device.sigma_sa = v.as_f64()?,
+        ("device", "tail_weight") => r.device.tail_weight = v.as_f64()?,
+        ("device", "tail_ratio") => r.device.tail_ratio = v.as_f64()?,
+        ("device", "sigma_noise") => r.device.sigma_noise = v.as_f64()?,
+        ("device", "tempco") => r.device.tempco = v.as_f64()?,
+        ("device", "tempco_jitter") => r.device.tempco_jitter = v.as_f64()?,
+        ("device", "drift_per_hour") => r.device.drift_per_hour = v.as_f64()?,
+        ("device", "t_cal") => r.device.t_cal = v.as_f64()?,
+        ("system", "channels") => r.system.channels = v.as_f64()? as usize,
+        ("system", "banks") => r.system.banks = v.as_f64()? as usize,
+        ("system", "rows_per_subarray") => r.system.rows_per_subarray = v.as_f64()? as usize,
+        ("system", "cols") => r.system.cols = v.as_f64()? as usize,
+        ("experiment", "seed") => r.experiment.seed = v.as_f64()? as u64,
+        ("experiment", "calib_iterations") => r.experiment.calib_iterations = v.as_f64()? as u32,
+        ("experiment", "calib_samples") => r.experiment.calib_samples = v.as_f64()? as u32,
+        ("experiment", "ecr_samples") => r.experiment.ecr_samples = v.as_f64()? as u32,
+        ("experiment", "banks") => r.experiment.banks = v.as_f64()? as usize,
+        ("experiment", "bias_tau") => r.experiment.bias_tau = v.as_f64()?,
+        ("experiment", "temperatures") => {
+            if let Value::List(xs) = v {
+                r.experiment.temperatures = xs.clone();
+            } else {
+                return Err("expected a list".into());
+            }
+        }
+        ("experiment", "time_checkpoints_h") => {
+            if let Value::List(xs) = v {
+                r.experiment.time_checkpoints_h = xs.clone();
+            } else {
+                return Err("expected a list".into());
+            }
+        }
+        _ => return Err("unknown configuration key".into()),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_resolve() {
+        let text = r#"
+# paper-scale run
+[device]
+sigma_sa = 0.042
+
+[system]
+cols = 65536
+channels = 4
+
+[experiment]
+calib_iterations = 20
+temperatures = [40, 70, 100]
+"#;
+        let cf = parse(text).unwrap();
+        let r = resolve(&cf).unwrap();
+        assert_eq!(r.system.cols, 65536);
+        assert!((r.device.sigma_sa - 0.042).abs() < 1e-12);
+        assert_eq!(r.experiment.temperatures, vec![40.0, 70.0, 100.0]);
+        // Untouched keys keep defaults.
+        assert_eq!(r.system.banks, 16);
+    }
+
+    #[test]
+    fn unknown_key_errors() {
+        let cf = parse("[device]\nsigma_typo = 1\n").unwrap();
+        let err = resolve(&cf).unwrap_err();
+        assert!(err.contains("sigma_typo"));
+    }
+
+    #[test]
+    fn bad_syntax_errors() {
+        assert!(parse("[device]\nnonsense\n").is_err());
+        assert!(parse("[device]\nx = [1, two]\n").is_err());
+    }
+
+    #[test]
+    fn strings_and_bools() {
+        assert_eq!(Value::parse("\"hi\"").unwrap(), Value::Str("hi".into()));
+        assert_eq!(Value::parse("true").unwrap(), Value::Bool(true));
+    }
+}

@@ -1,0 +1,128 @@
+//! System geometry and memory-interface grade.
+//!
+//! Matches the paper's evaluation platform (§IV-A): DDR4-2133, 4-channel
+//! system, 16 bank-parallel PUD, subarrays of 512 rows × 65,536 columns
+//! (the column count spans the whole rank: 8 chips × 8,192 bitlines).
+
+/// DDR4 speed-grade timing parameters, in nanoseconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ddr4Timing {
+    /// Clock period.
+    pub t_ck: f64,
+    /// ACT to PRE minimum (row active time).
+    pub t_ras: f64,
+    /// PRE to ACT (row precharge).
+    pub t_rp: f64,
+    /// ACT to internal read/write delay.
+    pub t_rcd: f64,
+    /// Four-activate window (rank-level ACT power constraint).
+    pub t_faw: f64,
+    /// ACT-to-ACT different bank (short).
+    pub t_rrd_s: f64,
+    /// ACT-to-ACT same bank group (long).
+    pub t_rrd_l: f64,
+    /// Refresh command interval.
+    pub t_refi: f64,
+    /// Refresh cycle time.
+    pub t_rfc: f64,
+}
+
+impl Ddr4Timing {
+    /// DDR4-2133P (the paper's modules).
+    pub fn ddr4_2133() -> Self {
+        Self {
+            t_ck: 0.9375,
+            t_ras: 33.0,
+            t_rp: 13.5,
+            t_rcd: 13.5,
+            // x8 devices: tFAW = max(20 CK, 25 ns) at DDR4-2133.
+            t_faw: 25.0,
+            t_rrd_s: 3.7,
+            t_rrd_l: 5.3,
+            t_refi: 7800.0,
+            t_rfc: 350.0,
+        }
+    }
+
+    /// Round a duration up to a whole number of clocks (commands are
+    /// issued on clock edges).
+    pub fn to_clocks(&self, ns: f64) -> u64 {
+        (ns / self.t_ck).ceil() as u64
+    }
+}
+
+/// Geometry of the simulated system.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    /// Memory channels (paper: 4).
+    pub channels: usize,
+    /// Banks per channel usable in parallel for PUD (paper: 16).
+    pub banks: usize,
+    /// Subarrays simulated per bank (experiments measure one subarray
+    /// per bank and scale; the paper calibrates per subarray).
+    pub subarrays_per_bank: usize,
+    /// Rows per subarray (paper: 256-1,024; we use 512).
+    pub rows_per_subarray: usize,
+    /// Columns per subarray across the rank (paper: 65,536).
+    pub cols: usize,
+    /// Timing grade.
+    pub timing: Ddr4Timing,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            channels: 4,
+            banks: 16,
+            subarrays_per_bank: 1,
+            rows_per_subarray: 512,
+            cols: 16384, // single-core default; --full switches to 65,536
+            timing: Ddr4Timing::ddr4_2133(),
+        }
+    }
+}
+
+impl SystemConfig {
+    /// The paper's full-scale geometry (65,536 columns per subarray).
+    pub fn paper() -> Self {
+        Self { cols: 65536, ..Self::default() }
+    }
+
+    /// A small geometry for unit tests and doc examples.
+    pub fn small() -> Self {
+        Self { channels: 1, banks: 2, cols: 1024, ..Self::default() }
+    }
+
+    /// Total columns participating in bank-parallel PUD.
+    pub fn total_columns(&self) -> usize {
+        self.channels * self.banks * self.cols
+    }
+
+    /// Fraction of subarray capacity reserved for calibration rows
+    /// (paper §III-D: 3 of 512 rows = 0.6%).
+    pub fn calib_capacity_overhead(&self, calib_rows: usize) -> f64 {
+        calib_rows as f64 / self.rows_per_subarray as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry() {
+        let s = SystemConfig::paper();
+        assert_eq!(s.total_columns(), 4 * 16 * 65536);
+        // §III-D: 0.6% capacity overhead for 3 calibration rows.
+        let ovh = s.calib_capacity_overhead(3);
+        assert!((ovh - 0.00586).abs() < 1e-4, "{ovh}");
+    }
+
+    #[test]
+    fn clock_rounding() {
+        let t = Ddr4Timing::ddr4_2133();
+        assert_eq!(t.to_clocks(0.9375), 1);
+        assert_eq!(t.to_clocks(1.0), 2);
+        assert_eq!(t.to_clocks(33.0), 36);
+    }
+}

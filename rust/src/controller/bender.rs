@@ -1,0 +1,185 @@
+//! Program-builder API over the command model + golden subarray
+//! (the in-simulator equivalent of a DRAM Bender host program).
+//!
+//! A [`BenderProgram`] is a list of PUD primitives; `run` executes them
+//! against the analog subarray model while the scheduler accounts a
+//! power-honest command trace, so functional results and timing come
+//! from one pass — exactly what the FPGA host does on real hardware.
+
+use crate::config::system::Ddr4Timing;
+use crate::controller::command;
+use crate::controller::scheduler::Scheduler;
+use crate::dram::subarray::Subarray;
+
+/// One high-level PUD step.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PudStep {
+    /// Load full-swing data into a row via the column interface.
+    WriteRow { row: usize, bits: Vec<u8> },
+    /// Fill a row with a constant bit.
+    FillRow { row: usize, bit: u8 },
+    RowCopy { src: usize, dst: usize },
+    Frac { row: usize },
+    /// 8-row SiMRA over the aligned group starting at `base`.
+    Simra { base: usize },
+    /// Read a row out through the column interface.
+    ReadRow { row: usize },
+}
+
+/// A recorded program plus its execution artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    /// Output of every `ReadRow` / `Simra`, in program order.
+    pub reads: Vec<Vec<u8>>,
+    pub elapsed_ns: f64,
+    pub act_count: usize,
+}
+
+/// Builder/executor for PUD programs.
+#[derive(Clone, Debug, Default)]
+pub struct BenderProgram {
+    pub steps: Vec<PudStep>,
+}
+
+impl BenderProgram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn write_row(&mut self, row: usize, bits: Vec<u8>) -> &mut Self {
+        self.steps.push(PudStep::WriteRow { row, bits });
+        self
+    }
+
+    pub fn fill_row(&mut self, row: usize, bit: u8) -> &mut Self {
+        self.steps.push(PudStep::FillRow { row, bit });
+        self
+    }
+
+    pub fn row_copy(&mut self, src: usize, dst: usize) -> &mut Self {
+        self.steps.push(PudStep::RowCopy { src, dst });
+        self
+    }
+
+    pub fn frac(&mut self, row: usize) -> &mut Self {
+        self.steps.push(PudStep::Frac { row });
+        self
+    }
+
+    pub fn simra(&mut self, base: usize) -> &mut Self {
+        self.steps.push(PudStep::Simra { base });
+        self
+    }
+
+    pub fn read_row(&mut self, row: usize) -> &mut Self {
+        self.steps.push(PudStep::ReadRow { row });
+        self
+    }
+
+    /// Execute against a subarray, returning functional results and the
+    /// power-honest timing of the command stream.
+    pub fn run(&self, sub: &mut Subarray, grade: &Ddr4Timing) -> RunResult {
+        let mut sched = Scheduler::new(grade.clone());
+        let close_full = grade.t_ras + grade.t_rp;
+        let close_pre = grade.t_rp;
+        let io_seq = [
+            command::Command::Act { row: 0 },
+            command::Command::Nop { cycles: 8 },
+            command::Command::Pre { violated: false },
+        ];
+        let mut out = RunResult::default();
+        for step in &self.steps {
+            match step {
+                PudStep::WriteRow { row, bits } => {
+                    sub.write_row(*row, bits);
+                    sched.issue(&io_seq, close_pre);
+                }
+                PudStep::FillRow { row, bit } => {
+                    sub.fill_row(*row, *bit);
+                    sched.issue(&io_seq, close_pre);
+                }
+                PudStep::RowCopy { src, dst } => {
+                    sub.row_copy(*src, *dst);
+                    sched.issue(&command::row_copy_seq(*src, *dst), close_full);
+                }
+                PudStep::Frac { row } => {
+                    sub.frac(*row);
+                    sched.issue(&command::frac_seq(*row), close_pre);
+                }
+                PudStep::Simra { base } => {
+                    let rows: Vec<usize> = (*base..*base + 8).collect();
+                    let bits = sub.simra(&rows);
+                    out.reads.push(bits);
+                    sched.issue(&command::simra_seq(*base, *base + 7), close_full);
+                }
+                PudStep::ReadRow { row } => {
+                    out.reads.push(sub.read_row(*row));
+                    sched.issue(&io_seq, close_pre);
+                }
+            }
+        }
+        out.elapsed_ns = sched.elapsed_ns();
+        out.act_count = sched.trace.act_count();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::device::DeviceConfig;
+
+    fn quiet_subarray() -> Subarray {
+        let mut cfg = DeviceConfig::default();
+        cfg.sigma_sa = 1e-6;
+        cfg.tail_weight = 0.0;
+        cfg.sigma_noise = 1e-6;
+        Subarray::with_geometry(&cfg, 64, 32, 3)
+    }
+
+    #[test]
+    fn maj5_program_end_to_end() {
+        // Fig. 1a flow as a Bender program on ideal columns.
+        let mut sub = quiet_subarray();
+        let grade = Ddr4Timing::ddr4_2133();
+        let ones = vec![1u8; 32];
+        let zeros = vec![0u8; 32];
+        let mut p = BenderProgram::new();
+        // Operands 1,1,1,0,0 then neutral rows: Frac'd row, const 0, 1.
+        p.write_row(0, ones.clone())
+            .write_row(1, ones.clone())
+            .write_row(2, ones)
+            .write_row(3, zeros.clone())
+            .write_row(4, zeros)
+            .fill_row(5, 1)
+            .frac(5)
+            .frac(5)
+            .frac(5)
+            .frac(5)
+            .frac(5)
+            .frac(5)
+            .fill_row(6, 0)
+            .fill_row(7, 1)
+            .simra(0);
+        let r = p.run(&mut sub, &grade);
+        assert_eq!(r.reads.len(), 1);
+        assert!(r.reads[0].iter().all(|&b| b == 1));
+        assert!(r.elapsed_ns > 0.0);
+        assert!(r.act_count >= 8);
+    }
+
+    #[test]
+    fn timing_scales_with_fracs() {
+        let grade = Ddr4Timing::ddr4_2133();
+        let mk = |fracs: usize| {
+            let mut sub = quiet_subarray();
+            let mut p = BenderProgram::new();
+            p.fill_row(5, 1);
+            for _ in 0..fracs {
+                p.frac(5);
+            }
+            p.run(&mut sub, &grade).elapsed_ns
+        };
+        assert!(mk(6) > mk(2));
+    }
+}

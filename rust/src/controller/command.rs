@@ -1,0 +1,85 @@
+//! DDR4 command vocabulary and the timing-violation sequences that
+//! implement the PUD primitives (paper Fig. 2b; ComputeDRAM/FracDRAM).
+
+/// A DDR4 command as issued on the command bus.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Command {
+    /// Activate a row.
+    Act { row: usize },
+    /// Precharge the bank. `violated` marks a deliberately-early PRE.
+    Pre { violated: bool },
+    /// Column read (used by result readout).
+    Rd,
+    /// Column write (used to load operand/calibration data).
+    Wr,
+    /// Idle cycles (explicit NOPs between violated commands).
+    Nop { cycles: u32 },
+}
+
+/// A PUD primitive expanded to its command sequence.
+///
+/// The cycle offsets of the violated sequences follow ComputeDRAM-style
+/// `ACT - (T1 idle) - PRE - (T2 idle) - ACT` encodings:
+/// * **RowCopy**: ACT(src), PRE after T1=1 cycles (too early to restore
+///   fully), ACT(dst) after T2=2 cycles — the bitline still carries the
+///   sensed source value and drives it into `dst`; then a regular
+///   tRAS/tRP close.
+/// * **Frac**: ACT(row), PRE after ~5 cycles — the restore is cut short
+///   mid-swing, leaving a fractional charge; then tRP.
+/// * **SiMRA**: ACT(addr A), violated PRE, ACT(addr B) — the decoder
+///   glitch leaves multiple wordlines raised; charge shares; a full
+///   tRAS restore writes the majority back into all opened rows.
+pub fn row_copy_seq(src: usize, dst: usize) -> Vec<Command> {
+    vec![
+        Command::Act { row: src },
+        Command::Nop { cycles: 1 },
+        Command::Pre { violated: true },
+        Command::Nop { cycles: 2 },
+        Command::Act { row: dst },
+    ]
+}
+
+pub fn frac_seq(row: usize) -> Vec<Command> {
+    vec![
+        Command::Act { row },
+        Command::Nop { cycles: 5 },
+        Command::Pre { violated: true },
+    ]
+}
+
+pub fn simra_seq(base_row: usize, glitch_row: usize) -> Vec<Command> {
+    vec![
+        Command::Act { row: base_row },
+        Command::Nop { cycles: 1 },
+        Command::Pre { violated: true },
+        Command::Nop { cycles: 1 },
+        Command::Act { row: glitch_row },
+    ]
+}
+
+/// Count the ACTs in a sequence (the unit the power model cares about).
+pub fn act_count(seq: &[Command]) -> u32 {
+    seq.iter()
+        .filter(|c| matches!(c, Command::Act { .. }))
+        .count() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequences_have_expected_act_counts() {
+        assert_eq!(act_count(&row_copy_seq(1, 2)), 2);
+        assert_eq!(act_count(&frac_seq(1)), 1);
+        assert_eq!(act_count(&simra_seq(0, 8)), 2);
+    }
+
+    #[test]
+    fn violated_pre_is_marked() {
+        let seq = row_copy_seq(1, 2);
+        assert!(seq
+            .iter()
+            .any(|c| matches!(c, Command::Pre { violated: true })));
+    }
+}

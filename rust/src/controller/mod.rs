@@ -1,0 +1,23 @@
+//! Command-level DDR4 controller model (the DRAM Bender substitute).
+//!
+//! The paper drives its modules with DRAM Bender on an Alveo U200,
+//! issuing ACT/PRE sequences that deliberately violate JEDEC timing to
+//! trigger RowCopy, SiMRA and Frac. Throughput (Eq. 1) is then set by
+//! the latency of those sequences under the rank's ACT power budget
+//! (tFAW) with 16 banks operating in parallel (§IV-A).
+//!
+//! * [`command`] — the command vocabulary and violation sequences;
+//! * [`timing`] — per-primitive latency derived from DDR4-2133 timings;
+//! * [`power`] — the tFAW/ACT-budget model that caps bank parallelism;
+//! * [`trace`] — recorded command streams (DRAM Bender program style);
+//! * [`scheduler`] — turns primitive sequences into an issue schedule
+//!   and a makespan;
+//! * [`bender`] — a small program-builder API over all of the above,
+//!   executing against the golden subarray model while accounting time.
+
+pub mod bender;
+pub mod command;
+pub mod power;
+pub mod scheduler;
+pub mod timing;
+pub mod trace;

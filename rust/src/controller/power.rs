@@ -1,0 +1,74 @@
+//! ACT power budget (tFAW) — the constraint that sets PUD throughput.
+//!
+//! Every PUD primitive is a burst of ACTs, and a rank only sustains
+//! 4 ACTs per tFAW window. With 16 banks running PUD in parallel the
+//! command stream is ACT-bound long before any single bank's sequence
+//! latency matters (paper §IV-A: "latency is derived from the 16
+//! bank-parallel PUD under ACT power constraints").
+
+use crate::config::system::Ddr4Timing;
+
+/// Rank-level ACT budget model.
+#[derive(Clone, Copy, Debug)]
+pub struct ActPowerModel {
+    /// Sustained ACT rate per rank, ACTs/ns.
+    pub act_rate: f64,
+    /// Refresh duty overhead factor (fraction of time lost to REF).
+    pub refresh_overhead: f64,
+}
+
+impl ActPowerModel {
+    pub fn from_grade(t: &Ddr4Timing) -> Self {
+        Self { act_rate: 4.0 / t.t_faw, refresh_overhead: t.t_rfc / t.t_refi }
+    }
+
+    /// Effective per-bank operation period (ns) when `banks` banks each
+    /// stream operations of `acts_per_op` ACTs and `seq_latency_ns`
+    /// sequence latency: the maximum of the command-sequence bound and
+    /// the rank ACT-budget bound, inflated by the refresh duty cycle.
+    pub fn op_period_ns(&self, seq_latency_ns: f64, acts_per_op: u32, banks: usize) -> f64 {
+        let act_bound = acts_per_op as f64 * banks as f64 / self.act_rate;
+        let bound = act_bound.max(seq_latency_ns);
+        bound / (1.0 - self.refresh_overhead)
+    }
+
+    /// Is the configuration ACT-bound (true for the paper's 16 banks)?
+    pub fn is_act_bound(&self, seq_latency_ns: f64, acts_per_op: u32, banks: usize) -> bool {
+        acts_per_op as f64 * banks as f64 / self.act_rate > seq_latency_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::system::Ddr4Timing;
+    use crate::controller::timing::{majx_cost, PrimitiveTiming};
+
+    #[test]
+    fn sixteen_banks_are_act_bound() {
+        let grade = Ddr4Timing::ddr4_2133();
+        let pm = ActPowerModel::from_grade(&grade);
+        let pt = PrimitiveTiming::from_grade(&grade);
+        let c = majx_cost(&pt, 5, 3);
+        assert!(pm.is_act_bound(c.latency_ns, c.acts, 16));
+        // ...but a single bank is sequence-bound.
+        assert!(!pm.is_act_bound(c.latency_ns, c.acts, 1));
+    }
+
+    #[test]
+    fn op_period_scales_with_banks_when_act_bound() {
+        let grade = Ddr4Timing::ddr4_2133();
+        let pm = ActPowerModel::from_grade(&grade);
+        let p16 = pm.op_period_ns(500.0, 22, 16);
+        let p8 = pm.op_period_ns(500.0, 22, 8);
+        assert!((p16 / p8 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn refresh_inflates_period() {
+        let grade = Ddr4Timing::ddr4_2133();
+        let pm = ActPowerModel::from_grade(&grade);
+        let p = pm.op_period_ns(1000.0, 1, 1);
+        assert!(p > 1000.0 && p < 1100.0);
+    }
+}

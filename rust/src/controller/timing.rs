@@ -1,0 +1,130 @@
+//! Per-primitive latency derived from the DDR4 speed grade.
+//!
+//! Latency of a primitive = its violated command prologue plus the
+//! regular close-out (tRAS restore + tRP precharge) before the bank can
+//! accept the next primitive. Values land near the ComputeDRAM /
+//! FracDRAM measurements for DDR4-2133 (~50 ns RowCopy, ~20 ns Frac).
+
+use crate::config::system::Ddr4Timing;
+use crate::controller::command::{self, Command};
+
+/// Latencies (ns) and ACT counts of every PUD primitive.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrimitiveTiming {
+    pub row_copy_ns: f64,
+    pub frac_ns: f64,
+    pub simra_ns: f64,
+    /// Result readout: ACT + RD burst + PRE.
+    pub readout_ns: f64,
+    /// Full-row write: ACT + WR burst + PRE.
+    pub write_ns: f64,
+    pub row_copy_acts: u32,
+    pub frac_acts: u32,
+    pub simra_acts: u32,
+    pub readout_acts: u32,
+    pub write_acts: u32,
+    /// Refresh duty overhead factor (tRFC / tREFI), applied to
+    /// sustained rates.
+    pub refresh_overhead: f64,
+}
+
+impl PrimitiveTiming {
+    pub fn from_grade(t: &Ddr4Timing) -> Self {
+        let seq_ns = |seq: &[Command]| -> f64 {
+            // Command-bus time of the violated prologue...
+            let prologue: u32 = seq
+                .iter()
+                .map(|c| match c {
+                    Command::Nop { cycles } => *cycles,
+                    _ => 1,
+                })
+                .sum();
+            prologue as f64 * t.t_ck
+        };
+        let close_ns = t.t_ras + t.t_rp; // restore + precharge
+        let rc = seq_ns(&command::row_copy_seq(0, 1)) + close_ns;
+        let fr = seq_ns(&command::frac_seq(0)) + t.t_rp;
+        let sm = seq_ns(&command::simra_seq(0, 8)) + close_ns;
+        let ro = t.t_rcd + 8.0 * t.t_ck + t.t_rp; // ACT..RD burst..PRE
+        let wr = t.t_rcd + 8.0 * t.t_ck + t.t_rp;
+        Self {
+            row_copy_ns: rc,
+            frac_ns: fr,
+            simra_ns: sm,
+            readout_ns: ro,
+            write_ns: wr,
+            row_copy_acts: command::act_count(&command::row_copy_seq(0, 1)),
+            frac_acts: command::act_count(&command::frac_seq(0)),
+            simra_acts: command::act_count(&command::simra_seq(0, 8)),
+            readout_acts: 1,
+            write_acts: 1,
+            refresh_overhead: t.t_rfc / t.t_refi,
+        }
+    }
+}
+
+/// Command-sequence cost of one MAJX execution (paper §III-D flow).
+///
+/// Every 8-row SiMRA preloads its full group: m operand RowCopies plus
+/// 3 calibration-row RowCopies plus (8 - m - 3) constant-row RowCopies
+/// — 8 copies total for both MAJ5 and MAJ3 — then the configured Frac
+/// applications, the SiMRA itself, and one result readout.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MajxCost {
+    pub latency_ns: f64,
+    pub acts: u32,
+}
+
+pub fn majx_cost(t: &PrimitiveTiming, m: usize, total_fracs: u32) -> MajxCost {
+    assert!(m == 3 || m == 5, "MAJ{m} not supported under 8-row SiMRA");
+    let copies = 8u32;
+    let latency_ns = copies as f64 * t.row_copy_ns
+        + total_fracs as f64 * t.frac_ns
+        + t.simra_ns
+        + t.readout_ns;
+    let acts = copies * t.row_copy_acts
+        + total_fracs * t.frac_acts
+        + t.simra_acts
+        + t.readout_acts;
+    MajxCost { latency_ns, acts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::system::Ddr4Timing;
+
+    #[test]
+    fn primitive_latencies_are_plausible() {
+        let t = PrimitiveTiming::from_grade(&Ddr4Timing::ddr4_2133());
+        // ComputeDRAM-era measurements: RowCopy ~50 ns, Frac ~20 ns.
+        assert!((45.0..60.0).contains(&t.row_copy_ns), "{}", t.row_copy_ns);
+        assert!((15.0..25.0).contains(&t.frac_ns), "{}", t.frac_ns);
+        assert!(t.simra_ns > t.frac_ns);
+        assert!(t.refresh_overhead < 0.06);
+    }
+
+    #[test]
+    fn maj5_cost_structure() {
+        let t = PrimitiveTiming::from_grade(&Ddr4Timing::ddr4_2133());
+        let c3 = majx_cost(&t, 5, 3);
+        let c0 = majx_cost(&t, 5, 0);
+        // Fewer Fracs -> strictly lower latency (paper §III-D: "varies
+        // based on the total Frac operations used").
+        assert!(c0.latency_ns < c3.latency_ns);
+        assert_eq!(c3.acts - c0.acts, 3 * t.frac_acts);
+        // 8 row copies (5 operands + 3 calib), 2 ACTs each, + SiMRA 2
+        // + readout 1 + 3 fracs = 22 ACTs.
+        assert_eq!(c3.acts, 8 * 2 + 2 + 1 + 3);
+    }
+
+    #[test]
+    fn maj3_preloads_the_same_group() {
+        // Both MAJ3 and MAJ5 fill the full 8-row SiMRA group, so the
+        // per-op cost is identical at equal Frac counts.
+        let t = PrimitiveTiming::from_grade(&Ddr4Timing::ddr4_2133());
+        let maj3 = majx_cost(&t, 3, 3);
+        let maj5 = majx_cost(&t, 5, 3);
+        assert_eq!(maj3, maj5);
+    }
+}

@@ -1,0 +1,90 @@
+//! Recorded command traces (DRAM Bender program style).
+//!
+//! Every command is stamped with its issue cycle; traces can be rendered
+//! as text for inspection (`pudtune trace`) and are consumed by the
+//! scheduler tests to assert timing-violation structure.
+
+use crate::controller::command::Command;
+use std::fmt::Write as _;
+
+/// A timed command stream for one bank.
+#[derive(Clone, Debug, Default)]
+pub struct CommandTrace {
+    /// (issue cycle, command)
+    pub entries: Vec<(u64, Command)>,
+}
+
+impl CommandTrace {
+    pub fn push(&mut self, cycle: u64, cmd: Command) {
+        debug_assert!(
+            self.entries.last().map(|(c, _)| *c <= cycle).unwrap_or(true),
+            "commands must be issued in time order"
+        );
+        self.entries.push((cycle, cmd));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Last issue cycle (makespan in cycles).
+    pub fn makespan(&self) -> u64 {
+        self.entries.last().map(|(c, _)| *c).unwrap_or(0)
+    }
+
+    pub fn act_count(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|(_, c)| matches!(c, Command::Act { .. }))
+            .count()
+    }
+
+    /// Render as DRAM-Bender-style program text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (cycle, cmd) in &self.entries {
+            let line = match cmd {
+                Command::Act { row } => format!("ACT   row={row}"),
+                Command::Pre { violated: true } => "PRE   (violated)".to_string(),
+                Command::Pre { violated: false } => "PRE".to_string(),
+                Command::Rd => "RD".to_string(),
+                Command::Wr => "WR".to_string(),
+                Command::Nop { cycles } => format!("NOP x{cycles}"),
+            };
+            let _ = writeln!(out, "{cycle:>8}: {line}");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_accumulates_in_order() {
+        let mut t = CommandTrace::default();
+        t.push(0, Command::Act { row: 1 });
+        t.push(2, Command::Pre { violated: true });
+        t.push(4, Command::Act { row: 2 });
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.makespan(), 4);
+        assert_eq!(t.act_count(), 2);
+        let s = t.render();
+        assert!(s.contains("ACT   row=1"));
+        assert!(s.contains("(violated)"));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "time order")]
+    fn out_of_order_push_asserts() {
+        let mut t = CommandTrace::default();
+        t.push(5, Command::Rd);
+        t.push(1, Command::Wr);
+    }
+}

@@ -1,0 +1,97 @@
+//! Generic micro-batching queue.
+//!
+//! The e2e GEMV example serves request streams through the PUD pipeline;
+//! PJRT executables amortise best over batched inputs, so requests are
+//! collected until a batch fills (or the queue is flushed) — the same
+//! dynamic-batching shape a serving router uses.
+
+/// A batch-accumulating queue with a fixed batch size.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    batch_size: usize,
+    pending: Vec<T>,
+    pub batches_emitted: u64,
+    pub items_seen: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(batch_size: usize) -> Self {
+        assert!(batch_size > 0);
+        Self { batch_size, pending: Vec::new(), batches_emitted: 0, items_seen: 0 }
+    }
+
+    /// Push an item; returns a full batch when one completes.
+    pub fn push(&mut self, item: T) -> Option<Vec<T>> {
+        self.items_seen += 1;
+        self.pending.push(item);
+        if self.pending.len() >= self.batch_size {
+            self.batches_emitted += 1;
+            Some(std::mem::take(&mut self.pending))
+        } else {
+            None
+        }
+    }
+
+    /// Flush the remainder (end of stream).
+    pub fn flush(&mut self) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            self.batches_emitted += 1;
+            Some(std::mem::take(&mut self.pending))
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Mean batch occupancy so far (efficiency metric).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches_emitted == 0 {
+            0.0
+        } else {
+            self.items_seen as f64 / (self.batches_emitted as f64 * self.batch_size as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_full_batches() {
+        let mut b = Batcher::new(3);
+        assert!(b.push(1).is_none());
+        assert!(b.push(2).is_none());
+        assert_eq!(b.push(3), Some(vec![1, 2, 3]));
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flush_drains_remainder() {
+        let mut b = Batcher::new(4);
+        b.push("a");
+        b.push("b");
+        assert_eq!(b.flush(), Some(vec!["a", "b"]));
+        assert_eq!(b.flush(), None);
+    }
+
+    #[test]
+    fn occupancy_accounts_partial_batches() {
+        let mut b = Batcher::new(4);
+        for i in 0..6 {
+            b.push(i);
+        }
+        b.flush();
+        assert_eq!(b.batches_emitted, 2);
+        assert!((b.mean_occupancy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_batch_size_rejected() {
+        Batcher::<u8>::new(0);
+    }
+}

@@ -1,0 +1,284 @@
+//! The PJRT-backed calibration/measurement engine and the device-level
+//! coordinator.
+//!
+//! One Algorithm-1 iteration = one executable call (`maj5_step_*`):
+//! the sampling batch, bias computation and level update are fused into
+//! a single AOT graph (L2) embedding the charge-share/sense Pallas
+//! kernel (L1), so the Rust<->PJRT boundary is crossed 20 times per
+//! subarray calibration — the same count as the paper's host<->FPGA
+//! round trips. ECR measurement is one call (`maj*_ecr_*`, a scanned
+//! 8,192-sample graph).
+
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+use crate::analysis::ecr::EcrReport;
+use crate::calib::algorithm::{const_q, CalibParams, Calibration};
+use crate::calib::lattice::{ConfigKind, FracConfig, OffsetLattice};
+use crate::config::device::DeviceConfig;
+use crate::config::system::SystemConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::dram::sense_amp::SenseAmps;
+use crate::dram::temperature::Environment;
+use crate::runtime::buffers;
+use crate::runtime::{Executable, Runtime};
+use crate::util::rng::{derive_seed, Rng};
+
+/// The coordinator's view of one subarray on the PJRT path: the
+/// sense-amplifier state (thresholds) and environment — cell charges
+/// live inside the sampling graphs.
+#[derive(Clone, Debug)]
+pub struct ColumnBank {
+    pub sa: SenseAmps,
+    pub env: Environment,
+    pub seed: u64,
+}
+
+impl ColumnBank {
+    /// Same seed derivation as `Device`/`Subarray`, so native and PJRT
+    /// paths see identical variation fields.
+    pub fn new(cfg: &DeviceConfig, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        Self {
+            sa: SenseAmps::new(cfg, cols, &mut rng),
+            env: Environment::nominal(cfg.t_cal),
+            seed,
+        }
+    }
+
+    pub fn thresholds(&self, cfg: &DeviceConfig) -> Vec<f32> {
+        self.sa.effective_thresholds(cfg, &self.env)
+    }
+
+    pub fn cols(&self) -> usize {
+        self.sa.cols()
+    }
+}
+
+/// PJRT-backed engine.
+pub struct PjrtEngine {
+    pub rt: Arc<Runtime>,
+    pub cfg: DeviceConfig,
+    pub metrics: Arc<Metrics>,
+}
+
+impl PjrtEngine {
+    pub fn new(rt: Arc<Runtime>, cfg: DeviceConfig) -> Self {
+        Self { rt, cfg, metrics: Arc::new(Metrics::new()) }
+    }
+
+    /// Find the artifact `maj{m}_{kind}_*` whose baked column count
+    /// matches; errors out with a rebuild hint otherwise.
+    fn find(&self, m: usize, kind: &str, cols: usize) -> Result<Arc<Executable>> {
+        for name in self.rt.artifact_names() {
+            if !name.starts_with(&format!("maj{m}_{kind}_")) {
+                continue;
+            }
+            let exe = self.rt.load(&name)?;
+            if exe.meta_usize("cols") == Some(cols) {
+                return Ok(exe);
+            }
+        }
+        Err(anyhow!(
+            "no maj{m}_{kind} artifact for {cols} columns — rebuild with \
+             `make artifacts` (use --full for 65,536 columns)"
+        ))
+    }
+
+    /// Common literal prologue shared by step and ECR graphs.
+    fn lattice_args(&self, calib: &Calibration) -> Result<Vec<xla::Literal>> {
+        let lat = &calib.lattice;
+        Ok(vec![
+            buffers::i32_vec(&calib.levels.iter().map(|&v| v as i32).collect::<Vec<_>>()),
+            buffers::f32_array(&lat.bits_table_f32(), &[8, 3])?,
+            buffers::f32_vec(&lat.config.fracs.map(|x| x as f32)),
+            buffers::f32_scalar(self.cfg.frac_r as f32),
+        ])
+    }
+
+    /// Algorithm 1 on the PJRT path.
+    pub fn calibrate(
+        &self,
+        bank: &ColumnBank,
+        fc: &FracConfig,
+        params: &CalibParams,
+    ) -> Result<Calibration> {
+        let cols = bank.cols();
+        let lattice = OffsetLattice::build(&self.cfg, fc);
+        let mut calib = Calibration::uniform(lattice, cols);
+        if fc.kind == ConfigKind::Baseline {
+            return Ok(calib);
+        }
+        let exe = self.find(5, "step", cols)?;
+        anyhow::ensure!(
+            exe.meta_usize("samples") == Some(params.samples as usize)
+                || exe.meta_usize("samples").is_some(),
+            "step artifact missing sample metadata"
+        );
+        let thr = bank.thresholds(&self.cfg);
+        let thr_lit = buffers::f32_vec(&thr);
+        for iter in 0..params.iterations {
+            let seed = derive_seed(params.seed, &[bank.seed, iter as u64]) as u32;
+            let mut args = vec![buffers::u32_scalar(seed)];
+            args.extend(self.lattice_args(&calib)?);
+            args.push(buffers::f32_scalar(const_q(5) as f32));
+            args.push(thr_lit.clone());
+            args.push(buffers::f32_scalar(self.cfg.sigma_noise as f32));
+            args.push(buffers::f32_scalar(params.tau as f32));
+            args.push(buffers::f32_scalar(1.0)); // update
+            let out = self.metrics.time("pjrt.step", || exe.run(&args))?;
+            self.metrics.incr("pjrt.step.calls");
+            let new_levels = buffers::to_i32_vec(&out[0])?;
+            for (lv, nl) in calib.levels.iter_mut().zip(&new_levels) {
+                *lv = *nl as u8;
+            }
+        }
+        Ok(calib)
+    }
+
+    /// Mass ECR measurement (the paper's 8,192 random inputs) in one
+    /// executable call.
+    pub fn measure_ecr(
+        &self,
+        bank: &ColumnBank,
+        calib: &Calibration,
+        m: usize,
+        seed: u64,
+    ) -> Result<EcrReport> {
+        let cols = bank.cols();
+        let exe = self.find(m, "ecr", cols)?;
+        let total = exe
+            .meta_usize("total_samples")
+            .ok_or_else(|| anyhow!("ecr artifact missing total_samples"))?;
+        let thr = bank.thresholds(&self.cfg);
+        let seed32 = derive_seed(seed, &[bank.seed, m as u64]) as u32;
+        let mut args = vec![buffers::u32_scalar(seed32)];
+        args.extend(self.lattice_args(calib)?);
+        args.push(buffers::f32_scalar(const_q(m) as f32));
+        args.push(buffers::f32_vec(&thr));
+        args.push(buffers::f32_scalar(self.cfg.sigma_noise as f32));
+        let out = self.metrics.time("pjrt.ecr", || exe.run(&args))?;
+        self.metrics.incr("pjrt.ecr.calls");
+        let err = buffers::to_i32_vec(&out[0])?;
+        Ok(EcrReport::from_error_counts(
+            err.into_iter().map(|e| e.max(0) as u32).collect(),
+            total as u32,
+        ))
+    }
+}
+
+/// Per-bank measurement outcome (the unit Table I aggregates).
+#[derive(Clone, Debug)]
+pub struct BankOutcome {
+    pub bank_seed: u64,
+    /// MAJ5 ECR, baseline / PUDTune.
+    pub ecr5_base: f64,
+    pub ecr5_tune: f64,
+    /// Arithmetic (MAJ5 ∧ MAJ3) ECR, baseline / PUDTune.
+    pub ecr_arith_base: f64,
+    pub ecr_arith_tune: f64,
+}
+
+/// Device-level coordinator: fans per-bank jobs across workers.
+pub struct DeviceCoordinator {
+    pub cfg: DeviceConfig,
+    pub sys: SystemConfig,
+    pub engine: Arc<PjrtEngine>,
+}
+
+impl DeviceCoordinator {
+    pub fn new(cfg: DeviceConfig, sys: SystemConfig, engine: Arc<PjrtEngine>) -> Self {
+        Self { cfg, sys, engine }
+    }
+
+    /// Calibrate + measure one bank under baseline and PUDTune configs.
+    pub fn bank_outcome(
+        &self,
+        bank_seed: u64,
+        base: &FracConfig,
+        tune: &FracConfig,
+        params: &CalibParams,
+    ) -> Result<BankOutcome> {
+        let bank = ColumnBank::new(&self.cfg, self.sys.cols, bank_seed);
+        let base_cal = base.uncalibrated(&self.cfg, bank.cols());
+        let tune_cal = self.engine.calibrate(&bank, tune, params)?;
+        let e5b = self.engine.measure_ecr(&bank, &base_cal, 5, 0xECB)?;
+        let e5t = self.engine.measure_ecr(&bank, &tune_cal, 5, 0xECB)?;
+        let e3b = self.engine.measure_ecr(&bank, &base_cal, 3, 0xEC3)?;
+        let e3t = self.engine.measure_ecr(&bank, &tune_cal, 3, 0xEC3)?;
+        Ok(BankOutcome {
+            bank_seed,
+            ecr5_base: e5b.ecr(),
+            ecr5_tune: e5t.ecr(),
+            ecr_arith_base: e5b.intersect(&e3b).ecr(),
+            ecr_arith_tune: e5t.intersect(&e3t).ecr(),
+        })
+    }
+
+    /// All banks of the configured system.
+    ///
+    /// Sequential over banks: the `xla` crate's PJRT client is not
+    /// `Send`/`Sync` (an `Rc` inside the C wrapper), and the CPU PJRT
+    /// backend is internally threaded anyway — the native engine path
+    /// (`experiments::run_table1`) is the one that fans banks across
+    /// the worker pool.
+    pub fn run_banks(
+        &self,
+        device_seed: u64,
+        banks: usize,
+        base: &FracConfig,
+        tune: &FracConfig,
+        params: &CalibParams,
+        _threads: usize,
+    ) -> Result<Vec<BankOutcome>> {
+        (0..banks)
+            .map(|b| {
+                let seed = derive_seed(device_seed, &[0, b as u64, 0]);
+                self.bank_outcome(seed, base, tune, params)
+            })
+            .collect()
+    }
+}
+
+/// Mean ECRs across bank outcomes: (maj5 base, maj5 tune, arith base,
+/// arith tune).
+pub fn mean_ecrs(outcomes: &[BankOutcome]) -> (f64, f64, f64, f64) {
+    let n = outcomes.len().max(1) as f64;
+    (
+        outcomes.iter().map(|o| o.ecr5_base).sum::<f64>() / n,
+        outcomes.iter().map(|o| o.ecr5_tune).sum::<f64>() / n,
+        outcomes.iter().map(|o| o.ecr_arith_base).sum::<f64>() / n,
+        outcomes.iter().map(|o| o.ecr_arith_tune).sum::<f64>() / n,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_bank_matches_subarray_variation() {
+        use crate::dram::subarray::Subarray;
+        let cfg = DeviceConfig::default();
+        let bank = ColumnBank::new(&cfg, 256, 99);
+        let sub = Subarray::with_geometry(&cfg, 32, 256, 99);
+        assert_eq!(bank.sa.variation.sa_offset, sub.sa.variation.sa_offset);
+        assert_eq!(bank.thresholds(&cfg), sub.sa.effective_thresholds(&cfg, &sub.env));
+    }
+
+    #[test]
+    fn mean_ecr_aggregation() {
+        let o = |b: f64, t: f64| BankOutcome {
+            bank_seed: 0,
+            ecr5_base: b,
+            ecr5_tune: t,
+            ecr_arith_base: b,
+            ecr_arith_tune: t,
+        };
+        let (b5, t5, ba, ta) = mean_ecrs(&[o(0.4, 0.04), o(0.6, 0.02)]);
+        assert!((b5 - 0.5).abs() < 1e-12);
+        assert!((t5 - 0.03).abs() < 1e-12);
+        assert_eq!(ba, b5);
+        assert_eq!(ta, t5);
+    }
+}

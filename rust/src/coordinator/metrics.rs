@@ -1,0 +1,83 @@
+//! Lightweight counters and phase timers for the coordinator.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Thread-safe metric registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    timers: Mutex<BTreeMap<String, f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, key: &str, v: u64) {
+        *self.counters.lock().unwrap().entry(key.to_string()).or_insert(0) += v;
+    }
+
+    pub fn incr(&self, key: &str) {
+        self.add(key, 1);
+    }
+
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.lock().unwrap().get(key).copied().unwrap_or(0)
+    }
+
+    /// Time a closure under `key` (accumulating seconds).
+    pub fn time<R>(&self, key: &str, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        *self
+            .timers
+            .lock()
+            .unwrap()
+            .entry(key.to_string())
+            .or_insert(0.0) += t.elapsed().as_secs_f64();
+        r
+    }
+
+    pub fn seconds(&self, key: &str) -> f64 {
+        self.timers.lock().unwrap().get(key).copied().unwrap_or(0.0)
+    }
+
+    /// Render all metrics as aligned text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("  {k:<40} {v}\n"));
+        }
+        for (k, v) in self.timers.lock().unwrap().iter() {
+            out.push_str(&format!("  {k:<40} {v:.3}s\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("pjrt.calls");
+        m.add("pjrt.calls", 2);
+        assert_eq!(m.counter("pjrt.calls"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timers_accumulate() {
+        let m = Metrics::new();
+        let x = m.time("phase", || 21 * 2);
+        assert_eq!(x, 42);
+        m.time("phase", || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(m.seconds("phase") >= 0.005);
+        assert!(m.render().contains("phase"));
+    }
+}

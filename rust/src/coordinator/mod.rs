@@ -1,0 +1,22 @@
+//! L3 coordinator: bank-parallel experiment orchestration over the
+//! PJRT runtime.
+//!
+//! The paper calibrates every subarray of every bank (§III-A) and
+//! measures ECR per bank over 8,192 random inputs (§IV-A); on their
+//! testbed the FPGA host does the bulk sampling. Here the coordinator
+//! plays that role: it owns the device state, schedules per-subarray
+//! calibration/measurement jobs onto a worker pool, batches them into
+//! the AOT-compiled sampling executables, and aggregates the results
+//! the analysis layer turns into Table I / Figs. 5-6.
+//!
+//! * [`engine`] — PJRT-backed calibration + ECR engine (one Algorithm-1
+//!   iteration per executable call) and the device-level coordinator;
+//! * [`worker`] — std::thread scoped worker pool (`parallel_map`);
+//! * [`batcher`] — generic micro-batching queue (used by the e2e GEMV
+//!   serving example);
+//! * [`metrics`] — counters/timers reported by the CLI and benches.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod worker;

@@ -1,0 +1,109 @@
+//! Address arithmetic over the DRAM hierarchy (Fig. 2a of the paper):
+//! channel -> bank -> subarray -> (row, column).
+
+/// Fully-qualified subarray address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SubarrayId {
+    pub channel: usize,
+    pub bank: usize,
+    pub subarray: usize,
+}
+
+impl SubarrayId {
+    pub fn new(channel: usize, bank: usize, subarray: usize) -> Self {
+        Self { channel, bank, subarray }
+    }
+
+    /// Stable seed-derivation path for this subarray.
+    pub fn seed_path(&self) -> [u64; 3] {
+        [self.channel as u64, self.bank as u64, self.subarray as u64]
+    }
+}
+
+/// A row address inside one subarray.
+pub type Row = usize;
+
+/// Reserved row layout inside a subarray used by PUD operations.
+///
+/// The SiMRA decoder glitch activates a naturally-aligned group of
+/// 2^k rows, so the compute rows live in one aligned 8-row group
+/// (`simra_base..simra_base+8`). Calibration data occupies three rows
+/// just below it and the constant all-0/all-1 rows sit next to them,
+/// mirroring the paper's Fig. 1 arrangement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowMap {
+    /// First row of the 8-row SiMRA group.
+    pub simra_base: Row,
+    /// Rows storing the pre-identified calibration bits (3 rows).
+    pub calib_store: [Row; 3],
+    /// All-zeros constant row.
+    pub const0: Row,
+    /// All-ones constant row.
+    pub const1: Row,
+    /// First row of general data storage.
+    pub data_base: Row,
+}
+
+impl RowMap {
+    /// Standard layout for a subarray with `rows` rows.
+    pub fn standard(rows: usize) -> Self {
+        assert!(rows >= 32, "subarray too small for the PUD row layout");
+        Self {
+            simra_base: 0,
+            calib_store: [8, 9, 10],
+            const0: 11,
+            const1: 12,
+            data_base: 16,
+        }
+    }
+
+    /// The 8 rows opened by a SiMRA on the compute group.
+    pub fn simra_rows(&self) -> [Row; 8] {
+        let b = self.simra_base;
+        [b, b + 1, b + 2, b + 3, b + 4, b + 5, b + 6, b + 7]
+    }
+
+    /// Operand rows inside the SiMRA group for an m-input MAJX
+    /// (the first m rows), and the non-operand rows (the rest).
+    pub fn operand_rows(&self, m: usize) -> Vec<Row> {
+        (0..m).map(|i| self.simra_base + i).collect()
+    }
+
+    pub fn non_operand_rows(&self, m: usize) -> Vec<Row> {
+        (m..8).map(|i| self.simra_base + i).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_map_is_disjoint() {
+        let m = RowMap::standard(512);
+        let mut all: Vec<Row> = m.simra_rows().to_vec();
+        all.extend_from_slice(&m.calib_store);
+        all.push(m.const0);
+        all.push(m.const1);
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "row roles must not overlap");
+        assert!(m.data_base > *all.last().unwrap());
+    }
+
+    #[test]
+    fn simra_group_is_aligned() {
+        let m = RowMap::standard(512);
+        assert_eq!(m.simra_base % 8, 0, "SiMRA group must be 8-aligned");
+    }
+
+    #[test]
+    fn operand_split() {
+        let m = RowMap::standard(512);
+        assert_eq!(m.operand_rows(5).len(), 5);
+        assert_eq!(m.non_operand_rows(5).len(), 3);
+        assert_eq!(m.operand_rows(3).len(), 3);
+        assert_eq!(m.non_operand_rows(3).len(), 5);
+    }
+}

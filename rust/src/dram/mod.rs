@@ -1,0 +1,25 @@
+//! Analog DRAM simulator — the substrate the paper's testbed provided.
+//!
+//! The paper runs on real SK Hynix DDR4 modules driven by DRAM Bender;
+//! every effect it exploits or fights is analog: charge sharing across
+//! simultaneously-activated cells, fractional charging, and per-column
+//! sense-amplifier threshold variation. This module reproduces those at
+//! the level the paper's results depend on (DESIGN.md §1, §3):
+//!
+//! * [`geometry`] — address arithmetic (channel/bank/subarray/row/col);
+//! * [`variation`] — seeded per-column process-variation fields
+//!   (threshold offsets with heavy tails, tempco jitter);
+//! * [`sense_amp`]  — threshold evaluation under temperature and aging;
+//! * [`subarray`] — the cell array: charges, activation, SiMRA charge
+//!   sharing, Frac partial charging, row copy (the golden model);
+//! * [`bank`], [`device`] — the hierarchy above subarrays;
+//! * [`temperature`], [`retention`] — environment models for Fig. 6.
+
+pub mod bank;
+pub mod device;
+pub mod geometry;
+pub mod retention;
+pub mod sense_amp;
+pub mod subarray;
+pub mod temperature;
+pub mod variation;

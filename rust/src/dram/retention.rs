@@ -1,0 +1,74 @@
+//! Aging / long-term drift (Fig. 6b substrate).
+//!
+//! The paper leaves calibrated modules running for a week and counts new
+//! error-prone columns. We model slow per-column threshold drift as a
+//! Brownian random walk: advancing simulated time by `dt` hours adds a
+//! zero-mean step with std-dev `drift_per_hour * sqrt(dt)` to each
+//! column's drift state, so the accumulated drift after T hours has
+//! std-dev `drift_per_hour * sqrt(T)` regardless of step granularity —
+//! checked by the invariance test below.
+
+use crate::util::rng::Rng;
+
+/// Per-column drift state.
+#[derive(Clone, Debug)]
+pub struct DriftState {
+    /// Accumulated threshold drift per column, V_DD units.
+    pub drift: Vec<f32>,
+}
+
+impl DriftState {
+    pub fn new(cols: usize) -> Self {
+        Self { drift: vec![0.0; cols] }
+    }
+
+    /// Advance the walk by `dt_hours`.
+    pub fn advance(&mut self, dt_hours: f64, drift_per_hour: f64, rng: &mut Rng) {
+        if dt_hours <= 0.0 {
+            return;
+        }
+        let sd = drift_per_hour * dt_hours.sqrt();
+        for d in self.drift.iter_mut() {
+            *d += rng.normal_ms(0.0, sd) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rms(xs: &[f32]) -> f64 {
+        (xs.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+    }
+
+    #[test]
+    fn drift_grows_like_sqrt_t() {
+        let mut a = DriftState::new(20_000);
+        let mut rng = Rng::new(3);
+        a.advance(168.0, 1.2e-5, &mut rng); // one week, single step
+        let r = rms(&a.drift);
+        let expect = 1.2e-5 * 168f64.sqrt();
+        assert!((r - expect).abs() / expect < 0.05, "rms={r} expect={expect}");
+    }
+
+    #[test]
+    fn step_granularity_invariance() {
+        let mut fine = DriftState::new(50_000);
+        let mut rng = Rng::new(9);
+        for _ in 0..24 {
+            fine.advance(7.0, 1.2e-5, &mut rng); // 24 x 7h = 168h
+        }
+        let r = rms(&fine.drift);
+        let expect = 1.2e-5 * 168f64.sqrt();
+        assert!((r - expect).abs() / expect < 0.05, "rms={r} expect={expect}");
+    }
+
+    #[test]
+    fn zero_dt_is_noop() {
+        let mut d = DriftState::new(8);
+        let mut rng = Rng::new(1);
+        d.advance(0.0, 1.0, &mut rng);
+        assert!(d.drift.iter().all(|&x| x == 0.0));
+    }
+}

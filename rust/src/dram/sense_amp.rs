@@ -1,0 +1,135 @@
+//! Sense-amplifier bank of one subarray.
+//!
+//! Combines the static variation field, the temperature environment and
+//! the aging drift into the *effective* per-column threshold, and makes
+//! the noisy analog decision. This is the exact arithmetic the L1 Pallas
+//! kernel implements on the PJRT path — `effective_thresholds()` is what
+//! the Rust coordinator feeds to the AOT artifacts, which keeps the two
+//! paths provably consistent (cross-validation test).
+
+use crate::config::device::DeviceConfig;
+use crate::dram::retention::DriftState;
+use crate::dram::temperature::Environment;
+use crate::dram::variation::VariationField;
+use crate::util::rng::Rng;
+
+/// The sense amplifiers of one subarray.
+#[derive(Clone, Debug)]
+pub struct SenseAmps {
+    pub variation: VariationField,
+    pub drift: DriftState,
+}
+
+impl SenseAmps {
+    pub fn new(cfg: &DeviceConfig, cols: usize, rng: &mut Rng) -> Self {
+        Self {
+            variation: VariationField::draw(cfg, cols, rng),
+            drift: DriftState::new(cols),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.variation.cols()
+    }
+
+    /// Effective threshold of one column under the given environment.
+    #[inline]
+    pub fn threshold(&self, cfg: &DeviceConfig, env: &Environment, col: usize) -> f64 {
+        let dt = env.temp_c - cfg.t_cal;
+        0.5 + self.variation.sa_offset[col] as f64
+            + (cfg.tempco + self.variation.tempco_jitter[col] as f64) * dt
+            + self.drift.drift[col] as f64
+    }
+
+    /// Effective thresholds for every column (input to the PJRT path).
+    pub fn effective_thresholds(&self, cfg: &DeviceConfig, env: &Environment) -> Vec<f32> {
+        (0..self.cols())
+            .map(|c| self.threshold(cfg, env, c) as f32)
+            .collect()
+    }
+
+    /// One noisy sense decision on a column given the shared bitline
+    /// voltage `v` (V_DD units).
+    #[inline]
+    pub fn sense(
+        &self,
+        cfg: &DeviceConfig,
+        env: &Environment,
+        col: usize,
+        v: f64,
+        rng: &mut Rng,
+    ) -> bool {
+        let noise = rng.normal_ms(0.0, cfg.sigma_noise);
+        v + noise > self.threshold(cfg, env, col)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(cols: usize, seed: u64) -> (DeviceConfig, SenseAmps) {
+        let cfg = DeviceConfig::default();
+        let sa = SenseAmps::new(&cfg, cols, &mut Rng::new(seed));
+        (cfg, sa)
+    }
+
+    #[test]
+    fn thresholds_center_on_half_vdd() {
+        let (cfg, sa) = mk(20_000, 1);
+        let env = Environment::nominal(cfg.t_cal);
+        let t = sa.effective_thresholds(&cfg, &env);
+        let mean: f64 = t.iter().map(|&x| x as f64).sum::<f64>() / t.len() as f64;
+        assert!((mean - 0.5).abs() < 0.002, "{mean}");
+    }
+
+    #[test]
+    fn clean_read_is_reliable_for_most_columns() {
+        // §II-C: a single-cell read at 0.55 V_DD is distinguishable even
+        // with ~5% threshold deviation. The fitted variation field keeps
+        // most columns inside that bound; the heavy-tail population
+        // (the same defect-like columns PUD can never use) is the small
+        // remainder.
+        let (cfg, sa) = mk(10_000, 2);
+        let env = Environment::nominal(cfg.t_cal);
+        let mut rng = Rng::new(3);
+        let v1 = cfg.bitline_voltage(1.0, 1); // 0.55
+        let v0 = cfg.bitline_voltage(0.0, 1); // 0.45
+        let mut bad = 0;
+        for c in 0..10_000 {
+            if !sa.sense(&cfg, &env, c, v1, &mut rng) || sa.sense(&cfg, &env, c, v0, &mut rng) {
+                bad += 1;
+            }
+        }
+        assert!(bad < 10_000 * 25 / 100, "bad={bad}"); // >75% read clean
+        // And the core population alone is essentially clean: count
+        // only columns inside the 5% deviation bound.
+        let mut core_bad = 0;
+        for c in 0..10_000 {
+            if sa.variation.sa_offset[c].abs() < 0.04
+                && (!sa.sense(&cfg, &env, c, v1, &mut rng)
+                    || sa.sense(&cfg, &env, c, v0, &mut rng))
+            {
+                core_bad += 1;
+            }
+        }
+        assert!(core_bad < 10, "core_bad={core_bad}");
+    }
+
+    #[test]
+    fn temperature_moves_thresholds() {
+        let (cfg, sa) = mk(64, 4);
+        let hot = Environment { temp_c: 100.0, hours: 0.0 };
+        let nom = Environment::nominal(cfg.t_cal);
+        let th = sa.effective_thresholds(&cfg, &hot);
+        let tn = sa.effective_thresholds(&cfg, &nom);
+        let dmean: f64 = th
+            .iter()
+            .zip(&tn)
+            .map(|(&a, &b)| (a - b) as f64)
+            .sum::<f64>()
+            / 64.0;
+        let expect = cfg.tempco * (100.0 - cfg.t_cal);
+        assert!((dmean - expect).abs() < 3e-4, "dmean={dmean} expect={expect}");
+    }
+}

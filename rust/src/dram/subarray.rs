@@ -1,0 +1,360 @@
+//! The subarray golden model: cells, activation, SiMRA, Frac, RowCopy.
+//!
+//! A subarray is a `rows x cols` array of cell charges (f32 in [0, 1],
+//! V_DD units) plus its sense amplifiers and environment. All PUD
+//! primitives are implemented at analog fidelity:
+//!
+//! * **activate / read** — single-row charge sharing against the
+//!   precharged bitline, noisy SA decision, full-swing restore;
+//! * **SiMRA** — multi-row activation: charge sharing across the opened
+//!   cells of each column, SA decision, and restore of the decision
+//!   value into *all* opened rows (paper Fig. 1 step 4);
+//! * **Frac** — partial charging: every cell of the row moves toward
+//!   the neutral state by the factor `frac_r` (multi-level charge
+//!   states, paper §III-C);
+//! * **RowCopy** — ACT-PRE-ACT copy of the *sensed* source bits into
+//!   the destination row (copying destroys intermediate charge states,
+//!   which is why PUDTune's flow re-Fracs calibration rows after every
+//!   copy-in — the model enforces the same ordering).
+//!
+//! Mass experiments run the same arithmetic on the PJRT path; this
+//! model is the reference for correctness (cross-validation test) and
+//! runs all command-level/integration scenarios.
+
+use crate::config::device::DeviceConfig;
+use crate::config::system::SystemConfig;
+use crate::dram::sense_amp::SenseAmps;
+use crate::dram::temperature::Environment;
+use crate::util::rng::Rng;
+
+/// Operation counters (fed to the timing model / reports).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub activates: u64,
+    pub precharges: u64,
+    pub row_copies: u64,
+    pub fracs: u64,
+    pub simras: u64,
+}
+
+/// One simulated subarray.
+#[derive(Clone, Debug)]
+pub struct Subarray {
+    pub cfg: DeviceConfig,
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major cell charges, `rows * cols`, V_DD units in [0, 1].
+    charges: Vec<f32>,
+    pub sa: SenseAmps,
+    pub env: Environment,
+    /// Per-operation noise stream.
+    rng: Rng,
+    pub counts: OpCounts,
+}
+
+impl Subarray {
+    /// Build a subarray with variation drawn from `seed`.
+    pub fn new(cfg: &DeviceConfig, sys: &SystemConfig, seed: u64) -> Self {
+        Self::with_geometry(cfg, sys.rows_per_subarray, sys.cols, seed)
+    }
+
+    pub fn with_geometry(cfg: &DeviceConfig, rows: usize, cols: usize, seed: u64) -> Self {
+        let mut field_rng = Rng::new(seed);
+        let sa = SenseAmps::new(cfg, cols, &mut field_rng);
+        Self {
+            cfg: cfg.clone(),
+            rows,
+            cols,
+            charges: vec![0.0; rows * cols],
+            sa,
+            env: Environment::nominal(cfg.t_cal),
+            rng: field_rng.child(&[0xC0FFEE]),
+            counts: OpCounts::default(),
+        }
+    }
+
+    #[inline]
+    fn idx(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.rows && col < self.cols);
+        row * self.cols + col
+    }
+
+    /// Raw charge access (tests, cross-validation).
+    pub fn charge(&self, row: usize, col: usize) -> f32 {
+        self.charges[self.idx(row, col)]
+    }
+
+    pub fn row_charges(&self, row: usize) -> &[f32] {
+        &self.charges[row * self.cols..(row + 1) * self.cols]
+    }
+
+    /// Write full-swing data into a row (memory-controller WRITE path;
+    /// timing handled by `controller`).
+    pub fn write_row(&mut self, row: usize, bits: &[u8]) {
+        assert_eq!(bits.len(), self.cols);
+        let base = row * self.cols;
+        for (c, &b) in bits.iter().enumerate() {
+            self.charges[base + c] = if b != 0 { 1.0 } else { 0.0 };
+        }
+    }
+
+    pub fn fill_row(&mut self, row: usize, bit: u8) {
+        let v = if bit != 0 { 1.0 } else { 0.0 };
+        let base = row * self.cols;
+        self.charges[base..base + self.cols].fill(v);
+    }
+
+    /// Standard activate-and-read: single-row charge share, noisy SA
+    /// decision per column, full restore of the decision into the row.
+    pub fn read_row(&mut self, row: usize) -> Vec<u8> {
+        self.counts.activates += 1;
+        self.counts.precharges += 1;
+        let mut out = vec![0u8; self.cols];
+        let base = row * self.cols;
+        for c in 0..self.cols {
+            let v = self.cfg.bitline_voltage(self.charges[base + c] as f64, 1);
+            let bit = self.sa.sense(&self.cfg, &self.env, c, v, &mut self.rng);
+            out[c] = bit as u8;
+            self.charges[base + c] = if bit { 1.0 } else { 0.0 };
+        }
+        out
+    }
+
+    /// RowCopy (ACT src - violated PRE - ACT dst): the sensed source
+    /// bits are driven into the destination row; the source row is
+    /// restored to full swing.
+    pub fn row_copy(&mut self, src: usize, dst: usize) {
+        self.counts.row_copies += 1;
+        self.counts.activates += 2;
+        self.counts.precharges += 1;
+        let bits = self.read_row(src);
+        // read_row already accounted one ACT/PRE; the second ACT opens dst.
+        self.counts.activates -= 1;
+        self.counts.precharges -= 1;
+        let base = dst * self.cols;
+        for (c, &b) in bits.iter().enumerate() {
+            self.charges[base + c] = if b != 0 { 1.0 } else { 0.0 };
+        }
+    }
+
+    /// Frac (ACT with early PRE): partial charging pulls every cell of
+    /// the row toward the neutral state by the factor `frac_r`.
+    pub fn frac(&mut self, row: usize) {
+        self.counts.fracs += 1;
+        self.counts.activates += 1;
+        self.counts.precharges += 1;
+        let r = self.cfg.frac_r as f32;
+        let base = row * self.cols;
+        for q in &mut self.charges[base..base + self.cols] {
+            *q = 0.5 + (*q - 0.5) * r;
+        }
+    }
+
+    /// Simultaneous multi-row activation: charge sharing across the
+    /// opened cells of every column, noisy SA decision, decision value
+    /// restored into all opened rows. Returns the per-column result.
+    pub fn simra(&mut self, rows: &[usize]) -> Vec<u8> {
+        assert!(
+            rows.len() == self.cfg.simra_rows,
+            "SiMRA opens exactly {} rows (decoder glitch)",
+            self.cfg.simra_rows
+        );
+        self.counts.simras += 1;
+        self.counts.activates += 2; // ACT-PRE-ACT decoder glitch sequence
+        self.counts.precharges += 1;
+        let mut out = vec![0u8; self.cols];
+        for c in 0..self.cols {
+            let total: f64 = rows
+                .iter()
+                .map(|&r| self.charges[self.idx(r, c)] as f64)
+                .sum();
+            let v = self.cfg.bitline_voltage(total, rows.len());
+            let bit = self.sa.sense(&self.cfg, &self.env, c, v, &mut self.rng);
+            out[c] = bit as u8;
+            let q = if bit { 1.0 } else { 0.0 };
+            for &r in rows {
+                let i = self.idx(r, c);
+                self.charges[i] = q;
+            }
+        }
+        out
+    }
+
+    /// Deterministic SiMRA evaluation with explicit noise (the
+    /// cross-validation path mirroring `artifacts/maj*_eval_small`).
+    /// Does not mutate charges or counters.
+    pub fn simra_eval(&self, rows: &[usize], noise: &[f32]) -> Vec<u8> {
+        let mut out = vec![0u8; self.cols];
+        for c in 0..self.cols {
+            let total: f64 = rows
+                .iter()
+                .map(|&r| self.charges[r * self.cols + c] as f64)
+                .sum();
+            let v = self.cfg.bitline_voltage(total, rows.len());
+            let thr = self.sa.threshold(&self.cfg, &self.env, c);
+            out[c] = (v + noise[c] as f64 > thr) as u8;
+        }
+        out
+    }
+
+    /// Set the die temperature (Fig. 6a).
+    pub fn set_temperature(&mut self, temp_c: f64) {
+        self.env.temp_c = temp_c;
+    }
+
+    /// Advance simulated wall-clock time, applying aging drift (Fig. 6b).
+    pub fn advance_time(&mut self, dt_hours: f64) {
+        self.env.hours += dt_hours;
+        let drift_per_hour = self.cfg.drift_per_hour;
+        let mut rng = self.rng.child(&[0xA6E, self.env.hours.to_bits()]);
+        self.sa.drift.advance(dt_hours, drift_per_hour, &mut rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Subarray {
+        let cfg = DeviceConfig::default();
+        Subarray::with_geometry(&cfg, 64, 128, 42)
+    }
+
+    #[test]
+    fn write_then_read_roundtrips() {
+        let mut s = small();
+        let bits: Vec<u8> = (0..s.cols).map(|c| (c % 3 == 0) as u8).collect();
+        s.write_row(5, &bits);
+        let got = s.read_row(5);
+        // Single-cell reads have a 0.05 V_DD margin; only the
+        // heavy-tail (defect-like) columns may flip — of 128 columns
+        // that is a small handful.
+        let diff = bits.iter().zip(&got).filter(|(a, b)| a != b).count();
+        assert!(diff <= 32, "diff={diff}");
+    }
+
+    #[test]
+    fn row_copy_copies() {
+        let mut s = small();
+        let bits: Vec<u8> = (0..s.cols).map(|c| (c % 2) as u8).collect();
+        s.write_row(3, &bits);
+        s.row_copy(3, 17);
+        let a = s.row_charges(3).to_vec();
+        let b = s.row_charges(17).to_vec();
+        assert_eq!(a, b);
+        assert_eq!(s.counts.row_copies, 1);
+    }
+
+    #[test]
+    fn frac_converges_to_neutral() {
+        let mut s = small();
+        s.fill_row(7, 1);
+        for _ in 0..8 {
+            s.frac(7);
+        }
+        for c in 0..s.cols {
+            assert!((s.charge(7, c) - 0.5).abs() < 0.05);
+        }
+        assert_eq!(s.counts.fracs, 8);
+    }
+
+    #[test]
+    fn frac_creates_intermediate_levels() {
+        // §III-C: fewer Fracs leave intermediate states between the
+        // initial value and neutral.
+        let mut s = small();
+        s.fill_row(1, 1);
+        s.frac(1);
+        let q1 = s.charge(1, 0);
+        s.frac(1);
+        let q2 = s.charge(1, 0);
+        assert!(q1 > q2 && q2 > 0.5, "q1={q1} q2={q2}");
+        let r = s.cfg.frac_r as f32;
+        assert!((q1 - (0.5 + 0.5 * r)).abs() < 1e-6);
+        assert!((q2 - (0.5 + 0.5 * r * r)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn simra_majority_with_ideal_columns() {
+        // Columns with negligible offset must compute MAJ5 correctly:
+        // build a subarray with variation scaled to ~0.
+        let mut cfg = DeviceConfig::default();
+        cfg.sigma_sa = 1e-6;
+        cfg.tail_weight = 0.0;
+        cfg.sigma_noise = 1e-6;
+        let mut s = Subarray::with_geometry(&cfg, 64, 64, 1);
+        // Operands: 3 ones, 2 zeros -> majority 1. Neutral rows: one
+        // half-charged + const 0 + const 1 (conventional Fig. 1a).
+        for r in 0..3 {
+            s.fill_row(r, 1);
+        }
+        for r in 3..5 {
+            s.fill_row(r, 0);
+        }
+        s.fill_row(5, 1);
+        for _ in 0..10 {
+            s.frac(5); // ~neutral
+        }
+        s.fill_row(6, 0);
+        s.fill_row(7, 1);
+        let out = s.simra(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert!(out.iter().all(|&b| b == 1));
+        // Result restored into all 8 rows.
+        for r in 0..8 {
+            assert!(s.row_charges(r).iter().all(|&q| q == 1.0));
+        }
+        // And the complementary case: 2 ones, 3 zeros -> majority 0.
+        for r in 0..2 {
+            s.fill_row(r, 1);
+        }
+        for r in 2..5 {
+            s.fill_row(r, 0);
+        }
+        s.fill_row(5, 1);
+        for _ in 0..10 {
+            s.frac(5);
+        }
+        s.fill_row(6, 0);
+        s.fill_row(7, 1);
+        let out = s.simra(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert!(out.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn simra_boundary_voltage_matches_paper() {
+        // The MAJ5(1,1,1,0,0) shared voltage must be ~0.529 V_DD.
+        let s = small();
+        let v = s.cfg.bitline_voltage(3.0 + 1.5, 8);
+        assert!((v - 0.529).abs() < 5e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "SiMRA opens exactly")]
+    fn simra_requires_eight_rows() {
+        let mut s = small();
+        s.simra(&[0, 1, 2]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = DeviceConfig::default();
+        let mk = || {
+            let mut s = Subarray::with_geometry(&cfg, 32, 64, 9);
+            s.fill_row(0, 1);
+            s.frac(0);
+            s.read_row(0)
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn temperature_and_time_mutate_env() {
+        let mut s = small();
+        s.set_temperature(80.0);
+        assert_eq!(s.env.temp_c, 80.0);
+        s.advance_time(24.0);
+        assert_eq!(s.env.hours, 24.0);
+        let moved = s.sa.drift.drift.iter().filter(|&&d| d != 0.0).count();
+        assert!(moved > s.cols / 2);
+    }
+}

@@ -1,0 +1,51 @@
+//! Temperature environment (Fig. 6a substrate).
+//!
+//! The paper heats its modules with pads from 40 °C to 100 °C and checks
+//! whether columns calibrated at nominal temperature develop new errors.
+//! We model the SA threshold's temperature response as a small
+//! common-mode coefficient plus per-column jitter (drawn in
+//! [`super::variation`]): columns whose calibrated residual margin is
+//! tiny get pushed over the edge, which is exactly the "new error-prone
+//! column" population Fig. 6a counts.
+
+/// Environment state shared by a subarray's sense amplifiers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Environment {
+    /// Current die temperature, °C.
+    pub temp_c: f64,
+    /// Elapsed time since calibration, hours.
+    pub hours: f64,
+}
+
+impl Environment {
+    pub fn nominal(t_cal: f64) -> Self {
+        Self { temp_c: t_cal, hours: 0.0 }
+    }
+
+    /// Common-mode threshold shift at this temperature relative to the
+    /// calibration temperature.
+    pub fn common_shift(&self, tempco: f64, t_cal: f64) -> f64 {
+        tempco * (self.temp_c - t_cal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_has_no_shift() {
+        let e = Environment::nominal(45.0);
+        assert_eq!(e.common_shift(2e-5, 45.0), 0.0);
+    }
+
+    #[test]
+    fn shift_scales_with_delta_t() {
+        let mut e = Environment::nominal(45.0);
+        e.temp_c = 100.0;
+        let s = e.common_shift(2e-5, 45.0);
+        assert!((s - 55.0 * 2e-5).abs() < 1e-12);
+        e.temp_c = 40.0;
+        assert!(e.common_shift(2e-5, 45.0) < 0.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Seeded process-variation fields.
+//!
+//! Every column's sense amplifier carries a static threshold offset
+//! drawn once per manufactured device (paper §II-C: "threshold voltage
+//! variation in sense amplifiers ... due to process variation"). The
+//! offsets use a two-component Gaussian scale mixture — a core
+//! population plus a heavier-tailed defect-like population — which is
+//! what makes wide-range offset coverage matter (DESIGN.md §3).
+
+use crate::config::device::DeviceConfig;
+use crate::util::rng::Rng;
+
+/// Static per-column variation of one subarray.
+#[derive(Clone, Debug)]
+pub struct VariationField {
+    /// SA threshold offset per column, V_DD units (mean 0).
+    pub sa_offset: Vec<f32>,
+    /// Per-column temperature-coefficient jitter, V_DD/°C.
+    pub tempco_jitter: Vec<f32>,
+}
+
+impl VariationField {
+    /// Draw the field for `cols` columns from a dedicated stream.
+    pub fn draw(cfg: &DeviceConfig, cols: usize, rng: &mut Rng) -> Self {
+        let mut sa_offset = Vec::with_capacity(cols);
+        let mut tempco_jitter = Vec::with_capacity(cols);
+        for _ in 0..cols {
+            sa_offset.push(
+                rng.mixture_normal(cfg.sigma_sa, cfg.tail_weight, cfg.tail_ratio) as f32,
+            );
+            tempco_jitter.push(rng.normal_ms(0.0, cfg.tempco_jitter) as f32);
+        }
+        Self { sa_offset, tempco_jitter }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.sa_offset.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_is_deterministic_per_seed() {
+        let cfg = DeviceConfig::default();
+        let a = VariationField::draw(&cfg, 256, &mut Rng::new(5));
+        let b = VariationField::draw(&cfg, 256, &mut Rng::new(5));
+        assert_eq!(a.sa_offset, b.sa_offset);
+        let c = VariationField::draw(&cfg, 256, &mut Rng::new(6));
+        assert_ne!(a.sa_offset, c.sa_offset);
+    }
+
+    #[test]
+    fn offsets_have_expected_scale() {
+        let cfg = DeviceConfig::default();
+        let f = VariationField::draw(&cfg, 50_000, &mut Rng::new(1));
+        let mean: f64 = f.sa_offset.iter().map(|&x| x as f64).sum::<f64>() / 50_000.0;
+        let var: f64 =
+            f.sa_offset.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / 50_000.0;
+        // Mixture variance = (1-w)σ² + w(σ·ratio)².
+        let expect = (1.0 - cfg.tail_weight) * cfg.sigma_sa.powi(2)
+            + cfg.tail_weight * (cfg.sigma_sa * cfg.tail_ratio).powi(2);
+        assert!(mean.abs() < 0.002, "{mean}");
+        assert!((var - expect).abs() / expect < 0.1, "var={var} expect={expect}");
+    }
+
+    #[test]
+    fn tail_population_exists() {
+        let cfg = DeviceConfig::default();
+        let f = VariationField::draw(&cfg, 100_000, &mut Rng::new(2));
+        // Beyond 4σ of the core there should be far more mass than a
+        // plain Gaussian would give (~0.006%).
+        let beyond = f
+            .sa_offset
+            .iter()
+            .filter(|&&x| (x as f64).abs() > 4.0 * cfg.sigma_sa)
+            .count();
+        assert!(beyond > 100, "only {beyond} beyond 4 sigma");
+    }
+}

@@ -1,0 +1,67 @@
+//! # PUDTune — Processing-Using-DRAM calibration, reproduced end to end
+//!
+//! A full-system reproduction of *PUDTune: Multi-Level Charging for
+//! High-Precision Calibration in Processing-Using-DRAM* (Kubo et al.,
+//! 2025) on a simulated DDR4 substrate, structured as a three-layer
+//! Rust + JAX + Pallas stack (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the coordinator: an analog charge-sharing DRAM
+//!   simulator (`dram`), a command-level DDR4 controller model
+//!   (`controller`), the PUD operation library (`pud`), the PUDTune
+//!   calibration engine (`calib`), throughput/ECR analytics (`analysis`),
+//!   a PJRT runtime that executes AOT-compiled JAX artifacts (`runtime`)
+//!   and a bank-parallel experiment coordinator (`coordinator`).
+//! * **L2/L1 (build time)** — `python/compile/`: JAX sampling graphs
+//!   calling Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
+//!   Python never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pudtune::prelude::*;
+//!
+//! // A 1024-column subarray with seeded process variation.
+//! let cfg = DeviceConfig::default();
+//! let sys = SystemConfig::small();
+//! let mut sub = Subarray::new(&cfg, &sys, 7 /* seed */);
+//!
+//! // Baseline B_{3,0,0} vs calibrated T_{2,1,0} error-prone ratio.
+//! let base = FracConfig::baseline(3);
+//! let tune = FracConfig::pudtune([2, 1, 0]);
+//! let mut engine = NativeEngine::new(cfg.clone());
+//! let calib = engine.calibrate(&mut sub, &tune, &CalibParams::paper());
+//! let base_cal = base.uncalibrated(&cfg, sub.cols);
+//! let ecr_base = engine.measure_ecr(&mut sub, &base_cal, 5, 8192);
+//! let ecr_tune = engine.measure_ecr(&mut sub, &calib, 5, 8192);
+//! assert!(ecr_tune.ecr() < ecr_base.ecr());
+//! ```
+//!
+//! The `pudtune` binary exposes every experiment in the paper
+//! (`pudtune table1`, `pudtune fig5`, ...); `rust/benches/` regenerates
+//! each table and figure.
+
+pub mod analysis;
+pub mod calib;
+pub mod cli;
+pub mod config;
+pub mod controller;
+pub mod coordinator;
+pub mod dram;
+pub mod experiments;
+pub mod pud;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for the common experiment workflow.
+pub mod prelude {
+    pub use crate::analysis::ecr::EcrReport;
+    pub use crate::analysis::throughput::{ThroughputModel, ThroughputReport};
+    pub use crate::calib::algorithm::{CalibParams, Calibration, NativeEngine};
+    pub use crate::calib::lattice::{FracConfig, OffsetLattice};
+    pub use crate::config::device::DeviceConfig;
+    pub use crate::config::system::SystemConfig;
+    pub use crate::dram::subarray::Subarray;
+    pub use crate::dram::device::Device;
+    pub use crate::pud::majx::MajX;
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,342 @@
+//! `pudtune` — CLI over every experiment in the paper.
+//!
+//! ```text
+//! pudtune table1   [--banks N] [--cols N] [--native] [--samples N]
+//! pudtune fig3
+//! pudtune fig5     [--cols N] [--samples N]
+//! pudtune fig6a    [--cols N]
+//! pudtune fig6b    [--cols N]
+//! pudtune ecr      [--fracs x,y,z] [--baseline x] [--cols N]
+//! pudtune calibrate [--cols N] [--store path] [--timed]
+//! pudtune fit-model [--target 0.466]
+//! pudtune trace    [maj5|maj3] [--fracs x,y,z]
+//! pudtune artifacts
+//! pudtune cross-check [--cols N]
+//! ```
+//!
+//! `--config file` overlays a `[device]/[system]/[experiment]` config
+//! file (see `config::parse`) on the defaults.
+
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+use pudtune::analysis::report;
+use pudtune::calib::algorithm::{CalibParams, NativeEngine};
+use pudtune::calib::lattice::FracConfig;
+use pudtune::calib::store::CalibStore;
+use pudtune::calib::sweep;
+use pudtune::cli;
+use pudtune::config::experiment::ExperimentConfig;
+use pudtune::config::parse as cfgparse;
+use pudtune::config::{device::DeviceConfig, system::SystemConfig};
+use pudtune::controller::bender::BenderProgram;
+use pudtune::dram::geometry::{RowMap, SubarrayId};
+use pudtune::dram::subarray::Subarray;
+use pudtune::experiments::{self, Engine};
+use pudtune::runtime::Runtime;
+use pudtune::util::table;
+
+const BOOL_FLAGS: &[&str] = &["native", "timed", "full", "help"];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_configs(args: &cli::Args) -> Result<(DeviceConfig, SystemConfig, ExperimentConfig)> {
+    let mut r = cfgparse::Resolved::default();
+    if let Some(path) = args.str("config") {
+        let text = std::fs::read_to_string(path)?;
+        let cf = cfgparse::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        r = cfgparse::resolve(&cf).map_err(|e| anyhow!("{path}: {e}"))?;
+    }
+    // CLI overrides.
+    if args.flag("full") {
+        r.system.cols = 65536;
+    }
+    r.system.cols = args.usize("cols", r.system.cols).map_err(anyhow::Error::msg)?;
+    r.experiment.banks = args.usize("banks", r.experiment.banks).map_err(anyhow::Error::msg)?;
+    r.experiment.ecr_samples =
+        args.usize("samples", r.experiment.ecr_samples as usize).map_err(anyhow::Error::msg)? as u32;
+    r.experiment.seed = args.u64("seed", r.experiment.seed).map_err(anyhow::Error::msg)?;
+    Ok((r.device, r.system, r.experiment))
+}
+
+fn run(raw: &[String]) -> Result<()> {
+    let args = cli::parse(raw, BOOL_FLAGS).map_err(anyhow::Error::msg)?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    if args.flag("help") {
+        return help();
+    }
+    match sub.as_str() {
+        "help" => help(),
+        "table1" => cmd_table1(&args),
+        "fig3" => cmd_fig3(&args),
+        "fig5" => cmd_fig5(&args),
+        "fig6a" => cmd_fig6(&args, true),
+        "fig6b" => cmd_fig6(&args, false),
+        "ecr" => cmd_ecr(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "fit-model" => cmd_fit_model(&args),
+        "trace" => cmd_trace(&args),
+        "artifacts" => cmd_artifacts(),
+        "cross-check" => cmd_cross_check(&args),
+        other => Err(anyhow!("unknown subcommand '{other}' (try `pudtune help`)")),
+    }
+}
+
+fn help() -> Result<()> {
+    let text = include_str!("main.rs")
+        .lines()
+        .skip(1)
+        .take_while(|l| l.starts_with("//!"))
+        .map(|l| l.trim_start_matches("//! ").trim_start_matches("//!"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    println!("{text}");
+    Ok(())
+}
+
+fn engine_for(args: &cli::Args) -> Engine {
+    if args.flag("native") {
+        Engine::Native
+    } else {
+        Engine::auto()
+    }
+}
+
+fn cmd_table1(args: &cli::Args) -> Result<()> {
+    let (cfg, sys, exp) = load_configs(args)?;
+    let base = FracConfig::baseline(3);
+    let tune = FracConfig::pudtune(args.fracs("fracs", [2, 1, 0]).map_err(anyhow::Error::msg)?);
+    let engine = engine_for(args);
+    let t0 = std::time::Instant::now();
+    let r = experiments::run_table1(&cfg, &sys, &exp, &engine, base, tune)?;
+    println!(
+        "Table I — ECR and throughput ({} banks x {} cols, {} ECR samples)",
+        exp.banks, sys.cols, exp.ecr_samples
+    );
+    println!("{}", r.rendered);
+    println!(
+        "capacity overhead: {:.1}% (3 calibration rows / {} rows per subarray)",
+        100.0 * sys.calib_capacity_overhead(3),
+        sys.rows_per_subarray
+    );
+    println!("elapsed: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_fig3(args: &cli::Args) -> Result<()> {
+    let (cfg, _, _) = load_configs(args)?;
+    println!("{}", experiments::run_fig3(&cfg));
+    Ok(())
+}
+
+fn cmd_fig5(args: &cli::Args) -> Result<()> {
+    let (cfg, sys, exp) = load_configs(args)?;
+    let pts = experiments::run_fig5(&cfg, &sys, &exp);
+    let rows: Vec<(FracConfig, f64, f64)> =
+        pts.iter().map(|p| (p.config, p.ecr, p.maj5_ops)).collect();
+    println!("Fig. 5 — MAJ5 sensitivity to Frac configuration\n");
+    println!("{}", report::render_sweep(&rows));
+    let chart: Vec<(String, f64)> = pts
+        .iter()
+        .map(|p| (p.config.label(), p.maj5_ops / 1e12))
+        .collect();
+    println!("{}", table::bar_chart("MAJ5 throughput (TOPS)", &chart, "TOPS", 40));
+    Ok(())
+}
+
+fn cmd_fig6(args: &cli::Args, temp: bool) -> Result<()> {
+    let (cfg, sys, exp) = load_configs(args)?;
+    let (pts, axis, bound) = if temp {
+        (experiments::run_fig6a(&cfg, &sys, &exp), "Temp (C)", 0.0014)
+    } else {
+        (experiments::run_fig6b(&cfg, &sys, &exp), "Hours", 0.0027)
+    };
+    println!(
+        "Fig. 6{} — reliability (new error-prone columns vs calibration time; paper bound {:.2}%)\n",
+        if temp { "a" } else { "b" },
+        bound * 100.0
+    );
+    let series: Vec<(f64, f64)> = pts.iter().map(|p| (p.x, p.new_ecr)).collect();
+    println!("{}", report::render_reliability(axis, &series));
+    Ok(())
+}
+
+fn cmd_ecr(args: &cli::Args) -> Result<()> {
+    let (cfg, sys, exp) = load_configs(args)?;
+    let fc = if let Some(x) = args.str("baseline") {
+        FracConfig::baseline(x.parse().map_err(|_| anyhow!("--baseline: bad integer"))?)
+    } else {
+        FracConfig::pudtune(args.fracs("fracs", [2, 1, 0]).map_err(anyhow::Error::msg)?)
+    };
+    let mut eng = NativeEngine::new(cfg.clone());
+    let mut sub = Subarray::with_geometry(&cfg, 32, sys.cols, exp.seed);
+    let params = CalibParams {
+        iterations: exp.calib_iterations,
+        samples: exp.calib_samples,
+        tau: exp.bias_tau,
+        seed: exp.seed,
+    };
+    let calib = eng.calibrate(&mut sub, &fc, &params);
+    let rep5 = eng.measure_ecr(&mut sub, &calib, 5, exp.ecr_samples);
+    let rep3 = eng.measure_ecr(&mut sub, &calib, 3, exp.ecr_samples);
+    println!("config {}  cols {}  samples {}", fc.label(), sys.cols, exp.ecr_samples);
+    println!(
+        "MAJ5 ECR: {:.2}%  ({} error-prone columns)",
+        rep5.ecr() * 100.0,
+        rep5.error_prone()
+    );
+    println!("MAJ3 ECR: {:.2}%", rep3.ecr() * 100.0);
+    println!(
+        "arithmetic-usable columns: {:.2}%",
+        (1.0 - rep5.intersect(&rep3).ecr()) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &cli::Args) -> Result<()> {
+    let (cfg, sys, exp) = load_configs(args)?;
+    let fc = FracConfig::pudtune(args.fracs("fracs", [2, 1, 0]).map_err(anyhow::Error::msg)?);
+    let params = CalibParams {
+        iterations: exp.calib_iterations,
+        samples: exp.calib_samples,
+        tau: exp.bias_tau,
+        seed: exp.seed,
+    };
+    let mut eng = NativeEngine::new(cfg.clone());
+    let mut store = CalibStore::default();
+    let t0 = std::time::Instant::now();
+    for b in 0..exp.banks {
+        let id = SubarrayId::new(0, b, 0);
+        let seed = pudtune::util::rng::derive_seed(exp.seed, &id.seed_path());
+        let mut sub = Subarray::with_geometry(&cfg, 32, sys.cols, seed);
+        let calib = eng.calibrate(&mut sub, &fc, &params);
+        let rep = eng.measure_ecr(&mut sub, &calib, 5, exp.ecr_samples);
+        println!("bank {b}: ECR {:.2}% after calibration", rep.ecr() * 100.0);
+        store.insert(id, &calib);
+    }
+    if args.flag("timed") {
+        println!(
+            "calibration wall-clock: {:.2}s for {} subarrays ({:.2}s each; paper: ~60s each on DRAM Bender)",
+            t0.elapsed().as_secs_f64(),
+            exp.banks,
+            t0.elapsed().as_secs_f64() / exp.banks as f64
+        );
+    }
+    if let Some(path) = args.str("store") {
+        store.save_file(std::path::Path::new(path))?;
+        println!("calibration store written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fit_model(args: &cli::Args) -> Result<()> {
+    let (cfg, sys, _) = load_configs(args)?;
+    let target = args.f64("target", 0.466).map_err(anyhow::Error::msg)?;
+    let fitted = sweep::fit_sigma_sa(&cfg, &sys, target, 0xF17);
+    println!(
+        "fitted sigma_sa = {:.4} (target baseline ECR {:.1}%)",
+        fitted.sigma_sa,
+        target * 100.0
+    );
+    println!(
+        "closed-form check: baseline ECR estimate = {:.1}%",
+        sweep::baseline_ecr_estimate(&fitted, 3, 3.0) * 100.0
+    );
+    println!("\n[device]\nsigma_sa = {:.5}", fitted.sigma_sa);
+    Ok(())
+}
+
+fn cmd_trace(args: &cli::Args) -> Result<()> {
+    let (cfg, sys, _) = load_configs(args)?;
+    let fracs = args.fracs("fracs", [2, 1, 0]).map_err(anyhow::Error::msg)?;
+    let m = match args.positional.first().map(|s| s.as_str()) {
+        Some("maj3") => 3,
+        _ => 5,
+    };
+    let mut sub = Subarray::with_geometry(&cfg, 64, 64, 1);
+    let map = RowMap::standard(sub.rows);
+    let _ = &mut sub;
+    let mut p = BenderProgram::new();
+    for i in 0..m {
+        p.row_copy(map.data_base + i, map.simra_base + i);
+    }
+    for (i, &store) in map.calib_store.iter().enumerate() {
+        p.row_copy(store, map.simra_base + m + i);
+    }
+    if m == 3 {
+        p.row_copy(map.const0, map.simra_base + 6);
+        p.row_copy(map.const1, map.simra_base + 7);
+    }
+    for (i, &n) in fracs.iter().enumerate() {
+        for _ in 0..n {
+            p.frac(map.simra_base + m + i);
+        }
+    }
+    p.simra(map.simra_base);
+    // Render through the scheduler for a power-honest trace.
+    use pudtune::controller::command;
+    use pudtune::controller::scheduler::Scheduler;
+    let mut sched = Scheduler::new(sys.timing.clone());
+    let close = sys.timing.t_ras + sys.timing.t_rp;
+    for step in &p.steps {
+        match step {
+            pudtune::controller::bender::PudStep::RowCopy { src, dst } => {
+                sched.issue(&command::row_copy_seq(*src, *dst), close);
+            }
+            pudtune::controller::bender::PudStep::Frac { row } => {
+                sched.issue(&command::frac_seq(*row), sys.timing.t_rp);
+            }
+            pudtune::controller::bender::PudStep::Simra { base } => {
+                sched.issue(&command::simra_seq(*base, base + 7), close);
+            }
+            _ => {}
+        }
+    }
+    println!(
+        "MAJ{m} command trace (T_{{{},{},{}}}):",
+        fracs[0], fracs[1], fracs[2]
+    );
+    print!("{}", sched.trace.render());
+    println!(
+        "makespan: {:.1} ns, {} ACTs",
+        sched.elapsed_ns(),
+        sched.trace.act_count()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    for name in rt.artifact_names() {
+        let exe = rt.load(&name)?;
+        println!(
+            "  {name}: {} inputs, outputs {:?}, cols={:?}",
+            exe.inputs.len(),
+            exe.outputs,
+            exe.meta_usize("cols")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cross_check(args: &cli::Args) -> Result<()> {
+    let (cfg, sys, _) = load_configs(args)?;
+    let rt = Arc::new(Runtime::open_default()?);
+    let (pjrt, native) = experiments::cross_check(&cfg, &rt, sys.cols)?;
+    println!(
+        "baseline MAJ5 ECR  pjrt={:.3}  native={:.3}  |diff|={:.3}",
+        pjrt,
+        native,
+        (pjrt - native).abs()
+    );
+    anyhow::ensure!((pjrt - native).abs() < 0.05, "engines disagree");
+    println!("cross-check OK");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Ripple-carry addition from majority full adders (8-bit in Table I).
+
+use crate::pud::fulladder::full_adder;
+use crate::pud::graph::{CircuitCost, MajCircuit, Signal};
+
+/// Build a `width`-bit ripple-carry adder.
+///
+/// Inputs: a[0..width] (LSB first) then b[0..width].
+/// Outputs: sum[0..width] then carry-out.
+pub fn ripple_adder(width: usize) -> MajCircuit {
+    assert!(width >= 1);
+    let mut c = MajCircuit::new(2 * width);
+    let mut carry = Signal::Const(false);
+    let mut sums = Vec::with_capacity(width);
+    for i in 0..width {
+        let (s, co) = full_adder(&mut c, Signal::Input(i), Signal::Input(width + i), carry);
+        sums.push(s);
+        carry = co;
+    }
+    for s in sums {
+        c.output(s);
+    }
+    c.output(carry);
+    c
+}
+
+/// Cost of the paper's 8-bit addition.
+pub fn add8_cost() -> CircuitCost {
+    ripple_adder(8).cost()
+}
+
+/// Reference: evaluate the adder on integers.
+pub fn eval_add(c: &MajCircuit, width: usize, a: u64, b: u64) -> u64 {
+    let mut ins = vec![false; 2 * width];
+    for i in 0..width {
+        ins[i] = (a >> i) & 1 == 1;
+        ins[width + i] = (b >> i) & 1 == 1;
+    }
+    let out = c.eval(&ins);
+    let mut v = 0u64;
+    for (i, &bit) in out.iter().enumerate() {
+        if bit {
+            v |= 1 << i;
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn adds_exhaustively_4bit() {
+        let c = ripple_adder(4);
+        for a in 0..16u64 {
+            for b in 0..16u64 {
+                assert_eq!(eval_add(&c, 4, a, b), a + b, "{a}+{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn adds_random_8bit() {
+        let c = ripple_adder(8);
+        proptest::check(
+            "add8-matches-integer-addition",
+            0xADD,
+            proptest::DEFAULT_CASES,
+            |r: &mut Rng| (r.below(256), r.below(256)),
+            |&(a, b)| eval_add(&c, 8, a, b) == a + b,
+        );
+    }
+
+    #[test]
+    fn add8_cost_structure() {
+        let cost = add8_cost();
+        assert_eq!(cost.maj3, 8);
+        assert_eq!(cost.maj5, 8);
+        assert_eq!(cost.not_ops, 8);
+    }
+}

@@ -1,0 +1,249 @@
+//! Bit-serial circuit execution on the subarray.
+//!
+//! Runs a [`MajCircuit`] gate by gate through the full MAJX flow
+//! (RowCopy-in, Frac, SiMRA, copy-out), with wire rows recycled by
+//! last-use analysis. This is the functional path the examples use to
+//! run real 8-bit arithmetic *in* the simulated DRAM; throughput
+//! numbers come from `analysis::throughput` which uses the same
+//! command-cost model.
+
+use crate::calib::algorithm::Calibration;
+use crate::calib::lattice::FracConfig;
+use crate::config::system::Ddr4Timing;
+use crate::dram::geometry::RowMap;
+use crate::dram::subarray::Subarray;
+use crate::pud::graph::{MajCircuit, Signal};
+use crate::pud::majx::{execute_majx, setup_subarray, MajX};
+use crate::pud::rowalloc::RowAlloc;
+use std::collections::HashMap;
+
+/// Result of a circuit run.
+#[derive(Clone, Debug)]
+pub struct CircuitRun {
+    /// Output bit-vectors, one per circuit output, each `cols` wide.
+    pub outputs: Vec<Vec<u8>>,
+    pub elapsed_ns: f64,
+    /// Peak simultaneous scratch rows.
+    pub peak_rows: usize,
+}
+
+/// Execute `circuit` over per-column operand bit-vectors.
+///
+/// `inputs[i]` is the bit-vector of primary input `i` (length = cols).
+/// The calibration rows must already be identified; `setup_subarray`
+/// is invoked to (re)store them.
+pub fn run_circuit(
+    sub: &mut Subarray,
+    map: &RowMap,
+    calib: &Calibration,
+    fc: &FracConfig,
+    grade: &Ddr4Timing,
+    circuit: &MajCircuit,
+    inputs: &[Vec<u8>],
+) -> CircuitRun {
+    assert_eq!(inputs.len(), circuit.n_inputs, "operand arity mismatch");
+    for v in inputs {
+        assert_eq!(v.len(), sub.cols, "operand width must equal columns");
+    }
+    setup_subarray(sub, map, calib);
+
+    let mut elapsed = 0.0f64;
+
+    // Last gate index using each signal, for row recycling.
+    let mut last_use: HashMap<Signal, usize> = HashMap::new();
+    for (gi, gate) in circuit.gates.iter().enumerate() {
+        for &s in &gate.args {
+            last_use.insert(canonical(s), gi);
+        }
+    }
+    for &s in &circuit.outputs {
+        last_use.insert(canonical(s), usize::MAX); // outputs live forever
+    }
+
+    let mut alloc = RowAlloc::new(map.data_base, sub.rows);
+
+    // Materialise primary inputs.
+    let mut input_rows = Vec::with_capacity(circuit.n_inputs);
+    for bits in inputs {
+        let r = alloc.alloc();
+        sub.write_row(r, bits);
+        input_rows.push(r);
+    }
+    let mut gate_rows: Vec<Option<usize>> = vec![None; circuit.gates.len()];
+    // Cache of materialised negations.
+    let mut not_rows: HashMap<Signal, usize> = HashMap::new();
+
+    // Resolve a signal to a readable row, materialising NOTs on demand.
+    // (Closures can't borrow everything mutably at once; a macro keeps
+    // the call sites readable.)
+    macro_rules! row_of {
+        ($sig:expr) => {{
+            let sig: Signal = $sig;
+            match sig {
+                Signal::Input(i) => input_rows[i],
+                Signal::Gate(g) => gate_rows[g].expect("gate row live"),
+                Signal::Const(false) => map.const0,
+                Signal::Const(true) => map.const1,
+                Signal::NotInput(_) | Signal::NotGate(_) => {
+                    if let Some(&r) = not_rows.get(&sig) {
+                        r
+                    } else {
+                        let src = match sig {
+                            Signal::NotInput(i) => input_rows[i],
+                            Signal::NotGate(g) => gate_rows[g].expect("gate row live"),
+                            _ => unreachable!(),
+                        };
+                        let bits = sub.read_row(src);
+                        let inv: Vec<u8> = bits.iter().map(|&b| 1 - b).collect();
+                        let r = alloc.alloc();
+                        sub.write_row(r, &inv);
+                        // NOT = readout + write-back through the column
+                        // interface.
+                        elapsed += grade.t_rcd + 8.0 * grade.t_ck + grade.t_rp;
+                        elapsed += grade.t_rcd + 8.0 * grade.t_ck + grade.t_rp;
+                        not_rows.insert(sig, r);
+                        r
+                    }
+                }
+            }
+        }};
+    }
+
+    for (gi, gate) in circuit.gates.iter().enumerate() {
+        let op_rows: Vec<usize> = gate.args.iter().map(|&s| row_of!(s)).collect();
+        let x = if gate.arity() == 3 { MajX::Maj3 } else { MajX::Maj5 };
+        let (bits, run) = execute_majx(sub, map, x, &op_rows, fc, grade);
+        elapsed += run.elapsed_ns;
+        // Persist the result into a scratch row (copy out of the group).
+        let r = alloc.alloc();
+        sub.write_row(r, &bits);
+        gate_rows[gi] = Some(r);
+        // Recycle rows whose signals are dead after this gate.
+        let mut dead: Vec<Signal> = Vec::new();
+        for (&sig, &lu) in last_use.iter() {
+            if lu == gi {
+                dead.push(sig);
+            }
+        }
+        for sig in dead {
+            last_use.remove(&sig);
+            match sig {
+                Signal::Gate(g) => {
+                    if let Some(r) = gate_rows[g].take() {
+                        // Only release if no pending NOT of it is live.
+                        if !not_rows.contains_key(&Signal::NotGate(g)) {
+                            alloc.release(r);
+                        } else {
+                            gate_rows[g] = Some(r); // keep until NOT dies
+                        }
+                    }
+                }
+                Signal::NotGate(_) | Signal::NotInput(_) => {
+                    if let Some(r) = not_rows.remove(&sig) {
+                        alloc.release(r);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let outputs = circuit
+        .outputs
+        .iter()
+        .map(|&s| {
+            let r = row_of!(s);
+            sub.read_row(r)
+        })
+        .collect();
+    CircuitRun { outputs, elapsed_ns: elapsed, peak_rows: alloc.high_water }
+}
+
+/// Canonical storage key: a signal and its negation share liveness.
+fn canonical(s: Signal) -> Signal {
+    match s {
+        Signal::NotInput(i) => Signal::Input(i),
+        Signal::NotGate(g) => Signal::Gate(g),
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::lattice::OffsetLattice;
+    use crate::config::device::DeviceConfig;
+    use crate::pud::adder::ripple_adder;
+
+    fn quiet(cols: usize) -> Subarray {
+        let mut cfg = DeviceConfig::default();
+        cfg.sigma_sa = 1e-6;
+        cfg.tail_weight = 0.0;
+        cfg.sigma_noise = 1e-6;
+        Subarray::with_geometry(&cfg, 96, cols, 3)
+    }
+
+    fn encode(vals: &[u64], bit: usize) -> Vec<u8> {
+        vals.iter().map(|&v| ((v >> bit) & 1) as u8).collect()
+    }
+
+    #[test]
+    fn adder_circuit_runs_in_dram() {
+        // 4-bit add on 8 columns simultaneously (bit-serial SIMD).
+        let width = 4;
+        let circuit = ripple_adder(width);
+        let mut sub = quiet(8);
+        let map = RowMap::standard(sub.rows);
+        let fc = FracConfig::pudtune([2, 1, 0]);
+        let calib =
+            Calibration::uniform(OffsetLattice::build(&sub.cfg, &fc), sub.cols);
+        let a: Vec<u64> = vec![3, 7, 15, 0, 9, 5, 12, 1];
+        let b: Vec<u64> = vec![4, 9, 1, 0, 6, 5, 3, 14];
+        let mut inputs = Vec::new();
+        for bit in 0..width {
+            inputs.push(encode(&a, bit));
+        }
+        for bit in 0..width {
+            inputs.push(encode(&b, bit));
+        }
+        let run = run_circuit(
+            &mut sub,
+            &map,
+            &calib,
+            &fc,
+            &Ddr4Timing::ddr4_2133(),
+            &circuit,
+            &inputs,
+        );
+        assert_eq!(run.outputs.len(), width + 1);
+        for col in 0..8 {
+            let mut got = 0u64;
+            for (bit, out) in run.outputs.iter().enumerate() {
+                got |= (out[col] as u64) << bit;
+            }
+            assert_eq!(got, a[col] + b[col], "col {col}");
+        }
+        assert!(run.elapsed_ns > 0.0);
+        assert!(run.peak_rows < 32, "peak rows {}", run.peak_rows);
+    }
+
+    #[test]
+    #[should_panic(expected = "operand arity mismatch")]
+    fn wrong_input_count_panics() {
+        let circuit = ripple_adder(2);
+        let mut sub = quiet(4);
+        let map = RowMap::standard(sub.rows);
+        let fc = FracConfig::pudtune([2, 1, 0]);
+        let calib =
+            Calibration::uniform(OffsetLattice::build(&sub.cfg, &fc), sub.cols);
+        run_circuit(
+            &mut sub,
+            &map,
+            &calib,
+            &fc,
+            &Ddr4Timing::ddr4_2133(),
+            &circuit,
+            &[vec![0u8; 4]],
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! Full adder from majority gates (the MVDRAM construction cited by the
+//! paper): `cout = MAJ3(a, b, cin)`, `sum = MAJ5(a, b, cin, ¬cout, ¬cout)`.
+//!
+//! This is why MAJ5 reliability bottlenecks PUD arithmetic (paper
+//! §II-C): every sum bit is a MAJ5.
+
+use crate::pud::graph::{Gate, MajCircuit, Signal};
+use crate::pud::logic::not;
+
+/// Append a full adder; returns (sum, cout).
+pub fn full_adder(c: &mut MajCircuit, a: Signal, b: Signal, cin: Signal) -> (Signal, Signal) {
+    let cout = c.push(Gate::maj3(a, b, cin));
+    let ncout = not(cout);
+    let sum = c.push(Gate::maj5(a, b, cin, ncout, ncout));
+    (sum, cout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_adder_truth_table() {
+        let mut c = MajCircuit::new(3);
+        let (s, co) =
+            full_adder(&mut c, Signal::Input(0), Signal::Input(1), Signal::Input(2));
+        c.output(s);
+        c.output(co);
+        for v in 0..8u32 {
+            let a = (v & 1) != 0;
+            let b = (v & 2) != 0;
+            let ci = (v & 4) != 0;
+            let total = a as u32 + b as u32 + ci as u32;
+            let out = c.eval(&[a, b, ci]);
+            assert_eq!(out[0], total % 2 == 1, "sum for {a}{b}{ci}");
+            assert_eq!(out[1], total >= 2, "carry for {a}{b}{ci}");
+        }
+    }
+
+    #[test]
+    fn full_adder_cost() {
+        let mut c = MajCircuit::new(3);
+        let (s, co) =
+            full_adder(&mut c, Signal::Input(0), Signal::Input(1), Signal::Input(2));
+        c.output(s);
+        c.output(co);
+        let cost = c.cost();
+        assert_eq!(cost.maj3, 1);
+        assert_eq!(cost.maj5, 1);
+        assert_eq!(cost.not_ops, 1); // ¬cout materialised once
+    }
+}

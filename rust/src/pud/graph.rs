@@ -1,0 +1,206 @@
+//! Majority-graph IR.
+//!
+//! PUD computes by chaining MAJX operations (paper §I: "by constructing
+//! majority-based computational graphs, PUD enables primitive operations
+//! and complex calculations"). A [`MajCircuit`] is a DAG of MAJ3/MAJ5
+//! gates over input wires, constants and negated signals; circuits are
+//! built by `logic` / `fulladder` / `adder` / `multiplier`, evaluated
+//! functionally for reference, costed for the throughput model, and
+//! executed bit-serially on the subarray by `exec`.
+
+/// A signal consumed by a gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Signal {
+    /// Primary input `i`.
+    Input(usize),
+    /// Output of gate `g` (must precede the consuming gate).
+    Gate(usize),
+    /// Constant 0/1 (the subarray's reserved constant rows).
+    Const(bool),
+    /// Negation of a gate output (computed via inverted write-back).
+    NotGate(usize),
+    /// Negation of a primary input.
+    NotInput(usize),
+}
+
+/// A majority gate (arity 3 or 5).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Gate {
+    pub args: Vec<Signal>,
+}
+
+impl Gate {
+    pub fn maj3(a: Signal, b: Signal, c: Signal) -> Self {
+        Self { args: vec![a, b, c] }
+    }
+
+    pub fn maj5(a: Signal, b: Signal, c: Signal, d: Signal, e: Signal) -> Self {
+        Self { args: vec![a, b, c, d, e] }
+    }
+
+    pub fn arity(&self) -> usize {
+        self.args.len()
+    }
+}
+
+/// Cost summary of a circuit (consumed by `analysis::throughput`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CircuitCost {
+    pub maj3: u32,
+    pub maj5: u32,
+    /// Distinct negations that must be materialised.
+    pub not_ops: u32,
+}
+
+/// A majority DAG. Gates are stored in topological order.
+#[derive(Clone, Debug, Default)]
+pub struct MajCircuit {
+    pub n_inputs: usize,
+    pub gates: Vec<Gate>,
+    pub outputs: Vec<Signal>,
+}
+
+impl MajCircuit {
+    pub fn new(n_inputs: usize) -> Self {
+        Self { n_inputs, gates: Vec::new(), outputs: Vec::new() }
+    }
+
+    /// Append a gate; returns its signal.
+    pub fn push(&mut self, gate: Gate) -> Signal {
+        for s in &gate.args {
+            self.check(*s, self.gates.len());
+        }
+        assert!(
+            gate.arity() == 3 || gate.arity() == 5,
+            "majority gates are 3- or 5-ary"
+        );
+        self.gates.push(gate);
+        Signal::Gate(self.gates.len() - 1)
+    }
+
+    pub fn output(&mut self, s: Signal) {
+        self.check(s, self.gates.len());
+        self.outputs.push(s);
+    }
+
+    fn check(&self, s: Signal, upto: usize) {
+        match s {
+            Signal::Input(i) | Signal::NotInput(i) => {
+                assert!(i < self.n_inputs, "input {i} out of range")
+            }
+            Signal::Gate(g) | Signal::NotGate(g) => {
+                assert!(g < upto, "gate {g} referenced before definition")
+            }
+            Signal::Const(_) => {}
+        }
+    }
+
+    /// Functional evaluation (the logic-level reference).
+    pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
+        assert_eq!(inputs.len(), self.n_inputs);
+        let mut vals = Vec::with_capacity(self.gates.len());
+        let get = |vals: &Vec<bool>, s: Signal| -> bool {
+            match s {
+                Signal::Input(i) => inputs[i],
+                Signal::NotInput(i) => !inputs[i],
+                Signal::Gate(g) => vals[g],
+                Signal::NotGate(g) => !vals[g],
+                Signal::Const(b) => b,
+            }
+        };
+        for gate in &self.gates {
+            let ones = gate.args.iter().filter(|&&s| get(&vals, s)).count();
+            vals.push(ones * 2 > gate.arity());
+        }
+        self.outputs.iter().map(|&s| get(&vals, s)).collect()
+    }
+
+    /// Cost: gate counts plus distinct negations.
+    pub fn cost(&self) -> CircuitCost {
+        let mut c = CircuitCost::default();
+        let mut notted: Vec<Signal> = Vec::new();
+        let mut signals = Vec::new();
+        for g in &self.gates {
+            match g.arity() {
+                3 => c.maj3 += 1,
+                5 => c.maj5 += 1,
+                _ => unreachable!(),
+            }
+            signals.extend(g.args.iter().copied());
+        }
+        signals.extend(self.outputs.iter().copied());
+        for s in signals {
+            if matches!(s, Signal::NotGate(_) | Signal::NotInput(_)) && !notted.contains(&s) {
+                notted.push(s);
+                c.not_ops += 1;
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maj3_truth_table() {
+        let mut c = MajCircuit::new(3);
+        let g = Gate::maj3(Signal::Input(0), Signal::Input(1), Signal::Input(2));
+        let s = c.push(g);
+        c.output(s);
+        for v in 0..8u32 {
+            let ins = [(v & 1) != 0, (v & 2) != 0, (v & 4) != 0];
+            let expect = ins.iter().filter(|&&b| b).count() >= 2;
+            assert_eq!(c.eval(&ins), vec![expect]);
+        }
+    }
+
+    #[test]
+    fn maj5_with_negation() {
+        // MAJ5(a, a, ¬a, 0, 1) = a
+        let mut c = MajCircuit::new(1);
+        let g = c.push(Gate::maj5(
+            Signal::Input(0),
+            Signal::Input(0),
+            Signal::NotInput(0),
+            Signal::Const(false),
+            Signal::Const(true),
+        ));
+        c.output(g);
+        assert_eq!(c.eval(&[true]), vec![true]);
+        assert_eq!(c.eval(&[false]), vec![false]);
+    }
+
+    #[test]
+    fn cost_counts_distinct_nots() {
+        let mut c = MajCircuit::new(2);
+        let g0 = c.push(Gate::maj3(Signal::Input(0), Signal::Input(1), Signal::Const(false)));
+        let Signal::Gate(i0) = g0 else { unreachable!() };
+        let _g1 = c.push(Gate::maj5(
+            Signal::Input(0),
+            Signal::Input(1),
+            Signal::NotGate(i0),
+            Signal::NotGate(i0), // same negation reused
+            Signal::Const(true),
+        ));
+        let cost = c.cost();
+        assert_eq!(cost.maj3, 1);
+        assert_eq!(cost.maj5, 1);
+        assert_eq!(cost.not_ops, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "referenced before definition")]
+    fn forward_reference_rejected() {
+        let mut c = MajCircuit::new(1);
+        c.push(Gate::maj3(Signal::Gate(5), Signal::Input(0), Signal::Const(false)));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn bad_input_rejected() {
+        let mut c = MajCircuit::new(1);
+        c.output(Signal::Input(3));
+    }
+}

@@ -1,0 +1,78 @@
+//! Boolean logic from majority gates (Ambit/ComputeDRAM construction):
+//! `AND(a,b) = MAJ3(a,b,0)`, `OR(a,b) = MAJ3(a,b,1)`; NOT is an
+//! inverted write-back through the column interface.
+
+use crate::pud::graph::{Gate, MajCircuit, Signal};
+
+/// Append `AND(a, b)` to a circuit.
+pub fn and(c: &mut MajCircuit, a: Signal, b: Signal) -> Signal {
+    c.push(Gate::maj3(a, b, Signal::Const(false)))
+}
+
+/// Append `OR(a, b)` to a circuit.
+pub fn or(c: &mut MajCircuit, a: Signal, b: Signal) -> Signal {
+    c.push(Gate::maj3(a, b, Signal::Const(true)))
+}
+
+/// Negate a signal (free at the IR level; costed as a NOT op when the
+/// negation must be materialised on a row).
+pub fn not(s: Signal) -> Signal {
+    match s {
+        Signal::Input(i) => Signal::NotInput(i),
+        Signal::NotInput(i) => Signal::Input(i),
+        Signal::Gate(g) => Signal::NotGate(g),
+        Signal::NotGate(g) => Signal::Gate(g),
+        Signal::Const(b) => Signal::Const(!b),
+    }
+}
+
+/// XOR via majority gates: `a ^ b = MAJ3(AND(a,¬b), AND(¬a,b), 1)`…
+/// implemented as `OR(AND(a,¬b), AND(¬a,b))` (3 MAJ3).
+pub fn xor(c: &mut MajCircuit, a: Signal, b: Signal) -> Signal {
+    let t0 = and(c, a, not(b));
+    let t1 = and(c, not(a), b);
+    or(c, t0, t1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_input(f: impl Fn(&mut MajCircuit, Signal, Signal) -> Signal) -> MajCircuit {
+        let mut c = MajCircuit::new(2);
+        let s = f(&mut c, Signal::Input(0), Signal::Input(1));
+        c.output(s);
+        c
+    }
+
+    #[test]
+    fn and_table() {
+        let c = two_input(and);
+        for (a, b) in [(false, false), (false, true), (true, false), (true, true)] {
+            assert_eq!(c.eval(&[a, b]), vec![a && b]);
+        }
+    }
+
+    #[test]
+    fn or_table() {
+        let c = two_input(or);
+        for (a, b) in [(false, false), (false, true), (true, false), (true, true)] {
+            assert_eq!(c.eval(&[a, b]), vec![a || b]);
+        }
+    }
+
+    #[test]
+    fn xor_table() {
+        let c = two_input(xor);
+        for (a, b) in [(false, false), (false, true), (true, false), (true, true)] {
+            assert_eq!(c.eval(&[a, b]), vec![a ^ b]);
+        }
+    }
+
+    #[test]
+    fn not_is_involutive() {
+        let s = Signal::Input(2);
+        assert_eq!(not(not(s)), s);
+        assert_eq!(not(Signal::Const(true)), Signal::Const(false));
+    }
+}

@@ -1,0 +1,178 @@
+//! MAJX execution flows on the subarray (paper Fig. 1 / §III-D).
+//!
+//! Conventional and PUDTune MAJX share one flow; they differ only in
+//! what the three non-operand rows hold (uniform neutral pattern vs
+//! per-column calibration bits) and in the per-row Frac counts:
+//!
+//! 1. RowCopy the m operand rows and the 3 calibration rows (plus the
+//!    constant rows for MAJ3) into the aligned 8-row SiMRA group;
+//! 2. apply the configured number of Frac operations to each
+//!    calibration row (step ②' of the paper);
+//! 3. SiMRA — charge share + sense; the result lands in all 8 rows;
+//! 4. read the result out.
+
+use crate::calib::algorithm::Calibration;
+use crate::calib::lattice::FracConfig;
+use crate::config::system::Ddr4Timing;
+use crate::controller::bender::{BenderProgram, RunResult};
+use crate::dram::geometry::RowMap;
+use crate::dram::subarray::Subarray;
+
+/// Majority arity supported under 8-row SiMRA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MajX {
+    Maj3,
+    Maj5,
+}
+
+impl MajX {
+    pub fn m(&self) -> usize {
+        match self {
+            MajX::Maj3 => 3,
+            MajX::Maj5 => 5,
+        }
+    }
+}
+
+/// Write the identified calibration bits and constants into the
+/// subarray's reserved rows (done once per device, paper §III-A; the
+/// bits come from the NV store on real systems).
+pub fn setup_subarray(sub: &mut Subarray, map: &RowMap, calib: &Calibration) {
+    for (i, &row) in map.calib_store.iter().enumerate() {
+        let bits = calib.row_bits(i);
+        sub.write_row(row, &bits);
+    }
+    sub.fill_row(map.const0, 0);
+    sub.fill_row(map.const1, 1);
+}
+
+/// Execute one MAJX over `operand_rows` (data rows holding the m
+/// operand bit-vectors). Returns the per-column majority decisions and
+/// the command-level timing of the flow.
+pub fn execute_majx(
+    sub: &mut Subarray,
+    map: &RowMap,
+    x: MajX,
+    operand_rows: &[usize],
+    fc: &FracConfig,
+    grade: &Ddr4Timing,
+) -> (Vec<u8>, RunResult) {
+    let m = x.m();
+    assert_eq!(operand_rows.len(), m, "MAJ{m} takes {m} operand rows");
+    let base = map.simra_base;
+    let mut p = BenderProgram::new();
+    // ①' operands into the group head.
+    for (i, &r) in operand_rows.iter().enumerate() {
+        p.row_copy(r, base + i);
+    }
+    // ①' calibration rows behind the operands.
+    for (i, &store) in map.calib_store.iter().enumerate() {
+        p.row_copy(store, base + m + i);
+    }
+    // Constant rows complete the 8-row group for MAJ3.
+    if m + 3 < 8 {
+        p.row_copy(map.const0, base + m + 3);
+        p.row_copy(map.const1, base + m + 4);
+    }
+    // ②' per-row Frac applications.
+    for (i, &n) in fc.fracs.iter().enumerate() {
+        for _ in 0..n {
+            p.frac(base + m + i);
+        }
+    }
+    // ③ SiMRA (result restored into all 8 rows).
+    p.simra(base);
+    let mut run = p.run(sub, grade);
+    let bits = run.reads.pop().expect("simra result");
+    (bits, run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::algorithm::Calibration;
+    use crate::calib::lattice::{FracConfig, OffsetLattice};
+    use crate::config::device::DeviceConfig;
+
+    fn quiet(cols: usize) -> Subarray {
+        let mut cfg = DeviceConfig::default();
+        cfg.sigma_sa = 1e-6;
+        cfg.tail_weight = 0.0;
+        cfg.sigma_noise = 1e-6;
+        Subarray::with_geometry(&cfg, 64, cols, 3)
+    }
+
+    fn neutral_calib(sub: &Subarray, fc: &FracConfig) -> Calibration {
+        Calibration::uniform(OffsetLattice::build(&sub.cfg, fc), sub.cols)
+    }
+
+    #[test]
+    fn maj5_all_input_counts() {
+        // On ideal columns the full flow computes MAJ5 for every
+        // operand ones-count 0..=5.
+        let fc = FracConfig::pudtune([2, 1, 0]);
+        for ones in 0..=5usize {
+            let mut sub = quiet(16);
+            let map = RowMap::standard(sub.rows);
+            let calib = neutral_calib(&sub, &fc);
+            setup_subarray(&mut sub, &map, &calib);
+            let rows: Vec<usize> = (0..5).map(|i| map.data_base + i).collect();
+            for (i, &r) in rows.iter().enumerate() {
+                sub.fill_row(r, (i < ones) as u8);
+            }
+            let (bits, run) = execute_majx(&mut sub, &map, MajX::Maj5, &rows, &fc, &Ddr4Timing::ddr4_2133());
+            let expect = (ones >= 3) as u8;
+            assert!(bits.iter().all(|&b| b == expect), "ones={ones}");
+            assert!(run.elapsed_ns > 0.0);
+        }
+    }
+
+    #[test]
+    fn maj3_uses_constant_rows() {
+        let fc = FracConfig::pudtune([2, 1, 0]);
+        for ones in 0..=3usize {
+            let mut sub = quiet(16);
+            let map = RowMap::standard(sub.rows);
+            let calib = neutral_calib(&sub, &fc);
+            setup_subarray(&mut sub, &map, &calib);
+            let rows: Vec<usize> = (0..3).map(|i| map.data_base + i).collect();
+            for (i, &r) in rows.iter().enumerate() {
+                sub.fill_row(r, (i < ones) as u8);
+            }
+            let (bits, _) = execute_majx(&mut sub, &map, MajX::Maj3, &rows, &fc, &Ddr4Timing::ddr4_2133());
+            let expect = (ones >= 2) as u8;
+            assert!(bits.iter().all(|&b| b == expect), "ones={ones}");
+        }
+    }
+
+    #[test]
+    fn baseline_flow_matches_conventional() {
+        // B_{x,0,0}: neutral data = Frac'd 1 + const 0 + const 1.
+        let fc = FracConfig::baseline(6);
+        let mut sub = quiet(16);
+        let map = RowMap::standard(sub.rows);
+        let calib = neutral_calib(&sub, &fc);
+        setup_subarray(&mut sub, &map, &calib);
+        let rows: Vec<usize> = (0..5).map(|i| map.data_base + i).collect();
+        for (i, &r) in rows.iter().enumerate() {
+            sub.fill_row(r, (i < 2) as u8); // 2 ones -> majority 0
+        }
+        let (bits, _) = execute_majx(&mut sub, &map, MajX::Maj5, &rows, &fc, &Ddr4Timing::ddr4_2133());
+        assert!(bits.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn frac_count_hits_timing() {
+        let mut sub = quiet(8);
+        let map = RowMap::standard(sub.rows);
+        let grade = Ddr4Timing::ddr4_2133();
+        let rows: Vec<usize> = (0..5).map(|i| map.data_base + i).collect();
+        let fc0 = FracConfig::pudtune([0, 0, 0]);
+        let fc6 = FracConfig::pudtune([2, 2, 2]);
+        let calib = neutral_calib(&sub, &fc0);
+        setup_subarray(&mut sub, &map, &calib);
+        let (_, r0) = execute_majx(&mut sub, &map, MajX::Maj5, &rows, &fc0, &grade);
+        let (_, r6) = execute_majx(&mut sub, &map, MajX::Maj5, &rows, &fc6, &grade);
+        assert!(r6.elapsed_ns > r0.elapsed_ns);
+    }
+}

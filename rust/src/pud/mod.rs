@@ -1,0 +1,27 @@
+//! Processing-Using-DRAM operation library.
+//!
+//! Everything computable in the subarray is built from three primitives
+//! (RowCopy / Frac / SiMRA, provided by `dram::subarray` + the
+//! `controller` timing): the MAJX majority votes, boolean logic
+//! (AND/OR via constant-biased MAJ3, NOT via inverted write-back),
+//! full adders (MVDRAM construction), ripple-carry addition and
+//! shift-and-add multiplication, plus a small majority-graph IR with a
+//! row allocator so circuits schedule onto the subarray's row budget.
+//!
+//! * [`majx`] — MAJX execution flows, conventional and PUDTune;
+//! * [`logic`] — AND / OR / NOT;
+//! * [`fulladder`] — sum/carry from MAJ3 + MAJ5 (MVDRAM);
+//! * [`adder`] — 8-bit (and general-width) ripple-carry addition;
+//! * [`multiplier`] — 8-bit shift-and-add multiplication;
+//! * [`graph`] — majority-graph IR + op/ACT cost accounting;
+//! * [`rowalloc`] — scratch-row allocation inside the subarray;
+//! * [`exec`] — graph execution against the golden model.
+
+pub mod adder;
+pub mod exec;
+pub mod fulladder;
+pub mod graph;
+pub mod logic;
+pub mod majx;
+pub mod multiplier;
+pub mod rowalloc;

@@ -1,0 +1,121 @@
+//! Shift-and-add multiplication from majority gates (8-bit in Table I):
+//! partial products via AND (constant-biased MAJ3), accumulated with
+//! ripple-carry rows of full adders.
+
+use crate::pud::fulladder::full_adder;
+use crate::pud::graph::{CircuitCost, MajCircuit, Signal};
+use crate::pud::logic::and;
+
+/// Build a `width x width -> 2*width` array multiplier.
+///
+/// Inputs: a[0..width] (LSB first) then b[0..width].
+/// Outputs: product[0..2*width].
+pub fn array_multiplier(width: usize) -> MajCircuit {
+    assert!(width >= 1);
+    let mut c = MajCircuit::new(2 * width);
+    // Partial products pp[i][j] = a[j] & b[i].
+    let mut pp = vec![vec![Signal::Const(false); width]; width];
+    for (i, row) in pp.iter_mut().enumerate() {
+        for (j, cell) in row.iter_mut().enumerate() {
+            *cell = and(&mut c, Signal::Input(j), Signal::Input(width + i));
+        }
+    }
+    // Accumulate rows: acc starts as pp[0] zero-extended.
+    let mut acc: Vec<Signal> = Vec::with_capacity(2 * width);
+    acc.extend_from_slice(&pp[0]);
+    acc.resize(2 * width, Signal::Const(false));
+    for (i, row) in pp.iter().enumerate().skip(1) {
+        // Add row << i into acc with a ripple chain over `width` bits
+        // plus carry propagation into the tail.
+        let mut carry = Signal::Const(false);
+        for j in 0..width {
+            let (s, co) = full_adder(&mut c, acc[i + j], row[j], carry);
+            acc[i + j] = s;
+            carry = co;
+        }
+        // Propagate the final carry into the next accumulator bit.
+        // Untouched accumulator bits are still constant 0, so the carry
+        // drops straight in without a gate (saves ~w full adders per
+        // row vs naive tail ripple).
+        let mut pos = i + width;
+        while pos < 2 * width && carry != Signal::Const(false) {
+            if acc[pos] == Signal::Const(false) {
+                acc[pos] = carry;
+                carry = Signal::Const(false);
+                break;
+            }
+            let (s, co) = full_adder(&mut c, acc[pos], carry, Signal::Const(false));
+            acc[pos] = s;
+            carry = co;
+            pos += 1;
+        }
+    }
+    for s in acc {
+        c.output(s);
+    }
+    c
+}
+
+/// Cost of the paper's 8-bit multiplication.
+pub fn mul8_cost() -> CircuitCost {
+    array_multiplier(8).cost()
+}
+
+/// Reference: evaluate the multiplier on integers.
+pub fn eval_mul(c: &MajCircuit, width: usize, a: u64, b: u64) -> u64 {
+    let mut ins = vec![false; 2 * width];
+    for i in 0..width {
+        ins[i] = (a >> i) & 1 == 1;
+        ins[width + i] = (b >> i) & 1 == 1;
+    }
+    let out = c.eval(&ins);
+    let mut v = 0u64;
+    for (i, &bit) in out.iter().enumerate() {
+        if bit {
+            v |= 1 << i;
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn multiplies_exhaustively_4bit() {
+        let c = array_multiplier(4);
+        for a in 0..16u64 {
+            for b in 0..16u64 {
+                assert_eq!(eval_mul(&c, 4, a, b), a * b, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn multiplies_random_8bit() {
+        let c = array_multiplier(8);
+        proptest::check(
+            "mul8-matches-integer-multiplication",
+            0x3A15,
+            proptest::DEFAULT_CASES,
+            |r: &mut Rng| (r.below(256), r.below(256)),
+            |&(a, b)| eval_mul(&c, 8, a, b) == a * b,
+        );
+    }
+
+    #[test]
+    fn mul8_cost_structure() {
+        let cost = mul8_cost();
+        // 64 ANDs for partial products plus the adder army.
+        assert_eq!(cost.maj3, 64 + cost.maj5);
+        assert!(cost.maj5 >= 56, "maj5={}", cost.maj5);
+        // Ratio vs a single MAJ5 ~ the paper's ADD:MUL throughput gap.
+        let add = crate::pud::adder::add8_cost();
+        let mul_majors = cost.maj3 + cost.maj5;
+        let add_majors = add.maj3 + add.maj5;
+        assert!(mul_majors / add_majors >= 7, "{mul_majors} vs {add_majors}");
+    }
+}

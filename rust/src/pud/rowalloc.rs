@@ -1,0 +1,97 @@
+//! Scratch-row allocation inside a subarray's data region.
+//!
+//! Circuit execution needs a row per live wire; rows are recycled when
+//! a wire's last consumer has fired (the executor computes last-use
+//! positions). A free-list allocator with high-water-mark tracking.
+
+/// Allocator over rows `[base, limit)`.
+#[derive(Clone, Debug)]
+pub struct RowAlloc {
+    base: usize,
+    limit: usize,
+    free: Vec<usize>,
+    next: usize,
+    /// Peak simultaneous allocation (reported by examples/benches).
+    pub high_water: usize,
+    live: usize,
+}
+
+impl RowAlloc {
+    pub fn new(base: usize, limit: usize) -> Self {
+        assert!(base < limit);
+        Self { base, limit, free: Vec::new(), next: base, high_water: 0, live: 0 }
+    }
+
+    /// Rows still available.
+    pub fn available(&self) -> usize {
+        (self.limit - self.next) + self.free.len()
+    }
+
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Allocate a row; panics if the subarray is out of scratch rows
+    /// (circuits must fit the row budget — checked by tests).
+    pub fn alloc(&mut self) -> usize {
+        let row = if let Some(r) = self.free.pop() {
+            r
+        } else {
+            assert!(
+                self.next < self.limit,
+                "subarray out of scratch rows (base={}, limit={})",
+                self.base,
+                self.limit
+            );
+            let r = self.next;
+            self.next += 1;
+            r
+        };
+        self.live += 1;
+        self.high_water = self.high_water.max(self.live);
+        row
+    }
+
+    /// Release a row for reuse.
+    pub fn release(&mut self, row: usize) {
+        debug_assert!((self.base..self.limit).contains(&row));
+        debug_assert!(!self.free.contains(&row), "double free of row {row}");
+        self.live -= 1;
+        self.free.push(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocates_and_recycles() {
+        let mut a = RowAlloc::new(16, 20);
+        let r0 = a.alloc();
+        let r1 = a.alloc();
+        assert_ne!(r0, r1);
+        assert_eq!(a.live(), 2);
+        a.release(r0);
+        let r2 = a.alloc();
+        assert_eq!(r2, r0, "released rows are reused");
+        assert_eq!(a.high_water, 2);
+    }
+
+    #[test]
+    fn tracks_availability() {
+        let mut a = RowAlloc::new(0, 4);
+        assert_eq!(a.available(), 4);
+        let _r = a.alloc();
+        assert_eq!(a.available(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of scratch rows")]
+    fn exhaustion_panics() {
+        let mut a = RowAlloc::new(0, 2);
+        a.alloc();
+        a.alloc();
+        a.alloc();
+    }
+}

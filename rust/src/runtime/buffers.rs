@@ -1,0 +1,70 @@
+//! Literal construction/extraction helpers for the PJRT boundary.
+//!
+//! The AOT graphs take f32/i32 arrays and rank-0 scalars; these helpers
+//! keep the (host Vec) <-> (xla::Literal) conversions in one place so
+//! the hot path can reuse buffers and the signatures stay greppable.
+
+use anyhow::Result;
+use xla::Literal;
+
+/// f32 vector literal of shape `[len]`.
+pub fn f32_vec(data: &[f32]) -> Literal {
+    Literal::vec1(data)
+}
+
+/// f32 literal reshaped to `dims`.
+pub fn f32_array(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+/// i32 vector literal.
+pub fn i32_vec(data: &[i32]) -> Literal {
+    Literal::vec1(data)
+}
+
+/// Rank-0 scalars.
+pub fn f32_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn u32_scalar(v: u32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Extract a f32 vector from a literal.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract an i32 vector from a literal.
+pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let l = f32_vec(&[1.0, 2.5, -3.0]);
+        assert_eq!(to_f32_vec(&l).unwrap(), vec![1.0, 2.5, -3.0]);
+    }
+
+    #[test]
+    fn reshape_checks_size() {
+        assert!(f32_array(&[1.0, 2.0], &[3]).is_err());
+        let l = f32_array(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+    }
+
+    #[test]
+    fn scalars_have_rank0() {
+        let s = f32_scalar(7.5);
+        assert_eq!(s.element_count(), 1);
+        let u = u32_scalar(42);
+        assert_eq!(u.element_count(), 1);
+    }
+}

@@ -1,0 +1,125 @@
+//! The PJRT runtime: loads `artifacts/*.hlo.txt`, compiles them on the
+//! CPU PJRT client and caches the executables.
+//!
+//! HLO **text** is the interchange format (see `python/compile/aot.py`
+//! and /opt/xla-example/README.md): the text parser reassigns
+//! instruction ids, avoiding the 64-bit-id protos that xla_extension
+//! 0.5.1 rejects.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::runtime::executable::{ArgSpec, Executable};
+use crate::util::json::{self, Json};
+
+/// Artifact loader + executable cache over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Json,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (built by `make artifacts`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Locate the artifacts directory next to the current exe / cwd.
+    pub fn open_default() -> Result<Self> {
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return Self::open(cand);
+            }
+        }
+        Err(anyhow!("artifacts/manifest.json not found — run `make artifacts`"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of all artifacts in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .get("artifacts")
+            .as_obj()
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// The shared physics constants the artifacts were built against.
+    pub fn physics_json(&self) -> Result<Json> {
+        let text = std::fs::read_to_string(self.dir.join("physics.json"))?;
+        json::parse(&text).map_err(|e| anyhow!("physics.json: {e}"))
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.get("artifacts").get(name);
+        let file = entry
+            .get("file")
+            .as_str()
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let inputs = entry
+            .get("inputs")
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifact '{name}': bad inputs"))?
+            .iter()
+            .map(|i| ArgSpec {
+                name: i.get("name").as_str().unwrap_or("?").to_string(),
+                shape: i
+                    .get("shape")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default(),
+                dtype: i.get("dtype").as_str().unwrap_or("?").to_string(),
+            })
+            .collect();
+        let outputs = entry
+            .get("outputs")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let executable = std::sync::Arc::new(Executable {
+            name: name.to_string(),
+            exe,
+            inputs,
+            outputs,
+            meta: entry.get("meta").clone(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+}

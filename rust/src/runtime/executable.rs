@@ -1,0 +1,59 @@
+//! A compiled artifact with its manifest signature.
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtLoadedExecutable};
+
+use crate::util::json::Json;
+
+/// Input signature entry from `artifacts/manifest.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// A loaded + compiled AOT artifact.
+pub struct Executable {
+    pub name: String,
+    pub exe: PjRtLoadedExecutable,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<String>,
+    /// Free-form metadata from the manifest (cols, samples, m, ...).
+    pub meta: Json,
+}
+
+impl Executable {
+    /// Execute with positional literals; returns the untupled outputs.
+    /// (All graphs are lowered with `return_tuple=True`.)
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        anyhow::ensure!(
+            args.len() == self.inputs.len(),
+            "{}: expected {} args, got {}",
+            self.name,
+            self.inputs.len(),
+            args.len()
+        );
+        let result = self
+            .exe
+            .execute::<Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let parts = lit.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.name,
+            self.outputs.len(),
+            parts.len()
+        );
+        Ok(parts)
+    }
+
+    /// Integer metadata accessor (cols, samples, chunks, m, ...).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).as_usize()
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load + execute the AOT artifacts from the request path.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX graphs (which embed the L1
+//! Pallas kernels) to HLO text once at build time; this module loads
+//! them into the `xla` crate's PJRT CPU client and executes them with
+//! concrete inputs. Python never runs here.
+
+pub mod buffers;
+pub mod client;
+pub mod executable;
+
+pub use client::Runtime;
+pub use executable::{ArgSpec, Executable};

@@ -1,0 +1,96 @@
+//! Tiny timing harness for `rust/benches/*` (criterion is not in the
+//! offline vendor set). Measures wall-clock over repeated runs, reports
+//! mean / std / min, and prints in a stable machine-grepable format.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<40} iters={:<3} mean={} std={} min={}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+        );
+    }
+}
+
+/// Time `f` for `iters` measured iterations after `warmup` unmeasured ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        s.push(t.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: s.mean(),
+        std_s: s.std(),
+        min_s: s.min(),
+    };
+    r.print();
+    r
+}
+
+/// Auto-calibrating variant: picks an iteration count so the measured
+/// phase takes roughly `budget_s` seconds (at least 3 iterations).
+pub fn bench_budget<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    let t = Instant::now();
+    f(); // warmup + probe
+    let probe = t.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / probe) as u32).clamp(3, 1000);
+    bench(name, 0, iters, f)
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut n = 0u64;
+        let r = bench("noop", 1, 5, || n += 1);
+        assert_eq!(r.iters, 5);
+        assert_eq!(n, 6);
+        assert!(r.min_s <= r.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn time_formats() {
+        assert_eq!(fmt_time(2.0), "2.000s");
+        assert_eq!(fmt_time(2e-3), "2.000ms");
+        assert_eq!(fmt_time(2e-6), "2.000us");
+        assert_eq!(fmt_time(2e-9), "2.0ns");
+    }
+}

@@ -1,0 +1,23 @@
+//! Std-only utility layer.
+//!
+//! The offline vendor set ships only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (`rand`, `serde`, `criterion`,
+//! `clap`, `proptest`) are unavailable. This module provides the small,
+//! deterministic subset the simulator needs:
+//!
+//! * [`rng`] — SplitMix64 seeding + xoshiro256++ streams, Box-Muller
+//!   normals, mixture sampling (replaces `rand`/`rand_distr`);
+//! * [`stats`] — summaries, quantiles, confidence intervals;
+//! * [`json`] — a minimal JSON writer/parser for `artifacts/manifest.json`,
+//!   calibration stores and experiment reports (replaces `serde_json`);
+//! * [`table`] — ASCII table / series renderers for paper-style output;
+//! * [`benchkit`] — timing harness used by `rust/benches/*` (replaces
+//!   `criterion`);
+//! * [`proptest`] — a tiny property-testing harness (shrinkless, seeded).
+
+pub mod benchkit;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,71 @@
+//! Minimal property-testing harness (the `proptest` crate is not in the
+//! offline vendor set).
+//!
+//! Runs a property over `cases` generated inputs from a seeded [`Rng`];
+//! on failure it reports the case index and seed so the exact input can
+//! be replayed deterministically (no shrinking — inputs are printed via
+//! the generator's Debug output instead).
+
+use super::rng::Rng;
+
+/// Number of cases per property (kept modest: the whole suite runs on
+/// one core).
+pub const DEFAULT_CASES: u32 = 64;
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics with the seed
+/// and case index on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: u32,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result<(), String>` for a
+/// richer failure message.
+pub fn check_res<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: u32,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 1, 32, |r| (r.range(-100, 100), r.range(-100, 100)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics() {
+        check("always-false", 1, 4, |r| r.next_u32(), |_| false);
+    }
+}

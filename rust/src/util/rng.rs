@@ -1,0 +1,375 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! Every stochastic quantity in the simulator — process-variation fields,
+//! per-operation noise, random test patterns — is drawn from seeded,
+//! splittable streams so that experiments are exactly reproducible and
+//! the Rust native simulator can be cross-validated against fixed
+//! vectors. xoshiro256++ for the stream, SplitMix64 for seeding
+//! (standard constructions; see Blackman & Vigna).
+
+/// SplitMix64: used to expand a single `u64` seed into stream state and
+/// to derive hierarchical sub-seeds (device -> bank -> subarray -> ...).
+#[derive(Clone, Copy, Debug)]
+pub struct SplitMix64(pub u64);
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self(seed)
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Derive a child seed from a parent seed and a path of indices.
+/// Used to give every (channel, bank, subarray, column) its own
+/// independent, order-insensitive stream.
+pub fn derive_seed(parent: u64, path: &[u64]) -> u64 {
+    let mut s = SplitMix64::new(parent ^ 0xA076_1D64_78BD_642F);
+    let mut acc = s.next();
+    for &p in path {
+        let mut m = SplitMix64::new(acc ^ p.wrapping_mul(0xE703_7ED1_A0B4_28DB));
+        acc = m.next();
+    }
+    acc
+}
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box-Muller normal.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self { s: [sm.next(), sm.next(), sm.next(), sm.next()], spare: None }
+    }
+
+    /// Child RNG for a sub-component: an independent stream derived from
+    /// the current state and an index path, without advancing `self`.
+    pub fn child(&self, path: &[u64]) -> Rng {
+        let fingerprint = self.s[0] ^ self.s[1].rotate_left(17) ^ self.s[2].rotate_left(31) ^ self.s[3].rotate_left(47);
+        Rng::new(derive_seed(fingerprint, path))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's multiply-shift rejection method.
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as i64
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// A random bit (p = 1/2), branch-free.
+    #[inline]
+    pub fn bit(&mut self) -> u8 {
+        (self.next_u64() >> 63) as u8
+    }
+
+    /// Standard normal via Acklam's inverse-CDF approximation on a
+    /// 53-bit uniform (|relative error| < 1.2e-9): ~2.5x faster than
+    /// Box-Muller on the sampling hot path (no sin/cos/ln per draw)
+    /// while preserving tail behaviour well past 5 sigma — which the
+    /// error-free-column measurement depends on (EXPERIMENTS.md §Perf).
+    pub fn normal(&mut self) -> f64 {
+        // Uniform in (0, 1), never exactly 0 or 1.
+        let u = ((self.next_u64() >> 11) as f64 + 0.5) * (1.0 / (1u64 << 53) as f64);
+        inverse_normal_cdf(u)
+    }
+
+    /// Box-Muller normal (the pre-optimisation reference; kept for the
+    /// distribution-agreement test).
+    pub fn normal_box_muller(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        let u = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let v = self.f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (s, c) = (std::f64::consts::TAU * v).sin_cos();
+        self.spare = Some(r * s);
+        r * c
+    }
+
+    /// Normal with the given mean / std-dev.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Two-component Gaussian scale mixture: with probability
+    /// `tail_weight` the draw uses `sd * tail_ratio`. Models the
+    /// heavy-tailed sense-amplifier offset distribution (DESIGN.md §3).
+    pub fn mixture_normal(&mut self, sd: f64, tail_weight: f64, tail_ratio: f64) -> f64 {
+        let scale = if self.bool(tail_weight) { sd * tail_ratio } else { sd };
+        self.normal() * scale
+    }
+
+    /// Fill a slice with standard normals scaled by `sd`.
+    pub fn fill_normal(&mut self, out: &mut [f32], sd: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal() as f32 * sd;
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Acklam's rational approximation of the inverse standard-normal CDF.
+/// |relative error| < 1.15e-9 over the full open interval.
+pub fn inverse_normal_cdf(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn derive_seed_is_path_sensitive() {
+        let s = derive_seed(7, &[1, 2, 3]);
+        assert_ne!(s, derive_seed(7, &[1, 2, 4]));
+        assert_ne!(s, derive_seed(7, &[1, 3, 2]));
+        assert_ne!(s, derive_seed(8, &[1, 2, 3]));
+        assert_eq!(s, derive_seed(7, &[1, 2, 3]));
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            let n = r.below(17);
+            assert!(n < 17);
+            let i = r.range(-5, 5);
+            assert!((-5..5).contains(&i));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let n = 200_000;
+        let (mut sum, mut sum2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            sum += z;
+            sum2 += z * z;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn mixture_has_heavier_tails() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let thresh = 3.0 * 0.04;
+        let mut plain = 0;
+        let mut mixed = 0;
+        for _ in 0..n {
+            if r.normal_ms(0.0, 0.04).abs() > thresh {
+                plain += 1;
+            }
+            if r.mixture_normal(0.04, 0.15, 2.5).abs() > thresh {
+                mixed += 1;
+            }
+        }
+        assert!(mixed > plain * 5, "plain={plain} mixed={mixed}");
+    }
+
+    #[test]
+    fn inverse_cdf_matches_reference_points() {
+        // Known quantiles of the standard normal.
+        for (p, z) in [
+            (0.5, 0.0),
+            (0.975, 1.959964),
+            (0.841344746, 1.0),
+            (0.0013498980, -3.0),
+            (1.0 - 2.866515719e-7, 5.0),
+        ] {
+            let got = inverse_normal_cdf(p);
+            assert!((got - z).abs() < 2e-4, "p={p}: got {got}, want {z}");
+        }
+    }
+
+    #[test]
+    fn fast_normal_matches_box_muller_distribution() {
+        // Moments and tail frequencies of the inverse-CDF sampler must
+        // match the Box-Muller reference (the pre-optimisation
+        // implementation) closely — the ECR measurement depends on
+        // accurate >3-sigma behaviour.
+        let n = 400_000;
+        let mut fast = Rng::new(77);
+        let mut refr = Rng::new(78);
+        let (mut t_fast, mut t_ref) = (0u32, 0u32);
+        let (mut s_fast, mut s_ref) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let a = fast.normal();
+            let b = refr.normal_box_muller();
+            s_fast += a * a;
+            s_ref += b * b;
+            t_fast += (a.abs() > 3.0) as u32;
+            t_ref += (b.abs() > 3.0) as u32;
+        }
+        let var_ratio = s_fast / s_ref;
+        assert!((var_ratio - 1.0).abs() < 0.02, "var ratio {var_ratio}");
+        // P(|z|>3) = 0.27%; expect ~1080 events each, agree within 20%.
+        assert!(t_fast > 800 && t_fast < 1400, "tail fast {t_fast}");
+        let ratio = t_fast as f64 / t_ref.max(1) as f64;
+        assert!((0.8..1.25).contains(&ratio), "tail ratio {ratio}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,131 @@
+//! ASCII renderers for paper-style tables and figures.
+//!
+//! Every bench/experiment prints its result through these so that
+//! `cargo bench` output lines up visually with the paper's Table I and
+//! Figs. 3/5/6.
+
+/// A simple column-aligned table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = w[i].max(h.chars().count());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let sep: String = w
+            .iter()
+            .map(|&x| "-".repeat(x + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(w)
+                .map(|(c, &x)| format!(" {:<width$} ", c, width = x))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        out.push_str(&line(&self.headers, &w));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Horizontal bar chart for figure-style series (one bar per label).
+pub fn bar_chart(title: &str, series: &[(String, f64)], unit: &str, width: usize) -> String {
+    let max = series.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-30);
+    let lw = series.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (label, v) in series {
+        let n = ((v / max) * width as f64).round().max(0.0) as usize;
+        out.push_str(&format!(
+            "  {:<lw$} |{:<width$}| {:.4} {}\n",
+            label,
+            "#".repeat(n),
+            v,
+            unit,
+            lw = lw,
+            width = width
+        ));
+    }
+    out
+}
+
+/// Format a throughput value with engineering units (OPS). The TOPS
+/// threshold sits at 0.5e12 so paper-style values like "0.89 TOPS"
+/// render in the same unit as the paper.
+pub fn fmt_ops(v: f64) -> String {
+    if v >= 0.5e12 {
+        format!("{:.2} TOPS", v / 1e12)
+    } else if v >= 1e9 {
+        format!("{:.1} GOPS", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.1} MOPS", v / 1e6)
+    } else {
+        format!("{:.0} OPS", v)
+    }
+}
+
+/// Format a ratio like the paper ("1.81x").
+pub fn fmt_ratio(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["Method", "ECR"]);
+        t.row(&["Baseline".into(), "46.6%".into()]);
+        t.row(&["PUDTune".into(), "3.3%".into()]);
+        let s = t.render();
+        assert!(s.contains("Baseline"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    fn ops_units() {
+        assert_eq!(fmt_ops(0.89e12), "0.89 TOPS");
+        assert_eq!(fmt_ops(0.4e12), "400.0 GOPS");
+        assert_eq!(fmt_ops(50.2e9), "50.2 GOPS");
+        assert_eq!(fmt_ops(5.0e6), "5.0 MOPS");
+    }
+
+    #[test]
+    fn bars_render() {
+        let s = bar_chart("t", &[("a".into(), 1.0), ("b".into(), 0.5)], "u", 10);
+        assert!(s.contains("##########"));
+        assert!(s.contains("#####"));
+    }
+}

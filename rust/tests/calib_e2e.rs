@@ -1,0 +1,116 @@
+//! End-to-end calibration: identify on one engine, persist to the NV
+//! store, reload, and verify on the *full command-level flow* (the
+//! golden model executing actual RowCopy/Frac/SiMRA programs).
+
+use pudtune::calib::algorithm::{CalibParams, NativeEngine};
+use pudtune::calib::lattice::FracConfig;
+use pudtune::calib::store::CalibStore;
+use pudtune::config::device::DeviceConfig;
+use pudtune::config::system::Ddr4Timing;
+use pudtune::dram::geometry::{RowMap, SubarrayId};
+use pudtune::dram::subarray::Subarray;
+use pudtune::pud::majx::{execute_majx, setup_subarray, MajX};
+use pudtune::util::rng::Rng;
+
+/// Full-flow ECR: run MAJ5 through RowCopy/Frac/SiMRA programs and
+/// count per-column errors (slow; used at small scale to validate the
+/// fast sampling path end to end).
+fn full_flow_error_counts(
+    sub: &mut Subarray,
+    map: &RowMap,
+    fc: &FracConfig,
+    samples: u32,
+    seed: u64,
+) -> Vec<u32> {
+    let grade = Ddr4Timing::ddr4_2133();
+    let mut rng = Rng::new(seed);
+    let mut errs = vec![0u32; sub.cols];
+    let operand_rows: Vec<usize> = (0..5).map(|i| map.data_base + i).collect();
+    for _ in 0..samples {
+        // Random per-column operand bits.
+        let mut expected = vec![0u8; sub.cols];
+        let mut cols_bits: Vec<Vec<u8>> = vec![vec![0u8; sub.cols]; 5];
+        for c in 0..sub.cols {
+            let word = rng.next_u64();
+            let mut ones = 0;
+            for (r, row) in cols_bits.iter_mut().enumerate() {
+                let b = ((word >> r) & 1) as u8;
+                row[c] = b;
+                ones += b;
+            }
+            expected[c] = (ones >= 3) as u8;
+        }
+        for (r, bits) in operand_rows.iter().zip(&cols_bits) {
+            sub.write_row(*r, bits);
+        }
+        let (got, _) = execute_majx(sub, map, MajX::Maj5, &operand_rows, fc, &grade);
+        for c in 0..sub.cols {
+            errs[c] += (got[c] != expected[c]) as u32;
+        }
+    }
+    errs
+}
+
+#[test]
+fn calibrate_store_reload_verify_full_flow() {
+    let cfg = DeviceConfig::default();
+    let cols = 512;
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let mut sub = Subarray::with_geometry(&cfg, 64, cols, 0xE2E);
+    let mut eng = NativeEngine::new(cfg.clone());
+
+    // 1. Identify calibration data (Algorithm 1, fast sampling path).
+    let calib = eng.calibrate(&mut sub, &fc, &CalibParams::paper());
+
+    // 2. Persist to the NV store and reload (paper §III-A).
+    let mut store = CalibStore::default();
+    let id = SubarrayId::new(0, 0, 0);
+    store.insert(id, &calib);
+    let json = store.to_json().to_string();
+    let reloaded = CalibStore::from_json(&pudtune::util::json::parse(&json).unwrap())
+        .unwrap()
+        .load(id, &cfg)
+        .unwrap();
+    assert_eq!(reloaded.levels, calib.levels);
+
+    // 3. Verify through the FULL command-level flow: write the reloaded
+    //    calibration bits into the reserved rows and execute real
+    //    MAJ5 programs.
+    let map = RowMap::standard(sub.rows);
+    setup_subarray(&mut sub, &map, &reloaded);
+    let errs_tuned = full_flow_error_counts(&mut sub, &map, &fc, 96, 0x5EED);
+    let ecr_tuned =
+        errs_tuned.iter().filter(|&&e| e > 0).count() as f64 / cols as f64;
+
+    // Baseline through the same full flow.
+    let base = FracConfig::baseline(3);
+    let base_cal = base.uncalibrated(&cfg, cols);
+    setup_subarray(&mut sub, &map, &base_cal);
+    let errs_base = full_flow_error_counts(&mut sub, &map, &base, 96, 0x5EED);
+    let ecr_base =
+        errs_base.iter().filter(|&&e| e > 0).count() as f64 / cols as f64;
+
+    assert!(
+        ecr_tuned < ecr_base / 2.5,
+        "full-flow ECR: tuned {ecr_tuned:.3} vs base {ecr_base:.3}"
+    );
+    assert!(ecr_base > 0.25, "baseline should be visibly error-prone: {ecr_base}");
+}
+
+#[test]
+fn calibration_survives_moderate_environment_change() {
+    // Calibrate at nominal, verify at 70C and after 3 days: new errors
+    // must be rare (Fig. 6 mechanism, end to end).
+    let cfg = DeviceConfig::default();
+    let cols = 4096;
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let mut sub = Subarray::with_geometry(&cfg, 32, cols, 0x716);
+    let mut eng = NativeEngine::new(cfg.clone());
+    let calib = eng.calibrate(&mut sub, &fc, &CalibParams::paper());
+    let before = eng.measure_ecr(&mut sub, &calib, 5, 4096);
+    sub.set_temperature(70.0);
+    sub.advance_time(72.0);
+    let after = eng.measure_ecr(&mut sub, &calib, 5, 4096);
+    let new_ecr = after.new_ecr_vs(&before);
+    assert!(new_ecr < 0.01, "new ECR {new_ecr}");
+}

@@ -1,0 +1,145 @@
+//! Cross-validation: the native Rust golden model and the AOT-compiled
+//! JAX/Pallas graphs must implement the *same* analog arithmetic.
+//!
+//! `maj5_eval_small` / `maj3_eval_small` take explicit operand bits,
+//! calibration charges, thresholds and noise (no RNG), so the outputs
+//! must match the golden model's `simra_eval` **bit-exactly**.
+//! Requires `make artifacts`.
+
+use pudtune::config::device::DeviceConfig;
+use pudtune::dram::subarray::Subarray;
+use pudtune::runtime::{buffers, Runtime};
+use pudtune::util::rng::Rng;
+
+const S: usize = 32;
+const N: usize = 256;
+
+fn eval_case(m: usize, seed: u64) {
+    let rt = Runtime::open_default().expect("artifacts required (make artifacts)");
+    let exe = rt.load(&format!("maj{m}_eval_small")).unwrap();
+
+    let cfg = DeviceConfig::default();
+    let mut rng = Rng::new(seed);
+
+    let mut input_bits = vec![0f32; S * m * N];
+    for v in input_bits.iter_mut() {
+        *v = rng.bit() as f32;
+    }
+    // Per-column total non-operand charge (calibration rows + the MAJ3
+    // constant rows): neutral-ish with jitter.
+    let const_q = if m == 3 { 1.0f32 } else { 0.0 };
+    let calib_q: Vec<f32> = (0..N)
+        .map(|_| 1.5 + (rng.f32() - 0.5) * 0.8 + const_q)
+        .collect();
+    let thr: Vec<f32> = (0..N).map(|_| 0.5 + (rng.f32() - 0.5) * 0.1).collect();
+    let mut noise = vec![0f32; S * N];
+    rng.fill_normal(&mut noise, 0.002);
+
+    // PJRT path.
+    let out = exe
+        .run(&[
+            buffers::f32_array(&input_bits, &[S as i64, m as i64, N as i64]).unwrap(),
+            buffers::f32_vec(&calib_q),
+            buffers::f32_vec(&thr),
+            buffers::f32_array(&noise, &[S as i64, N as i64]).unwrap(),
+        ])
+        .unwrap();
+    let pjrt_bits = buffers::to_f32_vec(&out[0]).unwrap();
+    assert_eq!(pjrt_bits.len(), S * N);
+
+    // Native golden model. Only the column charge SUM matters for the
+    // divider, so fold the non-operand charge into an equivalent
+    // threshold shift: V(k + q) > thr  <=>  V(k) > thr - Cc*q/denom.
+    let mut sub = Subarray::with_geometry(&cfg, 16, N, 1);
+    let denom = cfg.simra_rows as f64 * cfg.cc_ff + cfg.cb_ff;
+    for c in 0..N {
+        sub.sa.variation.sa_offset[c] =
+            (thr[c] as f64 - 0.5 - cfg.cc_ff * calib_q[c] as f64 / denom) as f32;
+        sub.sa.variation.tempco_jitter[c] = 0.0;
+        sub.sa.drift.drift[c] = 0.0;
+    }
+    for r in m..8 {
+        sub.fill_row(r, 0); // non-operand rows folded into thresholds
+    }
+    let rows: Vec<usize> = (0..8).collect();
+    let mut mismatches = 0usize;
+    for s in 0..S {
+        for r in 0..m {
+            let bits: Vec<u8> = (0..N)
+                .map(|c| input_bits[s * m * N + r * N + c] as u8)
+                .collect();
+            sub.write_row(r, &bits);
+        }
+        let noise_row: Vec<f32> = (0..N).map(|c| noise[s * N + c]).collect();
+        let native = sub.simra_eval(&rows, &noise_row);
+        for c in 0..N {
+            if (pjrt_bits[s * N + c] != 0.0) != (native[c] != 0) {
+                mismatches += 1;
+            }
+        }
+    }
+    // f32-vs-f64 rounding could only differ exactly at a decision
+    // boundary, which random draws never hit; the tolerance is a guard
+    // against that measure-zero case, not a fudge factor.
+    assert!(
+        mismatches <= 1,
+        "maj{m}: {mismatches}/{} bits disagree between native and PJRT",
+        S * N
+    );
+}
+
+#[test]
+fn maj5_eval_bit_exact() {
+    eval_case(5, 0xBEEF);
+}
+
+#[test]
+fn maj3_eval_bit_exact() {
+    eval_case(3, 0xF00D);
+}
+
+/// Statistical agreement of the RNG paths: the PJRT ECR graph and the
+/// native engine measure the same device through different random
+/// streams; the measured ECRs must agree closely.
+#[test]
+fn ecr_statistical_agreement() {
+    use pudtune::experiments;
+    let rt = std::sync::Arc::new(Runtime::open_default().expect("artifacts required"));
+    let cfg = DeviceConfig::default();
+    let (pjrt, native) = experiments::cross_check(&cfg, &rt, 1024).unwrap();
+    assert!(
+        (pjrt - native).abs() < 0.05,
+        "pjrt={pjrt:.3} native={native:.3}"
+    );
+}
+
+/// Calibration on the PJRT path reaches the same quality as native.
+#[test]
+fn pjrt_calibration_quality_matches_native() {
+    use pudtune::calib::algorithm::{CalibParams, NativeEngine};
+    use pudtune::calib::lattice::FracConfig;
+    use pudtune::coordinator::engine::{ColumnBank, PjrtEngine};
+    let rt = std::sync::Arc::new(Runtime::open_default().expect("artifacts required"));
+    let cfg = DeviceConfig::default();
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let params = CalibParams::paper();
+
+    let eng = PjrtEngine::new(rt, cfg.clone());
+    let bank = ColumnBank::new(&cfg, 1024, 77);
+    let cal_p = eng.calibrate(&bank, &fc, &params).unwrap();
+    let ecr_p = eng.measure_ecr(&bank, &cal_p, 5, 0xAB).unwrap().ecr();
+
+    let mut neng = NativeEngine::new(cfg.clone());
+    let mut sub = Subarray::with_geometry(&cfg, 16, 1024, 77);
+    let cal_n = neng.calibrate(&mut sub, &fc, &params);
+    let ecr_n = neng.measure_ecr(&mut sub, &cal_n, 5, 8192).ecr();
+
+    assert!(
+        (ecr_p - ecr_n).abs() < 0.05,
+        "pjrt={ecr_p:.3} native={ecr_n:.3}"
+    );
+    // Both must be far below the uncalibrated baseline.
+    let base = FracConfig::baseline(3).uncalibrated(&cfg, 1024);
+    let ecr_base = neng.measure_ecr(&mut sub, &base, 5, 8192).ecr();
+    assert!(ecr_p < ecr_base / 3.0 && ecr_n < ecr_base / 3.0);
+}

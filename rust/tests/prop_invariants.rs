@@ -1,0 +1,236 @@
+//! Property-based invariants across modules (own harness — see
+//! `util::proptest`).
+
+use pudtune::calib::algorithm::{const_q, Calibration};
+use pudtune::calib::lattice::{FracConfig, OffsetLattice};
+use pudtune::config::device::DeviceConfig;
+use pudtune::config::system::Ddr4Timing;
+use pudtune::controller::power::ActPowerModel;
+use pudtune::controller::timing::{majx_cost, PrimitiveTiming};
+use pudtune::pud::adder::{eval_add, ripple_adder};
+use pudtune::pud::graph::{Gate, MajCircuit, Signal};
+use pudtune::pud::multiplier::{array_multiplier, eval_mul};
+use pudtune::util::json;
+use pudtune::util::proptest::{check, check_res};
+use pudtune::util::rng::Rng;
+
+#[test]
+fn lattice_offsets_are_monotone_and_symmetric() {
+    let cfg = DeviceConfig::default();
+    check_res(
+        "lattice-monotone-symmetric",
+        1,
+        128,
+        |r: &mut Rng| {
+            [
+                r.below(7) as u32,
+                r.below(7) as u32,
+                r.below(7) as u32,
+            ]
+        },
+        |&fracs| {
+            let lat = OffsetLattice::build(&cfg, &FracConfig::pudtune(fracs));
+            // Monotone by construction.
+            for w in lat.levels.windows(2) {
+                if w[1].q_total < w[0].q_total - 1e-12 {
+                    return Err("not sorted".into());
+                }
+            }
+            // Bit-complement symmetry: Q(b) + Q(!b) = 3.0.
+            for lv in &lat.levels {
+                let inv = [1 - lv.bits[0], 1 - lv.bits[1], 1 - lv.bits[2]];
+                let q_inv: f64 = (0..3)
+                    .map(|i| cfg.frac_charge(inv[i] as f64, fracs[i]))
+                    .sum();
+                if (lv.q_total + q_inv - 3.0).abs() > 1e-9 {
+                    return Err(format!("asymmetric at {:?}", lv.bits));
+                }
+            }
+            // Offsets bounded by the zero-frac full swing.
+            let bound = 1.5 * cfg.cc_ff / (8.0 * cfg.cc_ff + cfg.cb_ff) + 1e-12;
+            if lat.range().0 < -bound || lat.range().1 > bound {
+                return Err("range exceeds physical bound".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn calibration_row_bits_roundtrip_levels() {
+    let cfg = DeviceConfig::default();
+    check(
+        "row-bits-roundtrip",
+        2,
+        64,
+        |r: &mut Rng| {
+            let fracs = [r.below(5) as u32, r.below(5) as u32, r.below(5) as u32];
+            let levels: Vec<u8> = (0..64).map(|_| r.below(8) as u8).collect();
+            (fracs, levels)
+        },
+        |(fracs, levels)| {
+            let lat = OffsetLattice::build(&cfg, &FracConfig::pudtune(*fracs));
+            let mut c = Calibration::uniform(lat, levels.len());
+            c.levels = levels.clone();
+            // Rebuild each column's total charge from the 3 row-bit
+            // patterns and per-row Frac counts; must equal q_extra.
+            let rows: Vec<Vec<u8>> = (0..3).map(|r| c.row_bits(r)).collect();
+            (0..levels.len()).all(|col| {
+                let q: f64 = (0..3)
+                    .map(|r| cfg.frac_charge(rows[r][col] as f64, fracs[r]))
+                    .sum();
+                (q - c.q_extra(col)).abs() < 1e-9
+            })
+        },
+    );
+}
+
+#[test]
+fn majority_circuits_match_integer_arithmetic() {
+    check(
+        "adder-and-multiplier-match",
+        3,
+        48,
+        |r: &mut Rng| {
+            let w = 2 + r.below(5) as usize; // widths 2..=6
+            (w, r.below(1 << 6), r.below(1 << 6))
+        },
+        |&(w, a0, b0)| {
+            let mask = (1u64 << w) - 1;
+            let (a, b) = (a0 & mask, b0 & mask);
+            let add = ripple_adder(w);
+            let mul = array_multiplier(w);
+            eval_add(&add, w, a, b) == a + b && eval_mul(&mul, w, a, b) == a * b
+        },
+    );
+}
+
+#[test]
+fn majority_gate_is_monotone() {
+    // Flipping any input 0->1 never flips the output 1->0.
+    check_res(
+        "maj-monotone",
+        4,
+        96,
+        |r: &mut Rng| {
+            let arity = if r.bool(0.5) { 3 } else { 5 };
+            let bits: Vec<bool> = (0..arity).map(|_| r.bool(0.5)).collect();
+            bits
+        },
+        |bits| {
+            let arity = bits.len();
+            let mut c = MajCircuit::new(arity);
+            let args: Vec<Signal> = (0..arity).map(Signal::Input).collect();
+            let g = if arity == 3 {
+                c.push(Gate::maj3(args[0], args[1], args[2]))
+            } else {
+                c.push(Gate::maj5(args[0], args[1], args[2], args[3], args[4]))
+            };
+            c.output(g);
+            let base = c.eval(bits)[0];
+            for i in 0..arity {
+                if !bits[i] {
+                    let mut up = bits.clone();
+                    up[i] = true;
+                    if base && !c.eval(&up)[0] {
+                        return Err(format!("non-monotone at input {i}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn majx_cost_is_affine_in_fracs() {
+    let pt = PrimitiveTiming::from_grade(&Ddr4Timing::ddr4_2133());
+    check(
+        "cost-affine",
+        5,
+        32,
+        |r: &mut Rng| (r.below(10) as u32, r.below(10) as u32),
+        |&(f1, f2)| {
+            let a = majx_cost(&pt, 5, f1);
+            let b = majx_cost(&pt, 5, f2);
+            let d_lat = b.latency_ns - a.latency_ns;
+            let expect = (f2 as f64 - f1 as f64) * pt.frac_ns;
+            (d_lat - expect).abs() < 1e-9 && (b.acts as i64 - a.acts as i64)
+                == (f2 as i64 - f1 as i64) * pt.frac_acts as i64
+        },
+    );
+}
+
+#[test]
+fn act_power_period_is_monotone_in_load() {
+    let pm = ActPowerModel::from_grade(&Ddr4Timing::ddr4_2133());
+    check(
+        "power-monotone",
+        6,
+        64,
+        |r: &mut Rng| {
+            (
+                10.0 + r.f64() * 1000.0,
+                1 + r.below(64) as u32,
+                1 + r.below(32) as usize,
+            )
+        },
+        |&(lat, acts, banks)| {
+            let p = pm.op_period_ns(lat, acts, banks);
+            p >= lat
+                && pm.op_period_ns(lat, acts + 1, banks) >= p
+                && pm.op_period_ns(lat + 1.0, acts, banks) >= p
+                && pm.op_period_ns(lat, acts, banks + 1) >= p
+        },
+    );
+}
+
+#[test]
+fn json_roundtrips_arbitrary_trees() {
+    check_res(
+        "json-roundtrip",
+        7,
+        64,
+        |r: &mut Rng| gen_json(r, 0),
+        |j| {
+            let text = j.to_string();
+            let back = json::parse(&text).map_err(|e| e.to_string())?;
+            if &back != j {
+                return Err("mismatch after roundtrip".into());
+            }
+            let pretty = json::parse(&j.to_pretty()).map_err(|e| e.to_string())?;
+            if &pretty != j {
+                return Err("mismatch after pretty roundtrip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+fn gen_json(r: &mut Rng, depth: usize) -> json::Json {
+    use json::Json;
+    match if depth > 2 { r.below(4) } else { r.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(r.bool(0.5)),
+        2 => Json::Num((r.range(-1_000_000, 1_000_000) as f64) / 64.0),
+        3 => Json::Str(
+            (0..r.below(12))
+                .map(|_| char::from_u32(32 + r.below(90) as u32).unwrap())
+                .collect(),
+        ),
+        4 => Json::Arr((0..r.below(4)).map(|_| gen_json(r, depth + 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..r.below(4) {
+                m.insert(format!("k{i}"), gen_json(r, depth + 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn const_q_definition() {
+    assert_eq!(const_q(5), 0.0);
+    assert_eq!(const_q(3), 1.0);
+}

@@ -1,0 +1,121 @@
+//! Integration: 8-bit arithmetic executed bit-serially *in* the
+//! simulated DRAM, baseline vs calibrated — the paper's Table I
+//! workloads at functional level.
+
+use pudtune::calib::algorithm::{CalibParams, NativeEngine};
+use pudtune::calib::lattice::FracConfig;
+use pudtune::config::device::DeviceConfig;
+use pudtune::config::system::Ddr4Timing;
+use pudtune::dram::geometry::RowMap;
+use pudtune::dram::subarray::Subarray;
+use pudtune::pud::adder::ripple_adder;
+use pudtune::pud::exec::run_circuit;
+use pudtune::pud::graph::MajCircuit;
+use pudtune::pud::multiplier::array_multiplier;
+use pudtune::util::rng::Rng;
+
+fn encode(vals: &[u64], bit: usize) -> Vec<u8> {
+    vals.iter().map(|&v| ((v >> bit) & 1) as u8).collect()
+}
+
+fn decode(outputs: &[Vec<u8>], col: usize) -> u64 {
+    let mut v = 0u64;
+    for (bit, out) in outputs.iter().enumerate() {
+        v |= (out[col] as u64) << bit;
+    }
+    v
+}
+
+/// Run a circuit on a calibrated subarray over random operands and
+/// return the fraction of columns computing perfectly.
+fn correct_fraction(
+    circuit: &MajCircuit,
+    width: usize,
+    sub: &mut Subarray,
+    fc: &FracConfig,
+    calib: &pudtune::calib::algorithm::Calibration,
+    expect: impl Fn(u64, u64) -> u64,
+    seed: u64,
+) -> f64 {
+    let grade = Ddr4Timing::ddr4_2133();
+    let map = RowMap::standard(sub.rows);
+    let mut rng = Rng::new(seed);
+    let cols = sub.cols;
+    let a: Vec<u64> = (0..cols).map(|_| rng.below(256)).collect();
+    let b: Vec<u64> = (0..cols).map(|_| rng.below(256)).collect();
+    let mut inputs = Vec::new();
+    for bit in 0..width {
+        inputs.push(encode(&a, bit));
+    }
+    for bit in 0..width {
+        inputs.push(encode(&b, bit));
+    }
+    let run = run_circuit(sub, &map, calib, fc, &grade, circuit, &inputs);
+    let mut ok = 0;
+    for c in 0..cols {
+        if decode(&run.outputs, c) == expect(a[c], b[c]) {
+            ok += 1;
+        }
+    }
+    ok as f64 / cols as f64
+}
+
+#[test]
+fn calibration_rescues_in_dram_addition() {
+    let cfg = DeviceConfig::default();
+    let cols = 128;
+    let width = 8;
+    let circuit = ripple_adder(width);
+    let mut sub = Subarray::with_geometry(&cfg, 96, cols, 0xADD1);
+    let mut eng = NativeEngine::new(cfg.clone());
+
+    let tune = FracConfig::pudtune([2, 1, 0]);
+    let calib = eng.calibrate(&mut sub, &tune, &CalibParams::paper());
+    let ok_tuned = correct_fraction(&circuit, width, &mut sub, &tune, &calib, |a, b| a + b, 1);
+
+    let base = FracConfig::baseline(3);
+    let base_cal = base.uncalibrated(&cfg, cols);
+    let ok_base = correct_fraction(&circuit, width, &mut sub, &base, &base_cal, |a, b| a + b, 1);
+
+    // An 8-bit add chains 16 majority ops per column: with ~47% of
+    // columns MAJ5-error-prone the baseline mostly fails, while the
+    // calibrated device computes correctly on the large majority.
+    assert!(ok_tuned > 0.7, "tuned correct fraction {ok_tuned}");
+    assert!(ok_tuned > ok_base + 0.15, "tuned {ok_tuned} vs base {ok_base}");
+}
+
+#[test]
+fn calibrated_multiplication_works_on_clean_columns() {
+    // 4-bit multiply (manageable gate count) on a calibrated subarray.
+    let cfg = DeviceConfig::default();
+    let cols = 64;
+    let width = 4;
+    let circuit = array_multiplier(width);
+    let mut sub = Subarray::with_geometry(&cfg, 128, cols, 0x3A15);
+    let mut eng = NativeEngine::new(cfg.clone());
+    let tune = FracConfig::pudtune([2, 1, 0]);
+    let calib = eng.calibrate(&mut sub, &tune, &CalibParams::paper());
+    let grade = Ddr4Timing::ddr4_2133();
+    let map = RowMap::standard(sub.rows);
+    let mut rng = Rng::new(9);
+    let a: Vec<u64> = (0..cols).map(|_| rng.below(16)).collect();
+    let b: Vec<u64> = (0..cols).map(|_| rng.below(16)).collect();
+    let mut inputs = Vec::new();
+    for bit in 0..width {
+        inputs.push(encode(&a, bit));
+    }
+    for bit in 0..width {
+        inputs.push(encode(&b, bit));
+    }
+    let run = run_circuit(&mut sub, &map, &calib, &tune, &grade, &circuit, &inputs);
+    let mut ok = 0;
+    for c in 0..cols {
+        if decode(&run.outputs, c) == a[c] * b[c] {
+            ok += 1;
+        }
+    }
+    // The multiplier chains ~40 majority ops; every column must be
+    // error-free across all of them, so expect most-but-not-all.
+    assert!(ok as f64 / cols as f64 > 0.6, "ok={ok}/{cols}");
+    assert!(run.elapsed_ns > 0.0);
+}

@@ -1,0 +1,96 @@
+//! Runtime integration: every artifact in the manifest loads, compiles
+//! and executes on the PJRT CPU client with manifest-shaped inputs.
+
+use pudtune::config::device::DeviceConfig;
+use pudtune::runtime::{buffers, Runtime};
+
+fn rt() -> Runtime {
+    Runtime::open_default().expect("artifacts required (make artifacts)")
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let rt = rt();
+    let names = rt.artifact_names();
+    for required in [
+        "maj5_step_small",
+        "maj5_ecr_small",
+        "maj3_step_small",
+        "maj3_ecr_small",
+        "maj5_eval_small",
+        "pud_gemv_64x256",
+    ] {
+        assert!(names.iter().any(|n| n == required), "missing {required}");
+    }
+}
+
+#[test]
+fn physics_json_matches_rust_defaults() {
+    // The Python build step and the Rust model must agree on the
+    // physics constants (single-source check, DESIGN.md §3).
+    let rt = rt();
+    let j = rt.physics_json().unwrap();
+    let from_py = DeviceConfig::from_physics_json(&j).unwrap();
+    let rust = DeviceConfig::default();
+    assert_eq!(from_py.cc_ff, rust.cc_ff);
+    assert_eq!(from_py.cb_ff, rust.cb_ff);
+    assert_eq!(from_py.simra_rows, rust.simra_rows);
+    assert!((from_py.frac_r - rust.frac_r).abs() < 1e-9);
+    assert!(
+        (from_py.sigma_sa - rust.sigma_sa).abs() < 1e-9,
+        "sigma_sa drifted: py={} rust={}",
+        from_py.sigma_sa,
+        rust.sigma_sa
+    );
+}
+
+#[test]
+fn every_artifact_executes() {
+    let rt = rt();
+    for name in rt.artifact_names() {
+        let exe = rt.load(&name).unwrap();
+        // Build zero-ish inputs per the manifest signature.
+        let mut args = Vec::new();
+        for spec in &exe.inputs {
+            let count: usize = spec.shape.iter().product::<usize>().max(1);
+            let lit = match spec.dtype.as_str() {
+                "float32" => {
+                    let data = vec![0.25f32; count];
+                    if spec.shape.is_empty() {
+                        buffers::f32_scalar(0.25)
+                    } else {
+                        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                        buffers::f32_array(&data, &dims).unwrap()
+                    }
+                }
+                "int32" => buffers::i32_vec(&vec![0i32; count]),
+                "uint32" => buffers::u32_scalar(7),
+                other => panic!("{name}: unhandled dtype {other}"),
+            };
+            args.push(lit);
+        }
+        let out = exe.run(&args).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(out.len(), exe.outputs.len(), "{name}");
+    }
+}
+
+#[test]
+fn unknown_artifact_errors_cleanly() {
+    let rt = rt();
+    let err = match rt.load("nonexistent_graph") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected error"),
+    };
+    assert!(err.contains("not in manifest"), "{err}");
+}
+
+#[test]
+fn executable_rejects_wrong_arity() {
+    let rt = rt();
+    let exe = rt.load("maj5_eval_small").unwrap();
+    let err = match exe.run(&[buffers::f32_scalar(1.0)]) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected arity error"),
+    };
+    assert!(err.contains("expected"), "{err}");
+}
