@@ -1,22 +1,75 @@
 //! Micro-benchmarks of the hot paths (the §Perf iteration targets):
-//! native sampling batch, golden-model SiMRA, PJRT step/ECR calls,
-//! circuit evaluation, and the PRNG.
+//! native sampling batch, calibration sweep, golden-model SiMRA, PJRT
+//! step/ECR calls, circuit evaluation, and the PRNG.
+//!
+//! Every case is recorded into `BENCH_calib.json` (written to the
+//! working directory) so the repo's perf trajectory is machine
+//! readable. The `/before` cases run the seed's scalar shared-stream
+//! kernel (`NativeEngine::sample_batch_reference`); the `/after` cases
+//! run the column-tiled kernel, so the recorded `*_speedup` deriveds
+//! capture both the algorithmic win (uniform-space decisions, scratch
+//! reuse) and the parallel win (config fan-out).
 
-use pudtune::calib::algorithm::{CalibParams, NativeEngine};
-use pudtune::calib::lattice::FracConfig;
+use pudtune::analysis::ecr::EcrReport;
+use pudtune::calib::algorithm::{CalibParams, Calibration, NativeEngine};
+use pudtune::calib::lattice::{ConfigKind, FracConfig, OffsetLattice};
+use pudtune::calib::sweep;
 use pudtune::config::device::DeviceConfig;
+use pudtune::config::system::SystemConfig;
+use pudtune::coordinator::worker;
 use pudtune::dram::subarray::Subarray;
 use pudtune::pud::adder::{eval_add, ripple_adder};
 use pudtune::runtime::Runtime;
-use pudtune::util::benchkit;
+use pudtune::util::benchkit::BenchSuite;
 use pudtune::util::rng::Rng;
+
+/// The seed's sweep implementation: sequential configs, scalar
+/// shared-stream sampling, thresholds re-derived per column per batch.
+/// Kept here as the honest "before" for the sweep speedup record.
+fn sweep_reference(
+    cfg: &DeviceConfig,
+    sub: &Subarray,
+    params: &CalibParams,
+    ecr_samples: u32,
+    configs: &[FracConfig],
+) -> Vec<f64> {
+    let eng = NativeEngine::serial(cfg.clone());
+    configs
+        .iter()
+        .map(|fc| {
+            let lattice = OffsetLattice::build(cfg, fc);
+            let mut calib = Calibration::uniform(lattice, sub.cols);
+            if fc.kind != ConfigKind::Baseline {
+                let max_lv = (calib.lattice.len() - 1) as u8;
+                let mut rng = Rng::new(params.seed);
+                for _ in 0..params.iterations {
+                    let acc =
+                        eng.sample_batch_reference(sub, &calib, 5, params.samples, &mut rng);
+                    for c in 0..sub.cols {
+                        let bias = acc.bias(c);
+                        if bias > params.tau || (acc.errors(c) > 0 && bias > 0.0) {
+                            calib.levels[c] = calib.levels[c].saturating_sub(1);
+                        } else if bias < -params.tau || (acc.errors(c) > 0 && bias < 0.0) {
+                            calib.levels[c] = (calib.levels[c] + 1).min(max_lv);
+                        }
+                    }
+                }
+            }
+            let mut rng =
+                Rng::new(0xECC ^ sub.env.temp_c.to_bits() ^ sub.env.hours.to_bits());
+            let acc = eng.sample_batch_reference(sub, &calib, 5, ecr_samples, &mut rng);
+            EcrReport::from_error_counts(acc.error_counts().to_vec(), ecr_samples).ecr()
+        })
+        .collect()
+}
 
 fn main() {
     let cfg = DeviceConfig::default();
+    let mut suite = BenchSuite::new();
 
     // PRNG throughput (the native engine's inner dependency).
     let mut rng = Rng::new(1);
-    benchkit::bench("micro/rng-normal-1M", 1, 10, || {
+    suite.bench("micro/rng-normal-1M", 1, 10, || {
         let mut acc = 0.0;
         for _ in 0..1_000_000 {
             acc += rng.normal();
@@ -25,36 +78,83 @@ fn main() {
     });
 
     // Native sampling batch: 512 samples x 8,192 columns (one
-    // Algorithm-1 iteration's work).
-    let eng = NativeEngine::new(cfg.clone());
+    // Algorithm-1 iteration's work), seed kernel vs tiled kernel.
+    let mut eng = NativeEngine::new(cfg.clone());
     let sub = Subarray::with_geometry(&cfg, 32, 8192, 3);
     let fc = FracConfig::pudtune([2, 1, 0]);
     let calib = fc.uncalibrated(&cfg, 8192);
     let mut r2 = Rng::new(9);
-    benchkit::bench("micro/native-sample-batch-512x8192", 1, 10, || {
-        let acc = eng.sample_batch(&sub, &calib, 5, 512, &mut r2);
+    let batch_before = suite.bench("micro/sample-batch-512x8192/before", 1, 5, || {
+        let acc = eng.sample_batch_reference(&sub, &calib, 5, 512, &mut r2);
         std::hint::black_box(acc.samples());
     });
+    let mut batch_seed = 0u64;
+    let batch_after = suite.bench("micro/sample-batch-512x8192/after", 1, 10, || {
+        batch_seed += 1;
+        let acc = eng.sample_batch(&sub, &calib, 5, 512, batch_seed);
+        std::hint::black_box(acc.samples());
+    });
+    suite.derive("sample_batch_speedup", batch_before.min_s / batch_after.min_s);
+
+    // ECR measurement: 2,048 samples x 2,048 columns.
+    let esub = Subarray::with_geometry(&cfg, 32, 2048, 7);
+    let ecal = FracConfig::pudtune([2, 1, 0]).uncalibrated(&cfg, 2048);
+    let ecr_before = suite.bench("micro/measure-ecr-2048x2048/before", 1, 5, || {
+        let mut rng =
+            Rng::new(0xECC ^ esub.env.temp_c.to_bits() ^ esub.env.hours.to_bits());
+        let acc = eng.sample_batch_reference(&esub, &ecal, 5, 2048, &mut rng);
+        let rep = EcrReport::from_error_counts(acc.error_counts().to_vec(), 2048);
+        std::hint::black_box(rep.ecr());
+    });
+    let ecr_after = suite.bench("micro/measure-ecr-2048x2048/after", 1, 10, || {
+        let rep = eng.measure_ecr(&esub, &ecal, 5, 2048);
+        std::hint::black_box(rep.ecr());
+    });
+    suite.derive("measure_ecr_speedup", ecr_before.min_s / ecr_after.min_s);
+
+    // Calibration sweep over the Fig. 5 config list at 2,048 columns —
+    // the headline before/after of this optimisation round.
+    let mut sys = SystemConfig::small();
+    sys.cols = 2048;
+    let ssub = Subarray::new(&cfg, &sys, 21);
+    let params = CalibParams::quick();
+    let configs = sweep::fig5_configs();
+    let sweep_before = suite.bench("micro/sweep-fig5-2048cols/before", 0, 2, || {
+        let ecrs = sweep_reference(&cfg, &ssub, &params, 2048, &configs);
+        std::hint::black_box(ecrs.len());
+    });
+    suite.bench("micro/sweep-fig5-2048cols/after-serial", 0, 3, || {
+        let pts = sweep::sweep_configs_threads(&cfg, &sys, &ssub, &params, 2048, &configs, 1);
+        std::hint::black_box(pts.len());
+    });
+    let threads = worker::default_threads();
+    let sweep_after = suite.bench("micro/sweep-fig5-2048cols/after-parallel", 0, 3, || {
+        let pts =
+            sweep::sweep_configs_threads(&cfg, &sys, &ssub, &params, 2048, &configs, threads);
+        std::hint::black_box(pts.len());
+    });
+    suite.derive("sweep_fig5_2048cols_speedup", sweep_before.min_s / sweep_after.min_s);
 
     // Golden-model SiMRA (command-level fidelity).
     let mut gsub = Subarray::with_geometry(&cfg, 32, 8192, 4);
     let rows: Vec<usize> = (0..8).collect();
-    benchkit::bench("micro/golden-simra-8192cols", 2, 20, || {
-        let out = gsub.simra(&rows);
-        std::hint::black_box(out[0]);
+    let mut simra_out = vec![0u8; 8192];
+    suite.bench("micro/golden-simra-8192cols", 2, 20, || {
+        gsub.simra_into(&rows, &mut simra_out);
+        std::hint::black_box(simra_out[0]);
     });
 
     // Full native calibration of one 8,192-column subarray.
     let mut eng2 = NativeEngine::new(cfg.clone());
-    let mut sub2 = Subarray::with_geometry(&cfg, 32, 8192, 5);
-    benchkit::bench("micro/native-calibrate-8192cols", 0, 3, || {
-        let c = eng2.calibrate(&mut sub2, &fc, &CalibParams::paper());
+    let sub2 = Subarray::with_geometry(&cfg, 32, 8192, 5);
+    suite.bench("micro/native-calibrate-8192cols", 0, 3, || {
+        let c = eng2.calibrate(&sub2, &fc, &CalibParams::paper());
         std::hint::black_box(c.levels[0]);
     });
 
     // Circuit evaluation (logic-level reference).
     let add8 = ripple_adder(8);
-    benchkit::bench("micro/adder8-logic-eval-1k", 2, 20, || {
+    suite.bench("micro/adder8-logic-eval-1k", 2, 20, || {
         let mut acc = 0u64;
         for a in 0..32u64 {
             for b in 0..32u64 {
@@ -71,16 +171,20 @@ fn main() {
         let peng = PjrtEngine::new(rt, cfg.clone());
         let bank = ColumnBank::new(&cfg, 16384, 6);
         let cal = fc.uncalibrated(&cfg, 16384);
-        benchkit::bench("micro/pjrt-ecr-8192x16384", 1, 5, || {
+        suite.bench("micro/pjrt-ecr-8192x16384", 1, 5, || {
             let rep = peng.measure_ecr(&bank, &cal, 5, 0xB).unwrap();
             std::hint::black_box(rep.error_free());
         });
-        let params = CalibParams::paper();
-        benchkit::bench("micro/pjrt-calibrate-16384", 0, 2, || {
-            let c = peng.calibrate(&bank, &fc, &params).unwrap();
+        let pparams = CalibParams::paper();
+        suite.bench("micro/pjrt-calibrate-16384", 0, 2, || {
+            let c = peng.calibrate(&bank, &fc, &pparams).unwrap();
             std::hint::black_box(c.levels[0]);
         });
     } else {
         println!("(artifacts missing; skipping PJRT micro-benches)");
     }
+
+    let out = std::path::Path::new("BENCH_calib.json");
+    suite.write_json(out).expect("writing BENCH_calib.json");
+    println!("wrote {}", out.display());
 }

@@ -38,15 +38,15 @@ fn main() {
     use pudtune::calib::algorithm::{CalibParams, NativeEngine};
     use pudtune::dram::subarray::Subarray;
     let mut eng = NativeEngine::new(cfg.clone());
-    let mut sub = Subarray::with_geometry(&cfg, 32, sys.cols, 1);
+    let sub = Subarray::with_geometry(&cfg, 32, sys.cols, 1);
     let params = CalibParams::paper();
     benchkit::bench_budget("table1/calibrate-one-bank", 3.0, || {
-        let c = eng.calibrate(&mut sub, &tune, &params);
+        let c = eng.calibrate(&sub, &tune, &params);
         std::hint::black_box(&c.levels);
     });
-    let calib = eng.calibrate(&mut sub, &tune, &params);
+    let calib = eng.calibrate(&sub, &tune, &params);
     benchkit::bench_budget("table1/ecr-8192-samples", 3.0, || {
-        let r = eng.measure_ecr(&mut sub, &calib, 5, 8192);
+        let r = eng.measure_ecr(&sub, &calib, 5, 8192);
         std::hint::black_box(r.ecr());
     });
 }

@@ -1,21 +1,45 @@
 //! Calibration-data identification (paper Algorithm 1) and ECR
-//! measurement on the native golden model.
+//! measurement on the native golden model — as a column-tiled,
+//! allocation-free batch kernel.
 //!
-//! The native engine evaluates the same arithmetic as the analog
-//! subarray (`Subarray::simra`) but vectorised per column — random
-//! operand count + calibration charge -> charge-share -> noisy compare —
-//! which is what lets full calibration sweeps run in milliseconds while
-//! staying bit-compatible with the golden model (see the consistency
-//! test in `rust/tests/`). Mass experiments use the PJRT path
-//! (`coordinator::engine`) which executes the same graphs as AOT
-//! artifacts.
+//! ## Kernel architecture
+//!
+//! One sampling batch evaluates `samples` random MAJ-m patterns on every
+//! column — the same arithmetic as `Subarray::simra` restricted to the
+//! SiMRA group. The hot path is organised for throughput:
+//!
+//! * **per-(batch, column) RNG streams** — every column draws from
+//!   `rng::stream(batch_seed, &[col])`, so the noise a column sees
+//!   depends only on its logical address, never on execution order.
+//!   Results are bit-identical for *any* tile size and worker count
+//!   (the determinism suite in `rust/tests/determinism.rs` pins this).
+//! * **uniform-space decisions** — instead of drawing a normal per
+//!   sample, the per-column decision thresholds are folded into `m + 1`
+//!   precomputed cutoffs `pcut[k] = Φ(−(a·k + b_c)/σ)`; a sample is
+//!   then one word draw, a popcount and a compare (`u > pcut[k]`).
+//!   Distributionally identical to adding N(0, σ) noise, ~6× cheaper.
+//! * **scratch arena** — thresholds are computed once per environment
+//!   (not per column per batch) and the cutoff table is reused across
+//!   batches; the inner loop performs no allocation.
+//! * **column tiles** — batches fan out over
+//!   `coordinator::worker::parallel_map` in tiles of
+//!   [`NativeEngine::tile_cols`] columns; tiling is an execution detail
+//!   with no observable effect.
+//!
+//! The pre-tiling scalar loop is kept as
+//! [`NativeEngine::sample_batch_reference`] for perf before/after
+//! comparisons and the statistical-equivalence test. Mass experiments
+//! use the PJRT path (`coordinator::engine`) which executes the same
+//! graphs as AOT artifacts.
 
 use crate::analysis::ecr::EcrReport;
-use crate::calib::bias::BiasAccumulator;
+use crate::calib::bias::{BiasAccumulator, BiasTileMut};
 use crate::calib::lattice::{ConfigKind, FracConfig, OffsetLattice};
 use crate::config::device::DeviceConfig;
+use crate::coordinator::worker;
 use crate::dram::subarray::Subarray;
-use crate::util::rng::Rng;
+use crate::util::rng::{derive_seed, stream, Rng};
+use crate::util::stats::phi;
 
 /// Identified calibration state for one subarray.
 #[derive(Clone, Debug)]
@@ -98,21 +122,201 @@ pub fn const_q(m: usize) -> f64 {
     }
 }
 
+/// Stream-domain tags: calibration batches and ECR batteries must never
+/// share per-column streams (see `util::rng` module docs).
+const STREAM_CALIB: u64 = 0xCA11B;
+const STREAM_ECR: u64 = 0xEC12;
+
+/// Default column-tile width for the parallel sampling kernel. Tiling
+/// never changes results; this only balances fan-out granularity
+/// against scheduling overhead.
+pub const DEFAULT_TILE_COLS: usize = 256;
+
+/// Reusable buffers of the sampling kernel: per-column thresholds for
+/// the current environment, and the per-(column, k) decision cutoffs of
+/// the current calibration state. Lives on the engine so repeated
+/// batches (20 Algorithm-1 iterations, ECR batteries) never reallocate.
+#[derive(Clone, Debug, Default)]
+struct SampleScratch {
+    /// Effective SA threshold per column (refreshed per environment).
+    thresholds: Vec<f64>,
+    /// Per-level total calibration charge of the active lattice.
+    q_total: Vec<f64>,
+    /// `pcut[c * (m + 1) + k]` = probability that column `c` outputs 0
+    /// given `k` operand ones — the uniform-space decision cutoff.
+    pcut: Vec<f64>,
+}
+
+impl SampleScratch {
+    /// Rebuild the cutoff table for (calibration state, operand count).
+    /// `thresholds` must already reflect the subarray's environment.
+    fn refresh_cutoffs(&mut self, cfg: &DeviceConfig, calib: &Calibration, m: usize) {
+        let cq = const_q(m);
+        let denom = cfg.simra_rows as f64 * cfg.cc_ff + cfg.cb_ff;
+        let a = cfg.cc_ff / denom;
+        let sigma = cfg.sigma_noise;
+        self.q_total.clear();
+        self.q_total.extend(calib.lattice.levels.iter().map(|l| l.q_total));
+        let Self { thresholds, q_total, pcut } = self;
+        pcut.clear();
+        pcut.reserve(thresholds.len() * (m + 1));
+        for (&lv, &thr) in calib.levels.iter().zip(thresholds.iter()) {
+            let b = (cfg.cc_ff * (q_total[lv as usize] + cq) + cfg.cb_ff * cfg.v_pre)
+                / denom
+                - thr;
+            for k in 0..=m {
+                let d = a * k as f64 + b;
+                // P(output 0) = P(d + N(0, σ) <= 0) = Φ(−d/σ).
+                let z = if sigma > 0.0 {
+                    -d / sigma
+                } else if d > 0.0 {
+                    f64::NEG_INFINITY
+                } else {
+                    f64::INFINITY
+                };
+                pcut.push(phi(z));
+            }
+        }
+    }
+}
+
 /// Native (golden-model-equivalent) calibration + measurement engine.
 #[derive(Clone, Debug)]
 pub struct NativeEngine {
     pub cfg: DeviceConfig,
+    /// Column-tile width of the parallel sampling kernel. Any value
+    /// produces identical results (see module docs).
+    pub tile_cols: usize,
+    /// Worker threads for tile fan-out. Any value produces identical
+    /// results; 1 disables fan-out entirely.
+    pub threads: usize,
+    scratch: SampleScratch,
 }
 
 impl NativeEngine {
     pub fn new(cfg: DeviceConfig) -> Self {
-        Self { cfg }
+        Self::with_parallelism(cfg, DEFAULT_TILE_COLS, worker::default_threads())
     }
 
-    /// One sampling batch: `samples` random MAJ-m patterns per column.
-    /// Identical math to `Subarray::simra` restricted to the SiMRA
-    /// group, vectorised per column.
+    /// Engine with explicit tile width / worker count (the determinism
+    /// suite sweeps these; results never depend on them).
+    pub fn with_parallelism(cfg: DeviceConfig, tile_cols: usize, threads: usize) -> Self {
+        Self {
+            cfg,
+            tile_cols: tile_cols.max(1),
+            threads: threads.max(1),
+            scratch: SampleScratch::default(),
+        }
+    }
+
+    /// Engine pinned to one worker thread — for callers that already
+    /// parallelise at a coarser grain (configs, banks, subarrays).
+    pub fn serial(cfg: DeviceConfig) -> Self {
+        Self::with_parallelism(cfg, DEFAULT_TILE_COLS, 1)
+    }
+
+    /// Recompute per-column effective thresholds for the subarray's
+    /// current environment (once per environment, not per batch).
+    fn refresh_thresholds(&mut self, sub: &Subarray) {
+        let Self { cfg, scratch, .. } = self;
+        scratch.thresholds.clear();
+        scratch
+            .thresholds
+            .extend((0..sub.cols).map(|c| sub.sa.threshold(cfg, &sub.env, c)));
+    }
+
+    /// One sampling batch with prepared thresholds: `samples` random
+    /// MAJ-m patterns per column, accumulated into `acc`.
+    fn batch_prepared(
+        &mut self,
+        calib: &Calibration,
+        m: usize,
+        samples: u32,
+        batch_seed: u64,
+        acc: &mut BiasAccumulator,
+    ) {
+        // One u64 feeds both the operand pattern (bits 0..m) and the
+        // 53-bit decision uniform (bits 11..64) — disjoint bit ranges
+        // of a uniform word are independent.
+        debug_assert!(m < 11, "operand bits must not overlap the uniform bits");
+        self.scratch.refresh_cutoffs(&self.cfg, calib, m);
+        let kdim = m + 1;
+        assert_eq!(
+            self.scratch.pcut.len(),
+            acc.cols() * kdim,
+            "calibration width must equal columns"
+        );
+        let pcut = &self.scratch.pcut;
+        let mask = (1u64 << m) - 1;
+        let maj_t = m.div_ceil(2) as u32;
+        const U53: f64 = 1.0 / (1u64 << 53) as f64;
+        acc.reset();
+        let tiles = acc.tiles_mut(self.tile_cols);
+        let kernel = |mut tile: BiasTileMut<'_>| {
+            for j in 0..tile.len() {
+                let c = tile.start + j;
+                let cut = &pcut[c * kdim..(c + 1) * kdim];
+                let mut rng = stream(batch_seed, &[c as u64]);
+                let (mut ones, mut expected, mut errors) = (0u32, 0u32, 0u32);
+                for _ in 0..samples {
+                    let w = rng.next_u64();
+                    let k = (w & mask).count_ones();
+                    let u = ((w >> 11) as f64 + 0.5) * U53;
+                    let out = (u > cut[k as usize]) as u32;
+                    let exp = (k >= maj_t) as u32;
+                    ones += out;
+                    expected += exp;
+                    errors += (out != exp) as u32;
+                }
+                tile.ones[j] = ones;
+                tile.expected_ones[j] = expected;
+                tile.errors[j] = errors;
+            }
+        };
+        if self.threads > 1 && tiles.len() > 1 {
+            worker::parallel_map(tiles, self.threads, kernel);
+        } else {
+            tiles.into_iter().for_each(kernel);
+        }
+        acc.finish_batch(samples);
+    }
+
+    /// One sampling batch into a reusable accumulator (the
+    /// allocation-free entry point; see module docs for the stream
+    /// contract on `batch_seed`).
+    pub fn sample_batch_into(
+        &mut self,
+        sub: &Subarray,
+        calib: &Calibration,
+        m: usize,
+        samples: u32,
+        batch_seed: u64,
+        acc: &mut BiasAccumulator,
+    ) {
+        assert_eq!(acc.cols(), sub.cols, "accumulator width must equal columns");
+        self.refresh_thresholds(sub);
+        self.batch_prepared(calib, m, samples, batch_seed, acc);
+    }
+
+    /// Convenience wrapper allocating a fresh accumulator.
     pub fn sample_batch(
+        &mut self,
+        sub: &Subarray,
+        calib: &Calibration,
+        m: usize,
+        samples: u32,
+        batch_seed: u64,
+    ) -> BiasAccumulator {
+        let mut acc = BiasAccumulator::new(sub.cols);
+        self.sample_batch_into(sub, calib, m, samples, batch_seed, &mut acc);
+        acc
+    }
+
+    /// The pre-tiling scalar reference: one shared sequential RNG
+    /// stream, a per-sample Gaussian draw, thresholds re-derived per
+    /// column per batch. Kept only as the perf/statistics baseline for
+    /// benches and the equivalence test — not a production path.
+    pub fn sample_batch_reference(
         &self,
         sub: &Subarray,
         calib: &Calibration,
@@ -127,8 +331,6 @@ impl NativeEngine {
         let mut acc = BiasAccumulator::new(cols);
         let mut out = vec![0u8; cols];
         let mut exp = vec![0u8; cols];
-        // V(k, q) = a*k + b(q) — precompute the affine pieces so the
-        // inner loop is one fused multiply-add per (column, sample).
         let denom = rows as f64 * self.cfg.cc_ff + self.cfg.cb_ff;
         let a = self.cfg.cc_ff / denom;
         let base: Vec<f64> = (0..cols)
@@ -156,7 +358,7 @@ impl NativeEngine {
     /// Algorithm 1: iteratively identify per-column calibration data.
     pub fn calibrate(
         &mut self,
-        sub: &mut Subarray,
+        sub: &Subarray,
         fc: &FracConfig,
         params: &CalibParams,
     ) -> Calibration {
@@ -167,9 +369,11 @@ impl NativeEngine {
             return calib;
         }
         let max_lv = (calib.lattice.len() - 1) as u8;
-        let mut rng = Rng::new(params.seed);
-        for _iter in 0..params.iterations {
-            let acc = self.sample_batch(sub, &calib, 5, params.samples, &mut rng);
+        self.refresh_thresholds(sub);
+        let mut acc = BiasAccumulator::new(sub.cols);
+        for iter in 0..params.iterations {
+            let batch_seed = derive_seed(params.seed, &[STREAM_CALIB, iter as u64]);
+            self.batch_prepared(&calib, 5, params.samples, batch_seed, &mut acc);
             for c in 0..sub.cols {
                 let bias = acc.bias(c);
                 // Algorithm 1 lines 6-11: |bias| beyond the threshold
@@ -195,13 +399,14 @@ impl NativeEngine {
     /// MAJ-m patterns (paper §IV-A: 8,192 per bank).
     pub fn measure_ecr(
         &mut self,
-        sub: &mut Subarray,
+        sub: &Subarray,
         calib: &Calibration,
         m: usize,
         samples: u32,
     ) -> EcrReport {
-        let mut rng = Rng::new(0xECC ^ sub.env.temp_c.to_bits() ^ sub.env.hours.to_bits());
-        let acc = self.sample_batch(sub, calib, m, samples, &mut rng);
+        let master = 0xECC ^ sub.env.temp_c.to_bits() ^ sub.env.hours.to_bits();
+        let batch_seed = derive_seed(master, &[STREAM_ECR, m as u64]);
+        let acc = self.sample_batch(sub, calib, m, samples, batch_seed);
         EcrReport::from_error_counts(acc.error_counts().to_vec(), samples)
     }
 }
@@ -221,11 +426,11 @@ mod tests {
 
     #[test]
     fn calibration_reduces_errors() {
-        let (mut eng, mut sub) = setup(2048, 7);
+        let (mut eng, sub) = setup(2048, 7);
         let base = FracConfig::baseline(3).uncalibrated(&eng.cfg, sub.cols);
-        let tuned = eng.calibrate(&mut sub, &FracConfig::pudtune([2, 1, 0]), &CalibParams::paper());
-        let ecr_b = eng.measure_ecr(&mut sub, &base, 5, 2048).ecr();
-        let ecr_t = eng.measure_ecr(&mut sub, &tuned, 5, 2048).ecr();
+        let tuned = eng.calibrate(&sub, &FracConfig::pudtune([2, 1, 0]), &CalibParams::paper());
+        let ecr_b = eng.measure_ecr(&sub, &base, 5, 2048).ecr();
+        let ecr_t = eng.measure_ecr(&sub, &tuned, 5, 2048).ecr();
         assert!(
             ecr_t < ecr_b / 3.0,
             "calibration should slash ECR: base={ecr_b:.3} tuned={ecr_t:.3}"
@@ -236,9 +441,9 @@ mod tests {
     fn baseline_ecr_is_high() {
         // §II-C: MAJ5 degrades to roughly 50% error-prone columns on
         // the baseline implementation.
-        let (mut eng, mut sub) = setup(4096, 3);
+        let (mut eng, sub) = setup(4096, 3);
         let base = FracConfig::baseline(3).uncalibrated(&eng.cfg, sub.cols);
-        let ecr = eng.measure_ecr(&mut sub, &base, 5, 2048).ecr();
+        let ecr = eng.measure_ecr(&sub, &base, 5, 2048).ecr();
         assert!((0.30..0.65).contains(&ecr), "ecr={ecr}");
     }
 
@@ -247,20 +452,38 @@ mod tests {
         // MAJ3's operand count is lower but margins are identical;
         // boundary patterns are rarer, so fewer columns *show* errors
         // at equal sample counts, never more errors than MAJ5 + noise.
-        let (mut eng, mut sub) = setup(2048, 5);
+        let (mut eng, sub) = setup(2048, 5);
         let base = FracConfig::baseline(3).uncalibrated(&eng.cfg, sub.cols);
-        let e5 = eng.measure_ecr(&mut sub, &base, 5, 2048).ecr();
-        let e3 = eng.measure_ecr(&mut sub, &base, 3, 2048).ecr();
+        let e5 = eng.measure_ecr(&sub, &base, 5, 2048).ecr();
+        let e3 = eng.measure_ecr(&sub, &base, 3, 2048).ecr();
         assert!(e3 <= e5 + 0.02, "e3={e3} e5={e5}");
     }
 
     #[test]
     fn calibration_is_deterministic() {
-        let (mut eng, mut sub) = setup(512, 9);
+        let (mut eng, sub) = setup(512, 9);
         let p = CalibParams::quick();
-        let a = eng.calibrate(&mut sub, &FracConfig::pudtune([2, 1, 0]), &p);
-        let b = eng.calibrate(&mut sub, &FracConfig::pudtune([2, 1, 0]), &p);
+        let a = eng.calibrate(&sub, &FracConfig::pudtune([2, 1, 0]), &p);
+        let b = eng.calibrate(&sub, &FracConfig::pudtune([2, 1, 0]), &p);
         assert_eq!(a.levels, b.levels);
+    }
+
+    #[test]
+    fn tiled_kernel_matches_reference_statistics() {
+        // The per-(batch, column) streams + uniform-space decisions
+        // must reproduce the shared-stream Gaussian reference kernel's
+        // statistics: same device, both measured at 2,048 samples.
+        let (mut eng, sub) = setup(4096, 13);
+        let base = FracConfig::baseline(3).uncalibrated(&eng.cfg, sub.cols);
+        let new_ecr = eng.measure_ecr(&sub, &base, 5, 2048).ecr();
+        let mut rng = Rng::new(0x0EF5);
+        let acc = eng.sample_batch_reference(&sub, &base, 5, 2048, &mut rng);
+        let ref_ecr =
+            EcrReport::from_error_counts(acc.error_counts().to_vec(), 2048).ecr();
+        assert!(
+            (new_ecr - ref_ecr).abs() < 0.04,
+            "tiled={new_ecr:.4} reference={ref_ecr:.4}"
+        );
     }
 
     #[test]
@@ -268,8 +491,8 @@ mod tests {
         // Columns with strongly negative SA offset (threshold low ->
         // outputs 1 too often) should end below the neutral level;
         // strongly positive above it.
-        let (mut eng, mut sub) = setup(4096, 11);
-        let calib = eng.calibrate(&mut sub, &FracConfig::pudtune([2, 1, 0]), &CalibParams::paper());
+        let (mut eng, sub) = setup(4096, 11);
+        let calib = eng.calibrate(&sub, &FracConfig::pudtune([2, 1, 0]), &CalibParams::paper());
         let neutral = calib.lattice.neutral_level() as i32;
         let mut low_ok = 0;
         let mut low_n = 0;

@@ -17,6 +17,27 @@ pub struct BiasAccumulator {
     samples: u32,
 }
 
+/// A disjoint mutable column range of a [`BiasAccumulator`]: the unit
+/// of work the tiled sampling kernel hands to each worker. Tiles
+/// partition the accumulator, so parallel writers never alias.
+pub struct BiasTileMut<'a> {
+    /// First column of this tile (global index).
+    pub start: usize,
+    pub ones: &'a mut [u32],
+    pub expected_ones: &'a mut [u32],
+    pub errors: &'a mut [u32],
+}
+
+impl BiasTileMut<'_> {
+    pub fn len(&self) -> usize {
+        self.ones.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ones.is_empty()
+    }
+}
+
 impl BiasAccumulator {
     pub fn new(cols: usize) -> Self {
         Self {
@@ -25,6 +46,45 @@ impl BiasAccumulator {
             errors: vec![0; cols],
             samples: 0,
         }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.ones.len()
+    }
+
+    /// Zero all counts so the allocation can be reused across batches.
+    pub fn reset(&mut self) {
+        self.ones.fill(0);
+        self.expected_ones.fill(0);
+        self.errors.fill(0);
+        self.samples = 0;
+    }
+
+    /// Split into tiles of (at most) `tile_cols` columns for parallel
+    /// writers. Tiling is an execution detail: writers fill per-column
+    /// totals directly, so the result is identical for any tile size.
+    /// The caller records the batch size with [`Self::finish_batch`].
+    pub fn tiles_mut(&mut self, tile_cols: usize) -> Vec<BiasTileMut<'_>> {
+        let t = tile_cols.max(1);
+        let mut tiles = Vec::with_capacity(self.ones.len().div_ceil(t));
+        let mut start = 0;
+        for ((ones, expected_ones), errors) in self
+            .ones
+            .chunks_mut(t)
+            .zip(self.expected_ones.chunks_mut(t))
+            .zip(self.errors.chunks_mut(t))
+        {
+            let len = ones.len();
+            tiles.push(BiasTileMut { start, ones, expected_ones, errors });
+            start += len;
+        }
+        tiles
+    }
+
+    /// Record the sample count of a batch whose per-column totals were
+    /// written through [`Self::tiles_mut`].
+    pub fn finish_batch(&mut self, samples: u32) {
+        self.samples = samples;
     }
 
     /// Record one sample's outputs and expected majorities.
@@ -85,5 +145,31 @@ mod tests {
         let acc = BiasAccumulator::new(4);
         assert_eq!(acc.bias(2), 0.0);
         assert_eq!(acc.errors(2), 0);
+    }
+
+    #[test]
+    fn tiles_partition_and_reset_clears() {
+        let mut acc = BiasAccumulator::new(10);
+        let tiles = acc.tiles_mut(4);
+        assert_eq!(tiles.len(), 3);
+        assert_eq!(
+            tiles.iter().map(|t| (t.start, t.len())).collect::<Vec<_>>(),
+            vec![(0, 4), (4, 4), (8, 2)]
+        );
+        for mut t in tiles {
+            for j in 0..t.len() {
+                t.ones[j] = (t.start + j) as u32;
+                t.expected_ones[j] = 1;
+                t.errors[j] = 2;
+            }
+        }
+        acc.finish_batch(8);
+        assert_eq!(acc.samples(), 8);
+        assert_eq!(acc.errors(9), 2);
+        assert!((acc.bias(9) - (9.0 - 1.0) / 8.0).abs() < 1e-12);
+        acc.reset();
+        assert_eq!(acc.samples(), 0);
+        assert_eq!(acc.errors(9), 0);
+        assert_eq!(acc.bias(9), 0.0);
     }
 }

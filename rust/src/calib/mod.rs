@@ -3,14 +3,21 @@
 //! * [`lattice`] — the multi-level offset lattice: Frac-count
 //!   configurations `T_{x,y,z}` turn 3 stored bits per column into
 //!   2^3 analog offsets (paper §III-C/D, Fig. 3);
-//! * [`bias`] — the bias metric of Algorithm 1;
+//! * [`bias`] — the bias metric of Algorithm 1, with disjoint column
+//!   tiles for parallel accumulation;
 //! * [`algorithm`] — calibration-data identification (Algorithm 1) and
-//!   ECR measurement, on the native golden model;
+//!   ECR measurement as a column-tiled, allocation-free batch kernel:
+//!   per-(batch, column) RNG streams make results bit-identical across
+//!   tile sizes and worker counts, per-environment threshold caching
+//!   and uniform-space decision cutoffs keep the inner loop to one
+//!   word draw + popcount + compare per sample (module docs there
+//!   spell out the stream contract);
 //! * [`store`] — non-volatile persistence of identified calibration
 //!   data (paper §III-A: stored bit patterns are reusable across
 //!   reboots), as JSON;
-//! * [`sweep`] — Frac-configuration sweeps (Fig. 5) and the one-off
-//!   variation-model fit against Table I's baseline.
+//! * [`sweep`] — Frac-configuration sweeps (Fig. 5), parallel across
+//!   configs on the worker pool, and the one-off variation-model fit
+//!   against Table I's baseline.
 
 pub mod algorithm;
 pub mod bias;

@@ -1,11 +1,17 @@
 //! Frac-configuration sweeps (Fig. 5) and the one-off variation-model
 //! fit (EXPERIMENTS.md §Model-Fit).
+//!
+//! Sweeps fan the per-config calibrate+measure jobs across the worker
+//! pool: calibration never mutates the subarray and every sampling
+//! stream is address-derived (`calib::algorithm` module docs), so the
+//! parallel sweep is bit-identical to the sequential one.
 
 use crate::analysis::throughput::ThroughputModel;
 use crate::calib::algorithm::{CalibParams, NativeEngine};
 use crate::calib::lattice::FracConfig;
 use crate::config::device::DeviceConfig;
 use crate::config::system::SystemConfig;
+use crate::coordinator::worker;
 use crate::dram::subarray::Subarray;
 use crate::util::stats::phi;
 
@@ -39,27 +45,42 @@ pub struct SweepPoint {
 }
 
 /// Run the Fig. 5 sweep on one subarray: calibrate under each config
-/// (baselines skip identification) and measure ECR + MAJ5 throughput.
+/// (baselines skip identification) and measure ECR + MAJ5 throughput,
+/// with configs fanned across the default worker pool.
 pub fn sweep_configs(
     cfg: &DeviceConfig,
     sys: &SystemConfig,
-    sub: &mut Subarray,
+    sub: &Subarray,
     params: &CalibParams,
     ecr_samples: u32,
     configs: &[FracConfig],
 ) -> Vec<SweepPoint> {
-    let mut eng = NativeEngine::new(cfg.clone());
+    sweep_configs_threads(cfg, sys, sub, params, ecr_samples, configs, worker::default_threads())
+}
+
+/// [`sweep_configs`] with an explicit worker count (1 = sequential).
+/// Results are identical for any `threads`.
+pub fn sweep_configs_threads(
+    cfg: &DeviceConfig,
+    sys: &SystemConfig,
+    sub: &Subarray,
+    params: &CalibParams,
+    ecr_samples: u32,
+    configs: &[FracConfig],
+    threads: usize,
+) -> Vec<SweepPoint> {
     let tput = ThroughputModel::new(sys);
-    configs
-        .iter()
-        .map(|fc| {
-            let calib = eng.calibrate(sub, fc, params);
-            let ecr = eng.measure_ecr(sub, &calib, 5, ecr_samples).ecr();
-            let cost = tput.majx(5, fc);
-            let maj5_ops = tput.ops_per_sec(&cost, 1.0 - ecr);
-            SweepPoint { config: *fc, ecr, maj5_ops }
-        })
-        .collect()
+    worker::parallel_map(configs.to_vec(), threads, |fc| {
+        // One serial engine per config job: the sweep already owns the
+        // coarse-grain parallelism, so tile fan-out inside each batch
+        // would only add scheduling overhead.
+        let mut eng = NativeEngine::serial(cfg.clone());
+        let calib = eng.calibrate(sub, &fc, params);
+        let ecr = eng.measure_ecr(sub, &calib, 5, ecr_samples).ecr();
+        let cost = tput.majx(5, &fc);
+        let maj5_ops = tput.ops_per_sec(&cost, 1.0 - ecr);
+        SweepPoint { config: fc, ecr, maj5_ops }
+    })
 }
 
 /// Closed-form ECR estimate for the *baseline* configuration under a
@@ -94,9 +115,9 @@ pub fn fit_sigma_sa(
         let mid = 0.5 * (lo + hi);
         cfg.sigma_sa = mid;
         let mut eng = NativeEngine::new(cfg.clone());
-        let mut sub = Subarray::new(&cfg, sys, seed);
+        let sub = Subarray::new(&cfg, sys, seed);
         let base = FracConfig::baseline(3).uncalibrated(&cfg, sub.cols);
-        let ecr = eng.measure_ecr(&mut sub, &base, 5, 2048).ecr();
+        let ecr = eng.measure_ecr(&sub, &base, 5, 2048).ecr();
         if ecr < target_baseline_ecr {
             lo = mid; // need more variation
         } else {
@@ -117,9 +138,9 @@ mod tests {
         let mut sys = SystemConfig::small();
         sys.cols = 4096;
         let mut eng = NativeEngine::new(cfg.clone());
-        let mut sub = Subarray::new(&cfg, &sys, 3);
+        let sub = Subarray::new(&cfg, &sys, 3);
         let base = FracConfig::baseline(3).uncalibrated(&cfg, sub.cols);
-        let sim = eng.measure_ecr(&mut sub, &base, 5, 2048).ecr();
+        let sim = eng.measure_ecr(&sub, &base, 5, 2048).ecr();
         let est = baseline_ecr_estimate(&cfg, 3, 3.0);
         assert!((sim - est).abs() < 0.12, "sim={sim} est={est}");
     }
@@ -131,10 +152,32 @@ mod tests {
         sys.cols = 2048;
         let fitted = fit_sigma_sa(&cfg, &sys, 0.466, 5);
         let mut eng = NativeEngine::new(fitted.clone());
-        let mut sub = Subarray::new(&fitted, &sys, 17);
+        let sub = Subarray::new(&fitted, &sys, 17);
         let base = FracConfig::baseline(3).uncalibrated(&fitted, sub.cols);
-        let ecr = eng.measure_ecr(&mut sub, &base, 5, 2048).ecr();
+        let ecr = eng.measure_ecr(&sub, &base, 5, 2048).ecr();
         assert!((ecr - 0.466).abs() < 0.08, "ecr={ecr}");
+    }
+
+    #[test]
+    fn parallel_sweep_matches_sequential() {
+        let cfg = DeviceConfig::default();
+        let mut sys = SystemConfig::small();
+        sys.cols = 512;
+        let sub = Subarray::new(&cfg, &sys, 33);
+        let configs = [
+            FracConfig::baseline(3),
+            FracConfig::pudtune([2, 1, 0]),
+            FracConfig::pudtune([1, 1, 0]),
+        ];
+        let p = CalibParams::quick();
+        let seq = sweep_configs_threads(&cfg, &sys, &sub, &p, 1024, &configs, 1);
+        let par = sweep_configs_threads(&cfg, &sys, &sub, &p, 1024, &configs, 4);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.ecr.to_bits(), b.ecr.to_bits());
+            assert_eq!(a.maj5_ops.to_bits(), b.maj5_ops.to_bits());
+        }
     }
 
     #[test]
@@ -143,14 +186,14 @@ mod tests {
         let cfg = DeviceConfig::default();
         let mut sys = SystemConfig::small();
         sys.cols = 2048;
-        let mut sub = Subarray::new(&cfg, &sys, 21);
+        let sub = Subarray::new(&cfg, &sys, 21);
         let configs = vec![
             FracConfig::baseline(3),
             FracConfig::pudtune([0, 0, 0]),
             FracConfig::pudtune([2, 1, 0]),
             FracConfig::pudtune([2, 2, 2]),
         ];
-        let pts = sweep_configs(&cfg, &sys, &mut sub, &CalibParams::quick(), 2048, &configs);
+        let pts = sweep_configs(&cfg, &sys, &sub, &CalibParams::quick(), 2048, &configs);
         let best = pts
             .iter()
             .min_by(|a, b| a.ecr.partial_cmp(&b.ecr).unwrap())

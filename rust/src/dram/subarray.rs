@@ -50,6 +50,8 @@ pub struct Subarray {
     /// Per-operation noise stream.
     rng: Rng,
     pub counts: OpCounts,
+    /// Reusable row-width scratch (RowCopy sense buffer).
+    row_buf: Vec<u8>,
 }
 
 impl Subarray {
@@ -70,6 +72,7 @@ impl Subarray {
             env: Environment::nominal(cfg.t_cal),
             rng: field_rng.child(&[0xC0FFEE]),
             counts: OpCounts::default(),
+            row_buf: Vec::new(),
         }
     }
 
@@ -107,9 +110,17 @@ impl Subarray {
     /// Standard activate-and-read: single-row charge share, noisy SA
     /// decision per column, full restore of the decision into the row.
     pub fn read_row(&mut self, row: usize) -> Vec<u8> {
+        let mut out = vec![0u8; self.cols];
+        self.read_row_into(row, &mut out);
+        out
+    }
+
+    /// [`Self::read_row`] into a caller-owned buffer (the hot circuit
+    /// path reuses one buffer across all row operations).
+    pub fn read_row_into(&mut self, row: usize, out: &mut [u8]) {
+        assert_eq!(out.len(), self.cols, "row buffer width must equal columns");
         self.counts.activates += 1;
         self.counts.precharges += 1;
-        let mut out = vec![0u8; self.cols];
         let base = row * self.cols;
         for c in 0..self.cols {
             let v = self.cfg.bitline_voltage(self.charges[base + c] as f64, 1);
@@ -117,7 +128,6 @@ impl Subarray {
             out[c] = bit as u8;
             self.charges[base + c] = if bit { 1.0 } else { 0.0 };
         }
-        out
     }
 
     /// RowCopy (ACT src - violated PRE - ACT dst): the sensed source
@@ -125,16 +135,16 @@ impl Subarray {
     /// restored to full swing.
     pub fn row_copy(&mut self, src: usize, dst: usize) {
         self.counts.row_copies += 1;
-        self.counts.activates += 2;
-        self.counts.precharges += 1;
-        let bits = self.read_row(src);
-        // read_row already accounted one ACT/PRE; the second ACT opens dst.
-        self.counts.activates -= 1;
-        self.counts.precharges -= 1;
+        // read_row_into accounts one ACT/PRE; the second ACT opens dst.
+        self.counts.activates += 1;
+        let mut buf = std::mem::take(&mut self.row_buf);
+        buf.resize(self.cols, 0);
+        self.read_row_into(src, &mut buf);
         let base = dst * self.cols;
-        for (c, &b) in bits.iter().enumerate() {
+        for (c, &b) in buf.iter().enumerate() {
             self.charges[base + c] = if b != 0 { 1.0 } else { 0.0 };
         }
+        self.row_buf = buf;
     }
 
     /// Frac (ACT with early PRE): partial charging pulls every cell of
@@ -154,15 +164,22 @@ impl Subarray {
     /// opened cells of every column, noisy SA decision, decision value
     /// restored into all opened rows. Returns the per-column result.
     pub fn simra(&mut self, rows: &[usize]) -> Vec<u8> {
+        let mut out = vec![0u8; self.cols];
+        self.simra_into(rows, &mut out);
+        out
+    }
+
+    /// [`Self::simra`] into a caller-owned buffer.
+    pub fn simra_into(&mut self, rows: &[usize], out: &mut [u8]) {
         assert!(
             rows.len() == self.cfg.simra_rows,
             "SiMRA opens exactly {} rows (decoder glitch)",
             self.cfg.simra_rows
         );
+        assert_eq!(out.len(), self.cols, "row buffer width must equal columns");
         self.counts.simras += 1;
         self.counts.activates += 2; // ACT-PRE-ACT decoder glitch sequence
         self.counts.precharges += 1;
-        let mut out = vec![0u8; self.cols];
         for c in 0..self.cols {
             let total: f64 = rows
                 .iter()
@@ -177,7 +194,6 @@ impl Subarray {
                 self.charges[i] = q;
             }
         }
-        out
     }
 
     /// Deterministic SiMRA evaluation with explicit noise (the
@@ -333,6 +349,31 @@ mod tests {
     fn simra_requires_eight_rows() {
         let mut s = small();
         s.simra(&[0, 1, 2]);
+    }
+
+    #[test]
+    fn into_apis_match_allocating_apis() {
+        let cfg = DeviceConfig::default();
+        let mk = || {
+            let mut s = Subarray::with_geometry(&cfg, 32, 64, 9);
+            for r in 0..8 {
+                s.fill_row(r, (r % 2) as u8);
+            }
+            s
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let ra = a.read_row(0);
+        let mut rb = vec![0u8; 64];
+        b.read_row_into(0, &mut rb);
+        assert_eq!(ra, rb);
+        assert_eq!(a.counts, b.counts);
+        let rows: Vec<usize> = (0..8).collect();
+        let sa = a.simra(&rows);
+        let mut sb = vec![0u8; 64];
+        b.simra_into(&rows, &mut sb);
+        assert_eq!(sa, sb);
+        assert_eq!(a.counts, b.counts);
     }
 
     #[test]

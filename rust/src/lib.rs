@@ -15,6 +15,17 @@
 //!   calling Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
 //!   Python never runs on the request path.
 //!
+//! ## Parallelism & determinism
+//!
+//! The native sampling hot path is a **column-tiled batch kernel**
+//! (`calib::algorithm`): every (batch, column) draws from its own
+//! stream derived with `util::rng::derive_seed`, batches fan out in
+//! column tiles over the scoped worker pool (`coordinator::worker`),
+//! and sweeps/banks/temperature points parallelise at a coarser grain
+//! on the same pool. Because streams are address-derived, **every
+//! result is bit-identical for any tile size and worker count** — the
+//! determinism suite (`rust/tests/determinism.rs`) pins this contract.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -23,16 +34,16 @@
 //! // A 1024-column subarray with seeded process variation.
 //! let cfg = DeviceConfig::default();
 //! let sys = SystemConfig::small();
-//! let mut sub = Subarray::new(&cfg, &sys, 7 /* seed */);
+//! let sub = Subarray::new(&cfg, &sys, 7 /* seed */);
 //!
 //! // Baseline B_{3,0,0} vs calibrated T_{2,1,0} error-prone ratio.
 //! let base = FracConfig::baseline(3);
 //! let tune = FracConfig::pudtune([2, 1, 0]);
 //! let mut engine = NativeEngine::new(cfg.clone());
-//! let calib = engine.calibrate(&mut sub, &tune, &CalibParams::paper());
+//! let calib = engine.calibrate(&sub, &tune, &CalibParams::paper());
 //! let base_cal = base.uncalibrated(&cfg, sub.cols);
-//! let ecr_base = engine.measure_ecr(&mut sub, &base_cal, 5, 8192);
-//! let ecr_tune = engine.measure_ecr(&mut sub, &calib, 5, 8192);
+//! let ecr_base = engine.measure_ecr(&sub, &base_cal, 5, 8192);
+//! let ecr_tune = engine.measure_ecr(&sub, &calib, 5, 8192);
 //! assert!(ecr_tune.ecr() < ecr_base.ecr());
 //! ```
 //!

@@ -175,16 +175,16 @@ fn cmd_ecr(args: &cli::Args) -> Result<()> {
         FracConfig::pudtune(args.fracs("fracs", [2, 1, 0]).map_err(anyhow::Error::msg)?)
     };
     let mut eng = NativeEngine::new(cfg.clone());
-    let mut sub = Subarray::with_geometry(&cfg, 32, sys.cols, exp.seed);
+    let sub = Subarray::with_geometry(&cfg, 32, sys.cols, exp.seed);
     let params = CalibParams {
         iterations: exp.calib_iterations,
         samples: exp.calib_samples,
         tau: exp.bias_tau,
         seed: exp.seed,
     };
-    let calib = eng.calibrate(&mut sub, &fc, &params);
-    let rep5 = eng.measure_ecr(&mut sub, &calib, 5, exp.ecr_samples);
-    let rep3 = eng.measure_ecr(&mut sub, &calib, 3, exp.ecr_samples);
+    let calib = eng.calibrate(&sub, &fc, &params);
+    let rep5 = eng.measure_ecr(&sub, &calib, 5, exp.ecr_samples);
+    let rep3 = eng.measure_ecr(&sub, &calib, 3, exp.ecr_samples);
     println!("config {}  cols {}  samples {}", fc.label(), sys.cols, exp.ecr_samples);
     println!(
         "MAJ5 ECR: {:.2}%  ({} error-prone columns)",
@@ -214,9 +214,9 @@ fn cmd_calibrate(args: &cli::Args) -> Result<()> {
     for b in 0..exp.banks {
         let id = SubarrayId::new(0, b, 0);
         let seed = pudtune::util::rng::derive_seed(exp.seed, &id.seed_path());
-        let mut sub = Subarray::with_geometry(&cfg, 32, sys.cols, seed);
-        let calib = eng.calibrate(&mut sub, &fc, &params);
-        let rep = eng.measure_ecr(&mut sub, &calib, 5, exp.ecr_samples);
+        let sub = Subarray::with_geometry(&cfg, 32, sys.cols, seed);
+        let calib = eng.calibrate(&sub, &fc, &params);
+        let rep = eng.measure_ecr(&sub, &calib, 5, exp.ecr_samples);
         println!("bank {b}: ECR {:.2}% after calibration", rep.ecr() * 100.0);
         store.insert(id, &calib);
     }

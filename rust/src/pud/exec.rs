@@ -59,6 +59,14 @@ pub fn run_circuit(
     for &s in &circuit.outputs {
         last_use.insert(canonical(s), usize::MAX); // outputs live forever
     }
+    // Per-gate death lists, built once — releasing dead rows is then
+    // O(deaths) per gate instead of a scan over every live signal.
+    let mut deaths: Vec<Vec<Signal>> = vec![Vec::new(); circuit.gates.len()];
+    for (&sig, &lu) in &last_use {
+        if lu != usize::MAX {
+            deaths[lu].push(sig);
+        }
+    }
 
     let mut alloc = RowAlloc::new(map.data_base, sub.rows);
 
@@ -72,6 +80,8 @@ pub fn run_circuit(
     let mut gate_rows: Vec<Option<usize>> = vec![None; circuit.gates.len()];
     // Cache of materialised negations.
     let mut not_rows: HashMap<Signal, usize> = HashMap::new();
+    // One reusable row buffer for every NOT materialisation.
+    let mut not_buf = vec![0u8; sub.cols];
 
     // Resolve a signal to a readable row, materialising NOTs on demand.
     // (Closures can't borrow everything mutably at once; a macro keeps
@@ -93,10 +103,12 @@ pub fn run_circuit(
                             Signal::NotGate(g) => gate_rows[g].expect("gate row live"),
                             _ => unreachable!(),
                         };
-                        let bits = sub.read_row(src);
-                        let inv: Vec<u8> = bits.iter().map(|&b| 1 - b).collect();
+                        sub.read_row_into(src, &mut not_buf);
+                        for b in not_buf.iter_mut() {
+                            *b = 1 - *b;
+                        }
                         let r = alloc.alloc();
-                        sub.write_row(r, &inv);
+                        sub.write_row(r, &not_buf);
                         // NOT = readout + write-back through the column
                         // interface.
                         elapsed += grade.t_rcd + 8.0 * grade.t_ck + grade.t_rp;
@@ -118,28 +130,24 @@ pub fn run_circuit(
         let r = alloc.alloc();
         sub.write_row(r, &bits);
         gate_rows[gi] = Some(r);
-        // Recycle rows whose signals are dead after this gate.
-        let mut dead: Vec<Signal> = Vec::new();
-        for (&sig, &lu) in last_use.iter() {
-            if lu == gi {
-                dead.push(sig);
-            }
-        }
-        for sig in dead {
-            last_use.remove(&sig);
+        // Recycle rows whose signals die at this gate (precomputed).
+        // Death lists hold canonical signals, and a canonical last-use
+        // index covers *both* polarities — so a dying gate releases its
+        // own row and any materialised negation of it (the seed kept
+        // NOT rows alive forever, leaking scratch rows on NOT-heavy
+        // circuits).
+        for sig in deaths[gi].drain(..) {
             match sig {
                 Signal::Gate(g) => {
                     if let Some(r) = gate_rows[g].take() {
-                        // Only release if no pending NOT of it is live.
-                        if !not_rows.contains_key(&Signal::NotGate(g)) {
-                            alloc.release(r);
-                        } else {
-                            gate_rows[g] = Some(r); // keep until NOT dies
-                        }
+                        alloc.release(r);
+                    }
+                    if let Some(r) = not_rows.remove(&Signal::NotGate(g)) {
+                        alloc.release(r);
                     }
                 }
-                Signal::NotGate(_) | Signal::NotInput(_) => {
-                    if let Some(r) = not_rows.remove(&sig) {
+                Signal::Input(i) => {
+                    if let Some(r) = not_rows.remove(&Signal::NotInput(i)) {
                         alloc.release(r);
                     }
                 }
@@ -225,6 +233,44 @@ mod tests {
         }
         assert!(run.elapsed_ns > 0.0);
         assert!(run.peak_rows < 32, "peak rows {}", run.peak_rows);
+    }
+
+    #[test]
+    fn not_rows_are_recycled() {
+        // A chain of identity gates each consuming the negation of the
+        // previous one: MAJ3(!prev, 0, 1) = !prev. Every gate
+        // materialises one NOT row; with per-gate death lists releasing
+        // both polarities, the scratch high-water mark stays O(1) in
+        // circuit length (the seed leaked one row per NOT).
+        use crate::pud::graph::{Gate, MajCircuit, Signal};
+        let mut c = MajCircuit::new(1);
+        let mut prev = Signal::Input(0);
+        for _ in 0..24 {
+            let not_prev = match prev {
+                Signal::Input(i) => Signal::NotInput(i),
+                Signal::Gate(g) => Signal::NotGate(g),
+                _ => unreachable!(),
+            };
+            prev = c.push(Gate::maj3(not_prev, Signal::Const(false), Signal::Const(true)));
+        }
+        c.output(prev);
+        let mut sub = quiet(8);
+        let map = RowMap::standard(sub.rows);
+        let fc = FracConfig::pudtune([2, 1, 0]);
+        let calib =
+            Calibration::uniform(OffsetLattice::build(&sub.cfg, &fc), sub.cols);
+        let run = run_circuit(
+            &mut sub,
+            &map,
+            &calib,
+            &fc,
+            &Ddr4Timing::ddr4_2133(),
+            &c,
+            &[vec![0u8; 8]],
+        );
+        // 24 chained negations of constant-0 input -> 0 again.
+        assert!(run.outputs[0].iter().all(|&b| b == 0), "{:?}", run.outputs);
+        assert!(run.peak_rows < 16, "NOT rows leaked: peak={}", run.peak_rows);
     }
 
     #[test]

@@ -120,7 +120,8 @@ mod tests {
             for (i, &r) in rows.iter().enumerate() {
                 sub.fill_row(r, (i < ones) as u8);
             }
-            let (bits, run) = execute_majx(&mut sub, &map, MajX::Maj5, &rows, &fc, &Ddr4Timing::ddr4_2133());
+            let (bits, run) =
+                execute_majx(&mut sub, &map, MajX::Maj5, &rows, &fc, &Ddr4Timing::ddr4_2133());
             let expect = (ones >= 3) as u8;
             assert!(bits.iter().all(|&b| b == expect), "ones={ones}");
             assert!(run.elapsed_ns > 0.0);
@@ -139,7 +140,8 @@ mod tests {
             for (i, &r) in rows.iter().enumerate() {
                 sub.fill_row(r, (i < ones) as u8);
             }
-            let (bits, _) = execute_majx(&mut sub, &map, MajX::Maj3, &rows, &fc, &Ddr4Timing::ddr4_2133());
+            let (bits, _) =
+                execute_majx(&mut sub, &map, MajX::Maj3, &rows, &fc, &Ddr4Timing::ddr4_2133());
             let expect = (ones >= 2) as u8;
             assert!(bits.iter().all(|&b| b == expect), "ones={ones}");
         }
@@ -157,7 +159,8 @@ mod tests {
         for (i, &r) in rows.iter().enumerate() {
             sub.fill_row(r, (i < 2) as u8); // 2 ones -> majority 0
         }
-        let (bits, _) = execute_majx(&mut sub, &map, MajX::Maj5, &rows, &fc, &Ddr4Timing::ddr4_2133());
+        let (bits, _) =
+            execute_majx(&mut sub, &map, MajX::Maj5, &rows, &fc, &Ddr4Timing::ddr4_2133());
         assert!(bits.iter().all(|&b| b == 0));
     }
 

@@ -1,9 +1,12 @@
 //! Tiny timing harness for `rust/benches/*` (criterion is not in the
 //! offline vendor set). Measures wall-clock over repeated runs, reports
-//! mean / std / min, and prints in a stable machine-grepable format.
+//! mean / std / min, prints in a stable machine-grepable format, and
+//! (via [`BenchSuite`]) emits machine-readable JSON so the repo's perf
+//! trajectory can be tracked across PRs (`BENCH_calib.json`).
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::Summary;
 
 /// Result of one benchmark case.
@@ -17,6 +20,17 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Machine-readable form (name/iters/mean/std/min).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("mean_s".to_string(), Json::Num(self.mean_s));
+        m.insert("std_s".to_string(), Json::Num(self.std_s));
+        m.insert("min_s".to_string(), Json::Num(self.min_s));
+        Json::Obj(m)
+    }
+
     pub fn print(&self) {
         println!(
             "bench {:<40} iters={:<3} mean={} std={} min={}",
@@ -61,6 +75,65 @@ pub fn bench_budget<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchRes
     bench(name, 0, iters, f)
 }
 
+/// Collects bench results (plus derived scalars like speedups) and
+/// writes them as one JSON document — the machine-readable record the
+/// perf acceptance criteria are checked against.
+#[derive(Debug, Default)]
+pub struct BenchSuite {
+    results: Vec<BenchResult>,
+    derived: Vec<(String, f64)>,
+}
+
+impl BenchSuite {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run and record a fixed-iteration case (see [`bench`]).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: u32, iters: u32, f: F) -> BenchResult {
+        let r = bench(name, warmup, iters, f);
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Run and record an auto-calibrated case (see [`bench_budget`]).
+    pub fn bench_budget<F: FnMut()>(&mut self, name: &str, budget_s: f64, f: F) -> BenchResult {
+        let r = bench_budget(name, budget_s, f);
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Record an externally produced result.
+    pub fn record(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    /// Record a derived scalar (e.g. a before/after speedup).
+    pub fn derive(&mut self, name: &str, value: f64) {
+        println!("derived {name:<38} {value:.3}");
+        self.derived.push((name.to_string(), value));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = std::collections::BTreeMap::new();
+        root.insert(
+            "benches".to_string(),
+            Json::Arr(self.results.iter().map(BenchResult::to_json).collect()),
+        );
+        let mut derived = std::collections::BTreeMap::new();
+        for (k, v) in &self.derived {
+            derived.insert(k.clone(), Json::Num(*v));
+        }
+        root.insert("derived".to_string(), Json::Obj(derived));
+        Json::Obj(root)
+    }
+
+    /// Write the suite as pretty JSON (e.g. `BENCH_calib.json`).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty() + "\n")
+    }
+}
+
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3}s")
@@ -84,6 +157,25 @@ mod tests {
         assert_eq!(r.iters, 5);
         assert_eq!(n, 6);
         assert!(r.min_s <= r.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn suite_emits_json() {
+        let mut suite = BenchSuite::new();
+        suite.bench("case-a", 0, 3, || {
+            std::hint::black_box(1 + 1);
+        });
+        suite.derive("speedup", 4.5);
+        let j = suite.to_json();
+        let cases = j.get("benches").as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").as_str(), Some("case-a"));
+        assert!(cases[0].get("mean_s").as_f64().is_some());
+        assert!(cases[0].get("min_s").as_f64().is_some());
+        assert_eq!(j.get("derived").get("speedup").as_f64(), Some(4.5));
+        // Round-trips through the parser (what a CI checker would do).
+        let back = crate::util::json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(back.get("derived").get("speedup").as_f64(), Some(4.5));
     }
 
     #[test]

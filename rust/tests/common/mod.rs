@@ -1,0 +1,21 @@
+//! Shared test support.
+
+use pudtune::runtime::Runtime;
+
+/// Open the PJRT runtime, or skip the calling test when the AOT
+/// artifacts (an optional build product) are absent — offline checkouts
+/// stay green. Artifact-enabled CI must export
+/// `PUDTUNE_REQUIRE_ARTIFACTS=1` so a loading regression fails loudly
+/// instead of silently skipping.
+pub fn open_runtime() -> Option<Runtime> {
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) if std::env::var_os("PUDTUNE_REQUIRE_ARTIFACTS").is_some() => {
+            panic!("PUDTUNE_REQUIRE_ARTIFACTS set but artifacts unavailable: {e}")
+        }
+        Err(e) => {
+            eprintln!("skipping: PJRT artifacts unavailable ({e})");
+            None
+        }
+    }
+}

