@@ -31,9 +31,13 @@ fn decode(outputs: &[Vec<u8>], col: usize) -> u64 {
 fn main() {
     let cfg = DeviceConfig::default();
     let cols = 256;
+    let seed = 0xA51u64;
     let grade = Ddr4Timing::ddr4_2133();
-    let mut engine = NativeEngine::new(cfg.clone());
-    let mut sub = Subarray::with_geometry(&cfg, 128, cols, 0xA51);
+    // Identification + measurement go through the `CalibEngine` trait
+    // (native backend: the 256-column demo geometry has no artifact);
+    // the circuit runs below exercise the golden-model subarray itself.
+    let engine = AnyEngine::native(cfg.clone());
+    let mut sub = Subarray::with_geometry(&cfg, 128, cols, seed);
     let map = RowMap::standard(sub.rows);
     let mut rng = Rng::new(42);
 
@@ -42,7 +46,9 @@ fn main() {
 
     let tune = FracConfig::pudtune([2, 1, 0]);
     let base = FracConfig::baseline(3);
-    let calib = engine.calibrate(&mut sub, &tune, &CalibParams::paper());
+    let calib = engine
+        .calibrate_one(&CalibRequest::from_subarray(&sub, seed, tune, CalibParams::paper()))
+        .expect("running Algorithm 1");
     let base_cal = base.uncalibrated(&cfg, cols);
 
     // ---- 8-bit vector ADD (one add per column, SIMD across columns).
@@ -92,12 +98,20 @@ fn main() {
         );
     }
 
-    // ---- Projected system throughput for the paper's geometry.
+    // ---- Projected system throughput for the paper's geometry: four
+    // batteries as one batched ECR call.
     let tput = ThroughputModel::new(&SystemConfig::paper());
-    let e5t = engine.measure_ecr(&mut sub, &calib, 5, 8192);
-    let e3t = engine.measure_ecr(&mut sub, &calib, 3, 8192);
-    let e5b = engine.measure_ecr(&mut sub, &base_cal, 5, 8192);
-    let e3b = engine.measure_ecr(&mut sub, &base_cal, 3, 8192);
+    let reqs = vec![
+        EcrRequest::from_subarray(&sub, seed, calib.clone(), 5, 8192),
+        EcrRequest::from_subarray(&sub, seed, calib.clone(), 3, 8192),
+        EcrRequest::from_subarray(&sub, seed, base_cal.clone(), 5, 8192),
+        EcrRequest::from_subarray(&sub, seed, base_cal.clone(), 3, 8192),
+    ];
+    let mut reports = engine.measure_ecr_batch(&reqs).expect("ECR batch");
+    let e3b = reports.pop().unwrap();
+    let e5b = reports.pop().unwrap();
+    let e3t = reports.pop().unwrap();
+    let e5t = reports.pop().unwrap();
     let addc = pudtune::pud::adder::add8_cost();
     let mulc = pudtune::pud::multiplier::mul8_cost();
     let rb = tput.report(&base, e5b.ecr(), e5b.intersect(&e3b).ecr(), &addc, &mulc);

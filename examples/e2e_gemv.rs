@@ -24,11 +24,12 @@
 
 use anyhow::Result;
 use pudtune::calib::algorithm::CalibParams;
+use pudtune::calib::engine::{AnyEngine, CalibEngine, CalibRequest, EcrRequest};
 use pudtune::calib::lattice::FracConfig;
 use pudtune::config::device::DeviceConfig;
 use pudtune::config::system::SystemConfig;
 use pudtune::coordinator::batcher::Batcher;
-use pudtune::coordinator::engine::{ColumnBank, PjrtEngine};
+use pudtune::coordinator::engine::ColumnBank;
 use pudtune::prelude::ThroughputModel;
 use pudtune::runtime::{buffers, Runtime};
 use pudtune::util::rng::Rng;
@@ -45,24 +46,30 @@ fn main() -> Result<()> {
     let rt = Arc::new(Runtime::open_default()?);
     println!("PJRT platform: {}", rt.platform());
     let cfg = DeviceConfig::default();
-    let engine = PjrtEngine::new(rt.clone(), cfg.clone());
+    let engine = AnyEngine::pjrt(rt.clone(), cfg.clone());
     let bank = ColumnBank::new(&cfg, COLS, 0x6E37);
 
-    // ---- 1. Calibrate through the AOT stack (L3 -> L2 -> L1).
+    // ---- 1. Calibrate through the AOT stack (L3 -> L2 -> L1), via
+    // the backend-agnostic `CalibEngine` trait.
     let tune = FracConfig::pudtune([2, 1, 0]);
     let base = FracConfig::baseline(3);
     let t0 = Instant::now();
-    let calib = engine.calibrate(&bank, &tune, &CalibParams::paper())?;
+    let calib =
+        engine.calibrate_one(&CalibRequest::new(bank.clone(), tune, CalibParams::paper()))?;
     println!(
         "calibrated {COLS} columns in {:.2}s ({} PJRT step calls)",
         t0.elapsed().as_secs_f64(),
-        engine.metrics.counter("pjrt.step.calls")
+        engine.metrics().expect("pjrt backend").counter("pjrt.step.calls")
     );
 
-    // ---- 2. Mass ECR via the scanned graphs.
+    // ---- 2. Mass ECR via the scanned graphs (one batched call).
     let base_cal = base.uncalibrated(&cfg, COLS);
-    let ecr_base = engine.measure_ecr(&bank, &base_cal, 5, 0xE)?;
-    let ecr_tune = engine.measure_ecr(&bank, &calib, 5, 0xE)?;
+    let mut reports = engine.measure_ecr_batch(&[
+        EcrRequest::new(bank.clone(), base_cal, 5, 8192).with_seed(0xE),
+        EcrRequest::new(bank.clone(), calib, 5, 8192).with_seed(0xE),
+    ])?;
+    let ecr_tune = reports.pop().unwrap();
+    let ecr_base = reports.pop().unwrap();
     println!(
         "MAJ5 ECR: baseline {:.1}% -> PUDTune {:.1}%",
         ecr_base.ecr() * 100.0,
@@ -178,6 +185,6 @@ fn main() -> Result<()> {
             macs / (M * K) as f64
         );
     }
-    println!("\n{}", engine.metrics.render());
+    println!("\n{}", engine.metrics().expect("pjrt backend").render());
     Ok(())
 }

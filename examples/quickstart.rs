@@ -1,5 +1,6 @@
 //! Quickstart: calibrate one subarray and watch the error-prone
-//! columns disappear.
+//! columns disappear — all through the backend-agnostic `CalibEngine`
+//! trait.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -13,14 +14,23 @@ fn main() {
     let cfg = DeviceConfig::default();
     let mut sys = SystemConfig::small();
     sys.cols = 1024;
-    let mut sub = Subarray::new(&cfg, &sys, /*seed=*/ 7);
-    let mut engine = NativeEngine::new(cfg.clone());
+    let seed = 7u64;
+    let sub = Subarray::new(&cfg, &sys, seed);
+
+    // Everything below is written against the `CalibEngine` trait; the
+    // native backend is pinned here because this demo's 1,024-column
+    // geometry has no AOT artifact (swap in `AnyEngine::auto` plus an
+    // artifact-shaped geometry to run the same code on PJRT).
+    let engine = AnyEngine::native(cfg.clone());
+    println!("engine backend: {}\n", engine.backend());
 
     // The conventional MAJ5 implementation: one Frac'd neutral row plus
     // constant 0/1 rows (paper Fig. 1a, B_{3,0,0}).
     let baseline = FracConfig::baseline(3);
     let base_cal = baseline.uncalibrated(&cfg, sub.cols);
-    let ecr_base = engine.measure_ecr(&mut sub, &base_cal, 5, 8192);
+    let ecr_base = engine
+        .measure_ecr_one(&EcrRequest::from_subarray(&sub, seed, base_cal, 5, 8192))
+        .expect("measuring baseline ECR");
     println!(
         "baseline  {}: ECR {:5.1}%  ({} of {} columns error-prone)",
         baseline.label(),
@@ -33,8 +43,12 @@ fn main() {
     // (20 iterations x 512 random samples, the paper's settings), then
     // measure again.
     let tune = FracConfig::pudtune([2, 1, 0]);
-    let calib = engine.calibrate(&mut sub, &tune, &CalibParams::paper());
-    let ecr_tune = engine.measure_ecr(&mut sub, &calib, 5, 8192);
+    let calib = engine
+        .calibrate_one(&CalibRequest::from_subarray(&sub, seed, tune, CalibParams::paper()))
+        .expect("running Algorithm 1");
+    let ecr_tune = engine
+        .measure_ecr_one(&EcrRequest::from_subarray(&sub, seed, calib, 5, 8192))
+        .expect("measuring calibrated ECR");
     println!(
         "PUDTune   {}: ECR {:5.1}%  ({} of {} columns error-prone)",
         tune.label(),

@@ -2,7 +2,10 @@
 //!
 //! Calibrates at nominal temperature, then sweeps the die from 40 °C
 //! to 100 °C and ages the device for a simulated week, counting *new*
-//! error-prone columns relative to calibration time.
+//! error-prone columns relative to calibration time. The sweeps are
+//! expressed as `EcrRequest` batches — each request snapshots the
+//! sense-amp state under its own environment — and submitted to the
+//! engine in single batched calls.
 //!
 //! ```bash
 //! cargo run --release --example thermal_study
@@ -14,24 +17,42 @@ fn main() {
     let cfg = DeviceConfig::default();
     let mut sys = SystemConfig::small();
     sys.cols = 8192;
-    let mut engine = NativeEngine::new(cfg.clone());
-    let mut sub = Subarray::new(&cfg, &sys, 0x7E3);
+    let seed = 0x7E3u64;
+    // Native backend: the campaign needs arbitrary geometry and a
+    // caller-chosen burn-in depth, which AOT artifacts fix at build
+    // time. The call sites stay backend-agnostic via the trait.
+    let engine = AnyEngine::native(cfg.clone());
+    let mut sub = Subarray::new(&cfg, &sys, seed);
     let tune = FracConfig::pudtune([2, 1, 0]);
 
     println!("calibrating at {:.0} C...", cfg.t_cal);
-    let calib = engine.calibrate(&mut sub, &tune, &CalibParams::paper());
-    let reference = engine.measure_ecr(&mut sub, &calib, 5, 32768); // burn-in depth
+    let calib = engine
+        .calibrate_one(&CalibRequest::from_subarray(&sub, seed, tune, CalibParams::paper()))
+        .expect("running Algorithm 1");
+    let reference = engine
+        .measure_ecr_one(&EcrRequest::from_subarray(&sub, seed, calib.clone(), 5, 32768))
+        .expect("burn-in reference battery");
     println!(
         "reference ECR: {:.2}% ({} columns)\n",
         reference.ecr() * 100.0,
         reference.cols()
     );
 
+    // Temperature sweep: seven independent measurements of one device,
+    // one batched call.
+    let temps = [40.0, 50.0, 60.0, 70.0, 80.0, 90.0, 100.0];
+    let temp_reqs: Vec<EcrRequest> = temps
+        .iter()
+        .map(|&t| {
+            let mut bank = ColumnBank::from_subarray(&sub, seed);
+            bank.env.temp_c = t;
+            EcrRequest::new(bank, calib.clone(), 5, 8192)
+        })
+        .collect();
+    let temp_reports = engine.measure_ecr_batch(&temp_reqs).expect("temperature batch");
     println!("temperature sweep (paper Fig. 6a: new ECR stays below 0.14%):");
     println!("  {:>6}  {:>8}  {:>8}", "T (C)", "ECR", "new ECR");
-    for t in [40.0, 50.0, 60.0, 70.0, 80.0, 90.0, 100.0] {
-        sub.set_temperature(t);
-        let rep = engine.measure_ecr(&mut sub, &calib, 5, 8192);
+    for (&t, rep) in temps.iter().zip(&temp_reports) {
         println!(
             "  {:>6.0}  {:>7.2}%  {:>7.3}%",
             t,
@@ -39,15 +60,21 @@ fn main() {
             rep.new_ecr_vs(&reference) * 100.0
         );
     }
-    sub.set_temperature(cfg.t_cal);
 
-    println!("\naging sweep (paper Fig. 6b: new ECR stays below 0.27% over a week):");
-    println!("  {:>6}  {:>8}  {:>8}", "day", "ECR", "new ECR");
+    // Aging sweep: the drift random walk is cumulative, so the device
+    // advances sequentially — each checkpoint's sense-amp state is
+    // snapshotted into a request and the battery runs as one batch.
+    let mut age_reqs = Vec::new();
     for day in 0..=7 {
         if day > 0 {
             sub.advance_time(24.0);
         }
-        let rep = engine.measure_ecr(&mut sub, &calib, 5, 8192);
+        age_reqs.push(EcrRequest::from_subarray(&sub, seed, calib.clone(), 5, 8192));
+    }
+    let age_reports = engine.measure_ecr_batch(&age_reqs).expect("aging batch");
+    println!("\naging sweep (paper Fig. 6b: new ECR stays below 0.27% over a week):");
+    println!("  {:>6}  {:>8}  {:>8}", "day", "ECR", "new ECR");
+    for (day, rep) in age_reports.iter().enumerate() {
         println!(
             "  {:>6}  {:>7.2}%  {:>7.3}%",
             day,
@@ -57,7 +84,11 @@ fn main() {
     }
 
     println!("\nre-calibration after the campaign restores the reference ECR:");
-    let recal = engine.calibrate(&mut sub, &tune, &CalibParams::paper());
-    let rep = engine.measure_ecr(&mut sub, &recal, 5, 8192);
+    let recal = engine
+        .calibrate_one(&CalibRequest::from_subarray(&sub, seed, tune, CalibParams::paper()))
+        .expect("re-calibration");
+    let rep = engine
+        .measure_ecr_one(&EcrRequest::from_subarray(&sub, seed, recal, 5, 8192))
+        .expect("post-recalibration battery");
     println!("  post-recalibration ECR: {:.2}%", rep.ecr() * 100.0);
 }

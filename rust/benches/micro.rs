@@ -1,6 +1,8 @@
 //! Micro-benchmarks of the hot paths (the §Perf iteration targets):
-//! native sampling batch, calibration sweep, golden-model SiMRA, PJRT
-//! step/ECR calls, circuit evaluation, and the PRNG.
+//! native sampling batch, calibration sweep, batched `CalibEngine`
+//! calls (native fan-out and fused multi-bank PJRT execution),
+//! golden-model SiMRA, PJRT step/ECR calls, circuit evaluation, and
+//! the PRNG.
 //!
 //! Every case is recorded into `BENCH_calib.json` (written to the
 //! working directory) so the repo's perf trajectory is machine
@@ -12,6 +14,7 @@
 
 use pudtune::analysis::ecr::EcrReport;
 use pudtune::calib::algorithm::{CalibParams, Calibration, NativeEngine};
+use pudtune::calib::engine::{BankBatch, CalibEngine};
 use pudtune::calib::lattice::{ConfigKind, FracConfig, OffsetLattice};
 use pudtune::calib::sweep;
 use pudtune::config::device::DeviceConfig;
@@ -135,6 +138,23 @@ fn main() {
     });
     suite.derive("sweep_fig5_2048cols_speedup", sweep_before.min_s / sweep_after.min_s);
 
+    // Batch-first CalibEngine API: whole-device calibration as one
+    // trait call (the engine fans banks across the worker pool) vs the
+    // same requests issued one at a time.
+    let beng = NativeEngine::new(cfg.clone());
+    let bbatch = BankBatch::from_device_seed(cfg.clone(), 2048, 0xBA7C4, 8);
+    let breqs = bbatch.calib_requests(fc, CalibParams::quick());
+    let batch_seq = suite.bench("micro/calibrate-8x2048/one-at-a-time", 0, 2, || {
+        for r in &breqs {
+            std::hint::black_box(beng.calibrate_one(r).unwrap().levels[0]);
+        }
+    });
+    let batch_par = suite.bench("micro/calibrate-8x2048/batched", 0, 3, || {
+        let calibs = beng.calibrate_batch(&breqs).unwrap();
+        std::hint::black_box(calibs.len());
+    });
+    suite.derive("calibrate_batch_speedup", batch_seq.min_s / batch_par.min_s);
+
     // Golden-model SiMRA (command-level fidelity).
     let mut gsub = Subarray::with_geometry(&cfg, 32, 8192, 4);
     let rows: Vec<usize> = (0..8).collect();
@@ -180,6 +200,28 @@ fn main() {
             let c = peng.calibrate(&bank, &fc, &pparams).unwrap();
             std::hint::black_box(c.levels[0]);
         });
+
+        // Batched multi-bank PJRT calibration: 4 x 4096-column banks
+        // stacked into the 16,384-column step artifact — one
+        // executable call per Algorithm-1 iteration for the whole
+        // batch. The derived `pjrt_step_calls_per_batched_run` records
+        // the executable-call count per run: `iterations` when fused
+        // (vs `banks * iterations` issued one bank at a time).
+        let pbatch = BankBatch::from_device_seed(cfg.clone(), 4096, 0xFA7, 4);
+        let preqs = pbatch.calib_requests(fc, pparams);
+        let calls_before = peng.metrics.counter("pjrt.step.calls");
+        const BATCH_RUNS: u32 = 2;
+        suite.bench("micro/pjrt-calibrate-batch-4x4096", 0, BATCH_RUNS, || {
+            let calibs = peng.calibrate_batch(&preqs).unwrap();
+            std::hint::black_box(calibs.len());
+        });
+        let calls_per_run = (peng.metrics.counter("pjrt.step.calls") - calls_before) as f64
+            / BATCH_RUNS as f64;
+        suite.derive("pjrt_step_calls_per_batched_run", calls_per_run);
+        suite.derive(
+            "pjrt_banks_per_step_call",
+            preqs.len() as f64 * pparams.iterations as f64 / calls_per_run,
+        );
     } else {
         println!("(artifacts missing; skipping PJRT micro-benches)");
     }

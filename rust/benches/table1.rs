@@ -4,11 +4,12 @@
 //! `cargo bench --bench table1` — add `-- --full` for the paper's
 //! 65,536-column geometry (slow on one core).
 
+use pudtune::calib::engine::AnyEngine;
 use pudtune::calib::lattice::FracConfig;
 use pudtune::config::device::DeviceConfig;
 use pudtune::config::experiment::ExperimentConfig;
 use pudtune::config::system::SystemConfig;
-use pudtune::experiments::{self, Engine};
+use pudtune::experiments;
 use pudtune::util::benchkit;
 
 fn main() {
@@ -21,7 +22,7 @@ fn main() {
     exp.banks = if full { 16 } else { 4 };
 
     println!("=== Table I ({} banks x {} cols, {} ECR samples/bank) ===\n", exp.banks, sys.cols, exp.ecr_samples);
-    let engine = Engine::auto();
+    let engine = AnyEngine::auto(cfg.clone());
     let base = FracConfig::baseline(3);
     let tune = FracConfig::pudtune([2, 1, 0]);
 

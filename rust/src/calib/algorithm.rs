@@ -37,7 +37,9 @@ use crate::calib::bias::{BiasAccumulator, BiasTileMut};
 use crate::calib::lattice::{ConfigKind, FracConfig, OffsetLattice};
 use crate::config::device::DeviceConfig;
 use crate::coordinator::worker;
+use crate::dram::sense_amp::SenseAmps;
 use crate::dram::subarray::Subarray;
+use crate::dram::temperature::Environment;
 use crate::util::rng::{derive_seed, stream, Rng};
 use crate::util::stats::phi;
 
@@ -88,7 +90,7 @@ impl FracConfig {
 }
 
 /// Parameters of Algorithm 1.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CalibParams {
     /// n_iterations (paper §IV-A: 20).
     pub iterations: u32,
@@ -126,6 +128,14 @@ pub fn const_q(m: usize) -> f64 {
 /// share per-column streams (see `util::rng` module docs).
 const STREAM_CALIB: u64 = 0xCA11B;
 const STREAM_ECR: u64 = 0xEC12;
+
+/// Default master-seed tag of the ECR stream domain. ECR batteries
+/// derive their sampling streams from `master ^ environment`, so a
+/// measurement at a given (temperature, age) point replays the same
+/// random patterns regardless of which engine or batch shape ran it —
+/// [`crate::calib::engine::EcrRequest`] defaults to this tag, keeping
+/// the trait path bit-identical to [`NativeEngine::measure_ecr`].
+pub const ECR_MASTER_SEED: u64 = 0xECC;
 
 /// Default column-tile width for the parallel sampling kernel. Tiling
 /// never changes results; this only balances fan-out granularity
@@ -215,14 +225,19 @@ impl NativeEngine {
         Self::with_parallelism(cfg, DEFAULT_TILE_COLS, 1)
     }
 
-    /// Recompute per-column effective thresholds for the subarray's
-    /// current environment (once per environment, not per batch).
-    fn refresh_thresholds(&mut self, sub: &Subarray) {
+    /// Recompute per-column effective thresholds for a sense-amp bank
+    /// under an environment (once per environment, not per batch).
+    fn refresh_thresholds_columns(&mut self, sa: &SenseAmps, env: &Environment) {
         let Self { cfg, scratch, .. } = self;
         scratch.thresholds.clear();
         scratch
             .thresholds
-            .extend((0..sub.cols).map(|c| sub.sa.threshold(cfg, &sub.env, c)));
+            .extend((0..sa.cols()).map(|c| sa.threshold(cfg, env, c)));
+    }
+
+    /// [`Self::refresh_thresholds_columns`] for a full subarray.
+    fn refresh_thresholds(&mut self, sub: &Subarray) {
+        self.refresh_thresholds_columns(&sub.sa, &sub.env);
     }
 
     /// One sampling batch with prepared thresholds: `samples` random
@@ -355,26 +370,31 @@ impl NativeEngine {
         acc
     }
 
-    /// Algorithm 1: iteratively identify per-column calibration data.
-    pub fn calibrate(
+    /// Algorithm 1 on a sense-amp bank + environment — the sampling
+    /// loop never reads cell charges, so this is the complete
+    /// calibration kernel (the engine-trait path enters here; the
+    /// [`Self::calibrate`] wrapper serves `Subarray` callers).
+    pub fn calibrate_columns(
         &mut self,
-        sub: &Subarray,
+        sa: &SenseAmps,
+        env: &Environment,
         fc: &FracConfig,
         params: &CalibParams,
     ) -> Calibration {
+        let cols = sa.cols();
         let lattice = OffsetLattice::build(&self.cfg, fc);
-        let mut calib = Calibration::uniform(lattice, sub.cols);
+        let mut calib = Calibration::uniform(lattice, cols);
         if fc.kind == ConfigKind::Baseline {
             // No per-column freedom to exploit.
             return calib;
         }
         let max_lv = (calib.lattice.len() - 1) as u8;
-        self.refresh_thresholds(sub);
-        let mut acc = BiasAccumulator::new(sub.cols);
+        self.refresh_thresholds_columns(sa, env);
+        let mut acc = BiasAccumulator::new(cols);
         for iter in 0..params.iterations {
             let batch_seed = derive_seed(params.seed, &[STREAM_CALIB, iter as u64]);
             self.batch_prepared(&calib, 5, params.samples, batch_seed, &mut acc);
-            for c in 0..sub.cols {
+            for c in 0..cols {
                 let bias = acc.bias(c);
                 // Algorithm 1 lines 6-11: |bias| beyond the threshold
                 // steps the level against the bias. Columns that still
@@ -395,6 +415,39 @@ impl NativeEngine {
         calib
     }
 
+    /// Algorithm 1: iteratively identify per-column calibration data.
+    pub fn calibrate(
+        &mut self,
+        sub: &Subarray,
+        fc: &FracConfig,
+        params: &CalibParams,
+    ) -> Calibration {
+        self.calibrate_columns(&sub.sa, &sub.env, fc, params)
+    }
+
+    /// ECR measurement on a sense-amp bank + environment: per-column
+    /// error counts over `samples` random MAJ-m patterns. `master_seed`
+    /// selects the stream domain ([`ECR_MASTER_SEED`] reproduces the
+    /// [`Self::measure_ecr`] battery bit for bit); the environment is
+    /// folded in, so each (temperature, age) point replays its own
+    /// patterns.
+    pub fn measure_ecr_columns(
+        &mut self,
+        sa: &SenseAmps,
+        env: &Environment,
+        calib: &Calibration,
+        m: usize,
+        samples: u32,
+        master_seed: u64,
+    ) -> EcrReport {
+        let master = master_seed ^ env.temp_c.to_bits() ^ env.hours.to_bits();
+        let batch_seed = derive_seed(master, &[STREAM_ECR, m as u64]);
+        self.refresh_thresholds_columns(sa, env);
+        let mut acc = BiasAccumulator::new(sa.cols());
+        self.batch_prepared(calib, m, samples, batch_seed, &mut acc);
+        EcrReport::from_error_counts(acc.error_counts().to_vec(), samples)
+    }
+
     /// ECR measurement: per-column error counts over `samples` random
     /// MAJ-m patterns (paper §IV-A: 8,192 per bank).
     pub fn measure_ecr(
@@ -404,10 +457,7 @@ impl NativeEngine {
         m: usize,
         samples: u32,
     ) -> EcrReport {
-        let master = 0xECC ^ sub.env.temp_c.to_bits() ^ sub.env.hours.to_bits();
-        let batch_seed = derive_seed(master, &[STREAM_ECR, m as u64]);
-        let acc = self.sample_batch(sub, calib, m, samples, batch_seed);
-        EcrReport::from_error_counts(acc.error_counts().to_vec(), samples)
+        self.measure_ecr_columns(&sub.sa, &sub.env, calib, m, samples, ECR_MASTER_SEED)
     }
 }
 

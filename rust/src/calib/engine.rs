@@ -1,0 +1,455 @@
+//! The backend-agnostic calibration-engine API.
+//!
+//! The paper's pipeline — offset-search calibration (Algorithm 1,
+//! §IV-A) followed by mass ECR measurement — used to be implemented
+//! twice with diverging signatures: the native column-tiled kernel
+//! (`calib::algorithm`) and the PJRT AOT path (`coordinator::engine`).
+//! This module is the single seam between *what* a calibration workload
+//! is and *which backend* executes it:
+//!
+//! * **Request types** — [`CalibRequest`] and [`EcrRequest`] describe
+//!   one bank's job in backend-neutral terms (a [`ColumnBank`]: the
+//!   sense-amp variation field + environment + seed; cell charges never
+//!   matter to the sampling hot loop). [`BankBatch`] materialises the
+//!   per-bank requests of a whole device from one seed.
+//! * **[`CalibEngine`]** — the trait every backend implements. It is
+//!   **batch-first**: `calibrate_batch` / `measure_ecr_batch` take
+//!   slices of requests so backends can exploit whole-device shape —
+//!   the native engine fans requests across the scoped worker pool,
+//!   the PJRT engine stacks multiple banks' `[cols]`-shaped thresholds
+//!   into **one executable invocation** (see
+//!   `coordinator::engine`). Single-item calls ([`CalibEngine::calibrate_one`],
+//!   [`CalibEngine::measure_ecr_one`]) are default-method sugar over
+//!   the batch entry points.
+//! * **[`AnyEngine`]** — the runtime-selected backend
+//!   ([`AnyEngine::auto`] opens the PJRT runtime when AOT artifacts are
+//!   present and falls back to the native kernel otherwise), so service
+//!   code is written once against the trait.
+//!
+//! ## Determinism contract
+//!
+//! The native implementation delegates to the column-tiled kernel and
+//! inherits its bit-identical guarantee: results never depend on tile
+//! size, worker count, or batch shape — `calibrate_batch(&[a, b])`
+//! equals `[calibrate_one(&a), calibrate_one(&b)]` bit for bit, and a
+//! request built from a `Subarray` reproduces the inherent
+//! `NativeEngine::calibrate` / `measure_ecr` results exactly
+//! (`rust/tests/determinism.rs` and `rust/tests/engine_api.rs` pin
+//! both). The PJRT fused path draws different (but equally valid)
+//! streams per batch shape; cross-backend agreement is statistical and
+//! pinned by `rust/tests/cross_validation.rs`.
+
+use anyhow::Result;
+
+use crate::analysis::ecr::EcrReport;
+use crate::calib::algorithm::{CalibParams, Calibration, NativeEngine, ECR_MASTER_SEED};
+use crate::calib::lattice::FracConfig;
+use crate::config::device::DeviceConfig;
+use crate::coordinator::engine::{ColumnBank, PjrtEngine};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::worker;
+use crate::dram::subarray::Subarray;
+use crate::runtime::Runtime;
+use crate::util::rng::derive_seed;
+use std::sync::Arc;
+
+/// One bank's calibration job (Algorithm 1 under one Frac config).
+#[derive(Clone, Debug)]
+pub struct CalibRequest {
+    /// The bank to calibrate: variation field + environment + seed.
+    pub bank: ColumnBank,
+    /// Frac configuration to identify calibration data for.
+    pub config: FracConfig,
+    /// Algorithm-1 parameters (iterations, samples, tau, seed).
+    pub params: CalibParams,
+}
+
+impl CalibRequest {
+    pub fn new(bank: ColumnBank, config: FracConfig, params: CalibParams) -> Self {
+        Self { bank, config, params }
+    }
+
+    /// Request against an existing subarray's sense amps + environment
+    /// (`bank_seed` is the seed the subarray was built from; it selects
+    /// the PJRT stream domain and is ignored by the native kernel).
+    pub fn from_subarray(
+        sub: &Subarray,
+        bank_seed: u64,
+        config: FracConfig,
+        params: CalibParams,
+    ) -> Self {
+        Self::new(ColumnBank::from_subarray(sub, bank_seed), config, params)
+    }
+
+    pub fn cols(&self) -> usize {
+        self.bank.cols()
+    }
+}
+
+/// One bank's ECR measurement job (`samples` random MAJ-m patterns).
+#[derive(Clone, Debug)]
+pub struct EcrRequest {
+    pub bank: ColumnBank,
+    /// Calibration state to measure under.
+    pub calib: Calibration,
+    /// Operand count (5 or 3 under 8-row SiMRA).
+    pub m: usize,
+    /// Battery depth (paper §IV-A: 8,192). The PJRT path runs its
+    /// artifact's baked `total_samples` instead; the returned report
+    /// carries the depth actually measured.
+    pub samples: u32,
+    /// Master-seed tag of the sampling stream domain. The default
+    /// ([`ECR_MASTER_SEED`]) reproduces `NativeEngine::measure_ecr`
+    /// bit for bit; distinct tags give independent batteries.
+    pub seed: u64,
+}
+
+impl EcrRequest {
+    pub fn new(bank: ColumnBank, calib: Calibration, m: usize, samples: u32) -> Self {
+        Self { bank, calib, m, samples, seed: ECR_MASTER_SEED }
+    }
+
+    /// Same request on a distinct stream domain.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Request against an existing subarray's sense amps + environment.
+    pub fn from_subarray(
+        sub: &Subarray,
+        bank_seed: u64,
+        calib: Calibration,
+        m: usize,
+        samples: u32,
+    ) -> Self {
+        Self::new(ColumnBank::from_subarray(sub, bank_seed), calib, m, samples)
+    }
+
+    pub fn cols(&self) -> usize {
+        self.bank.cols()
+    }
+}
+
+/// The banks of (part of) a device, described by seeds — the unit the
+/// coordinator hands to an engine in one batched call.
+#[derive(Clone, Debug)]
+pub struct BankBatch {
+    pub cfg: DeviceConfig,
+    /// Columns per bank.
+    pub cols: usize,
+    /// One variation-field seed per bank.
+    pub seeds: Vec<u64>,
+}
+
+impl BankBatch {
+    /// Per-bank seeds derived from one device seed — the same
+    /// derivation the native and PJRT experiment paths have always
+    /// used, so batched runs see identical variation fields.
+    pub fn from_device_seed(cfg: DeviceConfig, cols: usize, device_seed: u64, banks: usize) -> Self {
+        let seeds = (0..banks)
+            .map(|b| derive_seed(device_seed, &[0, b as u64, 0]))
+            .collect();
+        Self { cfg, cols, seeds }
+    }
+
+    /// Batch over explicit per-bank seeds.
+    pub fn with_seeds(cfg: DeviceConfig, cols: usize, seeds: Vec<u64>) -> Self {
+        Self { cfg, cols, seeds }
+    }
+
+    pub fn len(&self) -> usize {
+        self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seeds.is_empty()
+    }
+
+    /// Materialise the banks (variation fields drawn from the seeds).
+    pub fn banks(&self) -> Vec<ColumnBank> {
+        self.seeds
+            .iter()
+            .map(|&s| ColumnBank::new(&self.cfg, self.cols, s))
+            .collect()
+    }
+
+    /// One calibration request per bank, all under the same config.
+    /// Draws the variation fields afresh — when issuing several phases
+    /// over the same batch, materialise [`Self::banks`] once and use
+    /// [`Self::calib_requests_for`] instead.
+    pub fn calib_requests(&self, config: FracConfig, params: CalibParams) -> Vec<CalibRequest> {
+        Self::calib_requests_for(&self.banks(), config, params)
+    }
+
+    /// [`Self::calib_requests`] over already-materialised banks.
+    pub fn calib_requests_for(
+        banks: &[ColumnBank],
+        config: FracConfig,
+        params: CalibParams,
+    ) -> Vec<CalibRequest> {
+        banks
+            .iter()
+            .map(|bank| CalibRequest::new(bank.clone(), config, params))
+            .collect()
+    }
+
+    /// One ECR request per bank (`calibs` pairs with the banks; pass
+    /// the output of [`CalibEngine::calibrate_batch`]). Draws the
+    /// variation fields afresh — see [`Self::ecr_requests_for`].
+    pub fn ecr_requests(
+        &self,
+        calibs: &[Calibration],
+        m: usize,
+        samples: u32,
+    ) -> Vec<EcrRequest> {
+        assert_eq!(calibs.len(), self.len(), "one calibration per bank");
+        Self::ecr_requests_for(&self.banks(), calibs, m, samples)
+    }
+
+    /// [`Self::ecr_requests`] over already-materialised banks.
+    pub fn ecr_requests_for(
+        banks: &[ColumnBank],
+        calibs: &[Calibration],
+        m: usize,
+        samples: u32,
+    ) -> Vec<EcrRequest> {
+        assert_eq!(calibs.len(), banks.len(), "one calibration per bank");
+        banks
+            .iter()
+            .zip(calibs)
+            .map(|(bank, calib)| EcrRequest::new(bank.clone(), calib.clone(), m, samples))
+            .collect()
+    }
+}
+
+/// A calibration + measurement backend.
+///
+/// Batch methods are the primitive: implementations are free to
+/// exploit the whole request slice (worker-pool fan-out, stacking
+/// banks into one executable call). The `_one` forms are sugar.
+pub trait CalibEngine {
+    /// Short backend tag for logs/reports ("native", "pjrt", ...).
+    fn backend(&self) -> &'static str;
+
+    /// Algorithm 1 for every request, results in request order.
+    fn calibrate_batch(&self, reqs: &[CalibRequest]) -> Result<Vec<Calibration>>;
+
+    /// ECR battery for every request, results in request order.
+    fn measure_ecr_batch(&self, reqs: &[EcrRequest]) -> Result<Vec<EcrReport>>;
+
+    /// Single-bank sugar over [`Self::calibrate_batch`].
+    fn calibrate_one(&self, req: &CalibRequest) -> Result<Calibration> {
+        let mut out = self.calibrate_batch(std::slice::from_ref(req))?;
+        anyhow::ensure!(out.len() == 1, "engine returned {} results for 1 request", out.len());
+        Ok(out.pop().unwrap())
+    }
+
+    /// Single-bank sugar over [`Self::measure_ecr_batch`].
+    fn measure_ecr_one(&self, req: &EcrRequest) -> Result<EcrReport> {
+        let mut out = self.measure_ecr_batch(std::slice::from_ref(req))?;
+        anyhow::ensure!(out.len() == 1, "engine returned {} results for 1 request", out.len());
+        Ok(out.pop().unwrap())
+    }
+}
+
+/// Engines pass through shared references, so generic consumers (e.g.
+/// `DeviceCoordinator<E>`) can borrow an engine owned elsewhere.
+impl<E: CalibEngine + ?Sized> CalibEngine for &E {
+    fn backend(&self) -> &'static str {
+        (**self).backend()
+    }
+
+    fn calibrate_batch(&self, reqs: &[CalibRequest]) -> Result<Vec<Calibration>> {
+        (**self).calibrate_batch(reqs)
+    }
+
+    fn measure_ecr_batch(&self, reqs: &[EcrRequest]) -> Result<Vec<EcrReport>> {
+        (**self).measure_ecr_batch(reqs)
+    }
+}
+
+impl NativeEngine {
+    /// Split the worker budget across `jobs` concurrent per-request
+    /// kernels: request-grain fan-out uses up to `threads` workers and
+    /// any leftover budget goes to tile fan-out inside each kernel, so
+    /// small batches still saturate the pool without oversubscribing.
+    fn inner_threads(&self, jobs: usize) -> usize {
+        (self.threads / jobs.max(1)).max(1)
+    }
+}
+
+/// The native column-tiled kernel behind the trait.
+///
+/// A single request keeps the engine's own tile fan-out (`threads`
+/// workers across column tiles); multiple requests fan across the pool
+/// at bank grain, with the pool split across the per-request kernels
+/// when the batch is smaller than the pool. Execution shape never
+/// changes results (address-derived streams; see `calib::algorithm`).
+impl CalibEngine for NativeEngine {
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+
+    fn calibrate_batch(&self, reqs: &[CalibRequest]) -> Result<Vec<Calibration>> {
+        if reqs.len() == 1 {
+            let r = &reqs[0];
+            let mut eng = self.clone();
+            return Ok(vec![eng.calibrate_columns(&r.bank.sa, &r.bank.env, &r.config, &r.params)]);
+        }
+        let inner = self.inner_threads(reqs.len());
+        Ok(worker::parallel_map((0..reqs.len()).collect(), self.threads, |i| {
+            let r = &reqs[i];
+            let mut eng = NativeEngine::with_parallelism(self.cfg.clone(), self.tile_cols, inner);
+            eng.calibrate_columns(&r.bank.sa, &r.bank.env, &r.config, &r.params)
+        }))
+    }
+
+    fn measure_ecr_batch(&self, reqs: &[EcrRequest]) -> Result<Vec<EcrReport>> {
+        if reqs.len() == 1 {
+            let r = &reqs[0];
+            let mut eng = self.clone();
+            return Ok(vec![eng.measure_ecr_columns(
+                &r.bank.sa, &r.bank.env, &r.calib, r.m, r.samples, r.seed,
+            )]);
+        }
+        let inner = self.inner_threads(reqs.len());
+        Ok(worker::parallel_map((0..reqs.len()).collect(), self.threads, |i| {
+            let r = &reqs[i];
+            let mut eng = NativeEngine::with_parallelism(self.cfg.clone(), self.tile_cols, inner);
+            eng.measure_ecr_columns(&r.bank.sa, &r.bank.env, &r.calib, r.m, r.samples, r.seed)
+        }))
+    }
+}
+
+/// Runtime-selected backend: one concrete type service code can hold
+/// while staying backend-agnostic.
+pub enum AnyEngine {
+    Native(NativeEngine),
+    Pjrt(PjrtEngine),
+}
+
+impl AnyEngine {
+    /// The native golden-model engine (always available).
+    pub fn native(cfg: DeviceConfig) -> Self {
+        AnyEngine::Native(NativeEngine::new(cfg))
+    }
+
+    /// The PJRT engine over an opened runtime.
+    pub fn pjrt(rt: Arc<Runtime>, cfg: DeviceConfig) -> Self {
+        AnyEngine::Pjrt(PjrtEngine::new(rt, cfg))
+    }
+
+    /// Open the PJRT runtime, falling back to native with a notice
+    /// when the AOT artifacts are unavailable (offline checkouts, the
+    /// vendored `xla` stub).
+    pub fn auto(cfg: DeviceConfig) -> Self {
+        match Runtime::open_default() {
+            Ok(rt) => Self::pjrt(Arc::new(rt), cfg),
+            Err(e) => {
+                eprintln!("note: PJRT artifacts unavailable ({e}); using native engine");
+                Self::native(cfg)
+            }
+        }
+    }
+
+    /// Execution metrics (PJRT backend only).
+    pub fn metrics(&self) -> Option<&Metrics> {
+        match self {
+            AnyEngine::Pjrt(e) => Some(e.metrics.as_ref()),
+            AnyEngine::Native(_) => None,
+        }
+    }
+}
+
+impl CalibEngine for AnyEngine {
+    fn backend(&self) -> &'static str {
+        match self {
+            AnyEngine::Native(e) => e.backend(),
+            AnyEngine::Pjrt(e) => e.backend(),
+        }
+    }
+
+    fn calibrate_batch(&self, reqs: &[CalibRequest]) -> Result<Vec<Calibration>> {
+        match self {
+            AnyEngine::Native(e) => e.calibrate_batch(reqs),
+            AnyEngine::Pjrt(e) => e.calibrate_batch(reqs),
+        }
+    }
+
+    fn measure_ecr_batch(&self, reqs: &[EcrRequest]) -> Result<Vec<EcrReport>> {
+        match self {
+            AnyEngine::Native(e) => e.measure_ecr_batch(reqs),
+            AnyEngine::Pjrt(e) => e.measure_ecr_batch(reqs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::lattice::FracConfig;
+
+    fn cfg() -> DeviceConfig {
+        DeviceConfig::default()
+    }
+
+    #[test]
+    fn batch_matches_singles_bit_for_bit() {
+        let cfg = cfg();
+        let eng = NativeEngine::new(cfg.clone());
+        let batch = BankBatch::from_device_seed(cfg, 512, 0xBB, 3);
+        let reqs = batch.calib_requests(FracConfig::pudtune([2, 1, 0]), CalibParams::quick());
+        let batched = eng.calibrate_batch(&reqs).unwrap();
+        for (r, b) in reqs.iter().zip(&batched) {
+            assert_eq!(eng.calibrate_one(r).unwrap().levels, b.levels);
+        }
+        let ereqs = batch.ecr_requests(&batched, 5, 1024);
+        let reports = eng.measure_ecr_batch(&ereqs).unwrap();
+        for (r, rep) in ereqs.iter().zip(&reports) {
+            assert_eq!(eng.measure_ecr_one(r).unwrap().error_counts, rep.error_counts);
+        }
+    }
+
+    #[test]
+    fn trait_path_matches_inherent_subarray_path() {
+        use crate::config::system::SystemConfig;
+        let cfg = cfg();
+        let mut sys = SystemConfig::small();
+        sys.cols = 512;
+        let sub = Subarray::new(&cfg, &sys, 0x5EED);
+        let fc = FracConfig::pudtune([2, 1, 0]);
+        let p = CalibParams::quick();
+        let mut inherent = NativeEngine::new(cfg.clone());
+        let a = inherent.calibrate(&sub, &fc, &p);
+        let ra = inherent.measure_ecr(&sub, &a, 5, 1024);
+
+        let eng = NativeEngine::new(cfg);
+        let b = eng.calibrate_one(&CalibRequest::from_subarray(&sub, 0x5EED, fc, p)).unwrap();
+        let rb = eng
+            .measure_ecr_one(&EcrRequest::from_subarray(&sub, 0x5EED, b.clone(), 5, 1024))
+            .unwrap();
+        assert_eq!(a.levels, b.levels);
+        assert_eq!(ra.error_counts, rb.error_counts);
+    }
+
+    #[test]
+    fn bank_batch_seeds_match_legacy_derivation() {
+        let batch = BankBatch::from_device_seed(cfg(), 64, 42, 4);
+        for (b, &s) in batch.seeds.iter().enumerate() {
+            assert_eq!(s, derive_seed(42, &[0, b as u64, 0]));
+        }
+        assert_eq!(batch.len(), 4);
+        assert!(!batch.is_empty());
+        assert_eq!(batch.banks().len(), 4);
+    }
+
+    #[test]
+    fn ecr_request_default_seed_is_the_inherent_battery() {
+        let bank = ColumnBank::new(&cfg(), 64, 1);
+        let calib = FracConfig::baseline(3).uncalibrated(&cfg(), 64);
+        let req = EcrRequest::new(bank, calib, 5, 256);
+        assert_eq!(req.seed, ECR_MASTER_SEED);
+        assert_eq!(req.with_seed(7).seed, 7);
+    }
+}

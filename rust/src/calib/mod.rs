@@ -12,15 +12,20 @@
 //!   and uniform-space decision cutoffs keep the inner loop to one
 //!   word draw + popcount + compare per sample (module docs there
 //!   spell out the stream contract);
+//! * [`engine`] — the backend-agnostic [`engine::CalibEngine`] trait:
+//!   batch-first request/response types executed by the native kernel,
+//!   the PJRT AOT path, or whatever backend comes next — the API the
+//!   coordinator, sweeps, CLI and examples are written against;
 //! * [`store`] — non-volatile persistence of identified calibration
 //!   data (paper §III-A: stored bit patterns are reusable across
 //!   reboots), as JSON;
-//! * [`sweep`] — Frac-configuration sweeps (Fig. 5), parallel across
-//!   configs on the worker pool, and the one-off variation-model fit
-//!   against Table I's baseline.
+//! * [`sweep`] — Frac-configuration sweeps (Fig. 5), batched through
+//!   the engine trait, and the one-off variation-model fit against
+//!   Table I's baseline.
 
 pub mod algorithm;
 pub mod bias;
+pub mod engine;
 pub mod lattice;
 pub mod store;
 pub mod sweep;

@@ -1,13 +1,19 @@
 //! Frac-configuration sweeps (Fig. 5) and the one-off variation-model
 //! fit (EXPERIMENTS.md §Model-Fit).
 //!
-//! Sweeps fan the per-config calibrate+measure jobs across the worker
-//! pool: calibration never mutates the subarray and every sampling
-//! stream is address-derived (`calib::algorithm` module docs), so the
-//! parallel sweep is bit-identical to the sequential one.
+//! Sweeps are expressed as request batches against the backend-agnostic
+//! [`CalibEngine`] trait: one calibration request and one ECR request
+//! per Frac configuration, submitted in two batched calls. The engine
+//! owns the parallelism (the native backend fans the requests across
+//! the worker pool); every sampling stream is address-derived
+//! (`calib::algorithm` module docs), so the batched sweep is
+//! bit-identical to the sequential one.
+
+use anyhow::Result;
 
 use crate::analysis::throughput::ThroughputModel;
-use crate::calib::algorithm::{CalibParams, NativeEngine};
+use crate::calib::algorithm::{CalibParams, NativeEngine, DEFAULT_TILE_COLS};
+use crate::calib::engine::{CalibEngine, CalibRequest, EcrRequest};
 use crate::calib::lattice::FracConfig;
 use crate::config::device::DeviceConfig;
 use crate::config::system::SystemConfig;
@@ -46,7 +52,7 @@ pub struct SweepPoint {
 
 /// Run the Fig. 5 sweep on one subarray: calibrate under each config
 /// (baselines skip identification) and measure ECR + MAJ5 throughput,
-/// with configs fanned across the default worker pool.
+/// submitted to the default native engine as request batches.
 pub fn sweep_configs(
     cfg: &DeviceConfig,
     sys: &SystemConfig,
@@ -69,18 +75,43 @@ pub fn sweep_configs_threads(
     configs: &[FracConfig],
     threads: usize,
 ) -> Vec<SweepPoint> {
+    let engine = NativeEngine::with_parallelism(cfg.clone(), DEFAULT_TILE_COLS, threads);
+    sweep_configs_with(&engine, sys, sub, params, ecr_samples, configs)
+        .expect("the native engine is infallible")
+}
+
+/// The engine-generic sweep: one [`CalibRequest`] and one [`EcrRequest`]
+/// per configuration, two batched calls total — the backend decides how
+/// to execute them (worker-pool fan-out, fused executable calls, ...).
+pub fn sweep_configs_with<E: CalibEngine>(
+    engine: &E,
+    sys: &SystemConfig,
+    sub: &Subarray,
+    params: &CalibParams,
+    ecr_samples: u32,
+    configs: &[FracConfig],
+) -> Result<Vec<SweepPoint>> {
     let tput = ThroughputModel::new(sys);
-    worker::parallel_map(configs.to_vec(), threads, |fc| {
-        // One serial engine per config job: the sweep already owns the
-        // coarse-grain parallelism, so tile fan-out inside each batch
-        // would only add scheduling overhead.
-        let mut eng = NativeEngine::serial(cfg.clone());
-        let calib = eng.calibrate(sub, &fc, params);
-        let ecr = eng.measure_ecr(sub, &calib, 5, ecr_samples).ecr();
-        let cost = tput.majx(5, &fc);
-        let maj5_ops = tput.ops_per_sec(&cost, 1.0 - ecr);
-        SweepPoint { config: fc, ecr, maj5_ops }
-    })
+    let creqs: Vec<CalibRequest> = configs
+        .iter()
+        .map(|fc| CalibRequest::from_subarray(sub, 0, *fc, *params))
+        .collect();
+    let calibs = engine.calibrate_batch(&creqs)?;
+    let ereqs: Vec<EcrRequest> = calibs
+        .iter()
+        .map(|calib| EcrRequest::from_subarray(sub, 0, calib.clone(), 5, ecr_samples))
+        .collect();
+    let reports = engine.measure_ecr_batch(&ereqs)?;
+    Ok(configs
+        .iter()
+        .zip(&reports)
+        .map(|(fc, rep)| {
+            let ecr = rep.ecr();
+            let cost = tput.majx(5, fc);
+            let maj5_ops = tput.ops_per_sec(&cost, 1.0 - ecr);
+            SweepPoint { config: *fc, ecr, maj5_ops }
+        })
+        .collect())
 }
 
 /// Closed-form ECR estimate for the *baseline* configuration under a
@@ -114,10 +145,13 @@ pub fn fit_sigma_sa(
     for _ in 0..12 {
         let mid = 0.5 * (lo + hi);
         cfg.sigma_sa = mid;
-        let mut eng = NativeEngine::new(cfg.clone());
+        let eng = NativeEngine::new(cfg.clone());
         let sub = Subarray::new(&cfg, sys, seed);
         let base = FracConfig::baseline(3).uncalibrated(&cfg, sub.cols);
-        let ecr = eng.measure_ecr(&sub, &base, 5, 2048).ecr();
+        let ecr = eng
+            .measure_ecr_one(&EcrRequest::from_subarray(&sub, seed, base, 5, 2048))
+            .expect("the native engine is infallible")
+            .ecr();
         if ecr < target_baseline_ecr {
             lo = mid; // need more variation
         } else {
@@ -137,10 +171,13 @@ mod tests {
         let cfg = DeviceConfig::default();
         let mut sys = SystemConfig::small();
         sys.cols = 4096;
-        let mut eng = NativeEngine::new(cfg.clone());
+        let eng = NativeEngine::new(cfg.clone());
         let sub = Subarray::new(&cfg, &sys, 3);
         let base = FracConfig::baseline(3).uncalibrated(&cfg, sub.cols);
-        let sim = eng.measure_ecr(&sub, &base, 5, 2048).ecr();
+        let sim = eng
+            .measure_ecr_one(&EcrRequest::from_subarray(&sub, 3, base, 5, 2048))
+            .unwrap()
+            .ecr();
         let est = baseline_ecr_estimate(&cfg, 3, 3.0);
         assert!((sim - est).abs() < 0.12, "sim={sim} est={est}");
     }
@@ -151,10 +188,13 @@ mod tests {
         let mut sys = SystemConfig::small();
         sys.cols = 2048;
         let fitted = fit_sigma_sa(&cfg, &sys, 0.466, 5);
-        let mut eng = NativeEngine::new(fitted.clone());
+        let eng = NativeEngine::new(fitted.clone());
         let sub = Subarray::new(&fitted, &sys, 17);
         let base = FracConfig::baseline(3).uncalibrated(&fitted, sub.cols);
-        let ecr = eng.measure_ecr(&sub, &base, 5, 2048).ecr();
+        let ecr = eng
+            .measure_ecr_one(&EcrRequest::from_subarray(&sub, 17, base, 5, 2048))
+            .unwrap()
+            .ecr();
         assert!((ecr - 0.466).abs() < 0.08, "ecr={ecr}");
     }
 

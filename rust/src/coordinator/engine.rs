@@ -8,21 +8,44 @@
 //! subarray calibration — the same count as the paper's host<->FPGA
 //! round trips. ECR measurement is one call (`maj*_ecr_*`, a scanned
 //! 8,192-sample graph).
+//!
+//! ## Batched multi-bank execution
+//!
+//! Through the [`CalibEngine`] trait this engine is **batch-first**:
+//! when every request in a batch shares its Frac configuration (and,
+//! for calibration, its Algorithm-1 parameters), the banks'
+//! `[cols]`-shaped threshold vectors are stacked into one wide virtual
+//! bank and the whole batch runs as **one executable invocation per
+//! step** — N banks cost the same number of Rust<->PJRT crossings as
+//! one. The AOT graphs already take `[cols]`-shaped threshold inputs,
+//! so fusion is pure argument plumbing; when no artifact matches the
+//! stacked width the engine falls back to per-bank calls and counts
+//! the miss in [`Metrics`] (`pjrt.batch.unfused`).
 
 use anyhow::{anyhow, Result};
+use std::fmt;
 use std::sync::Arc;
 
 use crate::analysis::ecr::EcrReport;
 use crate::calib::algorithm::{const_q, CalibParams, Calibration};
+use crate::calib::engine::{BankBatch, CalibEngine, CalibRequest, EcrRequest};
 use crate::calib::lattice::{ConfigKind, FracConfig, OffsetLattice};
 use crate::config::device::DeviceConfig;
 use crate::config::system::SystemConfig;
 use crate::coordinator::metrics::Metrics;
 use crate::dram::sense_amp::SenseAmps;
+use crate::dram::subarray::Subarray;
 use crate::dram::temperature::Environment;
 use crate::runtime::buffers;
 use crate::runtime::{Executable, Runtime};
 use crate::util::rng::{derive_seed, Rng};
+
+/// Master-seed tag of the MAJ5 measurement battery (the stream domain
+/// `DeviceCoordinator::run_banks` measures Table I's MAJ5 columns on).
+pub const ECR_SEED_MAJ5: u64 = 0xECB;
+/// Master-seed tag of the MAJ3 battery used for the arithmetic
+/// (MAJ5 ∧ MAJ3) intersection.
+pub const ECR_SEED_ARITH: u64 = 0xEC3;
 
 /// The coordinator's view of one subarray on the PJRT path: the
 /// sense-amplifier state (thresholds) and environment — cell charges
@@ -44,6 +67,13 @@ impl ColumnBank {
             env: Environment::nominal(cfg.t_cal),
             seed,
         }
+    }
+
+    /// Snapshot an existing subarray's sense amps + environment (the
+    /// sampling paths never read cell charges). `seed` is the seed the
+    /// subarray was built from; it selects PJRT stream domains.
+    pub fn from_subarray(sub: &Subarray, seed: u64) -> Self {
+        Self { sa: sub.sa.clone(), env: sub.env, seed }
     }
 
     pub fn thresholds(&self, cfg: &DeviceConfig) -> Vec<f32> {
@@ -165,6 +195,192 @@ impl PjrtEngine {
             total as u32,
         ))
     }
+
+    /// Fold the batch's per-bank seeds into one stream selector for a
+    /// fused call (each bank's columns occupy distinct positions of the
+    /// stacked vector, so per-column streams stay distinct).
+    fn fold_bank_seeds(seeds: impl Iterator<Item = u64>) -> u64 {
+        seeds.fold(0u64, |acc, s| derive_seed(acc, &[s]))
+    }
+
+    /// Fused Algorithm 1: stack every request's thresholds into one
+    /// wide virtual bank and run the whole batch as one executable
+    /// call per iteration. Returns `None` when the batch is not
+    /// fusable (mixed configs/params, or no artifact matches the
+    /// stacked width).
+    fn try_calibrate_fused(&self, reqs: &[CalibRequest]) -> Result<Option<Vec<Calibration>>> {
+        let first = &reqs[0];
+        if reqs.len() < 2
+            || first.config.kind == ConfigKind::Baseline
+            || !reqs.iter().all(|r| r.config == first.config && r.params == first.params)
+        {
+            return Ok(None);
+        }
+        let total: usize = reqs.iter().map(|r| r.bank.cols()).sum();
+        let Ok(exe) = self.find(5, "step", total) else {
+            // Fusable batch, but no artifact for the stacked width —
+            // the miss the `pjrt.batch.unfused` metric tracks.
+            self.metrics.incr("pjrt.batch.unfused");
+            return Ok(None);
+        };
+        let params = &first.params;
+        let lattice = OffsetLattice::build(&self.cfg, &first.config);
+        let mut fused = Calibration::uniform(lattice, total);
+        let mut thr = Vec::with_capacity(total);
+        for r in reqs {
+            thr.extend(r.bank.thresholds(&self.cfg));
+        }
+        let thr_lit = buffers::f32_vec(&thr);
+        let folded = Self::fold_bank_seeds(reqs.iter().map(|r| r.bank.seed));
+        for iter in 0..params.iterations {
+            let seed = derive_seed(params.seed, &[folded, iter as u64]) as u32;
+            let mut args = vec![buffers::u32_scalar(seed)];
+            args.extend(self.lattice_args(&fused)?);
+            args.push(buffers::f32_scalar(const_q(5) as f32));
+            args.push(thr_lit.clone());
+            args.push(buffers::f32_scalar(self.cfg.sigma_noise as f32));
+            args.push(buffers::f32_scalar(params.tau as f32));
+            args.push(buffers::f32_scalar(1.0)); // update
+            let out = self.metrics.time("pjrt.step", || exe.run(&args))?;
+            self.metrics.incr("pjrt.step.calls");
+            self.metrics.add("pjrt.step.banks_fused", reqs.len() as u64);
+            let new_levels = buffers::to_i32_vec(&out[0])?;
+            for (lv, nl) in fused.levels.iter_mut().zip(&new_levels) {
+                *lv = *nl as u8;
+            }
+        }
+        Ok(Some(split_levels(&fused, reqs.iter().map(|r| r.bank.cols()))))
+    }
+
+    /// Fused ECR battery for one group of requests sharing (m, config,
+    /// seed tag): one executable call for all banks. `None` when no
+    /// artifact matches the stacked width.
+    fn try_measure_ecr_fused(
+        &self,
+        reqs: &[EcrRequest],
+        group: &[usize],
+    ) -> Result<Option<Vec<EcrReport>>> {
+        let total: usize = group.iter().map(|&i| reqs[i].bank.cols()).sum();
+        let first = &reqs[group[0]];
+        let Ok(exe) = self.find(first.m, "ecr", total) else {
+            // Fusable group, but no artifact for the stacked width.
+            self.metrics.incr("pjrt.batch.unfused");
+            return Ok(None);
+        };
+        let total_samples = exe
+            .meta_usize("total_samples")
+            .ok_or_else(|| anyhow!("ecr artifact missing total_samples"))?;
+        let mut fused = Calibration {
+            lattice: first.calib.lattice.clone(),
+            levels: Vec::with_capacity(total),
+        };
+        let mut thr = Vec::with_capacity(total);
+        for &i in group {
+            let r = &reqs[i];
+            debug_assert_eq!(r.calib.cols(), r.bank.cols());
+            fused.levels.extend_from_slice(&r.calib.levels);
+            thr.extend(r.bank.thresholds(&self.cfg));
+        }
+        let folded = Self::fold_bank_seeds(group.iter().map(|&i| reqs[i].bank.seed));
+        let seed32 = derive_seed(first.seed, &[folded, first.m as u64]) as u32;
+        let mut args = vec![buffers::u32_scalar(seed32)];
+        args.extend(self.lattice_args(&fused)?);
+        args.push(buffers::f32_scalar(const_q(first.m) as f32));
+        args.push(buffers::f32_vec(&thr));
+        args.push(buffers::f32_scalar(self.cfg.sigma_noise as f32));
+        let out = self.metrics.time("pjrt.ecr", || exe.run(&args))?;
+        self.metrics.incr("pjrt.ecr.calls");
+        self.metrics.add("pjrt.ecr.banks_fused", group.len() as u64);
+        let err = buffers::to_i32_vec(&out[0])?;
+        let counts: Vec<u32> = err.into_iter().map(|e| e.max(0) as u32).collect();
+        let mut reports = Vec::with_capacity(group.len());
+        let mut off = 0;
+        for &i in group {
+            let cols = reqs[i].bank.cols();
+            reports.push(EcrReport::from_error_counts(
+                counts[off..off + cols].to_vec(),
+                total_samples as u32,
+            ));
+            off += cols;
+        }
+        Ok(Some(reports))
+    }
+}
+
+/// Split a fused (stacked) calibration back into per-bank calibrations.
+fn split_levels(fused: &Calibration, widths: impl Iterator<Item = usize>) -> Vec<Calibration> {
+    let mut out = Vec::new();
+    let mut off = 0;
+    for cols in widths {
+        out.push(Calibration {
+            lattice: fused.lattice.clone(),
+            levels: fused.levels[off..off + cols].to_vec(),
+        });
+        off += cols;
+    }
+    debug_assert_eq!(off, fused.cols());
+    out
+}
+
+impl CalibEngine for PjrtEngine {
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn calibrate_batch(&self, reqs: &[CalibRequest]) -> Result<Vec<Calibration>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if let Some(fused) = self.try_calibrate_fused(reqs)? {
+            return Ok(fused);
+        }
+        reqs.iter()
+            .map(|r| self.calibrate(&r.bank, &r.config, &r.params))
+            .collect()
+    }
+
+    fn measure_ecr_batch(&self, reqs: &[EcrRequest]) -> Result<Vec<EcrReport>> {
+        let mut out: Vec<Option<EcrReport>> = (0..reqs.len()).map(|_| None).collect();
+        let mut grouped = vec![false; reqs.len()];
+        for i in 0..reqs.len() {
+            if grouped[i] {
+                continue;
+            }
+            grouped[i] = true;
+            // Requests fuse when they share the operand count, the
+            // lattice configuration and the stream-domain tag.
+            let mut group = vec![i];
+            for j in i + 1..reqs.len() {
+                if !grouped[j]
+                    && reqs[j].m == reqs[i].m
+                    && reqs[j].seed == reqs[i].seed
+                    && reqs[j].calib.lattice.config == reqs[i].calib.lattice.config
+                {
+                    grouped[j] = true;
+                    group.push(j);
+                }
+            }
+            let fused = if group.len() >= 2 {
+                self.try_measure_ecr_fused(reqs, &group)?
+            } else {
+                None
+            };
+            match fused {
+                Some(reports) => {
+                    for (&k, rep) in group.iter().zip(reports) {
+                        out[k] = Some(rep);
+                    }
+                }
+                None => {
+                    for &k in &group {
+                        let r = &reqs[k];
+                        out[k] = Some(self.measure_ecr(&r.bank, &r.calib, r.m, r.seed)?);
+                    }
+                }
+            }
+        }
+        Ok(out.into_iter().map(|o| o.expect("all requests answered")).collect())
+    }
 }
 
 /// Per-bank measurement outcome (the unit Table I aggregates).
@@ -179,15 +395,22 @@ pub struct BankOutcome {
     pub ecr_arith_tune: f64,
 }
 
-/// Device-level coordinator: fans per-bank jobs across workers.
-pub struct DeviceCoordinator {
+/// Device-level coordinator over any [`CalibEngine`] backend.
+///
+/// Builds whole-device request batches and hands them to the engine in
+/// one call per phase, so batching decisions (worker-pool fan-out on
+/// the native engine, stacked-bank executable calls on PJRT) live with
+/// the backend — coordination is backend-agnostic, and coordinating
+/// the *native* engine is just `DeviceCoordinator::new(cfg, sys,
+/// NativeEngine::new(cfg))`.
+pub struct DeviceCoordinator<E> {
     pub cfg: DeviceConfig,
     pub sys: SystemConfig,
-    pub engine: Arc<PjrtEngine>,
+    pub engine: E,
 }
 
-impl DeviceCoordinator {
-    pub fn new(cfg: DeviceConfig, sys: SystemConfig, engine: Arc<PjrtEngine>) -> Self {
+impl<E: CalibEngine> DeviceCoordinator<E> {
+    pub fn new(cfg: DeviceConfig, sys: SystemConfig, engine: E) -> Self {
         Self { cfg, sys, engine }
     }
 
@@ -198,30 +421,16 @@ impl DeviceCoordinator {
         base: &FracConfig,
         tune: &FracConfig,
         params: &CalibParams,
+        ecr_samples: u32,
     ) -> Result<BankOutcome> {
-        let bank = ColumnBank::new(&self.cfg, self.sys.cols, bank_seed);
-        let base_cal = base.uncalibrated(&self.cfg, bank.cols());
-        let tune_cal = self.engine.calibrate(&bank, tune, params)?;
-        let e5b = self.engine.measure_ecr(&bank, &base_cal, 5, 0xECB)?;
-        let e5t = self.engine.measure_ecr(&bank, &tune_cal, 5, 0xECB)?;
-        let e3b = self.engine.measure_ecr(&bank, &base_cal, 3, 0xEC3)?;
-        let e3t = self.engine.measure_ecr(&bank, &tune_cal, 3, 0xEC3)?;
-        Ok(BankOutcome {
-            bank_seed,
-            ecr5_base: e5b.ecr(),
-            ecr5_tune: e5t.ecr(),
-            ecr_arith_base: e5b.intersect(&e3b).ecr(),
-            ecr_arith_tune: e5t.intersect(&e3t).ecr(),
-        })
+        let batch = BankBatch::with_seeds(self.cfg.clone(), self.sys.cols, vec![bank_seed]);
+        let mut outcomes = self.run_batch(&batch, base, tune, params, ecr_samples)?;
+        Ok(outcomes.pop().expect("one bank in, one outcome out"))
     }
 
-    /// All banks of the configured system.
-    ///
-    /// Sequential over banks: the `xla` crate's PJRT client is not
-    /// `Send`/`Sync` (an `Rc` inside the C wrapper), and the CPU PJRT
-    /// backend is internally threaded anyway — the native engine path
-    /// (`experiments::run_table1`) is the one that fans banks across
-    /// the worker pool.
+    /// All banks of the configured system, in two engine calls: one
+    /// batched calibration, then one batched ECR phase covering every
+    /// (bank, config, MAJ-m) combination.
     pub fn run_banks(
         &self,
         device_seed: u64,
@@ -229,27 +438,105 @@ impl DeviceCoordinator {
         base: &FracConfig,
         tune: &FracConfig,
         params: &CalibParams,
-        _threads: usize,
+        ecr_samples: u32,
     ) -> Result<Vec<BankOutcome>> {
-        (0..banks)
-            .map(|b| {
-                let seed = derive_seed(device_seed, &[0, b as u64, 0]);
-                self.bank_outcome(seed, base, tune, params)
+        let batch =
+            BankBatch::from_device_seed(self.cfg.clone(), self.sys.cols, device_seed, banks);
+        self.run_batch(&batch, base, tune, params, ecr_samples)
+    }
+
+    /// Calibrate + measure an explicit bank batch.
+    pub fn run_batch(
+        &self,
+        batch: &BankBatch,
+        base: &FracConfig,
+        tune: &FracConfig,
+        params: &CalibParams,
+        ecr_samples: u32,
+    ) -> Result<Vec<BankOutcome>> {
+        let n = batch.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        // Materialise the variation fields once; every request below
+        // snapshots from this one set of banks.
+        let banks = batch.banks();
+        let tuned = self
+            .engine
+            .calibrate_batch(&BankBatch::calib_requests_for(&banks, *tune, *params))?;
+        let base_cal = base.uncalibrated(&self.cfg, batch.cols);
+        // One ECR phase: (base, tune) x (MAJ5, MAJ3) for every bank —
+        // 4N requests the engine may fuse into as few as 4 calls.
+        let mut reqs = Vec::with_capacity(4 * n);
+        for (m, seed) in [(5usize, ECR_SEED_MAJ5), (3usize, ECR_SEED_ARITH)] {
+            for bank in &banks {
+                reqs.push(
+                    EcrRequest::new(bank.clone(), base_cal.clone(), m, ecr_samples)
+                        .with_seed(seed),
+                );
+            }
+            for (bank, cal) in banks.iter().zip(&tuned) {
+                reqs.push(
+                    EcrRequest::new(bank.clone(), cal.clone(), m, ecr_samples).with_seed(seed),
+                );
+            }
+        }
+        let reports = self.engine.measure_ecr_batch(&reqs)?;
+        let (e5b, e5t) = (&reports[..n], &reports[n..2 * n]);
+        let (e3b, e3t) = (&reports[2 * n..3 * n], &reports[3 * n..4 * n]);
+        Ok((0..n)
+            .map(|i| BankOutcome {
+                bank_seed: batch.seeds[i],
+                ecr5_base: e5b[i].ecr(),
+                ecr5_tune: e5t[i].ecr(),
+                ecr_arith_base: e5b[i].intersect(&e3b[i]).ecr(),
+                ecr_arith_tune: e5t[i].intersect(&e3t[i]).ecr(),
             })
-            .collect()
+            .collect())
     }
 }
 
-/// Mean ECRs across bank outcomes: (maj5 base, maj5 tune, arith base,
-/// arith tune).
-pub fn mean_ecrs(outcomes: &[BankOutcome]) -> (f64, f64, f64, f64) {
-    let n = outcomes.len().max(1) as f64;
-    (
-        outcomes.iter().map(|o| o.ecr5_base).sum::<f64>() / n,
-        outcomes.iter().map(|o| o.ecr5_tune).sum::<f64>() / n,
-        outcomes.iter().map(|o| o.ecr_arith_base).sum::<f64>() / n,
-        outcomes.iter().map(|o| o.ecr_arith_tune).sum::<f64>() / n,
-    )
+/// Mean ECRs across a device's bank outcomes — the aggregate Table I
+/// reports per configuration pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BankSummary {
+    /// Number of banks aggregated.
+    pub banks: usize,
+    /// Mean MAJ5 ECR, baseline configuration.
+    pub ecr5_base: f64,
+    /// Mean MAJ5 ECR, PUDTune configuration.
+    pub ecr5_tune: f64,
+    /// Mean arithmetic (MAJ5 ∧ MAJ3) ECR, baseline.
+    pub ecr_arith_base: f64,
+    /// Mean arithmetic (MAJ5 ∧ MAJ3) ECR, PUDTune.
+    pub ecr_arith_tune: f64,
+}
+
+impl BankSummary {
+    pub fn from_outcomes(outcomes: &[BankOutcome]) -> Self {
+        let n = outcomes.len().max(1) as f64;
+        Self {
+            banks: outcomes.len(),
+            ecr5_base: outcomes.iter().map(|o| o.ecr5_base).sum::<f64>() / n,
+            ecr5_tune: outcomes.iter().map(|o| o.ecr5_tune).sum::<f64>() / n,
+            ecr_arith_base: outcomes.iter().map(|o| o.ecr_arith_base).sum::<f64>() / n,
+            ecr_arith_tune: outcomes.iter().map(|o| o.ecr_arith_tune).sum::<f64>() / n,
+        }
+    }
+}
+
+impl fmt::Display for BankSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} banks: MAJ5 ECR {:.2}% -> {:.2}%, arith ECR {:.2}% -> {:.2}%",
+            self.banks,
+            self.ecr5_base * 100.0,
+            self.ecr5_tune * 100.0,
+            self.ecr_arith_base * 100.0,
+            self.ecr_arith_tune * 100.0
+        )
+    }
 }
 
 #[cfg(test)]
@@ -267,7 +554,7 @@ mod tests {
     }
 
     #[test]
-    fn mean_ecr_aggregation() {
+    fn bank_summary_aggregation_and_display() {
         let o = |b: f64, t: f64| BankOutcome {
             bank_seed: 0,
             ecr5_base: b,
@@ -275,10 +562,28 @@ mod tests {
             ecr_arith_base: b,
             ecr_arith_tune: t,
         };
-        let (b5, t5, ba, ta) = mean_ecrs(&[o(0.4, 0.04), o(0.6, 0.02)]);
-        assert!((b5 - 0.5).abs() < 1e-12);
-        assert!((t5 - 0.03).abs() < 1e-12);
-        assert_eq!(ba, b5);
-        assert_eq!(ta, t5);
+        let s = BankSummary::from_outcomes(&[o(0.4, 0.04), o(0.6, 0.02)]);
+        assert_eq!(s.banks, 2);
+        assert!((s.ecr5_base - 0.5).abs() < 1e-12);
+        assert!((s.ecr5_tune - 0.03).abs() < 1e-12);
+        assert_eq!(s.ecr_arith_base, s.ecr5_base);
+        assert_eq!(s.ecr_arith_tune, s.ecr5_tune);
+        let text = s.to_string();
+        assert!(text.contains("2 banks"), "{text}");
+        assert!(text.contains("50.00% -> 3.00%"), "{text}");
+    }
+
+    #[test]
+    fn column_bank_snapshot_tracks_environment() {
+        use crate::config::system::SystemConfig;
+        let cfg = DeviceConfig::default();
+        let mut sys = SystemConfig::small();
+        sys.cols = 128;
+        let mut sub = crate::dram::subarray::Subarray::new(&cfg, &sys, 5);
+        sub.set_temperature(88.0);
+        let bank = ColumnBank::from_subarray(&sub, 5);
+        assert_eq!(bank.env, sub.env);
+        assert_eq!(bank.thresholds(&cfg), sub.sa.effective_thresholds(&cfg, &sub.env));
+        assert_eq!(bank.cols(), 128);
     }
 }

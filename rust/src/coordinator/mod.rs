@@ -10,7 +10,9 @@
 //! the analysis layer turns into Table I / Figs. 5-6.
 //!
 //! * [`engine`] — PJRT-backed calibration + ECR engine (one Algorithm-1
-//!   iteration per executable call) and the device-level coordinator;
+//!   iteration per executable call, multi-bank batches fused into one
+//!   call) and the device-level coordinator, generic over any
+//!   [`crate::calib::engine::CalibEngine`] backend;
 //! * [`worker`] — std::thread scoped worker pool (`parallel_map`);
 //! * [`batcher`] — generic micro-batching queue (used by the e2e GEMV
 //!   serving example);

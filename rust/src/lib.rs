@@ -28,23 +28,49 @@
 //!
 //! ## Quickstart
 //!
+//! All calibration work goes through the backend-agnostic
+//! [`calib::engine::CalibEngine`] trait: describe banks as requests,
+//! submit them in batches, and let the engine decide how to execute —
+//! the native kernel fans a batch across the worker pool; the PJRT
+//! backend stacks the banks' thresholds into one executable call.
+//!
 //! ```no_run
 //! use pudtune::prelude::*;
 //!
-//! // A 1024-column subarray with seeded process variation.
+//! // Pick a backend at runtime: PJRT when AOT artifacts are present,
+//! // the native column-tiled kernel otherwise. Everything below is
+//! // written against the `CalibEngine` trait, so either works.
 //! let cfg = DeviceConfig::default();
-//! let sys = SystemConfig::small();
-//! let sub = Subarray::new(&cfg, &sys, 7 /* seed */);
+//! let engine = AnyEngine::auto(cfg.clone());
 //!
-//! // Baseline B_{3,0,0} vs calibrated T_{2,1,0} error-prone ratio.
-//! let base = FracConfig::baseline(3);
+//! // Four 1024-column banks with seeded process variation, calibrated
+//! // for T_{2,1,0} in one batched call (Algorithm 1 per bank).
+//! let banks = BankBatch::from_device_seed(cfg.clone(), 1024, 7 /* seed */, 4);
 //! let tune = FracConfig::pudtune([2, 1, 0]);
-//! let mut engine = NativeEngine::new(cfg.clone());
-//! let calib = engine.calibrate(&sub, &tune, &CalibParams::paper());
-//! let base_cal = base.uncalibrated(&cfg, sub.cols);
-//! let ecr_base = engine.measure_ecr(&sub, &base_cal, 5, 8192);
-//! let ecr_tune = engine.measure_ecr(&sub, &calib, 5, 8192);
-//! assert!(ecr_tune.ecr() < ecr_base.ecr());
+//! let calibs = engine
+//!     .calibrate_batch(&banks.calib_requests(tune, CalibParams::paper()))
+//!     .unwrap();
+//!
+//! // Measure the calibrated MAJ5 error-prone column ratio, again one
+//! // batched call (paper §IV-A: 8,192 random patterns per bank).
+//! let reports = engine
+//!     .measure_ecr_batch(&banks.ecr_requests(&calibs, 5, 8192))
+//!     .unwrap();
+//! let base = FracConfig::baseline(3).uncalibrated(&cfg, 1024);
+//! for (bank, tuned) in banks.banks().into_iter().zip(&reports) {
+//!     let req = EcrRequest::new(bank, base.clone(), 5, 8192);
+//!     let baseline = engine.measure_ecr_one(&req).unwrap();
+//!     assert!(tuned.ecr() < baseline.ecr());
+//! }
+//!
+//! // Whole-device orchestration (Table I's pipeline) is one call on
+//! // the engine-generic coordinator:
+//! let sys = SystemConfig::small();
+//! let coord = DeviceCoordinator::new(cfg.clone(), sys, engine);
+//! let outcomes = coord
+//!     .run_banks(7, 4, &FracConfig::baseline(3), &tune, &CalibParams::paper(), 8192)
+//!     .unwrap();
+//! println!("{}", BankSummary::from_outcomes(&outcomes));
 //! ```
 //!
 //! The `pudtune` binary exposes every experiment in the paper
@@ -63,16 +89,24 @@ pub mod pud;
 pub mod runtime;
 pub mod util;
 
-/// Convenience re-exports for the common experiment workflow.
+/// Convenience re-exports for the common experiment workflow, so
+/// service-style callers need no deep module paths: the engine trait
+/// and its request types, both backends, the coordinator and the
+/// non-volatile calibration store.
 pub mod prelude {
     pub use crate::analysis::ecr::EcrReport;
     pub use crate::analysis::throughput::{ThroughputModel, ThroughputReport};
     pub use crate::calib::algorithm::{CalibParams, Calibration, NativeEngine};
+    pub use crate::calib::engine::{AnyEngine, BankBatch, CalibEngine, CalibRequest, EcrRequest};
     pub use crate::calib::lattice::{FracConfig, OffsetLattice};
+    pub use crate::calib::store::CalibStore;
     pub use crate::config::device::DeviceConfig;
     pub use crate::config::system::SystemConfig;
-    pub use crate::dram::subarray::Subarray;
+    pub use crate::coordinator::engine::{
+        BankOutcome, BankSummary, ColumnBank, DeviceCoordinator, PjrtEngine,
+    };
     pub use crate::dram::device::Device;
+    pub use crate::dram::subarray::Subarray;
     pub use crate::pud::majx::MajX;
     pub use crate::util::rng::Rng;
 }

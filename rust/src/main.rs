@@ -21,7 +21,8 @@ use anyhow::{anyhow, Result};
 use std::sync::Arc;
 
 use pudtune::analysis::report;
-use pudtune::calib::algorithm::{CalibParams, NativeEngine};
+use pudtune::calib::algorithm::CalibParams;
+use pudtune::calib::engine::{AnyEngine, BankBatch, CalibEngine, CalibRequest, EcrRequest};
 use pudtune::calib::lattice::FracConfig;
 use pudtune::calib::store::CalibStore;
 use pudtune::calib::sweep;
@@ -32,7 +33,7 @@ use pudtune::config::{device::DeviceConfig, system::SystemConfig};
 use pudtune::controller::bender::BenderProgram;
 use pudtune::dram::geometry::{RowMap, SubarrayId};
 use pudtune::dram::subarray::Subarray;
-use pudtune::experiments::{self, Engine};
+use pudtune::experiments;
 use pudtune::runtime::Runtime;
 use pudtune::util::table;
 
@@ -100,11 +101,13 @@ fn help() -> Result<()> {
     Ok(())
 }
 
-fn engine_for(args: &cli::Args) -> Engine {
+/// The backend behind the `CalibEngine` trait: `--native` forces the
+/// golden-model kernel, otherwise PJRT with native fallback.
+fn engine_for(args: &cli::Args, cfg: &DeviceConfig) -> AnyEngine {
     if args.flag("native") {
-        Engine::Native
+        AnyEngine::native(cfg.clone())
     } else {
-        Engine::auto()
+        AnyEngine::auto(cfg.clone())
     }
 }
 
@@ -112,7 +115,7 @@ fn cmd_table1(args: &cli::Args) -> Result<()> {
     let (cfg, sys, exp) = load_configs(args)?;
     let base = FracConfig::baseline(3);
     let tune = FracConfig::pudtune(args.fracs("fracs", [2, 1, 0]).map_err(anyhow::Error::msg)?);
-    let engine = engine_for(args);
+    let engine = engine_for(args, &cfg);
     let t0 = std::time::Instant::now();
     let r = experiments::run_table1(&cfg, &sys, &exp, &engine, base, tune)?;
     println!(
@@ -174,7 +177,7 @@ fn cmd_ecr(args: &cli::Args) -> Result<()> {
     } else {
         FracConfig::pudtune(args.fracs("fracs", [2, 1, 0]).map_err(anyhow::Error::msg)?)
     };
-    let mut eng = NativeEngine::new(cfg.clone());
+    let engine = AnyEngine::native(cfg.clone());
     let sub = Subarray::with_geometry(&cfg, 32, sys.cols, exp.seed);
     let params = CalibParams {
         iterations: exp.calib_iterations,
@@ -182,9 +185,22 @@ fn cmd_ecr(args: &cli::Args) -> Result<()> {
         tau: exp.bias_tau,
         seed: exp.seed,
     };
-    let calib = eng.calibrate(&sub, &fc, &params);
-    let rep5 = eng.measure_ecr(&sub, &calib, 5, exp.ecr_samples);
-    let rep3 = eng.measure_ecr(&sub, &calib, 3, exp.ecr_samples);
+    let calib =
+        engine.calibrate_one(&CalibRequest::from_subarray(&sub, exp.seed, fc, params))?;
+    let rep5 = engine.measure_ecr_one(&EcrRequest::from_subarray(
+        &sub,
+        exp.seed,
+        calib.clone(),
+        5,
+        exp.ecr_samples,
+    ))?;
+    let rep3 = engine.measure_ecr_one(&EcrRequest::from_subarray(
+        &sub,
+        exp.seed,
+        calib,
+        3,
+        exp.ecr_samples,
+    ))?;
     println!("config {}  cols {}  samples {}", fc.label(), sys.cols, exp.ecr_samples);
     println!(
         "MAJ5 ECR: {:.2}%  ({} error-prone columns)",
@@ -208,21 +224,28 @@ fn cmd_calibrate(args: &cli::Args) -> Result<()> {
         tau: exp.bias_tau,
         seed: exp.seed,
     };
-    let mut eng = NativeEngine::new(cfg.clone());
+    let engine = AnyEngine::native(cfg.clone());
     let mut store = CalibStore::default();
     let t0 = std::time::Instant::now();
-    for b in 0..exp.banks {
-        let id = SubarrayId::new(0, b, 0);
-        let seed = pudtune::util::rng::derive_seed(exp.seed, &id.seed_path());
-        let sub = Subarray::with_geometry(&cfg, 32, sys.cols, seed);
-        let calib = eng.calibrate(&sub, &fc, &params);
-        let rep = eng.measure_ecr(&sub, &calib, 5, exp.ecr_samples);
+    // Whole-device batch: one calibration call and one ECR call; the
+    // engine fans the banks across the worker pool.
+    let ids: Vec<SubarrayId> = (0..exp.banks).map(|b| SubarrayId::new(0, b, 0)).collect();
+    let seeds: Vec<u64> = ids
+        .iter()
+        .map(|id| pudtune::util::rng::derive_seed(exp.seed, &id.seed_path()))
+        .collect();
+    let batch = BankBatch::with_seeds(cfg.clone(), sys.cols, seeds);
+    let banks = batch.banks();
+    let calibs = engine.calibrate_batch(&BankBatch::calib_requests_for(&banks, fc, params))?;
+    let reports = engine
+        .measure_ecr_batch(&BankBatch::ecr_requests_for(&banks, &calibs, 5, exp.ecr_samples))?;
+    for (b, ((id, calib), rep)) in ids.iter().zip(&calibs).zip(&reports).enumerate() {
         println!("bank {b}: ECR {:.2}% after calibration", rep.ecr() * 100.0);
-        store.insert(id, &calib);
+        store.insert(*id, calib);
     }
     if args.flag("timed") {
         println!(
-            "calibration wall-clock: {:.2}s for {} subarrays ({:.2}s each; paper: ~60s each on DRAM Bender)",
+            "calibration wall-clock: {:.2}s for {} subarrays, batched ({:.2}s amortised each; paper: ~60s each on DRAM Bender)",
             t0.elapsed().as_secs_f64(),
             exp.banks,
             t0.elapsed().as_secs_f64() / exp.banks as f64
