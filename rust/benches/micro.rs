@@ -1,8 +1,9 @@
 //! Micro-benchmarks of the hot paths (the §Perf iteration targets):
 //! native sampling batch, calibration sweep, batched `CalibEngine`
 //! calls (native fan-out and fused multi-bank PJRT execution),
-//! golden-model SiMRA, PJRT step/ECR calls, circuit evaluation, and
-//! the PRNG.
+//! golden-model SiMRA, hybrid row storage (packed vs dense-reference
+//! RowCopy/SiMRA and an end-to-end `calibrate_columns` case), PJRT
+//! step/ECR calls, circuit evaluation, and the PRNG.
 //!
 //! Every case is recorded into `BENCH_calib.json` (written to the
 //! working directory) so the repo's perf trajectory is machine
@@ -163,6 +164,47 @@ fn main() {
         gsub.simra_into(&rows, &mut simra_out);
         std::hint::black_box(simra_out[0]);
     });
+
+    // Hybrid row storage: packed RowCopy / SiMRA vs the dense-f32
+    // reference model (the seed's per-cell implementation), plus an
+    // end-to-end calibrate_columns case so the perf trajectory records
+    // this path.
+    let mut hsub = Subarray::with_geometry(&cfg, 64, 8192, 12);
+    let copy_packed = suite.bench("storage/rowcopy-packed-8192", 3, 50, || {
+        hsub.row_copy(0, 1);
+        std::hint::black_box(hsub.charge(1, 0));
+    });
+    let mut hout = vec![0u8; 8192];
+    let simra_packed = suite.bench("storage/simra-packed-8192", 2, 20, || {
+        hsub.simra_into(&rows, &mut hout);
+        std::hint::black_box(hout[0]);
+    });
+    let mut ceng = NativeEngine::serial(cfg.clone());
+    suite.bench("storage/calibrate-columns-2048", 0, 3, || {
+        let c = ceng.calibrate_columns(&esub.sa, &esub.env, &fc, &CalibParams::quick());
+        std::hint::black_box(c.levels[0]);
+    });
+    #[cfg(feature = "reference-model")]
+    {
+        use pudtune::dram::dense::DenseSubarray;
+        let mut dsub = DenseSubarray::with_geometry(&cfg, 64, 8192, 12);
+        let copy_dense = suite.bench("storage/rowcopy-dense-8192", 3, 50, || {
+            dsub.row_copy(0, 1);
+            std::hint::black_box(dsub.charge(1, 0));
+        });
+        suite.derive("storage_rowcopy_speedup", copy_dense.min_s / copy_packed.min_s);
+        let mut dout = vec![0u8; 8192];
+        let simra_dense = suite.bench("storage/simra-dense-8192", 2, 20, || {
+            dsub.simra_into(&rows, &mut dout);
+            std::hint::black_box(dout[0]);
+        });
+        suite.derive("storage_simra_speedup", simra_dense.min_s / simra_packed.min_s);
+    }
+    #[cfg(not(feature = "reference-model"))]
+    {
+        let _ = (copy_packed, simra_packed);
+        println!("(reference-model feature off; skipping dense storage benches)");
+    }
 
     // Full native calibration of one 8,192-column subarray.
     let mut eng2 = NativeEngine::new(cfg.clone());

@@ -31,6 +31,17 @@
 //! comparisons and the statistical-equivalence test. Mass experiments
 //! use the PJRT path (`coordinator::engine`) which executes the same
 //! graphs as AOT artifacts.
+//!
+//! ## Row-storage independence
+//!
+//! The sampling kernel never touches cell storage: `calibrate_columns`
+//! and `measure_ecr_columns` read only the sense-amp bank and the
+//! environment, and synthesize operand patterns arithmetically. The
+//! subarray's hybrid bit-packed/analog row representation
+//! (`dram::subarray`) is therefore invisible here by construction —
+//! calibrating through the dense reference model's sense amps yields
+//! bit-identical levels (pinned by a representation-independence unit
+//! test below and by the storage parity suite).
 
 use crate::analysis::ecr::EcrReport;
 use crate::calib::bias::{BiasAccumulator, BiasTileMut};
@@ -569,6 +580,29 @@ mod tests {
         assert!(low_n > 50 && high_n > 50, "not enough extreme columns");
         assert!(low_ok as f64 > 0.8 * low_n as f64, "{low_ok}/{low_n}");
         assert!(high_ok as f64 > 0.8 * high_n as f64, "{high_ok}/{high_n}");
+    }
+
+    #[test]
+    fn calibration_is_storage_representation_independent() {
+        // Algorithm 1 and the ECR battery read only (sense amps,
+        // environment): running them against the hybrid subarray and
+        // against the dense reference model built from the same seed
+        // must agree bit for bit.
+        use crate::dram::dense::DenseSubarray;
+        let cfg = DeviceConfig::default();
+        let mut sys = SystemConfig::small();
+        sys.cols = 512;
+        let hyb = Subarray::new(&cfg, &sys, 0x5709);
+        let den = DenseSubarray::new(&cfg, &sys, 0x5709);
+        let fc = FracConfig::pudtune([2, 1, 0]);
+        let p = CalibParams::quick();
+        let mut eng = NativeEngine::new(cfg);
+        let a = eng.calibrate(&hyb, &fc, &p);
+        let b = eng.calibrate_columns(&den.sa, &den.env, &fc, &p);
+        assert_eq!(a.levels, b.levels);
+        let ra = eng.measure_ecr(&hyb, &a, 5, 2048);
+        let rb = eng.measure_ecr_columns(&den.sa, &den.env, &b, 5, 2048, ECR_MASTER_SEED);
+        assert_eq!(ra.error_counts, rb.error_counts);
     }
 
     #[test]

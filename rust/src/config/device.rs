@@ -41,6 +41,26 @@ pub struct DeviceConfig {
     pub drift_per_hour: f64,
     /// Temperature at which devices are calibrated, °C.
     pub t_cal: f64,
+    /// Cell-charge retention time constant, hours: one `advance_time`
+    /// interval of `dt` hours multiplies every cell's deviation from
+    /// the neutral state by `exp(-dt / tau)` (see `dram::retention`).
+    /// `INFINITY` (the default) disables charge decay entirely, which
+    /// is the pre-retention model behaviour.
+    pub tau_retention_hours: f64,
+    /// Minimum retained swing fraction below which a full-swing row is
+    /// no longer reliably restored by refresh: if one `advance_time`
+    /// interval decays the swing factor below this threshold, the row's
+    /// data degrades to the decayed analog levels instead of snapping
+    /// back to the rails (`dram::subarray` module docs, "Retention").
+    ///
+    /// Note the semantics are **per `advance_time` call**: each call
+    /// models one refresh-window check, so full-swing retention is
+    /// deliberately *not* step-granularity invariant (unlike aging
+    /// drift) — one `advance_time(T)` can degrade a row that many
+    /// small steps summing to `T` would keep refreshed. Callers
+    /// modelling a refresh interval should advance time in steps of
+    /// that interval.
+    pub retention_swing_min: f64,
 }
 
 impl Default for DeviceConfig {
@@ -68,6 +88,8 @@ impl Default for DeviceConfig {
             tempco_jitter: 4.0e-6,
             drift_per_hour: 1.2e-5,
             t_cal: 45.0,
+            tau_retention_hours: f64::INFINITY,
+            retention_swing_min: 0.9,
         }
     }
 }
@@ -111,6 +133,15 @@ impl DeviceConfig {
         cfg.tail_weight = f("tail_weight")?;
         cfg.tail_ratio = f("tail_ratio")?;
         cfg.sigma_noise = f("sigma_noise")?;
+        // Retention keys are optional: physics.json files emitted
+        // before the hybrid-storage model omit them, and the defaults
+        // (no decay) reproduce the old behaviour exactly.
+        if let Some(v) = j.get("tau_retention_hours").as_f64() {
+            cfg.tau_retention_hours = v;
+        }
+        if let Some(v) = j.get("retention_swing_min").as_f64() {
+            cfg.retention_swing_min = v;
+        }
         Ok(cfg)
     }
 }
@@ -162,6 +193,24 @@ mod tests {
         assert!(c.frac_charge(0.0, 1) < c.frac_charge(0.0, 0) + 1.0);
         assert!(c.frac_charge(0.0, 2) > c.frac_charge(0.0, 1));
         assert!(c.frac_charge(1.0, 2) < c.frac_charge(1.0, 1));
+    }
+
+    #[test]
+    fn retention_defaults_disable_decay() {
+        let d = DeviceConfig::default();
+        assert!(d.tau_retention_hours.is_infinite());
+        assert!((0.0..=1.0).contains(&d.retention_swing_min));
+    }
+
+    #[test]
+    fn physics_json_retention_keys_parse_when_present() {
+        use crate::util::json;
+        let src = r#"{"cc_ff":30.0,"cb_ff":270.0,"v_pre":0.5,"simra_rows":8,
+            "frac_r":0.65,"sigma_sa":0.0284,"tail_weight":0.1,"tail_ratio":2.5,
+            "sigma_noise":0.002,"tau_retention_hours":64.0,"retention_swing_min":0.8}"#;
+        let cfg = DeviceConfig::from_physics_json(&json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg.tau_retention_hours, 64.0);
+        assert_eq!(cfg.retention_swing_min, 0.8);
     }
 
     #[test]

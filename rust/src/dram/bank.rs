@@ -38,6 +38,19 @@ impl Bank {
     pub fn subarray_mut(&mut self, i: usize) -> &mut Subarray {
         &mut self.subarrays[i]
     }
+
+    /// Approximate heap bytes of all subarrays' cell-state storage
+    /// (capacity reports; dominated by any analog rows, see
+    /// `Subarray::approx_bytes`).
+    pub fn approx_bytes(&self) -> usize {
+        self.subarrays.iter().map(|s| s.approx_bytes()).sum()
+    }
+
+    /// Rows across the bank currently holding intermediate (analog)
+    /// charge — the quantity that controls the memory footprint.
+    pub fn analog_rows(&self) -> usize {
+        self.subarrays.iter().map(|s| s.analog_rows()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -55,6 +68,20 @@ mod tests {
             b.subarray(0).sa.variation.sa_offset,
             b.subarray(1).sa.variation.sa_offset
         );
+    }
+
+    #[test]
+    fn fresh_banks_are_fully_packed() {
+        let cfg = DeviceConfig::default();
+        let mut sys = SystemConfig::small();
+        sys.subarrays_per_bank = 2;
+        let mut b = Bank::new(&cfg, &sys, 7, 0, 0);
+        assert_eq!(b.analog_rows(), 0);
+        // Packed storage: far below one f32 per cell.
+        let dense = 2 * sys.rows_per_subarray * sys.cols * 4;
+        assert!(b.approx_bytes() * 4 < dense, "{} vs {dense}", b.approx_bytes());
+        b.subarray_mut(0).frac(3);
+        assert_eq!(b.analog_rows(), 1);
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! The dense-`f32` reference golden model.
+//!
+//! [`DenseSubarray`] is the pre-hybrid `Subarray` implementation — one
+//! `f32` charge per cell, per-cell loops on every primitive — kept as
+//! the executable specification the bit-packed hybrid model
+//! (`dram::subarray`) is validated against. The storage parity suite
+//! (`rust/tests/storage_parity.rs`) drives both models through
+//! identical command traces and asserts bit-identical read-outs, equal
+//! [`OpCounts`] and equal noise-stream positions.
+//!
+//! Semantics shared with the hybrid model (and *only* expressible as a
+//! per-row state machine, not derivable from cell values alone): the
+//! `full_swing` flag mirrors the hybrid `Packed`/`Analog` split. It is
+//! set by every restore (read, SiMRA, RowCopy) and by
+//! `write_row`/`fill_row`, cleared by `frac`, and governs retention:
+//! full-swing rows are refreshed (they hold their rails while one
+//! `advance_time` interval retains at least
+//! `DeviceConfig::retention_swing_min` of the swing), Frac'd rows decay
+//! unconditionally — refresh would destroy their intermediate levels.
+//!
+//! Compiled only under `cfg(test)` or the `reference-model` feature
+//! (default-on), so production builds can drop it with
+//! `--no-default-features`.
+
+use crate::config::device::DeviceConfig;
+use crate::config::system::SystemConfig;
+use crate::dram::retention;
+use crate::dram::sense_amp::SenseAmps;
+use crate::dram::subarray::OpCounts;
+use crate::dram::temperature::Environment;
+use crate::util::rng::Rng;
+
+/// The dense-storage reference subarray (one `f32` per cell).
+#[derive(Clone, Debug)]
+pub struct DenseSubarray {
+    pub cfg: DeviceConfig,
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major cell charges, `rows * cols`, V_DD units in [0, 1].
+    charges: Vec<f32>,
+    pub sa: SenseAmps,
+    pub env: Environment,
+    /// Per-operation noise stream.
+    rng: Rng,
+    pub counts: OpCounts,
+    /// Per-row full-swing state (see module docs).
+    full_swing: Vec<bool>,
+    /// Reusable row-width scratch (RowCopy sense buffer).
+    row_buf: Vec<u8>,
+}
+
+impl DenseSubarray {
+    /// Build a subarray with variation drawn from `seed` — the exact
+    /// seeding sequence of the hybrid model, so both see identical
+    /// variation fields and noise streams.
+    pub fn new(cfg: &DeviceConfig, sys: &SystemConfig, seed: u64) -> Self {
+        Self::with_geometry(cfg, sys.rows_per_subarray, sys.cols, seed)
+    }
+
+    pub fn with_geometry(cfg: &DeviceConfig, rows: usize, cols: usize, seed: u64) -> Self {
+        let mut field_rng = Rng::new(seed);
+        let sa = SenseAmps::new(cfg, cols, &mut field_rng);
+        Self {
+            cfg: cfg.clone(),
+            rows,
+            cols,
+            charges: vec![0.0; rows * cols],
+            sa,
+            env: Environment::nominal(cfg.t_cal),
+            rng: field_rng.child(&[0xC0FFEE]),
+            counts: OpCounts::default(),
+            full_swing: vec![true; rows],
+            row_buf: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn idx(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.rows && col < self.cols);
+        row * self.cols + col
+    }
+
+    /// Raw charge access.
+    pub fn charge(&self, row: usize, col: usize) -> f32 {
+        self.charges[self.idx(row, col)]
+    }
+
+    /// Materialised charge vector of one row (signature-compatible with
+    /// the hybrid model for the parity suite).
+    pub fn row_charges(&self, row: usize) -> Vec<f32> {
+        self.charges[row * self.cols..(row + 1) * self.cols].to_vec()
+    }
+
+    /// Whether a row is in the full-swing state (mirrors the hybrid
+    /// model's packed representation).
+    pub fn row_is_packed(&self, row: usize) -> bool {
+        self.full_swing[row]
+    }
+
+    /// Number of rows currently holding intermediate charge.
+    pub fn analog_rows(&self) -> usize {
+        self.full_swing.iter().filter(|&&p| !p).count()
+    }
+
+    /// Heap bytes held by the cell-state storage (the footprint test
+    /// compares this against the hybrid model).
+    pub fn approx_bytes(&self) -> usize {
+        self.charges.capacity() * std::mem::size_of::<f32>()
+            + self.full_swing.capacity() * std::mem::size_of::<bool>()
+    }
+
+    /// Digest of the per-operation noise-stream position.
+    pub fn rng_fingerprint(&self) -> u64 {
+        self.rng.fingerprint()
+    }
+
+    /// Write full-swing data into a row (column-interface transfer:
+    /// bumps `io_writes` only — `dram::subarray` module docs).
+    pub fn write_row(&mut self, row: usize, bits: &[u8]) {
+        assert_eq!(bits.len(), self.cols);
+        self.counts.io_writes += 1;
+        let base = row * self.cols;
+        for (c, &b) in bits.iter().enumerate() {
+            self.charges[base + c] = if b != 0 { 1.0 } else { 0.0 };
+        }
+        self.full_swing[row] = true;
+    }
+
+    pub fn fill_row(&mut self, row: usize, bit: u8) {
+        self.counts.io_writes += 1;
+        let v = if bit != 0 { 1.0 } else { 0.0 };
+        let base = row * self.cols;
+        self.charges[base..base + self.cols].fill(v);
+        self.full_swing[row] = true;
+    }
+
+    /// Standard activate-and-read (per-cell reference loop).
+    pub fn read_row(&mut self, row: usize) -> Vec<u8> {
+        let mut out = vec![0u8; self.cols];
+        self.read_row_into(row, &mut out);
+        out
+    }
+
+    /// [`Self::read_row`] into a caller-owned buffer.
+    pub fn read_row_into(&mut self, row: usize, out: &mut [u8]) {
+        assert_eq!(out.len(), self.cols, "row buffer width must equal columns");
+        self.counts.activates += 1;
+        self.counts.precharges += 1;
+        let base = row * self.cols;
+        for c in 0..self.cols {
+            let v = self.cfg.bitline_voltage(self.charges[base + c] as f64, 1);
+            let bit = self.sa.sense(&self.cfg, &self.env, c, v, &mut self.rng);
+            out[c] = bit as u8;
+            self.charges[base + c] = if bit { 1.0 } else { 0.0 };
+        }
+        self.full_swing[row] = true;
+    }
+
+    /// RowCopy (ACT src - violated PRE - ACT dst), per-cell reference.
+    pub fn row_copy(&mut self, src: usize, dst: usize) {
+        self.counts.row_copies += 1;
+        // read_row_into accounts one ACT/PRE; the second ACT opens dst.
+        self.counts.activates += 1;
+        let mut buf = std::mem::take(&mut self.row_buf);
+        buf.resize(self.cols, 0);
+        self.read_row_into(src, &mut buf);
+        let base = dst * self.cols;
+        for (c, &b) in buf.iter().enumerate() {
+            self.charges[base + c] = if b != 0 { 1.0 } else { 0.0 };
+        }
+        self.full_swing[dst] = true;
+        self.row_buf = buf;
+    }
+
+    /// Frac (ACT with early PRE): partial charging toward neutral.
+    pub fn frac(&mut self, row: usize) {
+        self.counts.fracs += 1;
+        self.counts.activates += 1;
+        self.counts.precharges += 1;
+        let r = self.cfg.frac_r as f32;
+        let base = row * self.cols;
+        for q in &mut self.charges[base..base + self.cols] {
+            *q = 0.5 + (*q - 0.5) * r;
+        }
+        self.full_swing[row] = false;
+    }
+
+    /// Simultaneous multi-row activation (per-cell reference loop).
+    pub fn simra(&mut self, rows: &[usize]) -> Vec<u8> {
+        let mut out = vec![0u8; self.cols];
+        self.simra_into(rows, &mut out);
+        out
+    }
+
+    /// [`Self::simra`] into a caller-owned buffer.
+    pub fn simra_into(&mut self, rows: &[usize], out: &mut [u8]) {
+        assert!(
+            rows.len() == self.cfg.simra_rows,
+            "SiMRA opens exactly {} rows (decoder glitch)",
+            self.cfg.simra_rows
+        );
+        assert_eq!(out.len(), self.cols, "row buffer width must equal columns");
+        self.counts.simras += 1;
+        self.counts.activates += 2; // ACT-PRE-ACT decoder glitch sequence
+        self.counts.precharges += 1;
+        for c in 0..self.cols {
+            let total: f64 = rows
+                .iter()
+                .map(|&r| self.charges[self.idx(r, c)] as f64)
+                .sum();
+            let v = self.cfg.bitline_voltage(total, rows.len());
+            let bit = self.sa.sense(&self.cfg, &self.env, c, v, &mut self.rng);
+            out[c] = bit as u8;
+            let q = if bit { 1.0 } else { 0.0 };
+            for &r in rows {
+                let i = self.idx(r, c);
+                self.charges[i] = q;
+            }
+        }
+        for &r in rows {
+            self.full_swing[r] = true;
+        }
+    }
+
+    /// Deterministic SiMRA evaluation with explicit noise; mutates
+    /// nothing.
+    pub fn simra_eval(&self, rows: &[usize], noise: &[f32]) -> Vec<u8> {
+        let mut out = vec![0u8; self.cols];
+        for c in 0..self.cols {
+            let total: f64 = rows
+                .iter()
+                .map(|&r| self.charges[r * self.cols + c] as f64)
+                .sum();
+            let v = self.cfg.bitline_voltage(total, rows.len());
+            let thr = self.sa.threshold(&self.cfg, &self.env, c);
+            out[c] = (v + noise[c] as f64 > thr) as u8;
+        }
+        out
+    }
+
+    /// Set the die temperature (Fig. 6a).
+    pub fn set_temperature(&mut self, temp_c: f64) {
+        self.env.temp_c = temp_c;
+    }
+
+    /// Advance simulated wall-clock time: the same retention state
+    /// machine as the hybrid model, then aging drift.
+    pub fn advance_time(&mut self, dt_hours: f64) {
+        self.env.hours += dt_hours;
+        let f = retention::swing_factor(dt_hours, self.cfg.tau_retention_hours);
+        if f < 1.0 {
+            let fr = f as f32;
+            let refreshable = f >= self.cfg.retention_swing_min;
+            for r in 0..self.rows {
+                if self.full_swing[r] && refreshable {
+                    continue; // refresh restores the rails
+                }
+                self.full_swing[r] = false;
+                let base = r * self.cols;
+                for q in &mut self.charges[base..base + self.cols] {
+                    *q = 0.5 + (*q - 0.5) * fr;
+                }
+            }
+        }
+        let drift_per_hour = self.cfg.drift_per_hour;
+        let mut rng = self.rng.child(&[0xA6E, self.env.hours.to_bits()]);
+        self.sa.drift.advance(dt_hours, drift_per_hour, &mut rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DenseSubarray {
+        let cfg = DeviceConfig::default();
+        DenseSubarray::with_geometry(&cfg, 64, 128, 42)
+    }
+
+    #[test]
+    fn full_swing_flag_follows_state_machine() {
+        let mut s = small();
+        assert!(s.row_is_packed(3));
+        s.frac(3);
+        assert!(!s.row_is_packed(3));
+        s.read_row(3);
+        assert!(s.row_is_packed(3));
+        s.frac(7);
+        assert_eq!(s.analog_rows(), 1);
+        let group: Vec<usize> = (0..8).collect();
+        s.simra(&group);
+        assert_eq!(s.analog_rows(), 0);
+    }
+
+    #[test]
+    fn matches_hybrid_on_a_simple_flow() {
+        // Spot parity (the full randomized suite lives in
+        // rust/tests/storage_parity.rs): same seed, same commands, same
+        // outputs, counts and stream position.
+        use crate::dram::subarray::Subarray;
+        let cfg = DeviceConfig::default();
+        let mut d = DenseSubarray::with_geometry(&cfg, 32, 96, 7);
+        let mut h = Subarray::with_geometry(&cfg, 32, 96, 7);
+        let bits: Vec<u8> = (0..96).map(|c| (c % 5 < 2) as u8).collect();
+        for s in [0usize, 1, 2, 5, 6, 7] {
+            d.fill_row(s, (s % 2) as u8);
+            h.fill_row(s, (s % 2) as u8);
+        }
+        d.write_row(3, &bits);
+        h.write_row(3, &bits);
+        d.frac(4);
+        h.frac(4);
+        d.row_copy(3, 9);
+        h.row_copy(3, 9);
+        let group: Vec<usize> = (0..8).collect();
+        assert_eq!(d.simra(&group), h.simra(&group));
+        assert_eq!(d.read_row(9), h.read_row(9));
+        assert_eq!(d.counts, h.counts);
+        assert_eq!(d.rng_fingerprint(), h.rng_fingerprint());
+        for r in 0..32 {
+            assert_eq!(d.row_charges(r), h.row_charges(r), "row {r}");
+        }
+    }
+}

@@ -11,11 +11,17 @@
 //!   (threshold offsets with heavy tails, tempco jitter);
 //! * [`sense_amp`]  — threshold evaluation under temperature and aging;
 //! * [`subarray`] — the cell array: charges, activation, SiMRA charge
-//!   sharing, Frac partial charging, row copy (the golden model);
+//!   sharing, Frac partial charging, row copy (the golden model, on a
+//!   hybrid bit-packed / analog row storage);
+//! * `dense` — the dense-`f32` reference implementation the hybrid
+//!   storage is validated against (compiled under `cfg(test)` or the
+//!   `reference-model` feature);
 //! * [`bank`], [`device`] — the hierarchy above subarrays;
 //! * [`temperature`], [`retention`] — environment models for Fig. 6.
 
 pub mod bank;
+#[cfg(any(test, feature = "reference-model"))]
+pub mod dense;
 pub mod device;
 pub mod geometry;
 pub mod retention;

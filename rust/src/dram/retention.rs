@@ -1,4 +1,5 @@
-//! Aging / long-term drift (Fig. 6b substrate).
+//! Aging / long-term drift (Fig. 6b substrate) and cell-charge
+//! retention.
 //!
 //! The paper leaves calibrated modules running for a week and counts new
 //! error-prone columns. We model slow per-column threshold drift as a
@@ -7,8 +8,36 @@
 //! column's drift state, so the accumulated drift after T hours has
 //! std-dev `drift_per_hour * sqrt(T)` regardless of step granularity —
 //! checked by the invariance test below.
+//!
+//! Cell-charge retention is a first-order leak toward the neutral
+//! state: [`swing_factor`] gives the multiplicative factor applied to
+//! every cell's deviation from 0.5 over one `advance_time` interval.
+//! How a row *reacts* to the factor depends on its charge state (a
+//! full-swing row is periodically refreshed, a fractionally-charged row
+//! cannot be — refresh would destroy its intermediate levels); that
+//! state machine lives in `dram::subarray` ("Retention" section of the
+//! module docs) and is shared verbatim by the dense reference model.
+//! Unlike drift, the full-swing branch of that state machine is
+//! deliberately **per-interval** (each `advance_time` call models one
+//! refresh-window check against `retention_swing_min`), so it is not
+//! step-granularity invariant — see the
+//! `crate::config::device::DeviceConfig::retention_swing_min` docs.
 
 use crate::util::rng::Rng;
+
+/// Multiplicative swing retention over one `dt_hours` interval:
+/// `exp(-dt / tau)` for a finite positive `tau_hours`, `1.0` (no
+/// decay) for `dt <= 0` or a non-finite/non-positive `tau` — so the
+/// default [`crate::config::device::DeviceConfig`] (`tau = INFINITY`)
+/// reproduces the pre-retention model bit for bit.
+pub fn swing_factor(dt_hours: f64, tau_hours: f64) -> f64 {
+    let decays = dt_hours > 0.0 && tau_hours > 0.0 && tau_hours.is_finite();
+    if decays {
+        (-dt_hours / tau_hours).exp()
+    } else {
+        1.0
+    }
+}
 
 /// Per-column drift state.
 #[derive(Clone, Debug)]
@@ -70,5 +99,26 @@ mod tests {
         let mut rng = Rng::new(1);
         d.advance(0.0, 1.0, &mut rng);
         assert!(d.drift.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn swing_factor_decays_exponentially() {
+        // One time constant retains e^-1 of the swing; factors
+        // compound across intervals.
+        let f1 = swing_factor(8.0, 8.0);
+        assert!((f1 - (-1.0f64).exp()).abs() < 1e-12);
+        let half = swing_factor(4.0, 8.0);
+        assert!((half * half - f1).abs() < 1e-12);
+        // Monotone in dt.
+        assert!(swing_factor(16.0, 8.0) < f1);
+    }
+
+    #[test]
+    fn swing_factor_degenerate_inputs_disable_decay() {
+        assert_eq!(swing_factor(0.0, 8.0), 1.0);
+        assert_eq!(swing_factor(-1.0, 8.0), 1.0);
+        assert_eq!(swing_factor(24.0, f64::INFINITY), 1.0);
+        assert_eq!(swing_factor(24.0, 0.0), 1.0);
+        assert_eq!(swing_factor(24.0, f64::NAN), 1.0);
     }
 }

@@ -1,7 +1,8 @@
-//! The subarray golden model: cells, activation, SiMRA, Frac, RowCopy.
+//! The subarray golden model: cells, activation, SiMRA, Frac, RowCopy —
+//! on a **hybrid bit-packed / analog row storage**.
 //!
-//! A subarray is a `rows x cols` array of cell charges (f32 in [0, 1],
-//! V_DD units) plus its sense amplifiers and environment. All PUD
+//! A subarray is a `rows x cols` array of cell charges (V_DD units in
+//! [0, 1]) plus its sense amplifiers and environment. All PUD
 //! primitives are implemented at analog fidelity:
 //!
 //! * **activate / read** — single-row charge sharing against the
@@ -17,17 +18,73 @@
 //!   which is why PUDTune's flow re-Fracs calibration rows after every
 //!   copy-in — the model enforces the same ordering).
 //!
+//! ## Storage representation
+//!
+//! Only the handful of rows that have been `Frac`'d ever hold
+//! intermediate charge; every other row is restored to full swing after
+//! each ACT / SiMRA / RowCopy. [`RowStorage`] exploits that: a
+//! full-swing row is a bit-packed `Packed(Vec<u64>)` (64 columns per
+//! word, ~30x smaller than one `f32` per cell), and only
+//! fractionally-charged rows carry a dense `Analog(Vec<f32>)` level
+//! vector. Rows transition `Packed -> Analog` on [`Subarray::frac`]
+//! (and on retention decay past the refresh threshold, below) and back
+//! to `Packed` whenever a restore drives them to full swing (read,
+//! SiMRA, RowCopy in either direction).
+//!
+//! The representation is an implementation detail with **no observable
+//! effect**: RowCopy between packed rows is a word-wise `u64` copy, and
+//! SiMRA over an all-packed group computes each column's charge count
+//! with bit-sliced word-parallel counters — but both draw the same
+//! per-column SA noise in the same order and compute the same bitline
+//! voltages as the per-cell loop, so read-outs, [`OpCounts`] and the
+//! noise-stream position are bit-identical to the dense reference
+//! model (`dram::dense::DenseSubarray`, compiled under `cfg(test)` or
+//! the `reference-model` feature; pinned by
+//! `rust/tests/storage_parity.rs`).
+//!
+//! ## Retention
+//!
+//! [`Subarray::advance_time`] applies first-order charge decay
+//! (`dram::retention::swing_factor`, time constant
+//! `DeviceConfig::tau_retention_hours`, default off). Full-swing rows
+//! are periodically refreshed, so they hold their rails as long as one
+//! interval retains at least `DeviceConfig::retention_swing_min` of the
+//! swing; past that threshold a refresh can no longer reliably restore
+//! them and the row degrades to its decayed analog levels. Each
+//! `advance_time` call models one refresh-window check, so callers
+//! should step time at the refresh-interval granularity they intend
+//! (see the `retention_swing_min` docs for the caveat).
+//! Fractionally-charged rows are *never* refreshed (a refresh is an
+//! ACT restore, which would destroy the intermediate levels PUDTune
+//! relies on), so they decay unconditionally.
+//!
+//! ## Operation counting convention
+//!
+//! [`OpCounts`] counts **in-array command sequences**: ACT/PRE pairs,
+//! RowCopy, Frac and SiMRA — the quantities the timing/power models
+//! consume. [`Subarray::write_row`] and [`Subarray::fill_row`] are
+//! column-interface transfers (host WRITE bursts whose timing the
+//! controller accounts separately, see `controller::bender`); they bump
+//! only the informational `io_writes` counter and never ACT/PRE. The
+//! convention is pinned by the `io_write_counting_convention` test.
+//!
 //! Mass experiments run the same arithmetic on the PJRT path; this
 //! model is the reference for correctness (cross-validation test) and
 //! runs all command-level/integration scenarios.
 
 use crate::config::device::DeviceConfig;
 use crate::config::system::SystemConfig;
+use crate::dram::retention;
 use crate::dram::sense_amp::SenseAmps;
 use crate::dram::temperature::Environment;
 use crate::util::rng::Rng;
 
 /// Operation counters (fed to the timing model / reports).
+///
+/// `activates`/`precharges`/`row_copies`/`fracs`/`simras` count
+/// in-array command sequences; `io_writes` counts column-interface row
+/// loads (`write_row`/`fill_row`), which the timing model accounts
+/// separately (module docs, "Operation counting convention").
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpCounts {
     pub activates: u64,
@@ -35,6 +92,51 @@ pub struct OpCounts {
     pub row_copies: u64,
     pub fracs: u64,
     pub simras: u64,
+    pub io_writes: u64,
+}
+
+/// Cell state of one row: bit-packed when the row sits at full swing,
+/// dense analog levels while it holds intermediate charge.
+#[derive(Clone, Debug)]
+pub enum RowStorage {
+    /// Full-swing row: column `c` is bit `c % 64` of word `c / 64`
+    /// (bits at and above the column count are always zero).
+    Packed(Vec<u64>),
+    /// Fractionally-charged row: one charge level per column, V_DD
+    /// units in [0, 1].
+    Analog(Vec<f32>),
+}
+
+impl RowStorage {
+    /// Whether the row is in the bit-packed full-swing representation.
+    #[inline]
+    pub fn is_packed(&self) -> bool {
+        matches!(self, RowStorage::Packed(_))
+    }
+
+    /// Charge of one column. Packed bits are exactly 0.0 / 1.0, so the
+    /// two representations agree bit for bit on every read-out path.
+    #[inline]
+    pub fn charge(&self, col: usize) -> f32 {
+        match self {
+            RowStorage::Packed(w) => ((w[col >> 6] >> (col & 63)) & 1) as f32,
+            RowStorage::Analog(q) => q[col],
+        }
+    }
+
+    /// Heap bytes held by this row's cell state.
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            RowStorage::Packed(w) => w.capacity() * std::mem::size_of::<u64>(),
+            RowStorage::Analog(q) => q.capacity() * std::mem::size_of::<f32>(),
+        }
+    }
+}
+
+/// Packed words needed for one row of `cols` columns.
+#[inline]
+fn words_for(cols: usize) -> usize {
+    cols.div_ceil(64)
 }
 
 /// One simulated subarray.
@@ -43,15 +145,17 @@ pub struct Subarray {
     pub cfg: DeviceConfig,
     pub rows: usize,
     pub cols: usize,
-    /// Row-major cell charges, `rows * cols`, V_DD units in [0, 1].
-    charges: Vec<f32>,
+    /// Per-row hybrid cell state (see module docs).
+    storage: Vec<RowStorage>,
     pub sa: SenseAmps,
     pub env: Environment,
     /// Per-operation noise stream.
     rng: Rng,
     pub counts: OpCounts,
-    /// Reusable row-width scratch (RowCopy sense buffer).
-    row_buf: Vec<u8>,
+    /// Reusable packed decision words (SiMRA restore buffer).
+    decision_buf: Vec<u64>,
+    /// Reusable charge-count -> bitline-voltage table (SiMRA fast path).
+    volt_buf: Vec<f64>,
 }
 
 impl Subarray {
@@ -63,48 +167,107 @@ impl Subarray {
     pub fn with_geometry(cfg: &DeviceConfig, rows: usize, cols: usize, seed: u64) -> Self {
         let mut field_rng = Rng::new(seed);
         let sa = SenseAmps::new(cfg, cols, &mut field_rng);
+        let nwords = words_for(cols);
         Self {
             cfg: cfg.clone(),
             rows,
             cols,
-            charges: vec![0.0; rows * cols],
+            storage: (0..rows).map(|_| RowStorage::Packed(vec![0u64; nwords])).collect(),
             sa,
             env: Environment::nominal(cfg.t_cal),
             rng: field_rng.child(&[0xC0FFEE]),
             counts: OpCounts::default(),
-            row_buf: Vec::new(),
+            decision_buf: Vec::new(),
+            volt_buf: Vec::new(),
         }
-    }
-
-    #[inline]
-    fn idx(&self, row: usize, col: usize) -> usize {
-        debug_assert!(row < self.rows && col < self.cols);
-        row * self.cols + col
     }
 
     /// Raw charge access (tests, cross-validation).
     pub fn charge(&self, row: usize, col: usize) -> f32 {
-        self.charges[self.idx(row, col)]
+        debug_assert!(row < self.rows && col < self.cols);
+        self.storage[row].charge(col)
     }
 
-    pub fn row_charges(&self, row: usize) -> &[f32] {
-        &self.charges[row * self.cols..(row + 1) * self.cols]
+    /// Materialised charge vector of one row (tests; the hot paths
+    /// never materialise packed rows).
+    pub fn row_charges(&self, row: usize) -> Vec<f32> {
+        let st = &self.storage[row];
+        (0..self.cols).map(|c| st.charge(c)).collect()
+    }
+
+    /// Storage representation of one row (introspection for tests,
+    /// benches and capacity accounting).
+    pub fn row_storage(&self, row: usize) -> &RowStorage {
+        &self.storage[row]
+    }
+
+    /// Whether a row currently sits in the packed full-swing
+    /// representation.
+    pub fn row_is_packed(&self, row: usize) -> bool {
+        self.storage[row].is_packed()
+    }
+
+    /// Number of rows currently holding intermediate (analog) charge.
+    pub fn analog_rows(&self) -> usize {
+        self.storage.iter().filter(|s| !s.is_packed()).count()
+    }
+
+    /// Approximate heap bytes held by the cell-state storage (the
+    /// memory-footprint test pins the >=10x win over the dense model).
+    pub fn approx_bytes(&self) -> usize {
+        self.storage.iter().map(|s| s.approx_bytes()).sum::<usize>()
+            + self.storage.capacity() * std::mem::size_of::<RowStorage>()
+    }
+
+    /// Digest of the per-operation noise-stream position (storage
+    /// parity suite: dense and hybrid must consume noise in lockstep).
+    pub fn rng_fingerprint(&self) -> u64 {
+        self.rng.fingerprint()
+    }
+
+    /// Reset `slot` to an all-zero packed row of `nwords` words,
+    /// reusing its allocation when it is already packed.
+    fn packed_slot(slot: &mut RowStorage, nwords: usize) -> &mut Vec<u64> {
+        if let RowStorage::Packed(w) = slot {
+            w.clear();
+            w.resize(nwords, 0);
+        } else {
+            *slot = RowStorage::Packed(vec![0u64; nwords]);
+        }
+        match slot {
+            RowStorage::Packed(w) => w,
+            RowStorage::Analog(_) => unreachable!(),
+        }
     }
 
     /// Write full-swing data into a row (memory-controller WRITE path;
-    /// timing handled by `controller`).
+    /// timing handled by `controller` — see the counting convention in
+    /// the module docs).
     pub fn write_row(&mut self, row: usize, bits: &[u8]) {
         assert_eq!(bits.len(), self.cols);
-        let base = row * self.cols;
+        self.counts.io_writes += 1;
+        let words = Self::packed_slot(&mut self.storage[row], words_for(self.cols));
         for (c, &b) in bits.iter().enumerate() {
-            self.charges[base + c] = if b != 0 { 1.0 } else { 0.0 };
+            if b != 0 {
+                words[c >> 6] |= 1u64 << (c & 63);
+            }
         }
     }
 
     pub fn fill_row(&mut self, row: usize, bit: u8) {
-        let v = if bit != 0 { 1.0 } else { 0.0 };
-        let base = row * self.cols;
-        self.charges[base..base + self.cols].fill(v);
+        self.counts.io_writes += 1;
+        let cols = self.cols;
+        let nwords = words_for(cols);
+        let words = Self::packed_slot(&mut self.storage[row], nwords);
+        if bit != 0 {
+            for w in words.iter_mut() {
+                *w = !0u64;
+            }
+            let tail = cols & 63;
+            if tail != 0 {
+                words[nwords - 1] = (1u64 << tail) - 1;
+            }
+        }
     }
 
     /// Standard activate-and-read: single-row charge share, noisy SA
@@ -121,42 +284,100 @@ impl Subarray {
         assert_eq!(out.len(), self.cols, "row buffer width must equal columns");
         self.counts.activates += 1;
         self.counts.precharges += 1;
-        let base = row * self.cols;
-        for c in 0..self.cols {
-            let v = self.cfg.bitline_voltage(self.charges[base + c] as f64, 1);
-            let bit = self.sa.sense(&self.cfg, &self.env, c, v, &mut self.rng);
-            out[c] = bit as u8;
-            self.charges[base + c] = if bit { 1.0 } else { 0.0 };
-        }
+        self.activate_restore(row, Some(out));
+    }
+
+    /// Core ACT + sense + full-swing restore. Leaves the row `Packed`
+    /// with the sensed decision bits; draws exactly one noise value per
+    /// column, in column order, regardless of representation.
+    fn activate_restore(&mut self, row: usize, mut out: Option<&mut [u8]>) {
+        let cols = self.cols;
+        let st = std::mem::replace(&mut self.storage[row], RowStorage::Packed(Vec::new()));
+        let Self { cfg, sa, env, rng, .. } = self;
+        let restored = match st {
+            RowStorage::Packed(mut words) => {
+                // Only two possible cell voltages on a full-swing row.
+                let v0 = cfg.bitline_voltage(0.0, 1);
+                let v1 = cfg.bitline_voltage(1.0, 1);
+                for c in 0..cols {
+                    let (w, m) = (c >> 6, 1u64 << (c & 63));
+                    let v = if words[w] & m != 0 { v1 } else { v0 };
+                    let bit = sa.sense(cfg, env, c, v, rng);
+                    if bit {
+                        words[w] |= m;
+                    } else {
+                        words[w] &= !m;
+                    }
+                    if let Some(o) = out.as_mut() {
+                        o[c] = bit as u8;
+                    }
+                }
+                RowStorage::Packed(words)
+            }
+            RowStorage::Analog(q) => {
+                let mut words = vec![0u64; words_for(cols)];
+                for c in 0..cols {
+                    let v = cfg.bitline_voltage(q[c] as f64, 1);
+                    let bit = sa.sense(cfg, env, c, v, rng);
+                    if bit {
+                        words[c >> 6] |= 1u64 << (c & 63);
+                    }
+                    if let Some(o) = out.as_mut() {
+                        o[c] = bit as u8;
+                    }
+                }
+                RowStorage::Packed(words)
+            }
+        };
+        self.storage[row] = restored;
     }
 
     /// RowCopy (ACT src - violated PRE - ACT dst): the sensed source
     /// bits are driven into the destination row; the source row is
-    /// restored to full swing.
+    /// restored to full swing. Between full-swing rows the copy itself
+    /// is a word-wise `u64` copy.
     pub fn row_copy(&mut self, src: usize, dst: usize) {
         self.counts.row_copies += 1;
-        // read_row_into accounts one ACT/PRE; the second ACT opens dst.
-        self.counts.activates += 1;
-        let mut buf = std::mem::take(&mut self.row_buf);
-        buf.resize(self.cols, 0);
-        self.read_row_into(src, &mut buf);
-        let base = dst * self.cols;
-        for (c, &b) in buf.iter().enumerate() {
-            self.charges[base + c] = if b != 0 { 1.0 } else { 0.0 };
+        // One ACT/PRE senses and restores the source; the second ACT
+        // opens the destination (same accounting as the dense model).
+        self.counts.activates += 2;
+        self.counts.precharges += 1;
+        self.activate_restore(src, None);
+        if src == dst {
+            return;
         }
-        self.row_buf = buf;
+        let (lo, hi) = self.storage.split_at_mut(src.max(dst));
+        let (s, d) = if src < dst {
+            (&lo[src], &mut hi[0])
+        } else {
+            (&hi[0], &mut lo[dst])
+        };
+        match (s, d) {
+            (RowStorage::Packed(sw), RowStorage::Packed(dw)) => dw.copy_from_slice(sw),
+            (RowStorage::Packed(sw), slot) => *slot = RowStorage::Packed(sw.clone()),
+            (RowStorage::Analog(_), _) => unreachable!("restored source row is packed"),
+        }
     }
 
     /// Frac (ACT with early PRE): partial charging pulls every cell of
-    /// the row toward the neutral state by the factor `frac_r`.
+    /// the row toward the neutral state by the factor `frac_r`. The row
+    /// enters (or stays in) the analog representation.
     pub fn frac(&mut self, row: usize) {
         self.counts.fracs += 1;
         self.counts.activates += 1;
         self.counts.precharges += 1;
         let r = self.cfg.frac_r as f32;
-        let base = row * self.cols;
-        for q in &mut self.charges[base..base + self.cols] {
-            *q = 0.5 + (*q - 0.5) * r;
+        let cols = self.cols;
+        match &mut self.storage[row] {
+            RowStorage::Analog(q) => {
+                for v in q.iter_mut() {
+                    *v = 0.5 + (*v - 0.5) * r;
+                }
+            }
+            slot => {
+                let q: Vec<f32> = (0..cols).map(|c| 0.5 + (slot.charge(c) - 0.5) * r).collect();
+                *slot = RowStorage::Analog(q);
+            }
         }
     }
 
@@ -170,6 +391,14 @@ impl Subarray {
     }
 
     /// [`Self::simra`] into a caller-owned buffer.
+    ///
+    /// When every opened row is packed, the per-column charge sum is a
+    /// bit-sliced popcount over the opened words and the restore is a
+    /// word-wise store of the decision words — the per-cell loop runs
+    /// only when an opened row holds analog charge. Both paths draw one
+    /// noise value per column in column order and compute identical
+    /// voltages (an integer cell-count sum is exact in either
+    /// representation), so results are bit-identical.
     pub fn simra_into(&mut self, rows: &[usize], out: &mut [u8]) {
         assert!(
             rows.len() == self.cfg.simra_rows,
@@ -180,20 +409,69 @@ impl Subarray {
         self.counts.simras += 1;
         self.counts.activates += 2; // ACT-PRE-ACT decoder glitch sequence
         self.counts.precharges += 1;
-        for c in 0..self.cols {
-            let total: f64 = rows
-                .iter()
-                .map(|&r| self.charges[self.idx(r, c)] as f64)
-                .sum();
-            let v = self.cfg.bitline_voltage(total, rows.len());
-            let bit = self.sa.sense(&self.cfg, &self.env, c, v, &mut self.rng);
-            out[c] = bit as u8;
-            let q = if bit { 1.0 } else { 0.0 };
-            for &r in rows {
-                let i = self.idx(r, c);
-                self.charges[i] = q;
+        let cols = self.cols;
+        let nwords = words_for(cols);
+        let mut decision = std::mem::take(&mut self.decision_buf);
+        decision.clear();
+        decision.resize(nwords, 0);
+        // The 4-bit sliced counters below hold up to 15 opened rows.
+        let fast = rows.len() <= 15 && rows.iter().all(|&r| self.storage[r].is_packed());
+        let Self { cfg, storage, sa, env, rng, volt_buf, .. } = self;
+        if fast {
+            volt_buf.clear();
+            volt_buf.extend((0..=rows.len()).map(|k| cfg.bitline_voltage(k as f64, rows.len())));
+            for w in 0..nwords {
+                // Bit-sliced ripple counters: plane p_i holds bit i of
+                // each column's count of opened '1' cells.
+                let (mut p0, mut p1, mut p2, mut p3) = (0u64, 0u64, 0u64, 0u64);
+                for &r in rows {
+                    let x = match &storage[r] {
+                        RowStorage::Packed(ws) => ws[w],
+                        RowStorage::Analog(_) => unreachable!(),
+                    };
+                    let c0 = p0 & x;
+                    p0 ^= x;
+                    let c1 = p1 & c0;
+                    p1 ^= c0;
+                    let c2 = p2 & c1;
+                    p2 ^= c1;
+                    p3 ^= c2;
+                }
+                let base = w * 64;
+                let lim = (cols - base).min(64);
+                let mut dword = 0u64;
+                for i in 0..lim {
+                    let c = base + i;
+                    let k = (((p0 >> i) & 1)
+                        | (((p1 >> i) & 1) << 1)
+                        | (((p2 >> i) & 1) << 2)
+                        | (((p3 >> i) & 1) << 3)) as usize;
+                    let bit = sa.sense(cfg, env, c, volt_buf[k], rng);
+                    out[c] = bit as u8;
+                    dword |= (bit as u64) << i;
+                }
+                decision[w] = dword;
+            }
+        } else {
+            for c in 0..cols {
+                let total: f64 = rows.iter().map(|&r| storage[r].charge(c) as f64).sum();
+                let v = cfg.bitline_voltage(total, rows.len());
+                let bit = sa.sense(cfg, env, c, v, rng);
+                out[c] = bit as u8;
+                if bit {
+                    decision[c >> 6] |= 1u64 << (c & 63);
+                }
             }
         }
+        // Restore the decision into all opened rows (word-wise; rows
+        // holding analog charge exit to the packed representation).
+        for &r in rows {
+            match &mut storage[r] {
+                RowStorage::Packed(ws) => ws.copy_from_slice(&decision),
+                slot => *slot = RowStorage::Packed(decision.clone()),
+            }
+        }
+        self.decision_buf = decision;
     }
 
     /// Deterministic SiMRA evaluation with explicit noise (the
@@ -202,10 +480,7 @@ impl Subarray {
     pub fn simra_eval(&self, rows: &[usize], noise: &[f32]) -> Vec<u8> {
         let mut out = vec![0u8; self.cols];
         for c in 0..self.cols {
-            let total: f64 = rows
-                .iter()
-                .map(|&r| self.charges[r * self.cols + c] as f64)
-                .sum();
+            let total: f64 = rows.iter().map(|&r| self.storage[r].charge(c) as f64).sum();
             let v = self.cfg.bitline_voltage(total, rows.len());
             let thr = self.sa.threshold(&self.cfg, &self.env, c);
             out[c] = (v + noise[c] as f64 > thr) as u8;
@@ -218,9 +493,35 @@ impl Subarray {
         self.env.temp_c = temp_c;
     }
 
-    /// Advance simulated wall-clock time, applying aging drift (Fig. 6b).
+    /// Advance simulated wall-clock time: cell-charge retention decay
+    /// (module docs, "Retention") plus aging drift (Fig. 6b).
     pub fn advance_time(&mut self, dt_hours: f64) {
         self.env.hours += dt_hours;
+        let f = retention::swing_factor(dt_hours, self.cfg.tau_retention_hours);
+        if f < 1.0 {
+            let fr = f as f32;
+            let refreshable = f >= self.cfg.retention_swing_min;
+            let cols = self.cols;
+            for slot in self.storage.iter_mut() {
+                match slot {
+                    // Refresh restores the rails within the interval.
+                    RowStorage::Packed(_) if refreshable => {}
+                    RowStorage::Analog(q) => {
+                        for v in q.iter_mut() {
+                            *v = 0.5 + (*v - 0.5) * fr;
+                        }
+                    }
+                    // Decayed past the refresh threshold: the data
+                    // degrades to the decayed analog levels.
+                    slot_packed => {
+                        let q: Vec<f32> = (0..cols)
+                            .map(|c| 0.5 + (slot_packed.charge(c) - 0.5) * fr)
+                            .collect();
+                        *slot_packed = RowStorage::Analog(q);
+                    }
+                }
+            }
+        }
         let drift_per_hour = self.cfg.drift_per_hour;
         let mut rng = self.rng.child(&[0xA6E, self.env.hours.to_bits()]);
         self.sa.drift.advance(dt_hours, drift_per_hour, &mut rng);
@@ -255,8 +556,8 @@ mod tests {
         let bits: Vec<u8> = (0..s.cols).map(|c| (c % 2) as u8).collect();
         s.write_row(3, &bits);
         s.row_copy(3, 17);
-        let a = s.row_charges(3).to_vec();
-        let b = s.row_charges(17).to_vec();
+        let a = s.row_charges(3);
+        let b = s.row_charges(17);
         assert_eq!(a, b);
         assert_eq!(s.counts.row_copies, 1);
     }
@@ -291,6 +592,84 @@ mod tests {
     }
 
     #[test]
+    fn storage_transitions_follow_charge_state() {
+        let mut s = small();
+        assert!(s.row_is_packed(3), "rows start at full swing");
+        s.frac(3);
+        assert!(!s.row_is_packed(3), "frac enters the analog representation");
+        s.read_row(3);
+        assert!(s.row_is_packed(3), "restore exits back to packed");
+        s.frac(3);
+        s.row_copy(5, 3); // copy-in destroys intermediate state
+        assert!(s.row_is_packed(3) && s.row_is_packed(5));
+        s.frac(7);
+        assert_eq!(s.analog_rows(), 1);
+        let group: Vec<usize> = (0..8).collect();
+        s.simra(&group); // SiMRA restores all opened rows
+        assert_eq!(s.analog_rows(), 0);
+    }
+
+    #[test]
+    fn io_write_counting_convention() {
+        // write_row/fill_row are column-interface transfers: they bump
+        // only the informational io_writes counter (the controller
+        // accounts their timing), while RowCopy is an in-array
+        // ACT-PRE-ACT sequence. Pinning this keeps the timing-model
+        // inputs from silently drifting.
+        let mut s = small();
+        let bits = vec![1u8; s.cols];
+        s.write_row(0, &bits);
+        s.fill_row(1, 0);
+        assert_eq!(s.counts, OpCounts { io_writes: 2, ..OpCounts::default() });
+        s.row_copy(0, 2);
+        assert_eq!(
+            s.counts,
+            OpCounts {
+                io_writes: 2,
+                row_copies: 1,
+                activates: 2,
+                precharges: 1,
+                ..OpCounts::default()
+            }
+        );
+    }
+
+    #[test]
+    fn packed_storage_is_compact() {
+        let s = small();
+        let dense_bytes = s.rows * s.cols * std::mem::size_of::<f32>();
+        assert!(
+            s.approx_bytes() * 4 < dense_bytes,
+            "hybrid {} vs dense {dense_bytes}",
+            s.approx_bytes()
+        );
+    }
+
+    #[test]
+    fn retention_decay_crosses_packed_boundary() {
+        let mut cfg = DeviceConfig::default();
+        cfg.tau_retention_hours = 10.0;
+        cfg.retention_swing_min = 0.9;
+        let mut s = Subarray::with_geometry(&cfg, 16, 64, 1);
+        s.fill_row(0, 1);
+        // Small interval: swing factor ~0.99 >= 0.9, refresh holds.
+        s.advance_time(0.1);
+        assert!(s.row_is_packed(0));
+        assert_eq!(s.charge(0, 0), 1.0);
+        // Long interval: factor e^-2.4 ~ 0.09 < 0.9, data degrades.
+        s.advance_time(24.0);
+        assert!(!s.row_is_packed(0));
+        let q = s.charge(0, 0);
+        assert!(q < 1.0 && q > 0.5, "q={q}");
+        // A Frac'd (analog) row decays even under small intervals.
+        s.fill_row(1, 1);
+        s.frac(1);
+        let q1 = s.charge(1, 0);
+        s.advance_time(0.1);
+        assert!(s.charge(1, 0) < q1);
+    }
+
+    #[test]
     fn simra_majority_with_ideal_columns() {
         // Columns with negligible offset must compute MAJ5 correctly:
         // build a subarray with variation scaled to ~0.
@@ -318,6 +697,7 @@ mod tests {
         // Result restored into all 8 rows.
         for r in 0..8 {
             assert!(s.row_charges(r).iter().all(|&q| q == 1.0));
+            assert!(s.row_is_packed(r));
         }
         // And the complementary case: 2 ones, 3 zeros -> majority 0.
         for r in 0..2 {
@@ -334,6 +714,42 @@ mod tests {
         s.fill_row(7, 1);
         let out = s.simra(&[0, 1, 2, 3, 4, 5, 6, 7]);
         assert!(out.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn simra_all_packed_uses_popcount_path() {
+        // An all-packed group (no Frac'd row) exercises the bit-sliced
+        // fast path; on ideal columns the decision is the plain charge
+        // count against 0.5 V_DD.
+        let mut cfg = DeviceConfig::default();
+        cfg.sigma_sa = 1e-6;
+        cfg.tail_weight = 0.0;
+        cfg.sigma_noise = 1e-6;
+        let mut s = Subarray::with_geometry(&cfg, 16, 100, 2);
+        let group: Vec<usize> = (0..8).collect();
+        // 5 of 8 cells charged: V = (5*30 + 135) / 510 ~ 0.559 -> 1.
+        for r in 0..5 {
+            s.fill_row(r, 1);
+        }
+        for r in 5..8 {
+            s.fill_row(r, 0);
+        }
+        assert!(group.iter().all(|&r| s.row_is_packed(r)));
+        let out = s.simra(&group);
+        assert!(out.iter().all(|&b| b == 1));
+        // 3 of 8: V ~ 0.441 -> 0.
+        for r in 0..3 {
+            s.fill_row(r, 1);
+        }
+        for r in 3..8 {
+            s.fill_row(r, 0);
+        }
+        let out = s.simra(&group);
+        assert!(out.iter().all(|&b| b == 0));
+        for &r in &group {
+            assert!(s.row_is_packed(r));
+            assert!(s.row_charges(r).iter().all(|&q| q == 0.0));
+        }
     }
 
     #[test]
@@ -374,6 +790,7 @@ mod tests {
         b.simra_into(&rows, &mut sb);
         assert_eq!(sa, sb);
         assert_eq!(a.counts, b.counts);
+        assert_eq!(a.rng_fingerprint(), b.rng_fingerprint());
     }
 
     #[test]
@@ -397,5 +814,7 @@ mod tests {
         assert_eq!(s.env.hours, 24.0);
         let moved = s.sa.drift.drift.iter().filter(|&&d| d != 0.0).count();
         assert!(moved > s.cols / 2);
+        // Default config has no charge decay: rows stay packed.
+        assert_eq!(s.analog_rows(), 0);
     }
 }

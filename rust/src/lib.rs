@@ -15,6 +15,21 @@
 //!   calling Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
 //!   Python never runs on the request path.
 //!
+//! ## Storage
+//!
+//! The golden model (`dram::subarray`) stores rows in a **hybrid
+//! bit-packed / analog representation**: full-swing rows are packed 64
+//! columns per `u64` word (RowCopy between them is a word-wise copy,
+//! SiMRA over an all-packed group counts charge with bit-sliced
+//! word-parallel popcounts), and only `Frac`'d rows carry per-cell
+//! `f32` levels — a subarray at rest is ~20-30x smaller than one `f32`
+//! per cell. The representation is observably invisible: the dense
+//! reference implementation is kept as `dram::dense::DenseSubarray`
+//! (compiled under the default-on `reference-model` feature), and
+//! `rust/tests/storage_parity.rs` proves bit-identical read-outs,
+//! operation counts and noise-stream positions across both. Strip the
+//! reference model from production builds with `--no-default-features`.
+//!
 //! ## Parallelism & determinism
 //!
 //! The native sampling hot path is a **column-tiled batch kernel**
@@ -106,7 +121,7 @@ pub mod prelude {
         BankOutcome, BankSummary, ColumnBank, DeviceCoordinator, PjrtEngine,
     };
     pub use crate::dram::device::Device;
-    pub use crate::dram::subarray::Subarray;
+    pub use crate::dram::subarray::{OpCounts, RowStorage, Subarray};
     pub use crate::pud::majx::MajX;
     pub use crate::util::rng::Rng;
 }

@@ -6,6 +6,14 @@
 //! run real 8-bit arithmetic *in* the simulated DRAM; throughput
 //! numbers come from `analysis::throughput` which uses the same
 //! command-cost model.
+//!
+//! The executor is also the heaviest consumer of the subarray's hybrid
+//! row storage: wire traffic is pure RowCopy/write between full-swing
+//! rows (word-wise packed copies), only the calibration rows inside a
+//! MAJX group ever go analog, and each gate's SiMRA restores them — so
+//! a run holds at most three analog rows at any instant and ends with
+//! zero ([`CircuitRun::storage_bytes`] records the resulting packed
+//! footprint).
 
 use crate::calib::algorithm::Calibration;
 use crate::calib::lattice::FracConfig;
@@ -25,6 +33,11 @@ pub struct CircuitRun {
     pub elapsed_ns: f64,
     /// Peak simultaneous scratch rows.
     pub peak_rows: usize,
+    /// Subarray cell-state heap bytes after the run. Every MAJX flow
+    /// ends in a SiMRA restore, so every row the circuit touches exits
+    /// at full swing and this stays at the bit-packed floor however
+    /// long the circuit is.
+    pub storage_bytes: usize,
 }
 
 /// Execute `circuit` over per-column operand bit-vectors.
@@ -164,7 +177,22 @@ pub fn run_circuit(
             sub.read_row(r)
         })
         .collect();
-    CircuitRun { outputs, elapsed_ns: elapsed, peak_rows: alloc.high_water }
+    // Every gate's SiMRA restored its group to full swing; only the
+    // calibration rows re-Frac'd by the *next* MAJX will leave the
+    // packed representation again. (Scoped to the SiMRA group: rows the
+    // circuit never touched may legitimately hold analog charge, e.g.
+    // after retention decay applied before the run.)
+    debug_assert!(
+        circuit.gates.is_empty()
+            || (map.simra_base..map.simra_base + 8).all(|r| sub.row_is_packed(r)),
+        "circuit must leave its SiMRA group fully restored"
+    );
+    CircuitRun {
+        outputs,
+        elapsed_ns: elapsed,
+        peak_rows: alloc.high_water,
+        storage_bytes: sub.approx_bytes(),
+    }
 }
 
 /// Canonical storage key: a signal and its negation share liveness.
@@ -233,6 +261,12 @@ mod tests {
         }
         assert!(run.elapsed_ns > 0.0);
         assert!(run.peak_rows < 32, "peak rows {}", run.peak_rows);
+        // Long circuits never accumulate analog rows: every gate's
+        // SiMRA restores its group, so the subarray stays at the
+        // bit-packed storage floor (the >=10x footprint win at real
+        // geometry is pinned in rust/tests/storage_parity.rs).
+        assert_eq!(sub.analog_rows(), 0);
+        assert_eq!(run.storage_bytes, sub.approx_bytes());
     }
 
     #[test]

@@ -7,6 +7,7 @@ use pudtune::config::device::DeviceConfig;
 use pudtune::config::system::Ddr4Timing;
 use pudtune::controller::power::ActPowerModel;
 use pudtune::controller::timing::{majx_cost, PrimitiveTiming};
+use pudtune::dram::subarray::Subarray;
 use pudtune::pud::adder::{eval_add, ripple_adder};
 use pudtune::pud::graph::{Gate, MajCircuit, Signal};
 use pudtune::pud::multiplier::{array_multiplier, eval_mul};
@@ -233,4 +234,157 @@ fn gen_json(r: &mut Rng, depth: usize) -> json::Json {
 fn const_q_definition() {
     assert_eq!(const_q(5), 0.0);
     assert_eq!(const_q(3), 1.0);
+}
+
+/// A near-ideal device: packed-row reads must be error-free for any
+/// in-spec temperature.
+fn quiet_cfg() -> DeviceConfig {
+    let mut cfg = DeviceConfig::default();
+    cfg.sigma_sa = 1e-6;
+    cfg.tail_weight = 0.0;
+    cfg.sigma_noise = 0.0;
+    cfg
+}
+
+#[test]
+fn packed_rows_read_back_stored_bits_at_any_temperature() {
+    // Invariant: a full-swing (packed) row reads back exactly its
+    // stored bits on near-ideal columns regardless of die temperature
+    // within spec — the 0.05 V_DD single-cell margin dwarfs the
+    // temperature response of the thresholds.
+    let cfg = quiet_cfg();
+    check_res(
+        "packed-roundtrip-any-temp",
+        11,
+        64,
+        |r: &mut Rng| {
+            let bits: Vec<u8> = (0..100).map(|_| r.bit()).collect();
+            let temp_c = r.f64() * 85.0; // 0..85 C operating range
+            let seed = r.next_u64();
+            (bits, temp_c, seed)
+        },
+        |(bits, temp_c, seed)| {
+            let mut s = Subarray::with_geometry(&cfg, 16, bits.len(), *seed);
+            s.write_row(3, bits);
+            s.set_temperature(*temp_c);
+            if !s.row_is_packed(3) {
+                return Err("written row must be packed".into());
+            }
+            let got = s.read_row(3);
+            if &got != bits {
+                return Err(format!("read-back differs at {temp_c:.1} C"));
+            }
+            if !s.row_is_packed(3) {
+                return Err("restored row must stay packed".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn storage_state_machine_transitions() {
+    // Invariants of the hybrid representation: frac always enters the
+    // analog state, every restore (read / SiMRA / RowCopy) always
+    // returns the touched rows to packed, and write/fill are packed by
+    // construction.
+    let cfg = DeviceConfig::default();
+    check_res(
+        "storage-state-machine",
+        12,
+        64,
+        |r: &mut Rng| {
+            let row = r.below(16) as usize;
+            let fracs = 1 + r.below(4) as u32;
+            let seed = r.next_u64();
+            (row, fracs, seed)
+        },
+        |&(row, fracs, seed)| {
+            let mut s = Subarray::with_geometry(&cfg, 16, 64, seed);
+            s.fill_row(row, 1);
+            for _ in 0..fracs {
+                s.frac(row);
+                if s.row_is_packed(row) {
+                    return Err("frac must enter the analog state".into());
+                }
+            }
+            s.read_row(row);
+            if !s.row_is_packed(row) {
+                return Err("read restore must exit to packed".into());
+            }
+            s.frac(row);
+            let dst = (row + 1) % 16;
+            s.row_copy(row, dst);
+            if !s.row_is_packed(row) || !s.row_is_packed(dst) {
+                return Err("row copy must leave both rows packed".into());
+            }
+            s.frac(row.min(7));
+            let group: Vec<usize> = (0..8).collect();
+            s.simra(&group);
+            if s.analog_rows() != 0 {
+                return Err("SiMRA must restore every opened row".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[cfg(feature = "reference-model")]
+#[test]
+fn op_counts_are_representation_independent() {
+    // The same command trace must produce identical OpCounts on the
+    // hybrid and dense models: counting is defined by the command
+    // stream, never by the storage representation (full bit-level
+    // parity lives in rust/tests/storage_parity.rs).
+    use pudtune::dram::dense::DenseSubarray;
+    let cfg = DeviceConfig::default();
+    check_res(
+        "op-counts-representation-independent",
+        13,
+        48,
+        |r: &mut Rng| {
+            let seed = r.next_u64();
+            let ops: Vec<u64> = (0..16).map(|_| r.below(64)).collect();
+            (seed, ops)
+        },
+        |(seed, ops)| {
+            let mut h = Subarray::with_geometry(&cfg, 16, 64, *seed);
+            let mut d = DenseSubarray::with_geometry(&cfg, 16, 64, *seed);
+            let group: Vec<usize> = (0..8).collect();
+            for &op in ops {
+                let row = (op >> 3) as usize % 16;
+                match op & 7 {
+                    0 => {
+                        h.fill_row(row, 1);
+                        d.fill_row(row, 1);
+                    }
+                    1 => {
+                        let bits = vec![1u8; 64];
+                        h.write_row(row, &bits);
+                        d.write_row(row, &bits);
+                    }
+                    2 => {
+                        h.read_row(row);
+                        d.read_row(row);
+                    }
+                    3 | 4 => {
+                        h.frac(row);
+                        d.frac(row);
+                    }
+                    5 => {
+                        h.row_copy(row, (row + 3) % 16);
+                        d.row_copy(row, (row + 3) % 16);
+                    }
+                    _ => {
+                        h.simra(&group);
+                        d.simra(&group);
+                    }
+                }
+                if h.counts != d.counts {
+                    return Err(format!("counts diverge: {:?} vs {:?}", h.counts, d.counts));
+                }
+            }
+            Ok(())
+        },
+    );
 }

@@ -1,0 +1,554 @@
+//! Storage parity: the hybrid bit-packed/analog `Subarray` must be
+//! observably identical to the dense-`f32` reference model.
+//!
+//! Every test drives `Subarray` (hybrid) and `dram::dense::
+//! DenseSubarray` (the pre-hybrid implementation, kept as the
+//! executable specification) through the *same* command trace and
+//! asserts after **every** command:
+//!
+//! * identical read-outs (read / SiMRA results),
+//! * identical `OpCounts`,
+//! * identical noise-stream positions (`rng_fingerprint`),
+//! * bit-identical cell charges and identical packed/analog row state.
+//!
+//! Traces cover the regimes the hybrid representation special-cases:
+//! Frac ladders, frac -> copy -> re-frac ordering, SiMRA with 0/1/many
+//! analog rows open, retention decay crossing the packed/analog
+//! boundary, Algorithm-1 calibration runs, and full adder/multiplier
+//! workloads — plus seeded randomized traces that report a minimal
+//! failing prefix on divergence.
+
+#![cfg(feature = "reference-model")]
+
+use std::collections::HashMap;
+
+use pudtune::calib::algorithm::{CalibParams, Calibration, NativeEngine};
+use pudtune::calib::lattice::{FracConfig, OffsetLattice};
+use pudtune::config::device::DeviceConfig;
+use pudtune::config::system::SystemConfig;
+use pudtune::dram::dense::DenseSubarray;
+use pudtune::dram::geometry::RowMap;
+use pudtune::dram::subarray::Subarray;
+use pudtune::pud::adder::{eval_add, ripple_adder};
+use pudtune::pud::graph::{MajCircuit, Signal};
+use pudtune::pud::multiplier::{array_multiplier, eval_mul};
+use pudtune::util::proptest::check_res;
+use pudtune::util::rng::Rng;
+
+/// The command surface shared by both golden models.
+trait GoldenModel {
+    fn write_row(&mut self, row: usize, bits: &[u8]);
+    fn fill_row(&mut self, row: usize, bit: u8);
+    fn read_row(&mut self, row: usize) -> Vec<u8>;
+    fn row_copy(&mut self, src: usize, dst: usize);
+    fn frac(&mut self, row: usize);
+    fn simra(&mut self, rows: &[usize]) -> Vec<u8>;
+    fn set_temperature(&mut self, temp_c: f64);
+    fn advance_time(&mut self, dt_hours: f64);
+}
+
+macro_rules! impl_model {
+    ($t:ty) => {
+        impl GoldenModel for $t {
+            fn write_row(&mut self, row: usize, bits: &[u8]) {
+                <$t>::write_row(self, row, bits)
+            }
+            fn fill_row(&mut self, row: usize, bit: u8) {
+                <$t>::fill_row(self, row, bit)
+            }
+            fn read_row(&mut self, row: usize) -> Vec<u8> {
+                <$t>::read_row(self, row)
+            }
+            fn row_copy(&mut self, src: usize, dst: usize) {
+                <$t>::row_copy(self, src, dst)
+            }
+            fn frac(&mut self, row: usize) {
+                <$t>::frac(self, row)
+            }
+            fn simra(&mut self, rows: &[usize]) -> Vec<u8> {
+                <$t>::simra(self, rows)
+            }
+            fn set_temperature(&mut self, temp_c: f64) {
+                <$t>::set_temperature(self, temp_c)
+            }
+            fn advance_time(&mut self, dt_hours: f64) {
+                <$t>::advance_time(self, dt_hours)
+            }
+        }
+    };
+}
+impl_model!(Subarray);
+impl_model!(DenseSubarray);
+
+/// One traced command.
+#[derive(Clone, Debug)]
+enum Op {
+    Write { row: usize, bits: Vec<u8> },
+    Fill { row: usize, bit: u8 },
+    Read { row: usize },
+    Copy { src: usize, dst: usize },
+    Frac { row: usize },
+    Simra { base: usize },
+    SetTemp { temp_c: f64 },
+    Advance { dt_hours: f64 },
+}
+
+fn apply<M: GoldenModel>(m: &mut M, op: &Op) -> Option<Vec<u8>> {
+    match op {
+        Op::Write { row, bits } => {
+            m.write_row(*row, bits);
+            None
+        }
+        Op::Fill { row, bit } => {
+            m.fill_row(*row, *bit);
+            None
+        }
+        Op::Read { row } => Some(m.read_row(*row)),
+        Op::Copy { src, dst } => {
+            m.row_copy(*src, *dst);
+            None
+        }
+        Op::Frac { row } => {
+            m.frac(*row);
+            None
+        }
+        Op::Simra { base } => {
+            let group: Vec<usize> = (*base..*base + 8).collect();
+            Some(m.simra(&group))
+        }
+        Op::SetTemp { temp_c } => {
+            m.set_temperature(*temp_c);
+            None
+        }
+        Op::Advance { dt_hours } => {
+            m.advance_time(*dt_hours);
+            None
+        }
+    }
+}
+
+/// Full-state comparison: counts, noise-stream position, per-row
+/// representation state and bit-exact charges.
+fn parity(h: &Subarray, d: &DenseSubarray) -> Result<(), String> {
+    if h.counts != d.counts {
+        return Err(format!("OpCounts diverge: {:?} vs {:?}", h.counts, d.counts));
+    }
+    if h.rng_fingerprint() != d.rng_fingerprint() {
+        return Err("noise-stream positions diverge".into());
+    }
+    if h.env.temp_c != d.env.temp_c || h.env.hours != d.env.hours {
+        return Err("environments diverge".into());
+    }
+    for r in 0..h.rows {
+        if h.row_is_packed(r) != d.row_is_packed(r) {
+            return Err(format!(
+                "row {r} storage state diverges: hybrid packed={}, dense full-swing={}",
+                h.row_is_packed(r),
+                d.row_is_packed(r)
+            ));
+        }
+        for c in 0..h.cols {
+            let (a, b) = (h.charge(r, c), d.charge(r, c));
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("charge ({r},{c}) diverges: {a} vs {b}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+const TRACE_ROWS: usize = 24;
+
+/// Run one trace through both models with per-command comparison.
+fn run_trace(cols: usize, tau_hours: f64, seed: u64, ops: &[Op]) -> Result<(), String> {
+    let mut cfg = DeviceConfig::default();
+    cfg.tau_retention_hours = tau_hours;
+    cfg.retention_swing_min = 0.9;
+    let mut h = Subarray::with_geometry(&cfg, TRACE_ROWS, cols, seed);
+    let mut d = DenseSubarray::with_geometry(&cfg, TRACE_ROWS, cols, seed);
+    parity(&h, &d).map_err(|e| format!("fresh state: {e}"))?;
+    for (i, op) in ops.iter().enumerate() {
+        let oh = apply(&mut h, op);
+        let od = apply(&mut d, op);
+        if oh != od {
+            return Err(format!("op {i} {op:?}: read-outs diverge"));
+        }
+        parity(&h, &d).map_err(|e| format!("op {i} {op:?}: {e}"))?;
+    }
+    Ok(())
+}
+
+fn expect_parity(name: &str, cols: usize, tau_hours: f64, seed: u64, ops: &[Op]) {
+    if let Err(e) = run_trace(cols, tau_hours, seed, ops) {
+        panic!("{name}: {e}");
+    }
+}
+
+#[test]
+fn frac_ladder_parity() {
+    // Deep Frac ladders interleaved with reads: the row oscillates
+    // between analog (frac) and packed (restore) representations.
+    let mut ops = vec![Op::Fill { row: 0, bit: 1 }, Op::Fill { row: 1, bit: 0 }];
+    for _ in 0..3 {
+        for _ in 0..4 {
+            ops.push(Op::Frac { row: 0 });
+            ops.push(Op::Frac { row: 1 });
+        }
+        ops.push(Op::Read { row: 0 });
+        ops.push(Op::Read { row: 1 });
+    }
+    // Columns 100 leaves a partial tail word in the packed words.
+    expect_parity("frac-ladder", 100, f64::INFINITY, 0xA1, &ops);
+}
+
+#[test]
+fn frac_copy_refrac_ordering_parity() {
+    // PUDTune's central ordering constraint: RowCopy destroys
+    // intermediate charge, so calibration rows are re-Frac'd after
+    // every copy-in. The trace exercises frac -> copy -> re-frac on
+    // both the source and destination sides.
+    let bits: Vec<u8> = (0..96).map(|c| (c % 3 != 0) as u8).collect();
+    let ops = vec![
+        Op::Write { row: 8, bits: bits.clone() },
+        Op::Frac { row: 8 },             // analog source
+        Op::Copy { src: 8, dst: 3 },     // copy restores src, drives dst
+        Op::Frac { row: 3 },             // re-frac the copied-in row
+        Op::Frac { row: 3 },
+        Op::Copy { src: 3, dst: 9 },     // analog src again
+        Op::Frac { row: 9 },
+        Op::Copy { src: 10, dst: 3 },    // packed src over a packed dst
+        Op::Simra { base: 3 },           // group 3..11 with row 9 analog
+        Op::Read { row: 3 },
+    ];
+    expect_parity("frac-copy-refrac", 96, f64::INFINITY, 0xB2, &ops);
+}
+
+#[test]
+fn simra_with_zero_one_many_analog_rows_parity() {
+    for (label, fracd) in [
+        ("zero", vec![]),
+        ("one", vec![4usize]),
+        ("many", vec![1, 2, 5, 6, 7]),
+        ("all", (0..8).collect()),
+    ] {
+        let mut ops = Vec::new();
+        for r in 0..8 {
+            ops.push(Op::Fill { row: r, bit: (r % 2) as u8 });
+        }
+        for &r in &fracd {
+            ops.push(Op::Frac { row: r });
+        }
+        ops.push(Op::Simra { base: 0 });
+        ops.push(Op::Simra { base: 0 }); // second SiMRA on the restored group
+        for r in 0..8 {
+            ops.push(Op::Read { row: r });
+        }
+        if let Err(e) = run_trace(129, f64::INFINITY, 0xC3, &ops) {
+            panic!("simra-analog-{label}: {e}");
+        }
+    }
+}
+
+#[test]
+fn retention_boundary_parity() {
+    // Finite retention: small intervals keep full-swing rows packed
+    // (refresh holds), long intervals push them over the threshold
+    // into analog decay; Frac'd rows decay under every interval.
+    // Temperature excursions ride along (they shift thresholds, so
+    // read-outs depend on them).
+    let ops = vec![
+        Op::Fill { row: 0, bit: 1 },
+        Op::Fill { row: 1, bit: 0 },
+        Op::Fill { row: 2, bit: 1 },
+        Op::Frac { row: 2 },
+        Op::Advance { dt_hours: 0.05 }, // factor ~0.992: packed rows hold
+        Op::Read { row: 0 },
+        Op::SetTemp { temp_c: 75.0 },
+        Op::Advance { dt_hours: 3.0 },  // factor ~0.61: crosses the boundary
+        Op::Read { row: 0 },            // restore re-packs the decayed row
+        Op::Frac { row: 1 },
+        Op::Advance { dt_hours: 0.05 },
+        Op::SetTemp { temp_c: 30.0 },
+        Op::Simra { base: 0 },
+        Op::Advance { dt_hours: 8.0 },  // deep decay of everything
+        Op::Read { row: 2 },
+    ];
+    expect_parity("retention-boundary", 80, 6.0, 0xD4, &ops);
+}
+
+#[test]
+fn randomized_trace_parity() {
+    // Seeded randomized traces over both retention regimes; on
+    // divergence the property re-runs prefixes to report the shortest
+    // failing trace for replay.
+    check_res(
+        "storage-parity-random-traces",
+        0x57AB1E,
+        48,
+        |r: &mut Rng| {
+            let cols = [64usize, 96, 100, 129][r.below(4) as usize];
+            let tau = if r.bool(0.5) { 6.0 } else { f64::INFINITY };
+            let seed = r.next_u64();
+            let n_ops = 24 + r.below(24) as usize;
+            let rows = TRACE_ROWS as u64;
+            let ops: Vec<Op> = (0..n_ops)
+                .map(|_| match r.below(10) {
+                    0 => Op::Write {
+                        row: r.below(rows) as usize,
+                        bits: (0..cols).map(|_| r.bit()).collect(),
+                    },
+                    1 => Op::Fill { row: r.below(rows) as usize, bit: r.bit() },
+                    2 => Op::Read { row: r.below(rows) as usize },
+                    3 => Op::Copy {
+                        src: r.below(rows) as usize,
+                        dst: r.below(rows) as usize,
+                    },
+                    4 | 5 | 6 => Op::Frac { row: r.below(rows) as usize },
+                    7 => Op::Simra { base: r.below(rows - 7) as usize },
+                    8 => Op::SetTemp { temp_c: 20.0 + r.f64() * 60.0 },
+                    _ => Op::Advance {
+                        dt_hours: if r.bool(0.4) { 1.0 + r.f64() * 3.0 } else { r.f64() * 0.2 },
+                    },
+                })
+                .collect();
+            (cols, tau, seed, ops)
+        },
+        |(cols, tau, seed, ops)| match run_trace(*cols, *tau, *seed, ops) {
+            Ok(()) => Ok(()),
+            Err(full) => {
+                for n in 1..=ops.len() {
+                    if let Err(e) = run_trace(*cols, *tau, *seed, &ops[..n]) {
+                        return Err(format!(
+                            "minimal failing prefix of {n} ops: {e}\n  prefix = {:?}",
+                            &ops[..n]
+                        ));
+                    }
+                }
+                Err(full)
+            }
+        },
+    );
+}
+
+#[test]
+fn calibration_algorithm1_parity() {
+    // Algorithm 1 + the ECR battery read only sense amps + environment,
+    // and both models share those exactly; the identified levels then
+    // flow back into the arrays as calibration row bits via the same
+    // trace. End state must be identical.
+    let cfg = DeviceConfig::default();
+    let cols = 256;
+    let mut h = Subarray::with_geometry(&cfg, TRACE_ROWS, cols, 0xE5);
+    let mut d = DenseSubarray::with_geometry(&cfg, TRACE_ROWS, cols, 0xE5);
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let params = CalibParams::quick();
+    let mut eng = NativeEngine::new(cfg.clone());
+    let ch = eng.calibrate(&h, &fc, &params);
+    let cd = eng.calibrate_columns(&d.sa, &d.env, &fc, &params);
+    assert_eq!(ch.levels, cd.levels, "Algorithm 1 diverges across models");
+    let map = RowMap::standard(64); // index arithmetic only
+    for (i, &row) in map.calib_store.iter().enumerate() {
+        let bits = ch.row_bits(i);
+        h.write_row(row, &bits);
+        d.write_row(row, &bits);
+    }
+    for (i, &n) in fc.fracs.iter().enumerate() {
+        for _ in 0..n {
+            h.frac(map.calib_store[i]);
+            d.frac(map.calib_store[i]);
+        }
+    }
+    assert_eq!(h.simra(&(8..16).collect::<Vec<_>>()), d.simra(&(8..16).collect::<Vec<_>>()));
+    parity(&h, &d).unwrap();
+}
+
+/// Minimal deterministic gate executor over the shared model surface —
+/// the MAJX flow of `pud::majx::execute_majx` (RowCopy-in, Frac,
+/// SiMRA) without timing, so full circuits run identically on both
+/// models.
+struct Exec<'a, M: GoldenModel> {
+    m: &'a mut M,
+    map: &'a RowMap,
+    input_rows: Vec<usize>,
+    gate_rows: Vec<usize>,
+    not_rows: HashMap<Signal, usize>,
+    next_row: usize,
+}
+
+impl<M: GoldenModel> Exec<'_, M> {
+    fn resolve(&mut self, sig: Signal) -> usize {
+        match sig {
+            Signal::Input(i) => self.input_rows[i],
+            Signal::Gate(g) => self.gate_rows[g],
+            Signal::Const(false) => self.map.const0,
+            Signal::Const(true) => self.map.const1,
+            Signal::NotInput(_) | Signal::NotGate(_) => {
+                if let Some(&r) = self.not_rows.get(&sig) {
+                    return r;
+                }
+                let src = match sig {
+                    Signal::NotInput(i) => self.input_rows[i],
+                    Signal::NotGate(g) => self.gate_rows[g],
+                    _ => unreachable!(),
+                };
+                let mut bits = self.m.read_row(src);
+                for b in &mut bits {
+                    *b = 1 - *b;
+                }
+                let r = self.next_row;
+                self.next_row += 1;
+                self.m.write_row(r, &bits);
+                self.not_rows.insert(sig, r);
+                r
+            }
+        }
+    }
+}
+
+fn run_circuit_on<M: GoldenModel>(
+    m: &mut M,
+    map: &RowMap,
+    calib: &Calibration,
+    fc: &FracConfig,
+    circuit: &MajCircuit,
+    inputs: &[Vec<u8>],
+) -> Vec<Vec<u8>> {
+    for (i, &row) in map.calib_store.iter().enumerate() {
+        m.write_row(row, &calib.row_bits(i));
+    }
+    m.fill_row(map.const0, 0);
+    m.fill_row(map.const1, 1);
+    let mut ex = Exec {
+        m,
+        map,
+        input_rows: Vec::new(),
+        gate_rows: Vec::new(),
+        not_rows: HashMap::new(),
+        next_row: map.data_base,
+    };
+    for bits in inputs {
+        let r = ex.next_row;
+        ex.next_row += 1;
+        ex.m.write_row(r, bits);
+        ex.input_rows.push(r);
+    }
+    for gate in &circuit.gates {
+        let arity = gate.arity();
+        let op_rows: Vec<usize> = gate.args.iter().map(|&s| ex.resolve(s)).collect();
+        let base = ex.map.simra_base;
+        for (i, &r) in op_rows.iter().enumerate() {
+            ex.m.row_copy(r, base + i);
+        }
+        for (i, &store) in ex.map.calib_store.iter().enumerate() {
+            ex.m.row_copy(store, base + arity + i);
+        }
+        if arity + 3 < 8 {
+            ex.m.row_copy(ex.map.const0, base + arity + 3);
+            ex.m.row_copy(ex.map.const1, base + arity + 4);
+        }
+        for (i, &n) in fc.fracs.iter().enumerate() {
+            for _ in 0..n {
+                ex.m.frac(base + arity + i);
+            }
+        }
+        let group: Vec<usize> = (base..base + 8).collect();
+        let bits = ex.m.simra(&group);
+        let r = ex.next_row;
+        ex.next_row += 1;
+        ex.m.write_row(r, &bits);
+        ex.gate_rows.push(r);
+    }
+    let out_rows: Vec<usize> = circuit.outputs.iter().map(|&s| ex.resolve(s)).collect();
+    out_rows.into_iter().map(|r| ex.m.read_row(r)).collect()
+}
+
+fn workload_parity(circuit: &MajCircuit, width: usize, cfg: &DeviceConfig, seed: u64) {
+    let rows = 128;
+    let cols = 16;
+    let mut h = Subarray::with_geometry(cfg, rows, cols, seed);
+    let mut d = DenseSubarray::with_geometry(cfg, rows, cols, seed);
+    let map = RowMap::standard(rows);
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let calib = Calibration::uniform(OffsetLattice::build(cfg, &fc), cols);
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    let a: Vec<u64> = (0..cols).map(|_| rng.below(1 << width)).collect();
+    let b: Vec<u64> = (0..cols).map(|_| rng.below(1 << width)).collect();
+    let mut inputs = Vec::new();
+    for bit in 0..width {
+        inputs.push(a.iter().map(|&v| ((v >> bit) & 1) as u8).collect());
+    }
+    for bit in 0..width {
+        inputs.push(b.iter().map(|&v| ((v >> bit) & 1) as u8).collect());
+    }
+    let oh = run_circuit_on(&mut h, &map, &calib, &fc, circuit, &inputs);
+    let od = run_circuit_on(&mut d, &map, &calib, &fc, circuit, &inputs);
+    assert_eq!(oh, od, "workload outputs diverge");
+    parity(&h, &d).unwrap();
+}
+
+#[test]
+fn adder_workload_parity_and_correctness() {
+    let width = 3;
+    let add = ripple_adder(width);
+    // Noisy device: outputs may contain errors, but both models must
+    // make *the same* errors.
+    workload_parity(&add, width, &DeviceConfig::default(), 0xF6);
+    // Quiet device: the in-DRAM run must also be functionally correct.
+    let mut quiet = DeviceConfig::default();
+    quiet.sigma_sa = 1e-6;
+    quiet.tail_weight = 0.0;
+    quiet.sigma_noise = 1e-6;
+    let cols = 16;
+    let mut h = Subarray::with_geometry(&quiet, 128, cols, 0xF7);
+    let map = RowMap::standard(128);
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let calib = Calibration::uniform(OffsetLattice::build(&quiet, &fc), cols);
+    let mut rng = Rng::new(5);
+    let a: Vec<u64> = (0..cols).map(|_| rng.below(1 << width)).collect();
+    let b: Vec<u64> = (0..cols).map(|_| rng.below(1 << width)).collect();
+    let mut inputs = Vec::new();
+    for bit in 0..width {
+        inputs.push(a.iter().map(|&v| ((v >> bit) & 1) as u8).collect());
+    }
+    for bit in 0..width {
+        inputs.push(b.iter().map(|&v| ((v >> bit) & 1) as u8).collect());
+    }
+    let outs = run_circuit_on(&mut h, &map, &calib, &fc, &add, &inputs);
+    for c in 0..cols {
+        let mut got = 0u64;
+        for (bit, out) in outs.iter().enumerate() {
+            got |= (out[c] as u64) << bit;
+        }
+        assert_eq!(got, a[c] + b[c], "col {c}");
+        assert_eq!(got, eval_add(&add, width, a[c], b[c]), "col {c} (logic ref)");
+    }
+}
+
+#[test]
+fn multiplier_workload_parity() {
+    let width = 2;
+    let mul = array_multiplier(width);
+    workload_parity(&mul, width, &DeviceConfig::default(), 0x3A);
+    // eval_mul sanity on the same circuit (logic-level reference).
+    assert_eq!(eval_mul(&mul, width, 3, 2), 6);
+}
+
+#[test]
+fn hybrid_footprint_is_at_least_10x_smaller() {
+    // Default geometry (512 x 16,384), <= 8 analog rows: the headline
+    // memory claim, pinned by CI rather than by prose.
+    let cfg = DeviceConfig::default();
+    let sys = SystemConfig::default();
+    let mut hyb = Subarray::new(&cfg, &sys, 1);
+    let den = DenseSubarray::new(&cfg, &sys, 1);
+    for r in 0..8 {
+        hyb.frac(r);
+    }
+    assert_eq!(hyb.analog_rows(), 8);
+    let ratio = den.approx_bytes() as f64 / hyb.approx_bytes() as f64;
+    assert!(ratio >= 10.0, "dense/hybrid byte ratio {ratio:.1} < 10x");
+    // Fully packed (the steady state between MAJX groups) is ~30x.
+    let packed = Subarray::new(&cfg, &sys, 1);
+    let ratio_packed = den.approx_bytes() as f64 / packed.approx_bytes() as f64;
+    assert!(ratio_packed >= 20.0, "packed ratio {ratio_packed:.1}");
+}
