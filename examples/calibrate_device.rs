@@ -18,10 +18,7 @@ use std::time::Instant;
 
 fn main() {
     let cfg = DeviceConfig::default();
-    let mut sys = SystemConfig::default();
-    sys.channels = 1;
-    sys.banks = 8;
-    sys.cols = 2048;
+    let sys = SystemConfig { channels: 1, banks: 8, cols: 2048, ..SystemConfig::default() };
     let device_seed = 0xD31C3;
     let tune = FracConfig::pudtune([2, 1, 0]);
     let params = CalibParams::paper();
@@ -92,7 +89,10 @@ fn main() {
         .iter()
         .zip(&banks)
         .map(|(&id, bank)| {
-            let calib = reloaded.load(id, &cfg).expect("bank in store");
+            let calib = reloaded
+                .load_expecting(id, &cfg, sys.cols)
+                .expect("compatible store")
+                .expect("bank in store");
             EcrRequest::new(bank.clone(), calib, 5, 4096)
         })
         .collect();

@@ -1,0 +1,139 @@
+//! Drift-aware serving: a temperature-excursion scenario end to end.
+//!
+//! Replays the full calibration lifecycle the recalibration service
+//! closes: calibrate a small device and persist the store ("first
+//! boot"), rehydrate it into a fresh service ("reboot") where a cheap
+//! spot check accepts every entry, serve workload batches, then hit
+//! the die with a temperature excursion — serving degrades but never
+//! stalls, the drift monitor schedules background recalibration, and
+//! the repaired calibrations restore the error-free column count at
+//! the hot operating point. Finally, the recalibration command traffic
+//! is interleaved into the serving trace under a deadline, showing the
+//! bank-level cost of the repair is hidden in serving slack.
+//!
+//! ```bash
+//! cargo run --release --example drift_recovery
+//! ```
+
+use pudtune::controller::command;
+use pudtune::controller::scheduler::{Scheduler, TraceClass};
+use pudtune::prelude::*;
+
+fn mean_ecr(outcomes: &[ServeOutcome]) -> f64 {
+    let ecrs: Vec<f64> = outcomes
+        .iter()
+        .filter_map(|o| o.report.as_ref().ok().map(|r| r.ecr()))
+        .collect();
+    ecrs.iter().sum::<f64>() / ecrs.len().max(1) as f64
+}
+
+fn main() {
+    // Exaggerated common-mode tempco so the excursion visibly breaks
+    // the nominal calibration (the fitted differential-SA model keeps
+    // excursions benign, which is exactly Fig. 6a's point).
+    let cfg = DeviceConfig { tempco: 5.0e-4, tempco_jitter: 2.0e-5, ..DeviceConfig::default() };
+    let (banks, cols, device_seed) = (4usize, 2048usize, 0xD21F7u64);
+    let svc_cfg = ServiceConfig { serve_samples: 4096, ..ServiceConfig::default() };
+    let make_service = || {
+        let mut s =
+            RecalibService::new(cfg.clone(), svc_cfg, NativeEngine::new(cfg.clone())).unwrap();
+        for b in 0..banks {
+            s.register(SubarrayId::new(0, b, 0), 32, cols, device_seed);
+        }
+        s
+    };
+
+    // ---- First boot: calibrate from scratch and persist. ----
+    println!("first boot: calibrating {banks} banks x {cols} columns...");
+    let mut first = make_service();
+    first.run_pending(usize::MAX);
+    let nominal = mean_ecr(&first.serve());
+    println!("  nominal serving ECR {:.2}%", nominal * 100.0);
+    let path = std::env::temp_dir().join("pudtune_drift_recovery_store.json");
+    first.snapshot_store().save_file(&path).unwrap();
+    println!("  store persisted to {}", path.display());
+
+    // ---- Reboot: rehydrate + spot-check instead of recalibrating. ----
+    println!("\nreboot: rehydrating from the store...");
+    let store = CalibStore::load_file(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let mut svc = make_service();
+    for (id, outcome) in svc.load_store(&store) {
+        match outcome {
+            LoadOutcome::Accepted { spot_ecr } => {
+                println!("  bank {}: accepted (spot ECR {:.2}%)", id.bank, spot_ecr * 100.0)
+            }
+            other => println!("  bank {}: {other:?}", id.bank),
+        }
+    }
+
+    // ---- Steady serving at nominal temperature. ----
+    let accepted = mean_ecr(&svc.serve());
+    println!("\nserving at nominal: mean ECR {:.2}%", accepted * 100.0);
+
+    // ---- Temperature excursion. ----
+    println!("\ntemperature excursion: 45 C -> 85 C on every bank");
+    for id in svc.ids() {
+        svc.set_temperature(id, 85.0);
+    }
+    let stale = mean_ecr(&svc.serve());
+    println!("  stale serving ECR {:.2}% (still serving, no stall)", stale * 100.0);
+    for (id, signal) in svc.poll_drift() {
+        println!("  drift detected on bank {}: {signal}", id.bank);
+    }
+
+    // ---- Background repair. ----
+    let repaired_n = svc.run_pending(usize::MAX).len();
+    let repaired = mean_ecr(&svc.serve());
+    println!(
+        "  recalibrated {repaired_n} banks in the background: ECR {:.2}% -> {:.2}%",
+        stale * 100.0,
+        repaired * 100.0
+    );
+    assert!(repaired < stale / 2.0, "repair must restore the error-free columns");
+
+    // ---- Interleave the repair traffic under serving deadlines. ----
+    // One bank's recalibration rewrites its three calibration rows and
+    // re-fracs them; issue that command traffic only into the slack
+    // between serving batches (here: MAJ5 primitives every ~500 ns).
+    println!("\ninterleaving recalibration commands into serving slack:");
+    let sys = SystemConfig::small();
+    let mut sched = Scheduler::new(sys.timing.clone());
+    let close = sys.timing.t_ras + sys.timing.t_rp;
+    let mut recalib_cmds: Vec<(Vec<_>, f64)> = Vec::new();
+    for row in [8usize, 9, 10] {
+        recalib_cmds.push((command::row_copy_seq(16 + row, row), close));
+        for _ in 0..2 {
+            recalib_cmds.push((command::frac_seq(row), sys.timing.t_rp));
+        }
+    }
+    let mut pending = recalib_cmds.into_iter();
+    let mut queued = pending.next();
+    let serve_gap = sys.timing.to_clocks(500.0);
+    let mut serve_end = 0;
+    for _ in 0..8 {
+        serve_end = sched.issue(&command::simra_seq(0, 7), close);
+        let deadline = serve_end + serve_gap;
+        while let Some((seq, cl)) = queued.take() {
+            if sched.try_issue_background(&seq, cl, deadline).is_none() {
+                // Would push past the next serving slot: defer it.
+                queued = Some((seq, cl));
+                break;
+            }
+            queued = pending.next();
+        }
+        if queued.is_none() {
+            break;
+        }
+    }
+    println!(
+        "  serve busy {} cycles, recalib busy {} cycles, {} deferrals, makespan {:.0} ns",
+        sched.class_cycles(TraceClass::Serve),
+        sched.class_cycles(TraceClass::Recalib),
+        sched.deferred_background(),
+        sched.elapsed_ns()
+    );
+    assert!(serve_end > 0);
+    println!("\nlifecycle closed: persist -> load -> validate -> drift -> recalibrate.");
+    println!("\nservice metrics:\n{}", svc.metrics.render());
+}

@@ -11,8 +11,7 @@ use pudtune::util::{benchkit, table};
 
 fn main() {
     let cfg = DeviceConfig::default();
-    let mut sys = SystemConfig::default();
-    sys.cols = 8192;
+    let sys = SystemConfig { cols: 8192, ..SystemConfig::default() };
     let exp = ExperimentConfig::default();
 
     let mut pts = Vec::new();

@@ -10,8 +10,7 @@ use pudtune::util::benchkit;
 
 fn main() {
     let cfg = DeviceConfig::default();
-    let mut sys = SystemConfig::default();
-    sys.cols = 8192;
+    let sys = SystemConfig { cols: 8192, ..SystemConfig::default() };
     let exp = ExperimentConfig::default();
 
     let mut a = Vec::new();

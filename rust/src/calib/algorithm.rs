@@ -124,6 +124,12 @@ impl CalibParams {
     }
 }
 
+/// Default battery depth of the recalibration service's load-time ECR
+/// spot check: deep enough to flag a stale calibration (a drifted
+/// column errs on a large fraction of boundary patterns), ~16x cheaper
+/// than the paper's full 8,192-sample acceptance battery.
+pub const SPOT_CHECK_SAMPLES: u32 = 512;
+
 /// Constant-row charge opened alongside the calibration rows for MAJ-m
 /// under 8-row SiMRA: MAJ5 opens none (5 operands + 3 calib), MAJ3
 /// additionally opens a constant-0 and a constant-1 row.

@@ -1,0 +1,287 @@
+//! Drift policy: when is a calibration still trustworthy?
+//!
+//! The paper stores calibration data in non-volatile memory so it
+//! survives reboots (§III-A), but its own reliability study (Fig. 6)
+//! and the SiMRA characterisation literature show the error-prone
+//! column population is *condition-dependent*: temperature excursions
+//! shift sense-amp thresholds, aging drifts them, and retention decay
+//! erodes the stored analog levels. A serving system must therefore
+//! treat a calibration as a cached artifact with an invalidation
+//! policy, not a one-shot preprocessing step.
+//!
+//! This module is the policy half of that story — pure data and
+//! decision logic, no engine access:
+//!
+//! * [`DriftPolicy`] — the thresholds an operator tunes: the load-time
+//!   acceptance ECR bound, and the three drift signals' limits
+//!   (temperature excursion, retention age, rolling served-batch ECR);
+//! * [`DriftMonitor`] — one subarray's view: the environment its
+//!   active calibration was identified/accepted under plus a rolling
+//!   window of served-batch ECRs;
+//! * [`DriftSignal`] — why recalibration was scheduled.
+//!
+//! The mechanism half — spot checks, queueing, background
+//! recalibration — lives in [`crate::coordinator::service`].
+
+use crate::dram::temperature::Environment;
+use std::collections::VecDeque;
+use std::fmt;
+
+/// Operator-tunable drift thresholds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftPolicy {
+    /// Load-time acceptance: a rehydrated calibration whose spot-check
+    /// ECR exceeds this bound is rejected (recalibrate from scratch).
+    pub accept_max_ecr: f64,
+    /// Temperature excursion from the calibration temperature that
+    /// schedules recalibration, °C.
+    pub max_temp_delta_c: f64,
+    /// Calibration age beyond which recalibration is scheduled, hours
+    /// (retention decay and aging drift both accumulate with time).
+    pub max_age_hours: f64,
+    /// Rolling served-batch ECR beyond which recalibration is
+    /// scheduled (the symptom-level signal: whatever the cause, the
+    /// calibration is no longer holding).
+    pub max_serve_ecr: f64,
+    /// Served batches in the rolling ECR window; the ECR signal only
+    /// fires once the window is full, so one noisy batch cannot
+    /// trigger a recalibration storm.
+    pub serve_window: usize,
+}
+
+impl Default for DriftPolicy {
+    fn default() -> Self {
+        Self {
+            // PUDTune residual ECR is a few percent (Table I); 10%
+            // leaves headroom for small-sample spot checks.
+            accept_max_ecr: 0.10,
+            // Fig. 6a heats to 100 °C from a 45 °C calibration; stay
+            // well inside that span before re-tuning.
+            max_temp_delta_c: 20.0,
+            // Fig. 6b ages for one week.
+            max_age_hours: 168.0,
+            max_serve_ecr: 0.10,
+            serve_window: 4,
+        }
+    }
+}
+
+impl DriftPolicy {
+    /// Reject thresholds that can never fire or are not numbers.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("accept_max_ecr", self.accept_max_ecr),
+            ("max_temp_delta_c", self.max_temp_delta_c),
+            ("max_age_hours", self.max_age_hours),
+            ("max_serve_ecr", self.max_serve_ecr),
+        ] {
+            if v.is_nan() || v < 0.0 {
+                return Err(format!("drift policy: {name} must be non-negative, got {v}"));
+            }
+        }
+        if self.serve_window == 0 {
+            return Err("drift policy: serve_window must be at least 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Why a subarray's calibration was scheduled for recalibration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DriftSignal {
+    /// Die temperature moved too far from the calibration temperature.
+    TemperatureExcursion { delta_c: f64 },
+    /// The calibration is too old (retention decay / aging drift).
+    RetentionAge { hours: f64 },
+    /// The rolling served-batch ECR exceeded the policy bound.
+    EcrDegradation { rolling_ecr: f64 },
+}
+
+impl fmt::Display for DriftSignal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DriftSignal::TemperatureExcursion { delta_c } => {
+                write!(f, "temperature excursion ({delta_c:+.1} C from calibration)")
+            }
+            DriftSignal::RetentionAge { hours } => {
+                write!(f, "calibration age ({hours:.1} h)")
+            }
+            DriftSignal::EcrDegradation { rolling_ecr } => {
+                write!(f, "served-batch ECR degradation ({:.2}%)", rolling_ecr * 100.0)
+            }
+        }
+    }
+}
+
+/// One subarray's drift state: the environment its active calibration
+/// holds for, and the recent served-batch error history.
+#[derive(Clone, Debug)]
+pub struct DriftMonitor {
+    /// Temperature the active calibration was identified/accepted at.
+    cal_temp_c: f64,
+    /// Environment clock at identification/acceptance, hours.
+    cal_hours: f64,
+    /// Rolling ECRs of the most recent served batches.
+    window: VecDeque<f64>,
+    capacity: usize,
+}
+
+impl DriftMonitor {
+    /// Monitor for a calibration just identified/accepted under `env`.
+    pub fn new(env: &Environment, serve_window: usize) -> Self {
+        Self {
+            cal_temp_c: env.temp_c,
+            cal_hours: env.hours,
+            window: VecDeque::with_capacity(serve_window.max(1)),
+            capacity: serve_window.max(1),
+        }
+    }
+
+    /// Re-anchor after a successful recalibration: the new calibration
+    /// holds for the *current* environment, and the served-ECR history
+    /// of the old calibration no longer applies.
+    pub fn rebase(&mut self, env: &Environment) {
+        self.cal_temp_c = env.temp_c;
+        self.cal_hours = env.hours;
+        self.window.clear();
+    }
+
+    /// Record one served batch's ECR.
+    pub fn observe_ecr(&mut self, ecr: f64) {
+        if self.window.len() == self.capacity {
+            self.window.pop_front();
+        }
+        self.window.push_back(ecr);
+    }
+
+    /// Mean ECR over the rolling window (`None` until a batch lands).
+    pub fn rolling_ecr(&self) -> Option<f64> {
+        if self.window.is_empty() {
+            return None;
+        }
+        Some(self.window.iter().sum::<f64>() / self.window.len() as f64)
+    }
+
+    /// Age of the active calibration at `env`, hours.
+    pub fn age_hours(&self, env: &Environment) -> f64 {
+        env.hours - self.cal_hours
+    }
+
+    /// Evaluate the drift signals against a policy. Returns the first
+    /// firing signal in fixed priority order — temperature excursion,
+    /// then age, then rolling ECR — so repeated polls are stable.
+    pub fn check(&self, policy: &DriftPolicy, env: &Environment) -> Option<DriftSignal> {
+        let delta_c = env.temp_c - self.cal_temp_c;
+        if delta_c.abs() > policy.max_temp_delta_c {
+            return Some(DriftSignal::TemperatureExcursion { delta_c });
+        }
+        let hours = self.age_hours(env);
+        if hours > policy.max_age_hours {
+            return Some(DriftSignal::RetentionAge { hours });
+        }
+        if self.window.len() == self.capacity {
+            // A full window always has a mean.
+            let rolling_ecr = self.rolling_ecr().unwrap_or(0.0);
+            if rolling_ecr > policy.max_serve_ecr {
+                return Some(DriftSignal::EcrDegradation { rolling_ecr });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(temp_c: f64, hours: f64) -> Environment {
+        Environment { temp_c, hours }
+    }
+
+    #[test]
+    fn defaults_validate() {
+        DriftPolicy::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_nonsense() {
+        let p = DriftPolicy { max_temp_delta_c: f64::NAN, ..DriftPolicy::default() };
+        assert!(p.validate().unwrap_err().contains("max_temp_delta_c"));
+        let p = DriftPolicy { accept_max_ecr: -0.1, ..DriftPolicy::default() };
+        assert!(p.validate().is_err());
+        let p = DriftPolicy { serve_window: 0, ..DriftPolicy::default() };
+        assert!(p.validate().unwrap_err().contains("serve_window"));
+    }
+
+    #[test]
+    fn quiet_monitor_raises_nothing() {
+        let p = DriftPolicy::default();
+        let m = DriftMonitor::new(&env(45.0, 0.0), p.serve_window);
+        assert_eq!(m.check(&p, &env(45.0, 1.0)), None);
+        assert_eq!(m.check(&p, &env(55.0, 24.0)), None);
+    }
+
+    #[test]
+    fn temperature_excursion_fires_in_both_directions() {
+        let p = DriftPolicy::default();
+        let m = DriftMonitor::new(&env(45.0, 0.0), p.serve_window);
+        match m.check(&p, &env(85.0, 0.0)) {
+            Some(DriftSignal::TemperatureExcursion { delta_c }) => {
+                assert!((delta_c - 40.0).abs() < 1e-9)
+            }
+            other => panic!("expected excursion, got {other:?}"),
+        }
+        assert!(matches!(
+            m.check(&p, &env(10.0, 0.0)),
+            Some(DriftSignal::TemperatureExcursion { .. })
+        ));
+    }
+
+    #[test]
+    fn age_fires_after_policy_bound() {
+        let p = DriftPolicy { max_age_hours: 72.0, ..DriftPolicy::default() };
+        let m = DriftMonitor::new(&env(45.0, 10.0), p.serve_window);
+        assert_eq!(m.check(&p, &env(45.0, 80.0)), None);
+        assert!(matches!(
+            m.check(&p, &env(45.0, 83.0)),
+            Some(DriftSignal::RetentionAge { .. })
+        ));
+    }
+
+    #[test]
+    fn rolling_ecr_needs_a_full_window() {
+        let p = DriftPolicy { serve_window: 3, max_serve_ecr: 0.05, ..DriftPolicy::default() };
+        let mut m = DriftMonitor::new(&env(45.0, 0.0), p.serve_window);
+        m.observe_ecr(0.5);
+        m.observe_ecr(0.5);
+        // Two hot batches in a 3-window: not yet.
+        assert_eq!(m.check(&p, &env(45.0, 0.0)), None);
+        m.observe_ecr(0.5);
+        match m.check(&p, &env(45.0, 0.0)) {
+            Some(DriftSignal::EcrDegradation { rolling_ecr }) => {
+                assert!((rolling_ecr - 0.5).abs() < 1e-9)
+            }
+            other => panic!("expected degradation, got {other:?}"),
+        }
+        // The window rolls: three clean batches clear the signal.
+        m.observe_ecr(0.0);
+        m.observe_ecr(0.0);
+        m.observe_ecr(0.0);
+        assert_eq!(m.check(&p, &env(45.0, 0.0)), None);
+    }
+
+    #[test]
+    fn rebase_clears_history_and_reanchors() {
+        let p = DriftPolicy::default();
+        let mut m = DriftMonitor::new(&env(45.0, 0.0), p.serve_window);
+        for _ in 0..p.serve_window {
+            m.observe_ecr(0.9);
+        }
+        let hot = env(85.0, 200.0);
+        assert!(m.check(&p, &hot).is_some());
+        m.rebase(&hot);
+        assert_eq!(m.check(&p, &hot), None);
+        assert_eq!(m.rolling_ecr(), None);
+        assert_eq!(m.age_hours(&hot), 0.0);
+    }
+}

@@ -322,6 +322,63 @@ impl CalibEngine for NativeEngine {
     }
 }
 
+/// Run a calibration batch with **per-bank fault isolation**: the
+/// batched call is attempted first (keeping worker-pool fan-out / PJRT
+/// fusion on the fast path); if it errors or panics, every request is
+/// retried individually across the worker pool with panics captured,
+/// so one bad bank degrades to one `Err` slot instead of failing the
+/// whole batch — or aborting the process. This is the execution
+/// primitive of the recalibration service
+/// ([`crate::coordinator::service`]).
+pub fn calibrate_isolated<E: CalibEngine + Sync>(
+    engine: &E,
+    reqs: &[CalibRequest],
+    threads: usize,
+) -> Vec<Result<Calibration, String>> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    if reqs.is_empty() {
+        return Vec::new();
+    }
+    match catch_unwind(AssertUnwindSafe(|| engine.calibrate_batch(reqs))) {
+        Ok(Ok(v)) if v.len() == reqs.len() => return v.into_iter().map(Ok).collect(),
+        Ok(Ok(_)) | Ok(Err(_)) | Err(_) => {}
+    }
+    worker::try_parallel_map((0..reqs.len()).collect(), threads, |i| {
+        engine.calibrate_one(&reqs[i]).map_err(|e| format!("{e:#}"))
+    })
+    .into_iter()
+    .map(|slot| match slot {
+        Ok(inner) => inner,
+        Err(job) => Err(job.to_string()),
+    })
+    .collect()
+}
+
+/// [`calibrate_isolated`] for ECR measurement batches.
+pub fn measure_ecr_isolated<E: CalibEngine + Sync>(
+    engine: &E,
+    reqs: &[EcrRequest],
+    threads: usize,
+) -> Vec<Result<EcrReport, String>> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    if reqs.is_empty() {
+        return Vec::new();
+    }
+    match catch_unwind(AssertUnwindSafe(|| engine.measure_ecr_batch(reqs))) {
+        Ok(Ok(v)) if v.len() == reqs.len() => return v.into_iter().map(Ok).collect(),
+        Ok(Ok(_)) | Ok(Err(_)) | Err(_) => {}
+    }
+    worker::try_parallel_map((0..reqs.len()).collect(), threads, |i| {
+        engine.measure_ecr_one(&reqs[i]).map_err(|e| format!("{e:#}"))
+    })
+    .into_iter()
+    .map(|slot| match slot {
+        Ok(inner) => inner,
+        Err(job) => Err(job.to_string()),
+    })
+    .collect()
+}
+
 /// Runtime-selected backend: one concrete type service code can hold
 /// while staying backend-agnostic.
 pub enum AnyEngine {
@@ -451,5 +508,70 @@ mod tests {
         let req = EcrRequest::new(bank, calib, 5, 256);
         assert_eq!(req.seed, ECR_MASTER_SEED);
         assert_eq!(req.with_seed(7).seed, 7);
+    }
+
+    /// Engine that panics whenever a batch touches one poisoned bank —
+    /// the fault-injection rig for the isolation helpers.
+    struct PanickingEngine {
+        inner: NativeEngine,
+        poison_seed: u64,
+    }
+
+    impl CalibEngine for PanickingEngine {
+        fn backend(&self) -> &'static str {
+            "panicking"
+        }
+
+        fn calibrate_batch(&self, reqs: &[CalibRequest]) -> Result<Vec<Calibration>> {
+            for r in reqs {
+                assert_ne!(r.bank.seed, self.poison_seed, "injected engine fault");
+            }
+            self.inner.calibrate_batch(reqs)
+        }
+
+        fn measure_ecr_batch(&self, reqs: &[EcrRequest]) -> Result<Vec<EcrReport>> {
+            for r in reqs {
+                assert_ne!(r.bank.seed, self.poison_seed, "injected engine fault");
+            }
+            self.inner.measure_ecr_batch(reqs)
+        }
+    }
+
+    #[test]
+    fn isolated_calibration_degrades_exactly_one_bank() {
+        let cfg = cfg();
+        let batch = BankBatch::from_device_seed(cfg.clone(), 256, 0xFA11, 3);
+        let reqs = batch.calib_requests(FracConfig::pudtune([2, 1, 0]), CalibParams::quick());
+        let poison_seed = reqs[1].bank.seed;
+        let eng = PanickingEngine { inner: NativeEngine::new(cfg.clone()), poison_seed };
+        let out = calibrate_isolated(&eng, &reqs, 4);
+        assert_eq!(out.len(), 3);
+        assert!(out[1].is_err(), "poisoned bank must surface as an error");
+        // The healthy banks match the clean engine bit for bit.
+        let clean = NativeEngine::new(cfg);
+        for i in [0usize, 2] {
+            let got = out[i].as_ref().expect("healthy bank");
+            assert_eq!(got.levels, clean.calibrate_one(&reqs[i]).unwrap().levels);
+        }
+    }
+
+    #[test]
+    fn isolated_helpers_use_the_batched_fast_path_when_healthy() {
+        let cfg = cfg();
+        let eng = NativeEngine::new(cfg.clone());
+        let batch = BankBatch::from_device_seed(cfg, 128, 0x150, 2);
+        let reqs = batch.calib_requests(FracConfig::pudtune([2, 1, 0]), CalibParams::quick());
+        let isolated = calibrate_isolated(&eng, &reqs, 2);
+        let batched = eng.calibrate_batch(&reqs).unwrap();
+        for (a, b) in isolated.iter().zip(&batched) {
+            assert_eq!(a.as_ref().unwrap().levels, b.levels);
+        }
+        let calibs: Vec<Calibration> = isolated.into_iter().map(|r| r.unwrap()).collect();
+        let ereqs = batch.ecr_requests(&calibs, 5, 512);
+        let reports = measure_ecr_isolated(&eng, &ereqs, 2);
+        let direct = eng.measure_ecr_batch(&ereqs).unwrap();
+        for (a, b) in reports.iter().zip(&direct) {
+            assert_eq!(a.as_ref().unwrap().error_counts, b.error_counts);
+        }
     }
 }

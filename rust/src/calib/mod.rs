@@ -18,13 +18,19 @@
 //!   coordinator, sweeps, CLI and examples are written against;
 //! * [`store`] — non-volatile persistence of identified calibration
 //!   data (paper §III-A: stored bit patterns are reusable across
-//!   reboots), as JSON;
+//!   reboots), as JSON, with checked decoding and geometry validation;
+//! * [`drift`] — the drift policy that decides when a persisted or
+//!   serving calibration is no longer trustworthy (temperature
+//!   excursion, retention age, rolling served-batch ECR) — the policy
+//!   half of the recalibration service in
+//!   [`crate::coordinator::service`];
 //! * [`sweep`] — Frac-configuration sweeps (Fig. 5), batched through
 //!   the engine trait, and the one-off variation-model fit against
 //!   Table I's baseline.
 
 pub mod algorithm;
 pub mod bias;
+pub mod drift;
 pub mod engine;
 pub mod lattice;
 pub mod store;

@@ -3,10 +3,36 @@
 //! memory, it can be reused across different environments and system
 //! reboots").
 //!
-//! Serialises identified calibration data per subarray — Frac
-//! configuration plus per-column level indices — as JSON. Level indices
-//! are run-length encoded: after calibration most columns sit at the
-//! neutral level, so stores stay small.
+//! ## Lifecycle
+//!
+//! The store is one stage of the full calibration lifecycle that the
+//! recalibration service ([`crate::coordinator::service`]) closes:
+//!
+//! 1. **persist** — after Algorithm 1 identifies per-column levels,
+//!    [`CalibStore::insert`] + [`CalibStore::save_file`] write them to
+//!    non-volatile storage (JSON; level indices are run-length encoded,
+//!    so post-calibration stores — where most columns sit at the
+//!    neutral level — stay small);
+//! 2. **load** — on startup [`CalibStore::load_file`] +
+//!    [`CalibStore::load`] rehydrate `Calibration`s against the current
+//!    [`DeviceConfig`]; decoding is *checked* (integral-value decode,
+//!    level-range and geometry validation), so a corrupt or
+//!    incompatible store surfaces as an error instead of silently
+//!    truncated data;
+//! 3. **validate** — a loaded calibration is a *candidate*: the service
+//!    runs a cheap ECR spot-check battery and rejects entries whose
+//!    error rate exceeds the drift policy's acceptance bound
+//!    ([`crate::calib::drift::DriftPolicy`]);
+//! 4. **drift → recalibrate** — accepted entries serve until a drift
+//!    signal (temperature excursion, retention age, rolling served-ECR)
+//!    schedules background recalibration, whose result is re-persisted
+//!    through step 1.
+//!
+//! Loading distinguishes three cases: `Ok(Some(_))` (entry present and
+//! decodable), `Ok(None)` (no entry for the subarray — calibrate from
+//! scratch), and `Err(_)` (entry present but *incompatible* with the
+//! current device — corrupt levels, wrong geometry — which callers must
+//! treat as a hard fault, not a cache miss).
 
 use crate::calib::algorithm::Calibration;
 use crate::calib::lattice::{ConfigKind, FracConfig, OffsetLattice};
@@ -14,6 +40,17 @@ use crate::config::device::DeviceConfig;
 use crate::dram::geometry::SubarrayId;
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
+
+/// Maximum plausible stored per-row Frac count: `frac_charge` converges
+/// geometrically, so anything beyond this is indistinguishable from
+/// neutral and almost certainly store corruption.
+pub const MAX_STORED_FRACS: u32 = 16;
+
+/// Maximum plausible per-subarray column count in a store entry (the
+/// paper's full geometry is 65,536; this leaves two orders of
+/// magnitude of headroom). Bounds the RLE decode allocation so a
+/// corrupt `cols` field errors out instead of attempting a huge `Vec`.
+pub const MAX_STORED_COLS: usize = 1 << 24;
 
 /// A persisted calibration store for (part of) a device.
 #[derive(Clone, Debug, Default)]
@@ -38,12 +75,55 @@ impl CalibStore {
     }
 
     /// Rehydrate one subarray's calibration against a device config.
-    pub fn load(&self, id: SubarrayId, cfg: &DeviceConfig) -> Option<Calibration> {
-        let e = self.entries.get(&id)?;
-        Some(Calibration {
-            lattice: OffsetLattice::build(cfg, &e.config),
-            levels: e.levels.clone(),
-        })
+    ///
+    /// `Ok(None)` means the store has no entry for `id`; `Err` means an
+    /// entry exists but is incompatible with the current device
+    /// geometry (level indices outside the lattice the config builds,
+    /// implausible Frac counts, non-8-row SiMRA) — a hard fault, not a
+    /// cache miss.
+    pub fn load(&self, id: SubarrayId, cfg: &DeviceConfig) -> Result<Option<Calibration>, String> {
+        let Some(e) = self.entries.get(&id) else {
+            return Ok(None);
+        };
+        if cfg.simra_rows != 8 {
+            return Err(format!(
+                "stored calibration assumes 8-row SiMRA (3 calibration rows); \
+                 device has simra_rows = {}",
+                cfg.simra_rows
+            ));
+        }
+        if let Some(&f) = e.config.fracs.iter().find(|&&f| f > MAX_STORED_FRACS) {
+            return Err(format!(
+                "stored Frac count {f} exceeds the plausible maximum {MAX_STORED_FRACS}"
+            ));
+        }
+        let lattice = OffsetLattice::build(cfg, &e.config);
+        let max_level = lattice.len() as u8;
+        if let Some(&lv) = e.levels.iter().find(|&&lv| lv >= max_level) {
+            return Err(format!(
+                "stored level index {lv} outside the {max_level}-level lattice of {}",
+                e.config.label()
+            ));
+        }
+        Ok(Some(Calibration { lattice, levels: e.levels.clone() }))
+    }
+
+    /// [`Self::load`] with a geometry check against the expected column
+    /// count: an entry whose width disagrees with the subarray it is
+    /// being rehydrated for is an error, not a candidate.
+    pub fn load_expecting(
+        &self,
+        id: SubarrayId,
+        cfg: &DeviceConfig,
+        cols: usize,
+    ) -> Result<Option<Calibration>, String> {
+        match self.load(id, cfg)? {
+            Some(c) if c.cols() != cols => Err(format!(
+                "stored calibration covers {} columns, subarray has {cols}",
+                c.cols()
+            )),
+            other => Ok(other),
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -78,27 +158,35 @@ impl CalibStore {
         }
         let mut store = CalibStore::default();
         for e in j.get("subarrays").as_arr().ok_or("missing subarrays")? {
+            // Identifiers and counts decode through the checked-integral
+            // path: a fractional or out-of-range value is corruption,
+            // not something to truncate into a different subarray.
             let id = SubarrayId::new(
-                e.get("channel").as_usize().ok_or("bad channel")?,
-                e.get("bank").as_usize().ok_or("bad bank")?,
-                e.get("subarray").as_usize().ok_or("bad subarray")?,
+                e.get("channel").as_exact_usize().ok_or("bad channel")?,
+                e.get("bank").as_exact_usize().ok_or("bad bank")?,
+                e.get("subarray").as_exact_usize().ok_or("bad subarray")?,
             );
             let fr = e.get("fracs").as_arr().ok_or("bad fracs")?;
             if fr.len() != 3 {
                 return Err("fracs must have 3 entries".into());
             }
             let fracs = [
-                fr[0].as_usize().ok_or("bad frac")? as u32,
-                fr[1].as_usize().ok_or("bad frac")? as u32,
-                fr[2].as_usize().ok_or("bad frac")? as u32,
+                fr[0].as_exact_u32().ok_or("bad frac")?,
+                fr[1].as_exact_u32().ok_or("bad frac")?,
+                fr[2].as_exact_u32().ok_or("bad frac")?,
             ];
             let config = match e.get("kind").as_str() {
                 Some("baseline") => FracConfig { kind: ConfigKind::Baseline, fracs },
                 Some("pudtune") => FracConfig { kind: ConfigKind::PudTune, fracs },
                 _ => return Err("bad kind".into()),
             };
-            let levels = rle_decode(e.get("levels_rle"))?;
-            let cols = e.get("cols").as_usize().ok_or("bad cols")?;
+            let cols = e.get("cols").as_exact_usize().ok_or("bad cols")?;
+            if cols > MAX_STORED_COLS {
+                return Err(format!(
+                    "stored cols {cols} exceeds the plausible maximum {MAX_STORED_COLS}"
+                ));
+            }
+            let levels = rle_decode(e.get("levels_rle"), cols)?;
             if levels.len() != cols {
                 return Err(format!("RLE length {} != cols {cols}", levels.len()));
             }
@@ -134,15 +222,21 @@ fn rle_encode(levels: &[u8]) -> Json {
     Json::Arr(out)
 }
 
-fn rle_decode(j: &Json) -> Result<Vec<u8>, String> {
+/// Decode an RLE levels array, with every value and count going through
+/// the checked-integral path. `max_len` bounds the decoded length so a
+/// corrupt run count cannot balloon memory before the cols check.
+fn rle_decode(j: &Json, max_len: usize) -> Result<Vec<u8>, String> {
     let arr = j.as_arr().ok_or("bad RLE array")?;
     if arr.len() % 2 != 0 {
         return Err("RLE array must have even length".into());
     }
     let mut out = Vec::new();
     for pair in arr.chunks(2) {
-        let v = pair[0].as_usize().ok_or("bad RLE value")? as u8;
-        let n = pair[1].as_usize().ok_or("bad RLE count")?;
+        let v = pair[0].as_exact_u8().ok_or("bad RLE value")?;
+        let n = pair[1].as_exact_usize().ok_or("bad RLE count")?;
+        if out.len() + n > max_len {
+            return Err(format!("RLE decodes past the declared {max_len} columns"));
+        }
         out.extend(std::iter::repeat(v).take(n));
     }
     Ok(out)
@@ -180,13 +274,100 @@ mod tests {
         let mut store = CalibStore::default();
         let id = SubarrayId::new(0, 0, 0);
         store.insert(id, &calib);
-        let back = store.load(id, &cfg).unwrap();
+        let back = store.load(id, &cfg).unwrap().unwrap();
         assert_eq!(back.levels, calib.levels);
         assert_eq!(back.lattice.config, calib.lattice.config);
         for c in 0..32 {
             assert!((back.q_extra(c) - calib.q_extra(c)).abs() < 1e-12);
         }
-        assert!(store.load(SubarrayId::new(9, 9, 9), &cfg).is_none());
+        // Missing entries are a cache miss, not an error.
+        assert!(store.load(SubarrayId::new(9, 9, 9), &cfg).unwrap().is_none());
+    }
+
+    #[test]
+    fn load_rejects_out_of_range_levels() {
+        let cfg = DeviceConfig::default();
+        let mut store = CalibStore::default();
+        let id = SubarrayId::new(0, 0, 0);
+        store.entries.insert(
+            id,
+            StoredCalib { config: FracConfig::pudtune([2, 1, 0]), levels: vec![0, 3, 9, 1] },
+        );
+        let err = store.load(id, &cfg).unwrap_err();
+        assert!(err.contains("level index 9"), "{err}");
+    }
+
+    #[test]
+    fn load_rejects_implausible_fracs_and_geometry() {
+        let cfg = DeviceConfig::default();
+        let mut store = CalibStore::default();
+        let id = SubarrayId::new(0, 0, 0);
+        store.entries.insert(
+            id,
+            StoredCalib { config: FracConfig::pudtune([99, 1, 0]), levels: vec![0; 8] },
+        );
+        assert!(store.load(id, &cfg).unwrap_err().contains("Frac count 99"));
+
+        let mut store = CalibStore::default();
+        store.insert(id, &sample_calib(&cfg, 16));
+        let mut bad_cfg = cfg.clone();
+        bad_cfg.simra_rows = 16;
+        assert!(store.load(id, &bad_cfg).unwrap_err().contains("8-row SiMRA"));
+    }
+
+    #[test]
+    fn load_expecting_checks_column_count() {
+        let cfg = DeviceConfig::default();
+        let mut store = CalibStore::default();
+        let id = SubarrayId::new(0, 0, 0);
+        store.insert(id, &sample_calib(&cfg, 64));
+        assert!(store.load_expecting(id, &cfg, 64).unwrap().is_some());
+        let err = store.load_expecting(id, &cfg, 128).unwrap_err();
+        assert!(err.contains("64 columns"), "{err}");
+        // Missing stays a miss regardless of the expected width.
+        assert!(store.load_expecting(SubarrayId::new(1, 1, 1), &cfg, 64).unwrap().is_none());
+    }
+
+    #[test]
+    fn from_json_rejects_non_integral_and_out_of_range_numbers() {
+        // Fractional bank id: would previously truncate 3.7 -> 3 and
+        // silently rehydrate the wrong subarray.
+        let frac_id = r#"{"format":"pudtune-calib-v1","subarrays":[
+            {"channel":0,"bank":3.7,"subarray":0,"kind":"pudtune",
+             "fracs":[2,1,0],"levels_rle":[4,4],"cols":4}]}"#;
+        assert!(CalibStore::from_json(&json::parse(frac_id).unwrap())
+            .unwrap_err()
+            .contains("bad bank"));
+        // RLE value 256 does not fit u8 (would previously wrap to 0).
+        let wide_level = r#"{"format":"pudtune-calib-v1","subarrays":[
+            {"channel":0,"bank":0,"subarray":0,"kind":"pudtune",
+             "fracs":[2,1,0],"levels_rle":[256,4],"cols":4}]}"#;
+        assert!(CalibStore::from_json(&json::parse(wide_level).unwrap())
+            .unwrap_err()
+            .contains("bad RLE value"));
+        // Negative frac count.
+        let neg_frac = r#"{"format":"pudtune-calib-v1","subarrays":[
+            {"channel":0,"bank":0,"subarray":0,"kind":"pudtune",
+             "fracs":[-2,1,0],"levels_rle":[4,4],"cols":4}]}"#;
+        assert!(CalibStore::from_json(&json::parse(neg_frac).unwrap())
+            .unwrap_err()
+            .contains("bad frac"));
+        // A run count overshooting the declared cols is rejected before
+        // it can balloon memory.
+        let runaway = r#"{"format":"pudtune-calib-v1","subarrays":[
+            {"channel":0,"bank":0,"subarray":0,"kind":"pudtune",
+             "fracs":[2,1,0],"levels_rle":[4,4000000],"cols":4}]}"#;
+        assert!(CalibStore::from_json(&json::parse(runaway).unwrap())
+            .unwrap_err()
+            .contains("past the declared"));
+        // ...and so is an implausibly huge cols declaration itself
+        // (which would otherwise authorise the decode allocation).
+        let huge = r#"{"format":"pudtune-calib-v1","subarrays":[
+            {"channel":0,"bank":0,"subarray":0,"kind":"pudtune",
+             "fracs":[2,1,0],"levels_rle":[4,900000000000000],"cols":900000000000000}]}"#;
+        assert!(CalibStore::from_json(&json::parse(huge).unwrap())
+            .unwrap_err()
+            .contains("plausible maximum"));
     }
 
     #[test]
@@ -194,7 +375,7 @@ mod tests {
         let levels = vec![4u8; 65536];
         let j = rle_encode(&levels);
         assert_eq!(j.as_arr().unwrap().len(), 2);
-        assert_eq!(rle_decode(&j).unwrap(), levels);
+        assert_eq!(rle_decode(&j, levels.len()).unwrap(), levels);
     }
 
     #[test]

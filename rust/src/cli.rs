@@ -71,6 +71,18 @@ impl Args {
         }
     }
 
+    /// Optional float: `Ok(None)` when absent, parse error when
+    /// malformed — for options with no meaningful default (e.g.
+    /// threshold overrides layered on a policy struct).
+    pub fn f64_opt(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(v) => {
+                v.parse().map(Some).map_err(|_| format!("--{name}: bad number '{v}'"))
+            }
+        }
+    }
+
     /// Parse a `--fracs x,y,z` style triple.
     pub fn fracs(&self, name: &str, default: [u32; 3]) -> Result<[u32; 3], String> {
         match self.options.get(name) {
@@ -113,6 +125,15 @@ mod tests {
         let a = parse(&v(&["fig5", "--fracs", "2,1,0"]), &[]).unwrap();
         assert_eq!(a.fracs("fracs", [0, 0, 0]).unwrap(), [2, 1, 0]);
         assert_eq!(a.fracs("other", [3, 3, 3]).unwrap(), [3, 3, 3]);
+    }
+
+    #[test]
+    fn optional_floats() {
+        let a = parse(&v(&["serve", "--drift-temp", "12.5"]), &[]).unwrap();
+        assert_eq!(a.f64_opt("drift-temp").unwrap(), Some(12.5));
+        assert_eq!(a.f64_opt("drift-age").unwrap(), None);
+        let bad = parse(&v(&["serve", "--drift-temp", "warm"]), &[]).unwrap();
+        assert!(bad.f64_opt("drift-temp").is_err());
     }
 
     #[test]

@@ -117,6 +117,36 @@ impl DeviceConfig {
         0.5 * self.cc_ff / (rows * self.cc_ff + self.cb_ff)
     }
 
+    /// Validate the invariants the decay/drift paths rely on. The
+    /// retention model treats only `tau_retention_hours = INFINITY`
+    /// (off) and finite positive values as meaningful; zero, negative
+    /// and NaN taus are configuration errors — `swing_factor` guards
+    /// against them at runtime, but they should be rejected where the
+    /// config enters the system (here, called by every parse path).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tau_retention_hours.is_nan() || self.tau_retention_hours <= 0.0 {
+            return Err(format!(
+                "tau_retention_hours must be a positive number of hours \
+                 (or INFINITY to disable decay), got {}",
+                self.tau_retention_hours
+            ));
+        }
+        // `contains` is false for NaN, so NaN is rejected here too.
+        if !(0.0..=1.0).contains(&self.retention_swing_min) {
+            return Err(format!(
+                "retention_swing_min must lie in [0, 1], got {}",
+                self.retention_swing_min
+            ));
+        }
+        if self.drift_per_hour.is_nan() || self.drift_per_hour < 0.0 {
+            return Err(format!(
+                "drift_per_hour must be non-negative, got {}",
+                self.drift_per_hour
+            ));
+        }
+        Ok(())
+    }
+
     /// Load from `artifacts/physics.json` (emitted by the Python build
     /// step) so both sides provably share one model.
     pub fn from_physics_json(j: &Json) -> Result<Self, String> {
@@ -142,6 +172,7 @@ impl DeviceConfig {
         if let Some(v) = j.get("retention_swing_min").as_f64() {
             cfg.retention_swing_min = v;
         }
+        cfg.validate()?;
         Ok(cfg)
     }
 }
@@ -200,6 +231,39 @@ mod tests {
         let d = DeviceConfig::default();
         assert!(d.tau_retention_hours.is_infinite());
         assert!((0.0..=1.0).contains(&d.retention_swing_min));
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_retention_taus() {
+        let ok = DeviceConfig::default();
+        assert!(ok.validate().is_ok(), "default config must validate");
+        let finite = DeviceConfig { tau_retention_hours: 64.0, ..ok.clone() };
+        assert!(finite.validate().is_ok());
+        for bad_tau in [0.0, -24.0, f64::NAN] {
+            let bad = DeviceConfig { tau_retention_hours: bad_tau, ..ok.clone() };
+            let err = bad.validate().unwrap_err();
+            assert!(err.contains("tau_retention_hours"), "{err}");
+        }
+        for bad_min in [-0.1, 1.5, f64::NAN] {
+            let bad = DeviceConfig { retention_swing_min: bad_min, ..ok.clone() };
+            assert!(bad.validate().unwrap_err().contains("retention_swing_min"));
+        }
+        let bad = DeviceConfig { drift_per_hour: f64::NAN, ..ok };
+        assert!(bad.validate().unwrap_err().contains("drift_per_hour"));
+    }
+
+    #[test]
+    fn physics_json_rejects_degenerate_retention_taus() {
+        use crate::util::json;
+        for bad in ["0.0", "-3.5"] {
+            let src = format!(
+                r#"{{"cc_ff":30.0,"cb_ff":270.0,"v_pre":0.5,"simra_rows":8,
+                    "frac_r":0.65,"sigma_sa":0.0284,"tail_weight":0.1,"tail_ratio":2.5,
+                    "sigma_noise":0.002,"tau_retention_hours":{bad}}}"#
+            );
+            let err = DeviceConfig::from_physics_json(&json::parse(&src).unwrap()).unwrap_err();
+            assert!(err.contains("tau_retention_hours"), "{err}");
+        }
     }
 
     #[test]

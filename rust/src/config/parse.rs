@@ -95,7 +95,9 @@ pub struct Resolved {
     pub experiment: ExperimentConfig,
 }
 
-/// Apply a config file over the defaults; unknown keys error out.
+/// Apply a config file over the defaults; unknown keys error out, and
+/// the resolved device model is validated (degenerate retention/drift
+/// parameters are configuration errors, not runtime surprises).
 pub fn resolve(cf: &ConfigFile) -> Result<Resolved, String> {
     let mut r = Resolved::default();
     for (section, kvs) in &cf.sections {
@@ -104,6 +106,7 @@ pub fn resolve(cf: &ConfigFile) -> Result<Resolved, String> {
                 .map_err(|e| format!("[{section}] {k}: {e}"))?;
         }
     }
+    r.device.validate().map_err(|e| format!("[device] {e}"))?;
     Ok(r)
 }
 
@@ -120,6 +123,8 @@ fn apply(r: &mut Resolved, section: &str, k: &str, v: &Value) -> Result<(), Stri
         ("device", "tempco_jitter") => r.device.tempco_jitter = v.as_f64()?,
         ("device", "drift_per_hour") => r.device.drift_per_hour = v.as_f64()?,
         ("device", "t_cal") => r.device.t_cal = v.as_f64()?,
+        ("device", "tau_retention_hours") => r.device.tau_retention_hours = v.as_f64()?,
+        ("device", "retention_swing_min") => r.device.retention_swing_min = v.as_f64()?,
         ("system", "channels") => r.system.channels = v.as_f64()? as usize,
         ("system", "banks") => r.system.banks = v.as_f64()? as usize,
         ("system", "rows_per_subarray") => r.system.rows_per_subarray = v.as_f64()? as usize,
@@ -175,6 +180,27 @@ temperatures = [40, 70, 100]
         assert_eq!(r.experiment.temperatures, vec![40.0, 70.0, 100.0]);
         // Untouched keys keep defaults.
         assert_eq!(r.system.banks, 16);
+    }
+
+    #[test]
+    fn retention_keys_parse_and_validate() {
+        let r = resolve(
+            &parse("[device]\ntau_retention_hours = 64\nretention_swing_min = 0.8\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(r.device.tau_retention_hours, 64.0);
+        assert_eq!(r.device.retention_swing_min, 0.8);
+        // `inf` keeps decay off (the default).
+        let r = resolve(&parse("[device]\ntau_retention_hours = inf\n").unwrap()).unwrap();
+        assert!(r.device.tau_retention_hours.is_infinite());
+        // Zero, negative and NaN taus are config errors.
+        for bad in ["0", "-24", "nan"] {
+            let text = format!("[device]\ntau_retention_hours = {bad}\n");
+            let err = resolve(&parse(&text).unwrap()).unwrap_err();
+            assert!(err.contains("tau_retention_hours"), "{bad}: {err}");
+        }
+        let err = resolve(&parse("[device]\nretention_swing_min = 1.5\n").unwrap()).unwrap_err();
+        assert!(err.contains("retention_swing_min"), "{err}");
     }
 
     #[test]

@@ -4,11 +4,32 @@
 //! back-to-back at their encoded offsets; primitive boundaries respect
 //! the close-out latency) and the rank-level tFAW window so traces are
 //! power-honest.
+//!
+//! ## Interleaving serving and recalibration
+//!
+//! When background recalibration shares a bank with a serving
+//! workload, its primitive sequences are issued through
+//! [`Scheduler::try_issue_background`]: a background sequence only
+//! issues if it (including close-out) finishes before the caller's
+//! deadline — typically the next serving batch's start cycle — and is
+//! *deferred* otherwise, so recalibration soaks up idle gaps without
+//! ever delaying the serving path. [`TraceClass`] accounting splits
+//! the bank-busy cycles between the two workloads.
 
 use crate::config::system::Ddr4Timing;
 use crate::controller::command::Command;
 use crate::controller::trace::CommandTrace;
 use std::collections::VecDeque;
+
+/// Which workload a primitive sequence belongs to when serving and
+/// background recalibration share a bank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceClass {
+    /// Foreground serving traffic.
+    Serve,
+    /// Background recalibration traffic.
+    Recalib,
+}
 
 /// Scheduler for one bank within a rank.
 #[derive(Clone, Debug)]
@@ -18,59 +39,132 @@ pub struct Scheduler {
     bank_ready: u64,
     /// Issue cycles of the last 4 ACTs on the rank (tFAW window).
     recent_acts: VecDeque<u64>,
+    /// Busy cycles attributed to [serve, recalib] sequences.
+    class_cycles: [u64; 2],
+    /// Background sequences deferred past their deadline.
+    deferred: u64,
     pub trace: CommandTrace,
 }
 
 impl Scheduler {
     pub fn new(t: Ddr4Timing) -> Self {
-        Self { t, bank_ready: 0, recent_acts: VecDeque::new(), trace: CommandTrace::default() }
+        Self {
+            t,
+            bank_ready: 0,
+            recent_acts: VecDeque::new(),
+            class_cycles: [0; 2],
+            deferred: 0,
+            trace: CommandTrace::default(),
+        }
     }
 
     fn faw_clocks(&self) -> u64 {
         self.t.to_clocks(self.t.t_faw)
     }
 
-    /// Earliest cycle >= `at` satisfying the tFAW constraint for an ACT.
-    fn next_act_slot(&self, at: u64) -> u64 {
-        if self.recent_acts.len() < 4 {
-            return at;
-        }
-        let oldest = self.recent_acts[self.recent_acts.len() - 4];
-        at.max(oldest + self.faw_clocks())
-    }
-
     /// Issue a primitive's command sequence starting no earlier than the
     /// bank-ready cycle; `close_ns` is the recovery before the next
-    /// primitive (tRAS+tRP for full restores, tRP for Frac).
+    /// primitive (tRAS+tRP for full restores, tRP for Frac). Untagged
+    /// sequences count as serving traffic.
     pub fn issue(&mut self, seq: &[Command], close_ns: f64) -> u64 {
+        self.issue_classed(seq, close_ns, TraceClass::Serve)
+    }
+
+    /// [`Self::issue`] with explicit workload attribution.
+    pub fn issue_classed(&mut self, seq: &[Command], close_ns: f64, class: TraceClass) -> u64 {
+        let start = self.bank_ready;
+        let faw = self.faw_clocks();
         let mut cycle = self.bank_ready;
         for cmd in seq {
-            match cmd {
-                Command::Nop { cycles } => {
-                    cycle += *cycles as u64;
-                }
-                Command::Act { .. } => {
-                    cycle = self.next_act_slot(cycle);
-                    self.trace.push(cycle, *cmd);
-                    self.recent_acts.push_back(cycle);
-                    if self.recent_acts.len() > 8 {
-                        self.recent_acts.pop_front();
-                    }
-                    cycle += 1;
-                }
-                _ => {
-                    self.trace.push(cycle, *cmd);
-                    cycle += 1;
-                }
-            }
+            cycle = step_command(cmd, cycle, &mut self.recent_acts, faw, Some(&mut self.trace));
         }
         self.bank_ready = cycle + self.t.to_clocks(close_ns);
+        self.class_cycles[class as usize] += self.bank_ready - start;
         self.bank_ready
+    }
+
+    /// End cycle (including close-out) a sequence *would* reach if
+    /// issued now, without mutating any state — the admission test for
+    /// background work. Walks the exact same [`step_command`] logic as
+    /// [`Self::issue_classed`] over a scratch ACT window.
+    pub fn sequence_end(&self, seq: &[Command], close_ns: f64) -> u64 {
+        let faw = self.faw_clocks();
+        let mut cycle = self.bank_ready;
+        let mut acts: VecDeque<u64> = self.recent_acts.clone();
+        for cmd in seq {
+            cycle = step_command(cmd, cycle, &mut acts, faw, None);
+        }
+        cycle + self.t.to_clocks(close_ns)
+    }
+
+    /// Issue a background (recalibration) sequence only if it finishes
+    /// — close-out included — by `deadline_cycle`; defers it (returns
+    /// `None`, counts [`Self::deferred_background`]) otherwise, so
+    /// background work can never push the next serving sequence past
+    /// its slot.
+    pub fn try_issue_background(
+        &mut self,
+        seq: &[Command],
+        close_ns: f64,
+        deadline_cycle: u64,
+    ) -> Option<u64> {
+        if self.sequence_end(seq, close_ns) > deadline_cycle {
+            self.deferred += 1;
+            return None;
+        }
+        Some(self.issue_classed(seq, close_ns, TraceClass::Recalib))
+    }
+
+    /// Bank-busy cycles attributed to one workload class.
+    pub fn class_cycles(&self, class: TraceClass) -> u64 {
+        self.class_cycles[class as usize]
+    }
+
+    /// Background sequences deferred past their deadline so far.
+    pub fn deferred_background(&self) -> u64 {
+        self.deferred
     }
 
     /// Makespan in nanoseconds.
     pub fn elapsed_ns(&self) -> f64 {
         self.bank_ready as f64 * self.t.t_ck
+    }
+}
+
+/// Advance one command against a bank timing state — the single source
+/// of truth shared by the real issue walk ([`Scheduler::issue_classed`])
+/// and the admission dry-run ([`Scheduler::sequence_end`]), so the two
+/// can never drift apart. Records into `trace` only when given one.
+fn step_command(
+    cmd: &Command,
+    cycle: u64,
+    acts: &mut VecDeque<u64>,
+    faw_clocks: u64,
+    trace: Option<&mut CommandTrace>,
+) -> u64 {
+    match cmd {
+        Command::Nop { cycles } => cycle + *cycles as u64,
+        Command::Act { .. } => {
+            let mut at = cycle;
+            if acts.len() >= 4 {
+                let oldest = acts[acts.len() - 4];
+                at = at.max(oldest + faw_clocks);
+            }
+            if let Some(trace) = trace {
+                trace.push(at, *cmd);
+            }
+            acts.push_back(at);
+            if acts.len() > 8 {
+                acts.pop_front();
+            }
+            at + 1
+        }
+        _ => {
+            if let Some(trace) = trace {
+                trace.push(cycle, *cmd);
+            }
+            cycle + 1
+        }
     }
 }
 
@@ -106,6 +200,44 @@ mod tests {
         let faw = t.to_clocks(t.t_faw);
         assert!(acts[4] >= acts[0] + faw, "acts={acts:?}");
         assert!(acts[7] >= acts[3] + faw);
+    }
+
+    #[test]
+    fn background_respects_the_serving_deadline() {
+        let t = Ddr4Timing::ddr4_2133();
+        let mut s = Scheduler::new(t.clone());
+        let close = t.t_ras + t.t_rp;
+        // One serving primitive, then a gap before the next serving
+        // slot: the admission test decides per background sequence.
+        let end = s.issue(&command::frac_seq(3), t.t_rp);
+        // Deadline with no slack at all: the RowCopy defers.
+        assert_eq!(s.try_issue_background(&command::row_copy_seq(8, 9), close, end), None);
+        assert_eq!(s.deferred_background(), 1);
+        let ready_before = s.trace.len();
+        // A generous deadline admits it.
+        let fits = s.sequence_end(&command::row_copy_seq(8, 9), close);
+        let issued = s.try_issue_background(&command::row_copy_seq(8, 9), close, fits);
+        assert_eq!(issued, Some(fits));
+        assert!(s.trace.len() > ready_before);
+        // Accounting: both classes saw busy cycles, and they add up to
+        // the whole makespan (the bank never idles in this trace).
+        let total = s.class_cycles(TraceClass::Serve) + s.class_cycles(TraceClass::Recalib);
+        assert!(s.class_cycles(TraceClass::Serve) > 0);
+        assert!(s.class_cycles(TraceClass::Recalib) > 0);
+        assert_eq!(total, issued.unwrap());
+    }
+
+    #[test]
+    fn dry_run_matches_real_issue() {
+        let t = Ddr4Timing::ddr4_2133();
+        let mut s = Scheduler::new(t.clone());
+        for _ in 0..5 {
+            s.issue(&[Command::Act { row: 0 }], 0.0);
+        }
+        let seq = command::row_copy_seq(1, 2);
+        let predicted = s.sequence_end(&seq, t.t_rp);
+        let actual = s.issue_classed(&seq, t.t_rp, TraceClass::Recalib);
+        assert_eq!(predicted, actual);
     }
 
     #[test]

@@ -1,4 +1,30 @@
 //! Lightweight counters and phase timers for the coordinator.
+//!
+//! ## Metric names
+//!
+//! PJRT engine (`coordinator::engine`):
+//!
+//! * `pjrt.step.calls` / `pjrt.ecr.calls` — executable invocations;
+//! * `pjrt.step.banks_fused` / `pjrt.ecr.banks_fused` — banks served
+//!   by fused multi-bank calls;
+//! * `pjrt.batch.unfused` — fusable batches that fell back to per-bank
+//!   calls because no artifact matched the stacked width;
+//! * `pjrt.step` / `pjrt.ecr` (timers) — seconds inside the runtime.
+//!
+//! Recalibration service (`coordinator::service`):
+//!
+//! * `serve.batches` — served workload batches measured successfully;
+//! * `serve.bank_failures` — served batches degraded by a per-bank
+//!   engine fault (the batch itself still completes);
+//! * `recalib.accepted_on_load` / `recalib.rejected_on_load` — store
+//!   rehydration outcomes (rejections count spot-check failures AND
+//!   incompatible/corrupt entries);
+//! * `recalib.scheduled` — background recalibrations scheduled by a
+//!   drift signal; `recalib.rescheduled` — retries of earlier faults;
+//! * `recalib.completed` / `recalib.failed` — background
+//!   recalibration outcomes;
+//! * `service.spot_check` / `service.serve` / `service.recalibrate`
+//!   (timers) — seconds per lifecycle phase.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

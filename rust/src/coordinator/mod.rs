@@ -13,7 +13,13 @@
 //!   iteration per executable call, multi-bank batches fused into one
 //!   call) and the device-level coordinator, generic over any
 //!   [`crate::calib::engine::CalibEngine`] backend;
-//! * [`worker`] — std::thread scoped worker pool (`parallel_map`);
+//! * [`service`] — the drift-aware recalibration service: rehydrates
+//!   calibrations from the non-volatile store, spot-checks them,
+//!   serves workloads, and schedules background recalibration when
+//!   drift signals fire (the persist → load → validate → recalibrate
+//!   lifecycle);
+//! * [`worker`] — std::thread scoped worker pool (`parallel_map` /
+//!   panic-contained `try_parallel_map`);
 //! * [`batcher`] — generic micro-batching queue (used by the e2e GEMV
 //!   serving example);
 //! * [`metrics`] — counters/timers reported by the CLI and benches.
@@ -21,4 +27,5 @@
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod service;
 pub mod worker;

@@ -1,0 +1,592 @@
+//! Drift-aware recalibration service: the runtime loop that closes the
+//! paper's §III-A persistence story.
+//!
+//! The paper stores identified calibration bit patterns in non-volatile
+//! memory "so it can be reused across different environments and system
+//! reboots" — but reuse is only safe while conditions hold. This
+//! service treats each subarray's calibration as a **cached artifact
+//! with drift-driven invalidation**:
+//!
+//! 1. **rehydrate** — [`RecalibService::load_store`] loads every
+//!    registered subarray's entry from a [`CalibStore`] (checked
+//!    decode + geometry validation), then runs one *batched* cheap ECR
+//!    spot check ([`crate::calib::algorithm::SPOT_CHECK_SAMPLES`]) and
+//!    accepts or rejects each candidate against
+//!    [`DriftPolicy::accept_max_ecr`];
+//! 2. **serve** — [`RecalibService::serve`] measures workload batches
+//!    from the current calibrations (accepted ones; stale or
+//!    uncalibrated entries keep serving their best-known levels so the
+//!    serving path never stalls) and feeds each batch's ECR into the
+//!    per-subarray [`DriftMonitor`];
+//! 3. **monitor** — [`RecalibService::poll_drift`] evaluates the drift
+//!    signals (temperature excursion from `dram::temperature`,
+//!    retention age from the `dram::retention` clock, rolling
+//!    served-batch ECR) and schedules background recalibration for
+//!    drifted entries;
+//! 4. **recalibrate** — [`RecalibService::run_pending`] drains the
+//!    queue through the engine with per-bank fault isolation
+//!    ([`crate::calib::engine::calibrate_isolated`]): the batch fans
+//!    across the worker pool, a panicking or failing bank degrades to
+//!    one error slot, and every success re-anchors its monitor;
+//!    [`RecalibService::snapshot_store`] re-persists the result.
+//!
+//! Serving and recalibration are decoupled: `serve` never waits on the
+//! queue, and a recalibration failure leaves the previous calibration
+//! serving. All engine work goes through the batch-first
+//! [`CalibEngine`] trait, so the service is backend-agnostic.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+use crate::analysis::ecr::EcrReport;
+use crate::calib::algorithm::{CalibParams, Calibration, SPOT_CHECK_SAMPLES};
+use crate::calib::drift::{DriftMonitor, DriftPolicy, DriftSignal};
+use crate::calib::engine::{
+    calibrate_isolated, measure_ecr_isolated, CalibEngine, CalibRequest, EcrRequest,
+};
+use crate::calib::lattice::FracConfig;
+use crate::calib::store::CalibStore;
+use crate::config::device::DeviceConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::worker;
+use crate::dram::geometry::SubarrayId;
+use crate::dram::subarray::Subarray;
+use crate::util::rng::derive_seed;
+
+/// Stream-domain tag of served workload batteries (each serve call
+/// draws fresh patterns from its epoch).
+const SERVE_STREAM: u64 = 0x5E12F;
+/// Stream-domain tag of the load-time acceptance spot check.
+const SPOT_CHECK_STREAM: u64 = 0x57CC;
+
+/// Service-level configuration: what to calibrate for and how to judge
+/// drift.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Frac configuration served and recalibrated (paper: T_{2,1,0}).
+    pub config: FracConfig,
+    /// Algorithm-1 parameters for (re)calibration.
+    pub params: CalibParams,
+    /// Drift thresholds.
+    pub policy: DriftPolicy,
+    /// Operand count of served MAJX workloads.
+    pub serve_m: usize,
+    /// Battery depth of one served workload batch.
+    pub serve_samples: u32,
+    /// Battery depth of the load-time acceptance spot check.
+    pub spot_check_samples: u32,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            config: FracConfig::pudtune([2, 1, 0]),
+            params: CalibParams::paper(),
+            policy: DriftPolicy::default(),
+            serve_m: 5,
+            serve_samples: 2048,
+            spot_check_samples: SPOT_CHECK_SAMPLES,
+        }
+    }
+}
+
+/// Where a subarray's active calibration currently stands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryState {
+    /// Spot-checked (or freshly identified) and trusted.
+    Accepted,
+    /// Drift detected; still serving the old levels until background
+    /// recalibration replaces them.
+    Stale,
+    /// No trusted calibration yet (missing/rejected store entry or
+    /// failed recalibration): serving the uniform neutral levels.
+    Uncalibrated,
+}
+
+/// Result of rehydrating one subarray from the store.
+#[derive(Clone, Debug)]
+pub enum LoadOutcome {
+    /// Entry decoded and passed the spot check.
+    Accepted { spot_ecr: f64 },
+    /// Entry decoded but its spot-check ECR exceeded the policy bound.
+    Rejected { spot_ecr: f64 },
+    /// The store has no entry for this subarray.
+    Missing,
+    /// The entry exists but is unusable (geometry mismatch, corrupt
+    /// levels, or a failed spot-check measurement).
+    Incompatible(String),
+}
+
+/// One subarray's result from a served workload batch.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    pub id: SubarrayId,
+    /// Entry state at serve time (stale entries still serve).
+    pub state: EntryState,
+    /// The measured battery, or the per-bank failure that degraded it.
+    pub report: Result<EcrReport, String>,
+}
+
+struct Entry {
+    sub: Subarray,
+    seed: u64,
+    calib: Calibration,
+    state: EntryState,
+    monitor: DriftMonitor,
+    /// Whether the entry currently sits in the recalibration queue.
+    queued: bool,
+}
+
+/// The drift-aware recalibration service (module docs for the loop).
+pub struct RecalibService<E> {
+    pub cfg: DeviceConfig,
+    svc: ServiceConfig,
+    engine: E,
+    threads: usize,
+    entries: BTreeMap<SubarrayId, Entry>,
+    /// FIFO of subarrays awaiting background recalibration.
+    queue: VecDeque<SubarrayId>,
+    /// Bumped per serve call: every batch draws fresh patterns.
+    serve_epoch: u64,
+    pub metrics: Arc<Metrics>,
+}
+
+impl<E: CalibEngine + Sync> RecalibService<E> {
+    pub fn new(cfg: DeviceConfig, svc: ServiceConfig, engine: E) -> Result<Self, String> {
+        cfg.validate()?;
+        svc.policy.validate()?;
+        Ok(Self {
+            cfg,
+            svc,
+            engine,
+            threads: worker::default_threads(),
+            entries: BTreeMap::new(),
+            queue: VecDeque::new(),
+            serve_epoch: 0,
+            metrics: Arc::new(Metrics::new()),
+        })
+    }
+
+    /// Register one subarray, manufactured from the device seed along
+    /// its address path (the same derivation the experiment paths
+    /// use). Starts `Uncalibrated` (serving neutral levels) and queued
+    /// for calibration; [`Self::load_store`] may satisfy it first.
+    pub fn register(&mut self, id: SubarrayId, rows: usize, cols: usize, device_seed: u64) {
+        let seed = derive_seed(device_seed, &id.seed_path());
+        let sub = Subarray::with_geometry(&self.cfg, rows, cols, seed);
+        let calib = self.svc.config.uncalibrated(&self.cfg, cols);
+        let monitor = DriftMonitor::new(&sub.env, self.svc.policy.serve_window);
+        self.entries.insert(
+            id,
+            Entry { sub, seed, calib, state: EntryState::Uncalibrated, monitor, queued: false },
+        );
+        self.enqueue(id);
+    }
+
+    fn enqueue(&mut self, id: SubarrayId) {
+        if let Some(e) = self.entries.get_mut(&id) {
+            if !e.queued {
+                e.queued = true;
+                self.queue.push_back(id);
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn ids(&self) -> Vec<SubarrayId> {
+        self.entries.keys().copied().collect()
+    }
+
+    pub fn state(&self, id: SubarrayId) -> Option<EntryState> {
+        self.entries.get(&id).map(|e| e.state)
+    }
+
+    /// The calibration currently serving for `id`.
+    pub fn calibration(&self, id: SubarrayId) -> Option<&Calibration> {
+        self.entries.get(&id).map(|e| &e.calib)
+    }
+
+    /// Subarrays awaiting background recalibration.
+    pub fn pending(&self) -> usize {
+        self.entries.values().filter(|e| e.queued).count()
+    }
+
+    /// Rehydrate every registered subarray from a store: checked
+    /// decode, then ONE batched ECR spot check over all decodable
+    /// candidates, then per-entry accept/reject. Rejections and
+    /// incompatibilities count into `recalib.rejected_on_load` and
+    /// leave the entry queued for recalibration.
+    pub fn load_store(&mut self, store: &CalibStore) -> Vec<(SubarrayId, LoadOutcome)> {
+        let mut outcomes: Vec<(SubarrayId, LoadOutcome)> = Vec::new();
+        let mut candidates: Vec<(SubarrayId, Calibration)> = Vec::new();
+        for (&id, entry) in &self.entries {
+            match store.load_expecting(id, &self.cfg, entry.sub.cols) {
+                Ok(Some(calib)) => candidates.push((id, calib)),
+                Ok(None) => outcomes.push((id, LoadOutcome::Missing)),
+                Err(e) => {
+                    self.metrics.incr("recalib.rejected_on_load");
+                    outcomes.push((id, LoadOutcome::Incompatible(e)));
+                }
+            }
+        }
+        // One batched spot check for every candidate.
+        let reqs: Vec<EcrRequest> = candidates
+            .iter()
+            .map(|(id, calib)| {
+                let entry = &self.entries[id];
+                EcrRequest::from_subarray(
+                    &entry.sub,
+                    entry.seed,
+                    calib.clone(),
+                    self.svc.serve_m,
+                    self.svc.spot_check_samples,
+                )
+                .with_seed(SPOT_CHECK_STREAM)
+            })
+            .collect();
+        let reports = self.metrics.time("service.spot_check", || {
+            measure_ecr_isolated(&self.engine, &reqs, self.threads)
+        });
+        for ((id, calib), report) in candidates.into_iter().zip(reports) {
+            let outcome = match report {
+                Ok(rep) => {
+                    let spot_ecr = rep.ecr();
+                    if spot_ecr <= self.svc.policy.accept_max_ecr {
+                        let window = self.svc.policy.serve_window;
+                        let entry = self.entries.get_mut(&id).expect("candidate is registered");
+                        entry.calib = calib;
+                        entry.state = EntryState::Accepted;
+                        entry.monitor = DriftMonitor::new(&entry.sub.env, window);
+                        entry.queued = false; // drop any pending cold-start job
+                        self.metrics.incr("recalib.accepted_on_load");
+                        LoadOutcome::Accepted { spot_ecr }
+                    } else {
+                        self.metrics.incr("recalib.rejected_on_load");
+                        LoadOutcome::Rejected { spot_ecr }
+                    }
+                }
+                Err(e) => {
+                    self.metrics.incr("recalib.rejected_on_load");
+                    LoadOutcome::Incompatible(format!("spot check failed: {e}"))
+                }
+            };
+            outcomes.push((id, outcome));
+        }
+        outcomes.sort_by_key(|(id, _)| *id);
+        outcomes
+    }
+
+    /// Serve one workload batch on every subarray (one batched engine
+    /// call, per-bank fault isolation): measures `serve_samples`
+    /// random MAJ-m patterns under each entry's current calibration,
+    /// feeds the observed ECR into the drift monitors, and never
+    /// touches the recalibration queue — a stale entry keeps serving
+    /// its old levels until background recalibration lands.
+    pub fn serve(&mut self) -> Vec<ServeOutcome> {
+        self.serve_epoch += 1;
+        let seed = derive_seed(SERVE_STREAM, &[self.serve_epoch]);
+        let ids: Vec<SubarrayId> = self.entries.keys().copied().collect();
+        let reqs: Vec<EcrRequest> = ids
+            .iter()
+            .map(|id| {
+                let entry = &self.entries[id];
+                EcrRequest::from_subarray(
+                    &entry.sub,
+                    entry.seed,
+                    entry.calib.clone(),
+                    self.svc.serve_m,
+                    self.svc.serve_samples,
+                )
+                .with_seed(seed)
+            })
+            .collect();
+        let reports = self.metrics.time("service.serve", || {
+            measure_ecr_isolated(&self.engine, &reqs, self.threads)
+        });
+        ids.into_iter()
+            .zip(reports)
+            .map(|(id, report)| {
+                let entry = self.entries.get_mut(&id).expect("serving a registered entry");
+                match &report {
+                    Ok(rep) => {
+                        entry.monitor.observe_ecr(rep.ecr());
+                        self.metrics.incr("serve.batches");
+                    }
+                    Err(_) => self.metrics.incr("serve.bank_failures"),
+                }
+                ServeOutcome { id, state: entry.state, report }
+            })
+            .collect()
+    }
+
+    /// Evaluate drift for every accepted entry and schedule background
+    /// recalibration for the drifted ones (metric `recalib.scheduled`).
+    /// Entries whose earlier recalibration failed (stale/uncalibrated,
+    /// no longer queued) are re-queued here too (`recalib.rescheduled`),
+    /// so faults retry on the next maintenance pass. Returns the fresh
+    /// drift signals.
+    pub fn poll_drift(&mut self) -> Vec<(SubarrayId, DriftSignal)> {
+        let mut signals = Vec::new();
+        let mut to_queue = Vec::new();
+        for (&id, entry) in &mut self.entries {
+            match entry.state {
+                EntryState::Accepted => {
+                    if let Some(sig) = entry.monitor.check(&self.svc.policy, &entry.sub.env) {
+                        entry.state = EntryState::Stale;
+                        self.metrics.incr("recalib.scheduled");
+                        signals.push((id, sig));
+                        to_queue.push(id);
+                    }
+                }
+                EntryState::Stale | EntryState::Uncalibrated => {
+                    if !entry.queued {
+                        self.metrics.incr("recalib.rescheduled");
+                        to_queue.push(id);
+                    }
+                }
+            }
+        }
+        for id in to_queue {
+            self.enqueue(id);
+        }
+        signals
+    }
+
+    /// Drain up to `max_jobs` queued recalibrations through the engine
+    /// (one isolated batch: worker-pool fan-out, a panicking bank
+    /// degrades to one error). Successes swap in the new calibration
+    /// and re-anchor their drift monitor; failures keep the previous
+    /// levels serving and are retried on the next [`Self::poll_drift`].
+    pub fn run_pending(&mut self, max_jobs: usize) -> Vec<(SubarrayId, Result<(), String>)> {
+        let mut ids = Vec::new();
+        while ids.len() < max_jobs {
+            let Some(id) = self.queue.pop_front() else {
+                break;
+            };
+            let Some(entry) = self.entries.get_mut(&id) else {
+                continue;
+            };
+            // Skip stale queue entries (e.g. accepted by a later
+            // `load_store` after being queued at registration).
+            if entry.queued {
+                entry.queued = false;
+                ids.push(id);
+            }
+        }
+        if ids.is_empty() {
+            return Vec::new();
+        }
+        let reqs: Vec<CalibRequest> = ids
+            .iter()
+            .map(|id| {
+                let entry = &self.entries[id];
+                CalibRequest::from_subarray(
+                    &entry.sub,
+                    entry.seed,
+                    self.svc.config,
+                    self.svc.params,
+                )
+            })
+            .collect();
+        let results = self.metrics.time("service.recalibrate", || {
+            calibrate_isolated(&self.engine, &reqs, self.threads)
+        });
+        ids.into_iter()
+            .zip(results)
+            .map(|(id, result)| {
+                let entry = self.entries.get_mut(&id).expect("recalibrating a registered entry");
+                let outcome = match result {
+                    Ok(calib) => {
+                        entry.calib = calib;
+                        entry.state = EntryState::Accepted;
+                        entry.monitor.rebase(&entry.sub.env);
+                        self.metrics.incr("recalib.completed");
+                        Ok(())
+                    }
+                    Err(e) => {
+                        self.metrics.incr("recalib.failed");
+                        Err(e)
+                    }
+                };
+                (id, outcome)
+            })
+            .collect()
+    }
+
+    /// Snapshot the current calibrations into a persistable store —
+    /// the write-back half of the lifecycle. Stale entries are
+    /// included too: they are the last-known-good identification, and
+    /// a shutdown between drift detection and repair should not erase
+    /// them (the load-time spot check re-validates every entry on the
+    /// next boot anyway). Only `Uncalibrated` entries — serving the
+    /// uniform neutral levels — carry nothing worth persisting.
+    pub fn snapshot_store(&self) -> CalibStore {
+        let mut store = CalibStore::default();
+        for (&id, entry) in &self.entries {
+            if entry.state != EntryState::Uncalibrated {
+                store.insert(id, &entry.calib);
+            }
+        }
+        store
+    }
+
+    /// Set one subarray's die temperature (scenario driver / telemetry
+    /// ingest). Returns false for unknown ids.
+    pub fn set_temperature(&mut self, id: SubarrayId, temp_c: f64) -> bool {
+        match self.entries.get_mut(&id) {
+            Some(e) => {
+                e.sub.set_temperature(temp_c);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Advance simulated wall-clock time on every subarray (retention
+    /// decay + aging drift).
+    pub fn advance_time(&mut self, dt_hours: f64) {
+        for entry in self.entries.values_mut() {
+            entry.sub.advance_time(dt_hours);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::algorithm::NativeEngine;
+
+    fn service(banks: usize, cols: usize) -> RecalibService<NativeEngine> {
+        let cfg = DeviceConfig::default();
+        let svc = ServiceConfig { serve_samples: 512, ..ServiceConfig::default() };
+        let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg)).unwrap();
+        for b in 0..banks {
+            s.register(SubarrayId::new(0, b, 0), 32, cols, 0x5EED);
+        }
+        s
+    }
+
+    #[test]
+    fn cold_start_calibrates_and_persists() {
+        let mut s = service(2, 512);
+        assert_eq!(s.pending(), 2);
+        assert!(s.ids().iter().all(|&id| s.state(id) == Some(EntryState::Uncalibrated)));
+        let done = s.run_pending(usize::MAX);
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|(_, r)| r.is_ok()));
+        assert!(s.ids().iter().all(|&id| s.state(id) == Some(EntryState::Accepted)));
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.snapshot_store().entries.len(), 2);
+        assert_eq!(s.metrics.counter("recalib.completed"), 2);
+    }
+
+    #[test]
+    fn load_accepts_good_entries_and_skips_their_cold_start() {
+        let mut warm = service(2, 512);
+        warm.run_pending(usize::MAX);
+        let store = warm.snapshot_store();
+
+        // "Reboot": a fresh service over the same manufactured device.
+        let mut s = service(2, 512);
+        let outcomes = s.load_store(&store);
+        for (id, o) in &outcomes {
+            assert!(matches!(o, LoadOutcome::Accepted { .. }), "{id:?}: {o:?}");
+        }
+        assert_eq!(s.metrics.counter("recalib.accepted_on_load"), 2);
+        assert_eq!(s.metrics.counter("recalib.rejected_on_load"), 0);
+        assert_eq!(s.pending(), 0);
+        // The loaded levels are bit-identical to the persisted ones.
+        for &id in &s.ids() {
+            assert_eq!(
+                s.calibration(id).unwrap().levels,
+                warm.calibration(id).unwrap().levels
+            );
+        }
+        // The stale queue entries from registration are skipped.
+        assert!(s.run_pending(usize::MAX).is_empty());
+    }
+
+    #[test]
+    fn load_rejects_tampered_entries() {
+        let mut warm = service(1, 512);
+        warm.run_pending(usize::MAX);
+        let mut store = warm.snapshot_store();
+        let id = SubarrayId::new(0, 0, 0);
+        // Pin every column to the lowest lattice level: a maximally
+        // wrong calibration that the spot check must catch.
+        store.entries.get_mut(&id).unwrap().levels = vec![0; 512];
+
+        let mut s = service(1, 512);
+        let outcomes = s.load_store(&store);
+        assert!(matches!(outcomes[0].1, LoadOutcome::Rejected { spot_ecr } if spot_ecr > 0.5));
+        assert_eq!(s.metrics.counter("recalib.rejected_on_load"), 1);
+        assert_eq!(s.state(id), Some(EntryState::Uncalibrated));
+        // Still queued from registration: recalibration repairs it.
+        assert_eq!(s.pending(), 1);
+        s.run_pending(usize::MAX);
+        assert_eq!(s.state(id), Some(EntryState::Accepted));
+    }
+
+    #[test]
+    fn geometry_mismatch_is_incompatible_not_a_miss() {
+        let mut warm = service(1, 512);
+        warm.run_pending(usize::MAX);
+        let store = warm.snapshot_store();
+        let mut s = service(1, 256);
+        let outcomes = s.load_store(&store);
+        assert!(matches!(&outcomes[0].1, LoadOutcome::Incompatible(e) if e.contains("512")));
+        assert_eq!(s.metrics.counter("recalib.rejected_on_load"), 1);
+    }
+
+    #[test]
+    fn serve_feeds_monitors_without_touching_the_queue() {
+        let mut s = service(1, 512);
+        s.run_pending(usize::MAX);
+        let out = s.serve();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].report.is_ok());
+        assert_eq!(out[0].state, EntryState::Accepted);
+        assert_eq!(s.metrics.counter("serve.batches"), 1);
+        assert_eq!(s.pending(), 0);
+        // A quiet environment raises no drift signals.
+        assert!(s.poll_drift().is_empty());
+    }
+
+    #[test]
+    fn temperature_excursion_schedules_background_recalibration() {
+        let mut s = service(2, 512);
+        s.run_pending(usize::MAX);
+        let hot = SubarrayId::new(0, 1, 0);
+        assert!(s.set_temperature(hot, 85.0));
+        let signals = s.poll_drift();
+        assert_eq!(signals.len(), 1);
+        assert_eq!(signals[0].0, hot);
+        assert!(matches!(signals[0].1, DriftSignal::TemperatureExcursion { .. }));
+        assert_eq!(s.state(hot), Some(EntryState::Stale));
+        assert_eq!(s.metrics.counter("recalib.scheduled"), 1);
+        // A shutdown now must not lose the stale bank's last-known-good
+        // entry: snapshots persist everything except Uncalibrated.
+        assert_eq!(s.snapshot_store().entries.len(), 2);
+        // Stale entries keep serving while queued.
+        assert!(s.serve()[1].report.is_ok());
+        let done = s.run_pending(usize::MAX);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].1.is_ok());
+        assert_eq!(s.state(hot), Some(EntryState::Accepted));
+        // Re-anchored at the hot temperature: no further signal.
+        assert!(s.poll_drift().is_empty());
+    }
+
+    #[test]
+    fn unknown_id_set_temperature_is_reported() {
+        let mut s = service(1, 128);
+        assert!(!s.set_temperature(SubarrayId::new(7, 7, 7), 60.0));
+    }
+}

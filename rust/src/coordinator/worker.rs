@@ -1,10 +1,64 @@
 //! Scoped worker pool (std-only replacement for rayon's parallel map).
+//!
+//! The pool is **panic-contained**: every job runs under
+//! `catch_unwind`, so one panicking closure can never poison the
+//! slot/result mutexes or abort the process — it degrades to one
+//! [`JobError::Panicked`] slot. [`try_parallel_map`] surfaces the
+//! per-slot `Result`s to callers that want to fail one item and keep
+//! the rest (the recalibration service's per-bank isolation);
+//! [`parallel_map`] keeps the infallible signature by re-raising the
+//! first failure as a panic *on the calling thread*.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+/// Why one worker job produced no result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// The job closure panicked; carries the panic payload rendered as
+    /// text (non-string payloads become a placeholder).
+    Panicked(String),
+    /// The job never ran or never stored a result (a worker thread
+    /// died before reaching it) — should be unobservable in practice.
+    Missing,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Panicked(msg) => write!(f, "worker job panicked: {msg}"),
+            JobError::Missing => write!(f, "worker job produced no result"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Render a `catch_unwind` payload as text.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Lock a mutex, recovering the guard even if a previous holder
+/// panicked (jobs are panic-contained, so poisoning should not occur;
+/// this makes the pool robust to it anyway).
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Apply `f` to every item on up to `threads` worker threads, returning
-/// results in input order. `f` must be `Sync` (shared by reference);
-/// items are distributed by an atomic cursor so uneven job costs
-/// balance naturally.
-pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+/// per-slot `Result`s in input order: a panicking job yields
+/// `Err(JobError::Panicked)` for its slot only, and every other job
+/// still completes. `f` must be `Sync` (shared by reference); items are
+/// distributed by an atomic cursor so uneven job costs balance
+/// naturally.
+pub fn try_parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<Result<R, JobError>>
 where
     T: Send,
     R: Send,
@@ -16,14 +70,19 @@ where
     }
     let threads = threads.clamp(1, n);
     if threads == 1 {
-        return items.into_iter().map(f).collect();
+        return items
+            .into_iter()
+            .map(|t| {
+                catch_unwind(AssertUnwindSafe(|| f(t)))
+                    .map_err(|p| JobError::Panicked(panic_message(p)))
+            })
+            .collect();
     }
     use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Mutex;
     let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<T>>> =
-        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
-    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<Result<R, JobError>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| loop {
@@ -31,15 +90,34 @@ where
                 if i >= n {
                     break;
                 }
-                let item = slots[i].lock().unwrap().take().unwrap();
-                let r = f(item);
-                *results[i].lock().unwrap() = Some(r);
+                let Some(item) = lock_unpoisoned(&slots[i]).take() else {
+                    continue;
+                };
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)))
+                    .map_err(|p| JobError::Panicked(panic_message(p)));
+                *lock_unpoisoned(&results[i]) = Some(r);
             });
         }
     });
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker completed"))
+        .map(|m| lock_unpoisoned(&m).take().unwrap_or(Err(JobError::Missing)))
+        .collect()
+}
+
+/// Infallible parallel map: like [`try_parallel_map`] but re-raises the
+/// first job failure as a panic on the *calling* thread (after every
+/// other job has completed) — use when a job panic is a programming
+/// error rather than a per-item fault to isolate.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    try_parallel_map(items, threads, f)
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|e| panic!("{e}")))
         .collect()
 }
 
@@ -84,5 +162,61 @@ mod tests {
         });
         assert_eq!(out.len(), 32);
         assert_eq!(out[31].0, 31);
+    }
+
+    #[test]
+    fn panicking_job_degrades_one_slot() {
+        let out = try_parallel_map((0..16).collect(), 4, |x: i32| {
+            if x == 7 {
+                panic!("injected failure on item 7");
+            }
+            x * 10
+        });
+        assert_eq!(out.len(), 16);
+        for (i, r) in out.iter().enumerate() {
+            if i == 7 {
+                match r {
+                    Err(JobError::Panicked(msg)) => {
+                        assert!(msg.contains("injected failure"), "{msg}")
+                    }
+                    other => panic!("slot 7 should have panicked: {other:?}"),
+                }
+            } else {
+                assert_eq!(*r, Ok(i as i32 * 10));
+            }
+        }
+    }
+
+    #[test]
+    fn panicking_job_single_thread_degrades_one_slot() {
+        let out = try_parallel_map(vec![1, 2, 3], 1, |x: i32| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+        assert_eq!(out[0], Ok(1));
+        assert!(matches!(out[1], Err(JobError::Panicked(_))));
+        assert_eq!(out[2], Ok(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "worker job panicked")]
+    fn infallible_map_reraises_on_caller() {
+        // The failure surfaces as a normal panic on the calling thread
+        // (catchable), never as a poisoned-mutex process abort.
+        let _ = parallel_map((0..8).collect(), 4, |x: i32| {
+            if x == 3 {
+                panic!("bad bank");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn job_error_renders() {
+        let e = JobError::Panicked("xyz".into());
+        assert!(e.to_string().contains("xyz"));
+        assert!(JobError::Missing.to_string().contains("no result"));
     }
 }

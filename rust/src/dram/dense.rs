@@ -244,8 +244,13 @@ impl DenseSubarray {
     }
 
     /// Advance simulated wall-clock time: the same retention state
-    /// machine as the hybrid model, then aging drift.
+    /// machine as the hybrid model, then aging drift. Degenerate
+    /// intervals (zero, negative, NaN, infinite) are no-ops, mirroring
+    /// `Subarray::advance_time` so the parity suite stays valid.
     pub fn advance_time(&mut self, dt_hours: f64) {
+        if dt_hours.is_nan() || dt_hours.is_infinite() || dt_hours <= 0.0 {
+            return;
+        }
         self.env.hours += dt_hours;
         let f = retention::swing_factor(dt_hours, self.cfg.tau_retention_hours);
         if f < 1.0 {

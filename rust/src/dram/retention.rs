@@ -27,9 +27,13 @@ use crate::util::rng::Rng;
 
 /// Multiplicative swing retention over one `dt_hours` interval:
 /// `exp(-dt / tau)` for a finite positive `tau_hours`, `1.0` (no
-/// decay) for `dt <= 0` or a non-finite/non-positive `tau` — so the
-/// default [`crate::config::device::DeviceConfig`] (`tau = INFINITY`)
-/// reproduces the pre-retention model bit for bit.
+/// decay) for any degenerate input — `dt <= 0`, NaN `dt`, or a
+/// non-finite/non-positive/NaN `tau` — so the default
+/// [`crate::config::device::DeviceConfig`] (`tau = INFINITY`)
+/// reproduces the pre-retention model bit for bit, and a corrupt
+/// config can never emit a NaN factor into the charge state.
+/// `DeviceConfig::validate` additionally rejects `tau <= 0` and NaN at
+/// parse time so misconfiguration is caught before it reaches here.
 pub fn swing_factor(dt_hours: f64, tau_hours: f64) -> f64 {
     let decays = dt_hours > 0.0 && tau_hours > 0.0 && tau_hours.is_finite();
     if decays {
@@ -51,9 +55,11 @@ impl DriftState {
         Self { drift: vec![0.0; cols] }
     }
 
-    /// Advance the walk by `dt_hours`.
+    /// Advance the walk by `dt_hours`. Degenerate intervals (zero,
+    /// negative, NaN, infinite) are no-ops — a NaN step would
+    /// otherwise poison every column's accumulated drift.
     pub fn advance(&mut self, dt_hours: f64, drift_per_hour: f64, rng: &mut Rng) {
-        if dt_hours <= 0.0 {
+        if dt_hours.is_nan() || dt_hours.is_infinite() || dt_hours <= 0.0 {
             return;
         }
         let sd = drift_per_hour * dt_hours.sqrt();
@@ -102,6 +108,19 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_dt_never_poisons_drift() {
+        let mut d = DriftState::new(8);
+        let mut rng = Rng::new(1);
+        d.advance(f64::NAN, 1.0, &mut rng);
+        d.advance(-5.0, 1.0, &mut rng);
+        d.advance(f64::INFINITY, 1.0, &mut rng);
+        assert!(d.drift.iter().all(|&x| x == 0.0), "{:?}", d.drift);
+        // A subsequent well-formed step still works.
+        d.advance(1.0, 1.0, &mut rng);
+        assert!(d.drift.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
     fn swing_factor_decays_exponentially() {
         // One time constant retains e^-1 of the swing; factors
         // compound across intervals.
@@ -117,8 +136,10 @@ mod tests {
     fn swing_factor_degenerate_inputs_disable_decay() {
         assert_eq!(swing_factor(0.0, 8.0), 1.0);
         assert_eq!(swing_factor(-1.0, 8.0), 1.0);
+        assert_eq!(swing_factor(f64::NAN, 8.0), 1.0);
         assert_eq!(swing_factor(24.0, f64::INFINITY), 1.0);
         assert_eq!(swing_factor(24.0, 0.0), 1.0);
+        assert_eq!(swing_factor(24.0, -8.0), 1.0);
         assert_eq!(swing_factor(24.0, f64::NAN), 1.0);
     }
 }

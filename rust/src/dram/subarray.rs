@@ -495,7 +495,12 @@ impl Subarray {
 
     /// Advance simulated wall-clock time: cell-charge retention decay
     /// (module docs, "Retention") plus aging drift (Fig. 6b).
+    /// Degenerate intervals (zero, negative, NaN, infinite) are no-ops
+    /// so a bad caller can never corrupt the environment clock.
     pub fn advance_time(&mut self, dt_hours: f64) {
+        if dt_hours.is_nan() || dt_hours.is_infinite() || dt_hours <= 0.0 {
+            return;
+        }
         self.env.hours += dt_hours;
         let f = retention::swing_factor(dt_hours, self.cfg.tau_retention_hours);
         if f < 1.0 {

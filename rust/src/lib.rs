@@ -106,12 +106,14 @@ pub mod util;
 
 /// Convenience re-exports for the common experiment workflow, so
 /// service-style callers need no deep module paths: the engine trait
-/// and its request types, both backends, the coordinator and the
-/// non-volatile calibration store.
+/// and its request types, both backends, the coordinator, the
+/// non-volatile calibration store and the drift-aware recalibration
+/// service built on top of it.
 pub mod prelude {
     pub use crate::analysis::ecr::EcrReport;
     pub use crate::analysis::throughput::{ThroughputModel, ThroughputReport};
     pub use crate::calib::algorithm::{CalibParams, Calibration, NativeEngine};
+    pub use crate::calib::drift::{DriftMonitor, DriftPolicy, DriftSignal};
     pub use crate::calib::engine::{AnyEngine, BankBatch, CalibEngine, CalibRequest, EcrRequest};
     pub use crate::calib::lattice::{FracConfig, OffsetLattice};
     pub use crate::calib::store::CalibStore;
@@ -120,7 +122,11 @@ pub mod prelude {
     pub use crate::coordinator::engine::{
         BankOutcome, BankSummary, ColumnBank, DeviceCoordinator, PjrtEngine,
     };
+    pub use crate::coordinator::service::{
+        EntryState, LoadOutcome, RecalibService, ServeOutcome, ServiceConfig,
+    };
     pub use crate::dram::device::Device;
+    pub use crate::dram::geometry::SubarrayId;
     pub use crate::dram::subarray::{OpCounts, RowStorage, Subarray};
     pub use crate::pud::majx::MajX;
     pub use crate::util::rng::Rng;

@@ -8,6 +8,9 @@
 //! pudtune fig6b    [--cols N]
 //! pudtune ecr      [--fracs x,y,z] [--baseline x] [--cols N]
 //! pudtune calibrate [--cols N] [--store path] [--timed]
+//! pudtune serve    [--banks N] [--cols N] [--ticks N] [--store path]
+//!                  [--tick-hours H] [--excursion-temp C] [--excursion-tick K]
+//!                  [--drift-temp dC] [--drift-age H] [--drift-ecr F] [--native]
 //! pudtune fit-model [--target 0.466]
 //! pudtune trace    [maj5|maj3] [--fracs x,y,z]
 //! pudtune artifacts
@@ -81,6 +84,7 @@ fn run(raw: &[String]) -> Result<()> {
         "fig6b" => cmd_fig6(&args, false),
         "ecr" => cmd_ecr(&args),
         "calibrate" => cmd_calibrate(&args),
+        "serve" => cmd_serve(&args),
         "fit-model" => cmd_fit_model(&args),
         "trace" => cmd_trace(&args),
         "artifacts" => cmd_artifacts(),
@@ -255,6 +259,131 @@ fn cmd_calibrate(args: &cli::Args) -> Result<()> {
         store.save_file(std::path::Path::new(path))?;
         println!("calibration store written to {path}");
     }
+    Ok(())
+}
+
+/// The drift-aware serving loop: rehydrate from the store, spot-check,
+/// serve ticks, watch drift signals, recalibrate in the background and
+/// write the refreshed store back.
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    use pudtune::calib::drift::DriftPolicy;
+    use pudtune::coordinator::service::{LoadOutcome, RecalibService, ServiceConfig};
+
+    let (cfg, sys, exp) = load_configs(args)?;
+    let mut policy = DriftPolicy::default();
+    if let Some(v) = args.f64_opt("drift-temp").map_err(anyhow::Error::msg)? {
+        policy.max_temp_delta_c = v;
+    }
+    if let Some(v) = args.f64_opt("drift-age").map_err(anyhow::Error::msg)? {
+        policy.max_age_hours = v;
+    }
+    if let Some(v) = args.f64_opt("drift-ecr").map_err(anyhow::Error::msg)? {
+        policy.max_serve_ecr = v;
+        policy.accept_max_ecr = v;
+    }
+    let ticks = args.usize("ticks", 6).map_err(anyhow::Error::msg)?;
+    let tick_hours = args.f64("tick-hours", 1.0).map_err(anyhow::Error::msg)?;
+    let excursion_temp = args.f64_opt("excursion-temp").map_err(anyhow::Error::msg)?;
+    let excursion_tick = args.usize("excursion-tick", 3).map_err(anyhow::Error::msg)?;
+    let svc = ServiceConfig {
+        policy,
+        serve_samples: exp.ecr_samples,
+        params: CalibParams {
+            iterations: exp.calib_iterations,
+            samples: exp.calib_samples,
+            tau: exp.bias_tau,
+            seed: exp.seed,
+        },
+        ..ServiceConfig::default()
+    };
+    let engine = engine_for(args, &cfg);
+    let mut service = RecalibService::new(cfg.clone(), svc, engine).map_err(anyhow::Error::msg)?;
+    for b in 0..exp.banks {
+        service.register(SubarrayId::new(0, b, 0), 32, sys.cols, exp.seed);
+    }
+
+    // Rehydrate from the non-volatile store, if one is given.
+    let store_path = args.str("store").map(std::path::PathBuf::from);
+    if let Some(path) = &store_path {
+        if path.exists() {
+            let store = CalibStore::load_file(path).map_err(anyhow::Error::msg)?;
+            println!("rehydrating {} banks from {}...", exp.banks, path.display());
+            for (id, outcome) in service.load_store(&store) {
+                match outcome {
+                    LoadOutcome::Accepted { spot_ecr } => println!(
+                        "  bank {}: accepted (spot ECR {:.2}%)",
+                        id.bank,
+                        spot_ecr * 100.0
+                    ),
+                    LoadOutcome::Rejected { spot_ecr } => println!(
+                        "  bank {}: REJECTED (spot ECR {:.2}%), recalibrating",
+                        id.bank,
+                        spot_ecr * 100.0
+                    ),
+                    LoadOutcome::Missing => {
+                        println!("  bank {}: no stored entry, calibrating", id.bank)
+                    }
+                    LoadOutcome::Incompatible(e) => {
+                        println!("  bank {}: incompatible entry ({e}), recalibrating", id.bank)
+                    }
+                }
+            }
+        } else {
+            println!("store {} not found; cold-starting", path.display());
+        }
+    }
+    let fresh = service.run_pending(usize::MAX);
+    if !fresh.is_empty() {
+        println!("calibrated {} banks from scratch", fresh.len());
+    }
+
+    // The serving loop.
+    for tick in 1..=ticks {
+        if let (Some(temp), true) = (excursion_temp, tick == excursion_tick) {
+            println!("\n-- tick {tick}: temperature excursion to {temp:.0} C --");
+            for id in service.ids() {
+                service.set_temperature(id, temp);
+            }
+        } else {
+            println!("\n-- tick {tick} --");
+        }
+        let outcomes = service.serve();
+        let mut ecrs = Vec::new();
+        for o in &outcomes {
+            match &o.report {
+                Ok(rep) => ecrs.push(rep.ecr()),
+                Err(e) => println!("  bank {} FAILED: {e}", o.id.bank),
+            }
+        }
+        if !ecrs.is_empty() {
+            let mean = ecrs.iter().sum::<f64>() / ecrs.len() as f64;
+            println!(
+                "  served {} banks, mean ECR {:.2}% (min {:.2}%, max {:.2}%)",
+                ecrs.len(),
+                mean * 100.0,
+                ecrs.iter().cloned().fold(f64::INFINITY, f64::min) * 100.0,
+                ecrs.iter().cloned().fold(0.0f64, f64::max) * 100.0
+            );
+        }
+        for (id, signal) in service.poll_drift() {
+            println!("  drift on bank {}: {signal}", id.bank);
+        }
+        let recals = service.run_pending(usize::MAX);
+        for (id, r) in &recals {
+            match r {
+                Ok(()) => println!("  recalibrated bank {}", id.bank),
+                Err(e) => println!("  recalibration of bank {} failed: {e}", id.bank),
+            }
+        }
+        service.advance_time(tick_hours);
+    }
+
+    // Persist the refreshed calibrations.
+    if let Some(path) = &store_path {
+        service.snapshot_store().save_file(path)?;
+        println!("\nstore written to {}", path.display());
+    }
+    println!("\nservice metrics:\n{}", service.metrics.render());
     Ok(())
 }
 

@@ -37,6 +37,35 @@ impl Json {
         self.as_f64().and_then(|x| if x >= 0.0 { Some(x as usize) } else { None })
     }
 
+    /// Checked integral decode: `Some` only when the number is finite,
+    /// non-negative, **exactly** integral and within the f64-exact
+    /// integer range — unlike [`Self::as_usize`], which truncates
+    /// fractional values. Use for persisted identifiers and counts
+    /// where silent truncation would corrupt data.
+    pub fn as_exact_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if x.is_finite() && *x >= 0.0 && x.fract() == 0.0 && *x < 9e15 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// [`Self::as_exact_u64`] narrowed to `usize`.
+    pub fn as_exact_usize(&self) -> Option<usize> {
+        self.as_exact_u64().and_then(|x| usize::try_from(x).ok())
+    }
+
+    /// [`Self::as_exact_u64`] narrowed to `u32`; `None` on overflow.
+    pub fn as_exact_u32(&self) -> Option<u32> {
+        self.as_exact_u64().and_then(|x| u32::try_from(x).ok())
+    }
+
+    /// [`Self::as_exact_u64`] narrowed to `u8`; `None` on overflow.
+    pub fn as_exact_u8(&self) -> Option<u8> {
+        self.as_exact_u64().and_then(|x| u8::try_from(x).ok())
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -405,5 +434,26 @@ mod tests {
     fn integers_stay_integral() {
         let v = Json::Num(65536.0);
         assert_eq!(v.to_string(), "65536");
+    }
+
+    #[test]
+    fn exact_decoders_reject_non_integral_and_out_of_range() {
+        assert_eq!(Json::Num(7.0).as_exact_u64(), Some(7));
+        assert_eq!(Json::Num(7.0).as_exact_u32(), Some(7));
+        assert_eq!(Json::Num(255.0).as_exact_u8(), Some(255));
+        assert_eq!(Json::Num(0.0).as_exact_usize(), Some(0));
+        // Non-integral, negative and non-finite values are rejected
+        // (as_usize would silently truncate the first two).
+        assert_eq!(Json::Num(7.5).as_exact_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_exact_u64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_exact_u64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_exact_u64(), None);
+        assert_eq!(Json::Num(1e16).as_exact_u64(), None);
+        // Range narrowing.
+        assert_eq!(Json::Num(256.0).as_exact_u8(), None);
+        assert_eq!(Json::Num(4.3e9).as_exact_u32(), None);
+        // Non-numbers.
+        assert_eq!(Json::Str("7".into()).as_exact_u64(), None);
+        assert_eq!(Json::Null.as_exact_u8(), None);
     }
 }

@@ -70,7 +70,8 @@ fn calibrate_store_reload_verify_full_flow() {
     let reloaded = CalibStore::from_json(&pudtune::util::json::parse(&json).unwrap())
         .unwrap()
         .load(id, &cfg)
-        .unwrap();
+        .expect("compatible store")
+        .expect("bank in store");
     assert_eq!(reloaded.levels, calib.levels);
 
     // 3. Verify through the FULL command-level flow: write the reloaded

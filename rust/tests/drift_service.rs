@@ -1,0 +1,201 @@
+//! Integration: the drift-aware recalibration service's full
+//! lifecycle — calibrate → persist → reboot → load + spot-check →
+//! temperature excursion → drift detection → background recalibration
+//! — plus the fault-isolation guarantee (an injected engine panic
+//! degrades exactly one bank, never the process).
+
+use pudtune::calib::engine::{CalibEngine, CalibRequest, EcrRequest};
+use pudtune::prelude::*;
+
+/// Device model with an exaggerated common-mode tempco: the stock
+/// fitted value models the paper's differential sense amp, whose
+/// excursions stay benign (Fig. 6a) — here we *want* a 40 °C excursion
+/// to visibly break a nominal calibration so the repair is measurable.
+fn drifty_cfg() -> DeviceConfig {
+    DeviceConfig { tempco: 5.0e-4, tempco_jitter: 2.0e-5, ..DeviceConfig::default() }
+}
+
+fn service_over(cfg: &DeviceConfig, banks: usize, cols: usize) -> RecalibService<NativeEngine> {
+    let svc = ServiceConfig { serve_samples: 2048, ..ServiceConfig::default() };
+    let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg.clone())).unwrap();
+    for b in 0..banks {
+        s.register(SubarrayId::new(0, b, 0), 32, cols, 0xD21F7);
+    }
+    s
+}
+
+fn mean_ecr(outcomes: &[ServeOutcome]) -> f64 {
+    let ecrs: Vec<f64> = outcomes
+        .iter()
+        .map(|o| o.report.as_ref().expect("serve must not fail").ecr())
+        .collect();
+    ecrs.iter().sum::<f64>() / ecrs.len() as f64
+}
+
+fn total_error_free(outcomes: &[ServeOutcome]) -> usize {
+    outcomes
+        .iter()
+        .map(|o| o.report.as_ref().expect("serve must not fail").error_free())
+        .sum()
+}
+
+#[test]
+fn full_lifecycle_detects_and_repairs_drift() {
+    let cfg = drifty_cfg();
+    let (banks, cols) = (2, 1024);
+
+    // ---- Calibrate and persist (first boot). ----
+    let mut first = service_over(&cfg, banks, cols);
+    let done = first.run_pending(usize::MAX);
+    assert_eq!(done.len(), banks);
+    assert!(done.iter().all(|(_, r)| r.is_ok()));
+    let nominal = first.serve();
+    let nominal_ecr = mean_ecr(&nominal);
+    assert!(nominal_ecr < 0.10, "calibrated nominal ECR {nominal_ecr}");
+    let path = std::env::temp_dir().join("pudtune_drift_service_store.json");
+    first.snapshot_store().save_file(&path).unwrap();
+
+    // ---- Reboot: fresh device state, rehydrate from the store. ----
+    let store = CalibStore::load_file(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let mut svc = service_over(&cfg, banks, cols);
+    let outcomes = svc.load_store(&store);
+    assert_eq!(outcomes.len(), banks);
+    for (id, o) in &outcomes {
+        assert!(matches!(o, LoadOutcome::Accepted { .. }), "{id:?}: {o:?}");
+    }
+    assert_eq!(svc.metrics.counter("recalib.accepted_on_load"), banks as u64);
+    // Rehydration is bit-identical to the identified data.
+    for &id in &svc.ids() {
+        assert_eq!(
+            svc.calibration(id).unwrap().levels,
+            first.calibration(id).unwrap().levels
+        );
+    }
+    // The cold-start queue entries were satisfied by the load.
+    assert!(svc.run_pending(usize::MAX).is_empty());
+
+    let accepted = svc.serve();
+    let accepted_ecr = mean_ecr(&accepted);
+    assert!(accepted_ecr < 0.10, "accepted ECR {accepted_ecr}");
+
+    // ---- Temperature excursion: serving degrades but never stalls. ----
+    for id in svc.ids() {
+        assert!(svc.set_temperature(id, 85.0));
+    }
+    let stale = svc.serve();
+    let stale_ecr = mean_ecr(&stale);
+    let stale_free = total_error_free(&stale);
+    assert!(
+        stale_ecr > 3.0 * accepted_ecr && stale_ecr > 0.15,
+        "excursion should visibly degrade ECR: {accepted_ecr} -> {stale_ecr}"
+    );
+
+    // ---- Drift detection schedules background recalibration. ----
+    let signals = svc.poll_drift();
+    assert_eq!(signals.len(), banks);
+    for (_, sig) in &signals {
+        assert!(matches!(sig, DriftSignal::TemperatureExcursion { delta_c } if *delta_c > 20.0));
+    }
+    assert_eq!(svc.metrics.counter("recalib.scheduled"), banks as u64);
+    assert_eq!(svc.pending(), banks);
+    // Stale entries keep serving from the old calibration meanwhile —
+    // the serving path never stalls or panics on drifted entries.
+    let while_stale = svc.serve();
+    for o in &while_stale {
+        assert_eq!(o.state, EntryState::Stale);
+        assert!(o.report.is_ok());
+    }
+
+    // ---- Background recalibration restores the error-free count. ----
+    let repairs = svc.run_pending(usize::MAX);
+    assert_eq!(repairs.len(), banks);
+    assert!(repairs.iter().all(|(_, r)| r.is_ok()));
+    let repaired = svc.serve();
+    let repaired_ecr = mean_ecr(&repaired);
+    let repaired_free = total_error_free(&repaired);
+    assert!(
+        repaired_ecr < stale_ecr / 2.0 && repaired_ecr < 0.15,
+        "recalibration should repair the excursion: {stale_ecr} -> {repaired_ecr}"
+    );
+    assert!(
+        repaired_free > stale_free,
+        "error-free columns must recover: {stale_free} -> {repaired_free}"
+    );
+    // Re-anchored at the hot point: the drift signal clears.
+    assert!(svc.poll_drift().is_empty());
+    // The refreshed calibrations persist for the next boot.
+    assert_eq!(svc.snapshot_store().entries.len(), banks);
+}
+
+/// Engine wrapper that panics whenever a batch touches the poisoned
+/// bank — simulating a hard backend fault on one bank.
+struct PanickingEngine {
+    inner: NativeEngine,
+    poison_seed: u64,
+}
+
+impl CalibEngine for PanickingEngine {
+    fn backend(&self) -> &'static str {
+        "panicking"
+    }
+
+    fn calibrate_batch(&self, reqs: &[CalibRequest]) -> anyhow::Result<Vec<Calibration>> {
+        for r in reqs {
+            assert_ne!(r.bank.seed, self.poison_seed, "injected backend fault");
+        }
+        self.inner.calibrate_batch(reqs)
+    }
+
+    fn measure_ecr_batch(&self, reqs: &[EcrRequest]) -> anyhow::Result<Vec<EcrReport>> {
+        self.inner.measure_ecr_batch(reqs)
+    }
+}
+
+#[test]
+fn injected_worker_panic_degrades_exactly_one_bank() {
+    let cfg = DeviceConfig::default();
+    let (banks, cols, device_seed) = (3usize, 512usize, 0xBAD5EEDu64);
+    // The service derives per-subarray seeds along the address path;
+    // poison bank 1's.
+    let poison_seed =
+        pudtune::util::rng::derive_seed(device_seed, &SubarrayId::new(0, 1, 0).seed_path());
+    let engine = PanickingEngine { inner: NativeEngine::new(cfg.clone()), poison_seed };
+    let svc_cfg = ServiceConfig {
+        params: CalibParams::quick(),
+        serve_samples: 512,
+        ..ServiceConfig::default()
+    };
+    let mut svc = RecalibService::new(cfg, svc_cfg, engine).unwrap();
+    for b in 0..banks {
+        svc.register(SubarrayId::new(0, b, 0), 32, cols, device_seed);
+    }
+
+    let outcomes = svc.run_pending(usize::MAX);
+    assert_eq!(outcomes.len(), banks);
+    let failures: Vec<_> = outcomes.iter().filter(|(_, r)| r.is_err()).collect();
+    assert_eq!(failures.len(), 1, "exactly one bank must fail: {outcomes:?}");
+    assert_eq!(failures[0].0, SubarrayId::new(0, 1, 0));
+    assert!(
+        failures[0].1.as_ref().unwrap_err().contains("injected backend fault"),
+        "the panic payload surfaces in the error"
+    );
+    assert_eq!(svc.metrics.counter("recalib.completed"), 2);
+    assert_eq!(svc.metrics.counter("recalib.failed"), 1);
+    assert_eq!(svc.state(SubarrayId::new(0, 0, 0)), Some(EntryState::Accepted));
+    assert_eq!(svc.state(SubarrayId::new(0, 1, 0)), Some(EntryState::Uncalibrated));
+    assert_eq!(svc.state(SubarrayId::new(0, 2, 0)), Some(EntryState::Accepted));
+
+    // The coordinator keeps serving every bank — the failed one on its
+    // neutral levels — with no process abort anywhere.
+    let served = svc.serve();
+    assert_eq!(served.len(), banks);
+    assert!(served.iter().all(|o| o.report.is_ok()));
+
+    // The failed bank is rescheduled on the next maintenance poll.
+    assert_eq!(svc.pending(), 0);
+    let signals = svc.poll_drift();
+    assert!(signals.is_empty(), "a fault retry is not a drift signal");
+    assert_eq!(svc.metrics.counter("recalib.rescheduled"), 1);
+    assert_eq!(svc.pending(), 1);
+}

@@ -126,7 +126,7 @@ fn calib_store_roundtrips_identified_data() {
     let _ = std::fs::remove_file(&path);
     assert_eq!(reloaded.entries, store.entries);
     for (b, calib) in calibs.iter().enumerate() {
-        let re = reloaded.load(SubarrayId::new(0, b, 0), &cfg).unwrap();
+        let re = reloaded.load(SubarrayId::new(0, b, 0), &cfg).unwrap().unwrap();
         assert_eq!(re.levels, calib.levels);
         assert_eq!(re.lattice.config, calib.lattice.config);
     }

@@ -239,11 +239,12 @@ fn const_q_definition() {
 /// A near-ideal device: packed-row reads must be error-free for any
 /// in-spec temperature.
 fn quiet_cfg() -> DeviceConfig {
-    let mut cfg = DeviceConfig::default();
-    cfg.sigma_sa = 1e-6;
-    cfg.tail_weight = 0.0;
-    cfg.sigma_noise = 0.0;
-    cfg
+    DeviceConfig {
+        sigma_sa: 1e-6,
+        tail_weight: 0.0,
+        sigma_noise: 0.0,
+        ..DeviceConfig::default()
+    }
 }
 
 #[test]

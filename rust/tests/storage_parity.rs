@@ -161,9 +161,11 @@ const TRACE_ROWS: usize = 24;
 
 /// Run one trace through both models with per-command comparison.
 fn run_trace(cols: usize, tau_hours: f64, seed: u64, ops: &[Op]) -> Result<(), String> {
-    let mut cfg = DeviceConfig::default();
-    cfg.tau_retention_hours = tau_hours;
-    cfg.retention_swing_min = 0.9;
+    let cfg = DeviceConfig {
+        tau_retention_hours: tau_hours,
+        retention_swing_min: 0.9,
+        ..DeviceConfig::default()
+    };
     let mut h = Subarray::with_geometry(&cfg, TRACE_ROWS, cols, seed);
     let mut d = DenseSubarray::with_geometry(&cfg, TRACE_ROWS, cols, seed);
     parity(&h, &d).map_err(|e| format!("fresh state: {e}"))?;
@@ -494,10 +496,12 @@ fn adder_workload_parity_and_correctness() {
     // make *the same* errors.
     workload_parity(&add, width, &DeviceConfig::default(), 0xF6);
     // Quiet device: the in-DRAM run must also be functionally correct.
-    let mut quiet = DeviceConfig::default();
-    quiet.sigma_sa = 1e-6;
-    quiet.tail_weight = 0.0;
-    quiet.sigma_noise = 1e-6;
+    let quiet = DeviceConfig {
+        sigma_sa: 1e-6,
+        tail_weight: 0.0,
+        sigma_noise: 1e-6,
+        ..DeviceConfig::default()
+    };
     let cols = 16;
     let mut h = Subarray::with_geometry(&quiet, 128, cols, 0xF7);
     let map = RowMap::standard(128);

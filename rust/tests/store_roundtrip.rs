@@ -1,0 +1,122 @@
+//! Randomised round-trip coverage for the calibration store: for many
+//! random level vectors — including the degenerate shapes RLE is most
+//! likely to mangle (all-neutral, empty, single-column, long constant
+//! runs, alternating values) — `to_json → text → parse → from_json →
+//! load` must reproduce every `Calibration` bit for bit.
+
+use pudtune::calib::lattice::OffsetLattice;
+use pudtune::prelude::*;
+use pudtune::util::json;
+
+fn lattice_calib(cfg: &DeviceConfig, fc: FracConfig, levels: Vec<u8>) -> Calibration {
+    Calibration { lattice: OffsetLattice::build(cfg, &fc), levels }
+}
+
+/// Random level vector with run-heavy structure: random runs of random
+/// lengths (1..=max_run), biased toward the neutral level the way real
+/// post-calibration data is.
+fn random_levels(rng: &mut Rng, cols: usize, max_run: usize, neutral: u8) -> Vec<u8> {
+    let mut out = Vec::with_capacity(cols);
+    while out.len() < cols {
+        let v = if rng.next_u64() % 4 == 0 {
+            (rng.next_u64() % 8) as u8
+        } else {
+            neutral
+        };
+        let run = 1 + (rng.next_u64() as usize) % max_run;
+        let run = run.min(cols - out.len());
+        out.extend(std::iter::repeat(v).take(run));
+    }
+    out
+}
+
+#[test]
+fn fuzz_roundtrip_reproduces_bit_identical_calibrations() {
+    let cfg = DeviceConfig::default();
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let neutral = OffsetLattice::build(&cfg, &fc).neutral_level() as u8;
+    let mut rng = Rng::new(0xF022);
+
+    for trial in 0..64 {
+        let cols = match trial % 8 {
+            // Degenerate shapes every cycle: empty, single column,
+            // exactly one RLE pair boundary, then random widths.
+            0 => 0,
+            1 => 1,
+            2 => 255,
+            3 => 256,
+            _ => 1 + (rng.next_u64() as usize) % 4096,
+        };
+        let max_run = 1 + (rng.next_u64() as usize) % 255;
+        let mut store = CalibStore::default();
+        let mut originals = Vec::new();
+        for b in 0..3usize {
+            let levels = match (trial + b) % 5 {
+                // All-neutral (the common real-world case: one RLE pair).
+                0 => vec![neutral; cols],
+                // Constant non-neutral, including 255-long runs.
+                1 => vec![7u8; cols],
+                // Worst case for RLE: alternating values, runs of 1.
+                2 => (0..cols).map(|c| (c % 2) as u8 * 5).collect(),
+                _ => random_levels(&mut rng, cols, max_run, neutral),
+            };
+            let id = SubarrayId::new(trial % 4, b, trial);
+            let calib = lattice_calib(&cfg, fc, levels);
+            store.insert(id, &calib);
+            originals.push((id, calib));
+        }
+
+        // to_json → text → parse → from_json: entries survive exactly.
+        let text = store.to_json().to_string();
+        let back = CalibStore::from_json(&json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("trial {trial}: decode failed: {e}"));
+        assert_eq!(back.entries, store.entries, "trial {trial}");
+        // Pretty output parses to the same store.
+        let pretty = CalibStore::from_json(&json::parse(&store.to_json().to_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(pretty.entries, store.entries, "trial {trial} (pretty)");
+
+        // load() rehydrates bit-identical calibrations.
+        for (id, original) in &originals {
+            let loaded = back
+                .load(*id, &cfg)
+                .unwrap_or_else(|e| panic!("trial {trial}: load failed: {e}"))
+                .expect("entry must exist");
+            assert_eq!(loaded.levels, original.levels, "trial {trial} {id:?}");
+            assert_eq!(loaded.lattice.config, original.lattice.config);
+            for c in 0..original.cols() {
+                assert!((loaded.q_extra(c) - original.q_extra(c)).abs() < 1e-12);
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_roundtrip_covers_all_frac_configs() {
+    // Mixed configurations (including the baseline) in one store.
+    let cfg = DeviceConfig::default();
+    let mut rng = Rng::new(0xF023);
+    let configs = [
+        FracConfig::baseline(3),
+        FracConfig::pudtune([0, 0, 0]),
+        FracConfig::pudtune([2, 1, 0]),
+        FracConfig::pudtune([2, 2, 2]),
+    ];
+    let mut store = CalibStore::default();
+    let mut originals = Vec::new();
+    for (i, fc) in configs.into_iter().enumerate() {
+        let neutral = OffsetLattice::build(&cfg, &fc).neutral_level() as u8;
+        let levels = random_levels(&mut rng, 777, 255, neutral);
+        let id = SubarrayId::new(1, i, 0);
+        let calib = lattice_calib(&cfg, fc, levels);
+        store.insert(id, &calib);
+        originals.push((id, calib));
+    }
+    let back = CalibStore::from_json(&json::parse(&store.to_json().to_string()).unwrap()).unwrap();
+    assert_eq!(back.entries, store.entries);
+    for (id, original) in &originals {
+        let loaded = back.load(*id, &cfg).unwrap().unwrap();
+        assert_eq!(loaded.levels, original.levels);
+        assert_eq!(loaded.lattice.config, original.lattice.config);
+    }
+}
