@@ -1,122 +1,106 @@
-//! 8-bit vector arithmetic *inside* the simulated DRAM.
+//! 8-bit vector arithmetic *inside* the simulated DRAM, served through
+//! the unified workload API.
 //!
-//! Runs real bit-serial majority circuits (MVDRAM full adders) through
-//! the full RowCopy/Frac/SiMRA command flow on baseline and calibrated
-//! subarrays, reporting end-result correctness and the command-level
-//! cost — Table I's ADD/MUL workloads at functional fidelity.
+//! Compiles real workloads (`PudOp::Add`/`PudOp::Mul` →
+//! `WorkloadPlan`) once and executes them through the batch-first
+//! `ComputeEngine` trait on baseline and calibrated subarrays, with
+//! each configuration's arithmetic-usable (MAJ5 ∧ MAJ3 error-free)
+//! column mask restricting which outputs are trusted — Table I's
+//! ADD/MUL workloads at functional fidelity, plus the Eq. 1 effective
+//! throughput both masks project.
 //!
 //! ```bash
 //! cargo run --release --example arithmetic_workload
 //! ```
 
-use pudtune::config::system::Ddr4Timing;
-use pudtune::dram::geometry::RowMap;
+use pudtune::calib::engine::measure_arith_batteries;
 use pudtune::prelude::*;
-use pudtune::pud::adder::ripple_adder;
-use pudtune::pud::exec::run_circuit;
-use pudtune::pud::multiplier::array_multiplier;
-use pudtune::util::rng::Rng;
+use std::sync::Arc;
 
-fn encode(vals: &[u64], bit: usize) -> Vec<u8> {
-    vals.iter().map(|&v| ((v >> bit) & 1) as u8).collect()
-}
+#[path = "common.rs"]
+mod common;
 
-fn decode(outputs: &[Vec<u8>], col: usize) -> u64 {
-    outputs
-        .iter()
-        .enumerate()
-        .fold(0u64, |acc, (bit, out)| acc | ((out[col] as u64) << bit))
-}
-
-fn main() {
+fn main() -> anyhow::Result<()> {
     let cfg = DeviceConfig::default();
     let cols = 256;
     let seed = 0xA51u64;
-    let grade = Ddr4Timing::ddr4_2133();
-    // Identification + measurement go through the `CalibEngine` trait
-    // (native backend: the 256-column demo geometry has no artifact);
-    // the circuit runs below exercise the golden-model subarray itself.
+    // Identification + measurement + execution all go through the
+    // engine traits (native backend: the 256-column demo geometry has
+    // no AOT artifact).
     let engine = AnyEngine::native(cfg.clone());
-    let mut sub = Subarray::with_geometry(&cfg, 128, cols, seed);
-    let map = RowMap::standard(sub.rows);
+    let sub = Subarray::with_geometry(&cfg, 128, cols, seed);
+    let bank = ColumnBank::from_subarray(&sub, seed);
+    let setup = common::calibrated_setup(&engine, &cfg, &bank)?;
     let mut rng = Rng::new(42);
 
-    let a: Vec<u64> = (0..cols).map(|_| rng.below(256)).collect();
-    let b: Vec<u64> = (0..cols).map(|_| rng.below(256)).collect();
-
-    let tune = FracConfig::pudtune([2, 1, 0]);
-    let base = FracConfig::baseline(3);
-    let calib = engine
-        .calibrate_one(&CalibRequest::from_subarray(&sub, seed, tune, CalibParams::paper()))
-        .expect("running Algorithm 1");
-    let base_cal = base.uncalibrated(&cfg, cols);
-
-    // ---- 8-bit vector ADD (one add per column, SIMD across columns).
-    let add = ripple_adder(8);
-    let mut inputs = Vec::new();
-    for bit in 0..8 {
-        inputs.push(encode(&a, bit));
-    }
-    for bit in 0..8 {
-        inputs.push(encode(&b, bit));
-    }
-    println!("8-bit vector ADD over {cols} columns:");
-    for (label, fc, cal) in [("baseline", &base, &base_cal), ("PUDTune ", &tune, &calib)] {
-        let run = run_circuit(&mut sub, &map, cal, fc, &grade, &add, &inputs);
-        let ok = (0..cols)
-            .filter(|&c| decode(&run.outputs, c) == a[c] + b[c])
-            .count();
-        println!(
-            "  {label}: {ok}/{cols} columns correct ({:.1}%), {:.1} us of DRAM commands, {} peak scratch rows",
-            100.0 * ok as f64 / cols as f64,
-            run.elapsed_ns / 1000.0,
-            run.peak_rows
-        );
-    }
-
-    // ---- 4-bit vector MUL (array multiplier; 8-bit products).
-    let mul = array_multiplier(4);
-    let a4: Vec<u64> = a.iter().map(|&x| x & 15).collect();
-    let b4: Vec<u64> = b.iter().map(|&x| x & 15).collect();
-    let mut inputs = Vec::new();
-    for bit in 0..4 {
-        inputs.push(encode(&a4, bit));
-    }
-    for bit in 0..4 {
-        inputs.push(encode(&b4, bit));
-    }
-    println!("\n4-bit vector MUL over {cols} columns:");
-    for (label, fc, cal) in [("baseline", &base, &base_cal), ("PUDTune ", &tune, &calib)] {
-        let run = run_circuit(&mut sub, &map, cal, fc, &grade, &mul, &inputs);
-        let ok = (0..cols)
-            .filter(|&c| decode(&run.outputs, c) == a4[c] * b4[c])
-            .count();
-        println!(
-            "  {label}: {ok}/{cols} columns correct ({:.1}%), {:.1} us of DRAM commands",
-            100.0 * ok as f64 / cols as f64,
-            run.elapsed_ns / 1000.0
-        );
-    }
-
-    // ---- Projected system throughput for the paper's geometry: four
-    // batteries as one batched ECR call.
+    // One batched ECR phase: (base, tune) x (MAJ5, MAJ3) batteries.
+    let batteries =
+        measure_arith_batteries(&engine, &sub, seed, &[&setup.base_cal, &setup.calib], 8192)?;
+    let base_arith = batteries[0].arith();
+    let tune_arith = batteries[1].arith();
     let tput = ThroughputModel::new(&SystemConfig::paper());
-    let reqs = vec![
-        EcrRequest::from_subarray(&sub, seed, calib.clone(), 5, 8192),
-        EcrRequest::from_subarray(&sub, seed, calib.clone(), 3, 8192),
-        EcrRequest::from_subarray(&sub, seed, base_cal.clone(), 5, 8192),
-        EcrRequest::from_subarray(&sub, seed, base_cal.clone(), 3, 8192),
-    ];
-    let mut reports = engine.measure_ecr_batch(&reqs).expect("ECR batch");
-    let e3b = reports.pop().unwrap();
-    let e5b = reports.pop().unwrap();
-    let e3t = reports.pop().unwrap();
-    let e5t = reports.pop().unwrap();
+
+    for (title, op) in [
+        ("8-bit vector ADD", PudOp::Add { width: 8 }),
+        ("4-bit vector MUL", PudOp::Mul { width: 4 }),
+    ] {
+        let plan = Arc::new(WorkloadPlan::compile(op).map_err(anyhow::Error::from)?);
+        let width = plan.op.operand_width();
+        let a: Vec<u64> = (0..cols).map(|_| rng.below(1 << width)).collect();
+        let b: Vec<u64> = (0..cols).map(|_| rng.below(1 << width)).collect();
+        println!("{title} over {cols} columns ({}):", plan.op.label());
+        for (label, fc, cal, battery) in [
+            ("baseline", &setup.base, &setup.base_cal, &base_arith),
+            ("PUDTune ", &setup.tune, &setup.calib, &tune_arith),
+        ] {
+            let req = ComputeRequest::from_subarray(
+                &sub,
+                seed,
+                plan.clone(),
+                cal.clone(),
+                vec![a.clone(), b.clone()],
+            )
+            .with_mask(battery.error_free_mask());
+            let golden = req.golden_outputs().map_err(anyhow::Error::from)?;
+            let res = engine.execute_one(&req)?;
+            let all_ok = res.outputs.iter().zip(&golden).filter(|(o, g)| o == g).count();
+            let masked_ok = res.golden_correct(&golden);
+            println!(
+                "  {label}: {all_ok}/{cols} columns correct ({:.1}%), \
+                 {masked_ok}/{} on the error-free mask, {:.1} us of DRAM commands, \
+                 effective {}",
+                100.0 * all_ok as f64 / cols as f64,
+                res.active_cols(),
+                res.elapsed_ns / 1000.0,
+                pudtune::util::table::fmt_ops(tput.workload_ops(
+                    &plan.cost,
+                    fc,
+                    res.active_cols() as f64 / cols as f64
+                ))
+            );
+        }
+        println!();
+    }
+
+    // ---- Projected system throughput for the paper's geometry
+    // (Eq. 1 over the full 4ch x 16-bank x 65,536-col system).
     let addc = pudtune::pud::adder::add8_cost();
     let mulc = pudtune::pud::multiplier::mul8_cost();
-    let rb = tput.report(&base, e5b.ecr(), e5b.intersect(&e3b).ecr(), &addc, &mulc);
-    let rt = tput.report(&tune, e5t.ecr(), e5t.intersect(&e3t).ecr(), &addc, &mulc);
-    println!("\nprojected 4ch x 16-bank x 65,536-col throughput (Eq. 1):");
+    let rb = tput.report(
+        &setup.base,
+        batteries[0].maj5.ecr(),
+        base_arith.ecr(),
+        &addc,
+        &mulc,
+    );
+    let rt = tput.report(
+        &setup.tune,
+        batteries[1].maj5.ecr(),
+        tune_arith.ecr(),
+        &addc,
+        &mulc,
+    );
+    println!("projected 4ch x 16-bank x 65,536-col throughput (Eq. 1):");
     println!(
         "  ADD: {} -> {} ({:.2}x; paper 1.88x)",
         pudtune::util::table::fmt_ops(rb.add8_ops),
@@ -129,4 +113,5 @@ fn main() {
         pudtune::util::table::fmt_ops(rt.mul8_ops),
         rt.mul8_ops / rb.mul8_ops
     );
+    Ok(())
 }

@@ -1,0 +1,39 @@
+//! Shared workload bring-up for the examples: one calibration setup
+//! (baseline + PUDTune configurations, Algorithm-1 identification
+//! through the backend-agnostic `CalibEngine` trait) that
+//! `quickstart`, `arithmetic_workload` and `e2e_gemv` all reuse
+//! instead of duplicating subarray/calibration plumbing inline.
+//!
+//! Included via `#[path = "common.rs"] mod common;` — this file is not
+//! itself a registered example.
+
+use pudtune::prelude::*;
+
+/// The calibration states a workload demo compares: the conventional
+/// (baseline) configuration serving uniform neutral levels, and the
+/// PUDTune configuration with per-column identified levels.
+pub struct WorkloadSetup {
+    /// Conventional MAJX configuration (paper Fig. 1a, B_{3,0,0}).
+    pub base: FracConfig,
+    /// PUDTune configuration (paper T_{2,1,0}).
+    pub tune: FracConfig,
+    /// Uniform neutral calibration for the baseline.
+    pub base_cal: Calibration,
+    /// Algorithm-1 identified per-column calibration.
+    pub calib: Calibration,
+}
+
+/// Calibrate one bank for the standard baseline-vs-PUDTune comparison
+/// (Algorithm 1 at the paper's §IV-A settings, via any backend).
+pub fn calibrated_setup<E: CalibEngine>(
+    engine: &E,
+    cfg: &DeviceConfig,
+    bank: &ColumnBank,
+) -> anyhow::Result<WorkloadSetup> {
+    let tune = FracConfig::pudtune([2, 1, 0]);
+    let base = FracConfig::baseline(3);
+    let calib =
+        engine.calibrate_one(&CalibRequest::new(bank.clone(), tune, CalibParams::paper()))?;
+    let base_cal = base.uncalibrated(cfg, bank.cols());
+    Ok(WorkloadSetup { base, tune, base_cal, calib })
+}

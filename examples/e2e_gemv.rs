@@ -23,9 +23,7 @@
 //! ```
 
 use anyhow::Result;
-use pudtune::calib::algorithm::CalibParams;
-use pudtune::calib::engine::{AnyEngine, CalibEngine, CalibRequest, EcrRequest};
-use pudtune::calib::lattice::FracConfig;
+use pudtune::calib::engine::{AnyEngine, CalibEngine, EcrRequest};
 use pudtune::config::device::DeviceConfig;
 use pudtune::config::system::SystemConfig;
 use pudtune::coordinator::batcher::Batcher;
@@ -35,6 +33,9 @@ use pudtune::runtime::{buffers, Runtime};
 use pudtune::util::rng::Rng;
 use std::sync::Arc;
 use std::time::Instant;
+
+#[path = "common.rs"]
+mod common;
 
 const M: usize = 64; // GEMV output rows
 const K: usize = 256; // GEMV inner dimension
@@ -50,12 +51,11 @@ fn main() -> Result<()> {
     let bank = ColumnBank::new(&cfg, COLS, 0x6E37);
 
     // ---- 1. Calibrate through the AOT stack (L3 -> L2 -> L1), via
-    // the backend-agnostic `CalibEngine` trait.
-    let tune = FracConfig::pudtune([2, 1, 0]);
-    let base = FracConfig::baseline(3);
+    // the shared workload bring-up over the backend-agnostic
+    // `CalibEngine` trait.
     let t0 = Instant::now();
-    let calib =
-        engine.calibrate_one(&CalibRequest::new(bank.clone(), tune, CalibParams::paper()))?;
+    let setup = common::calibrated_setup(&engine, &cfg, &bank)?;
+    let (base, tune) = (setup.base, setup.tune);
     println!(
         "calibrated {COLS} columns in {:.2}s ({} PJRT step calls)",
         t0.elapsed().as_secs_f64(),
@@ -63,10 +63,9 @@ fn main() -> Result<()> {
     );
 
     // ---- 2. Mass ECR via the scanned graphs (one batched call).
-    let base_cal = base.uncalibrated(&cfg, COLS);
     let mut reports = engine.measure_ecr_batch(&[
-        EcrRequest::new(bank.clone(), base_cal, 5, 8192).with_seed(0xE),
-        EcrRequest::new(bank.clone(), calib, 5, 8192).with_seed(0xE),
+        EcrRequest::new(bank.clone(), setup.base_cal, 5, 8192).with_seed(0xE),
+        EcrRequest::new(bank.clone(), setup.calib, 5, 8192).with_seed(0xE),
     ])?;
     let ecr_tune = reports.pop().unwrap();
     let ecr_base = reports.pop().unwrap();

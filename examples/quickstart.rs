@@ -1,14 +1,20 @@
-//! Quickstart: calibrate one subarray and watch the error-prone
-//! columns disappear — all through the backend-agnostic `CalibEngine`
-//! trait.
+//! Quickstart: calibrate one subarray, watch the error-prone columns
+//! disappear, then serve a real workload through the compute path —
+//! all through the backend-agnostic `CalibEngine`/`ComputeEngine`
+//! traits.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
+use pudtune::calib::engine::measure_arith_batteries;
 use pudtune::prelude::*;
+use std::sync::Arc;
 
-fn main() {
+#[path = "common.rs"]
+mod common;
+
+fn main() -> anyhow::Result<()> {
     // A simulated DDR4 subarray: 1,024 columns with seeded
     // process-variation in the sense amplifiers.
     let cfg = DeviceConfig::default();
@@ -17,54 +23,79 @@ fn main() {
     let seed = 7u64;
     let sub = Subarray::new(&cfg, &sys, seed);
 
-    // Everything below is written against the `CalibEngine` trait; the
+    // Everything below is written against the engine traits; the
     // native backend is pinned here because this demo's 1,024-column
     // geometry has no AOT artifact (swap in `AnyEngine::auto` plus an
     // artifact-shaped geometry to run the same code on PJRT).
     let engine = AnyEngine::native(cfg.clone());
     println!("engine backend: {}\n", engine.backend());
 
-    // The conventional MAJ5 implementation: one Frac'd neutral row plus
-    // constant 0/1 rows (paper Fig. 1a, B_{3,0,0}).
-    let baseline = FracConfig::baseline(3);
-    let base_cal = baseline.uncalibrated(&cfg, sub.cols);
-    let ecr_base = engine
-        .measure_ecr_one(&EcrRequest::from_subarray(&sub, seed, base_cal, 5, 8192))
-        .expect("measuring baseline ECR");
-    println!(
-        "baseline  {}: ECR {:5.1}%  ({} of {} columns error-prone)",
-        baseline.label(),
-        ecr_base.ecr() * 100.0,
-        ecr_base.error_prone(),
-        ecr_base.cols()
-    );
+    // Identify PUDTune calibration data with Algorithm 1 (20
+    // iterations x 512 random samples, the paper's settings); the
+    // baseline keeps its uniform neutral levels.
+    let bank = ColumnBank::from_subarray(&sub, seed);
+    let setup = common::calibrated_setup(&engine, &cfg, &bank)?;
 
-    // PUDTune: identify per-column calibration data with Algorithm 1
-    // (20 iterations x 512 random samples, the paper's settings), then
-    // measure again.
-    let tune = FracConfig::pudtune([2, 1, 0]);
-    let calib = engine
-        .calibrate_one(&CalibRequest::from_subarray(&sub, seed, tune, CalibParams::paper()))
-        .expect("running Algorithm 1");
-    let ecr_tune = engine
-        .measure_ecr_one(&EcrRequest::from_subarray(&sub, seed, calib, 5, 8192))
-        .expect("measuring calibrated ECR");
-    println!(
-        "PUDTune   {}: ECR {:5.1}%  ({} of {} columns error-prone)",
-        tune.label(),
-        ecr_tune.ecr() * 100.0,
-        ecr_tune.error_prone(),
-        ecr_tune.cols()
-    );
+    // Measure both configurations' MAJ5 + MAJ3 batteries (paper
+    // §IV-A: 8,192 random patterns) in one batched call; the MAJ5
+    // report carries the headline ECR, the intersection is the
+    // arithmetic-usable column mask.
+    let batteries =
+        measure_arith_batteries(&engine, &sub, seed, &[&setup.base_cal, &setup.calib], 8192)?;
+    let (ecr_base, ecr_tune) = (&batteries[0].maj5, &batteries[1].maj5);
+    for (label, fc, rep) in [
+        ("baseline ", &setup.base, ecr_base),
+        ("PUDTune  ", &setup.tune, ecr_tune),
+    ] {
+        println!(
+            "{label}{}: ECR {:5.1}%  ({} of {} columns error-prone)",
+            fc.label(),
+            rep.ecr() * 100.0,
+            rep.error_prone(),
+            rep.cols()
+        );
+    }
 
     // Eq. 1: error-free columns / MAJ5 latency = throughput.
     let tput = ThroughputModel::new(&SystemConfig::paper());
-    let ops_base = tput.ops_per_sec(&tput.majx(5, &baseline), 1.0 - ecr_base.ecr());
-    let ops_tune = tput.ops_per_sec(&tput.majx(5, &tune), 1.0 - ecr_tune.ecr());
-    println!(
-        "\nprojected full-system MAJ5 throughput (4ch x 16 banks x 65,536 cols):"
-    );
+    let ops_base = tput.ops_per_sec(&tput.majx(5, &setup.base), 1.0 - ecr_base.ecr());
+    let ops_tune = tput.ops_per_sec(&tput.majx(5, &setup.tune), 1.0 - ecr_tune.ecr());
+    println!("\nprojected full-system MAJ5 throughput (4ch x 16 banks x 65,536 cols):");
     println!("  baseline: {}", pudtune::util::table::fmt_ops(ops_base));
     println!("  PUDTune:  {}", pudtune::util::table::fmt_ops(ops_tune));
     println!("  gain:     {:.2}x (paper: 1.81x)", ops_tune / ops_base);
+
+    // Serve an actual workload through the compute path: compile the
+    // op once, execute it under the calibrated levels on the columns
+    // the batteries proved arithmetic-usable (an add circuit chains
+    // MAJ5 *and* MAJ3 gates, so the mask intersects both arities),
+    // and check the golden model.
+    let plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 8 })?);
+    let mut rng = Rng::new(1);
+    let a: Vec<u64> = (0..sub.cols).map(|_| rng.below(256)).collect();
+    let b: Vec<u64> = (0..sub.cols).map(|_| rng.below(256)).collect();
+    let req = ComputeRequest::from_subarray(
+        &sub,
+        seed,
+        plan.clone(),
+        setup.calib.clone(),
+        vec![a, b],
+    )
+    .with_mask(batteries[1].arith().error_free_mask());
+    let golden = req.golden_outputs()?;
+    let res = engine.execute_one(&req)?;
+    let correct = res.golden_correct(&golden);
+    println!(
+        "\nserved one {} batch via {}: {correct}/{} masked columns golden-correct, \
+         effective {}",
+        plan.op.label(),
+        engine.compute_backend(),
+        res.active_cols(),
+        pudtune::util::table::fmt_ops(tput.workload_ops(
+            &plan.cost,
+            &setup.tune,
+            res.active_cols() as f64 / sub.cols as f64
+        ))
+    );
+    Ok(())
 }

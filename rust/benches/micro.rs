@@ -67,9 +67,92 @@ fn sweep_reference(
         .collect()
 }
 
+/// Workload-serving cases (written to `BENCH_workload.json`): add8 and
+/// mul8 compiled once (`WorkloadPlan`) and executed through the
+/// batch-first `ComputeEngine` under the conventional vs PUDTune
+/// arithmetic-usable (MAJ5 ∧ MAJ3 error-free) column masks. The
+/// derived values record each op's Eq. 1 *effective* throughput per
+/// mask and the PUDTune uplift — the Table I 1.88x/1.89x story as a
+/// machine-readable trajectory. `PUDTUNE_FAST_BENCH=1` shrinks the
+/// geometry/batteries for the CI smoke job.
+fn workload_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
+    use pudtune::analysis::throughput::ThroughputModel;
+    use pudtune::calib::engine::{
+        measure_arith_batteries, CalibRequest, ComputeEngine, ComputeRequest,
+    };
+    use pudtune::pud::plan::{PudOp, WorkloadPlan};
+    use std::sync::Arc;
+
+    let mut suite = BenchSuite::new();
+    let cols = if fast { 256 } else { 1024 };
+    let samples: u32 = if fast { 2048 } else { 8192 };
+    let params = if fast { CalibParams::quick() } else { CalibParams::paper() };
+    let seed = 0xB0B;
+    let sub = Subarray::with_geometry(cfg, 192, cols, seed);
+    let eng = NativeEngine::new(cfg.clone());
+    let tune = FracConfig::pudtune([2, 1, 0]);
+    let base = FracConfig::baseline(3);
+    let calib = eng
+        .calibrate_one(&CalibRequest::from_subarray(&sub, seed, tune, params))
+        .unwrap();
+    let base_cal = base.uncalibrated(cfg, cols);
+    let batteries =
+        measure_arith_batteries(&eng, &sub, seed, &[&base_cal, &calib], samples).unwrap();
+    let base_mask = batteries[0].arith().error_free_mask();
+    let tune_mask = batteries[1].arith().error_free_mask();
+    let tput = ThroughputModel::new(&SystemConfig::paper());
+    let mut rng = Rng::new(0x3AD);
+
+    for (op, iters) in [
+        (PudOp::Add { width: 8 }, if fast { 2 } else { 3 }),
+        (PudOp::Mul { width: 8 }, if fast { 1 } else { 2 }),
+    ] {
+        let plan = Arc::new(WorkloadPlan::compile(op).unwrap());
+        let opname = plan.op.label();
+        let operands: Vec<Vec<u64>> = (0..plan.op.n_operands())
+            .map(|_| (0..cols).map(|_| rng.below(256)).collect())
+            .collect();
+        let mut effective = Vec::with_capacity(2);
+        for (label, fc, cal, mask) in [
+            ("conventional", &base, &base_cal, &base_mask),
+            ("pudtune", &tune, &calib, &tune_mask),
+        ] {
+            let req = ComputeRequest::from_subarray(
+                &sub,
+                seed,
+                plan.clone(),
+                cal.clone(),
+                operands.clone(),
+            )
+            .with_mask(mask.clone());
+            suite.bench(&format!("workload/{opname}-{label}-{cols}cols"), 0, iters, || {
+                let res = eng.execute_one(&req).unwrap();
+                std::hint::black_box(res.outputs[0]);
+            });
+            let free = mask.iter().filter(|&&m| m).count() as f64 / cols as f64;
+            effective.push(tput.workload_ops(&plan.cost, fc, free));
+        }
+        suite.derive(&format!("{opname}_effective_ops_conventional"), effective[0]);
+        suite.derive(&format!("{opname}_effective_ops_pudtune"), effective[1]);
+        suite.derive(&format!("{opname}_effective_uplift"), effective[1] / effective[0]);
+    }
+    suite
+}
+
 fn main() {
     let cfg = DeviceConfig::default();
     let mut suite = BenchSuite::new();
+
+    // Workload serving record (fast mode + the option to skip the rest
+    // keep the CI bench-smoke job cheap).
+    let fast = std::env::var_os("PUDTUNE_FAST_BENCH").is_some();
+    let wsuite = workload_suite(&cfg, fast);
+    let wout = std::path::Path::new("BENCH_workload.json");
+    wsuite.write_json(wout).expect("writing BENCH_workload.json");
+    println!("wrote {}", wout.display());
+    if std::env::var("PUDTUNE_BENCH_ONLY").map(|v| v == "workload").unwrap_or(false) {
+        return;
+    }
 
     // PRNG throughput (the native engine's inner dependency).
     let mut rng = Rng::new(1);

@@ -95,6 +95,16 @@ impl ThroughputModel {
         }
     }
 
+    /// Effective workload throughput (Eq. 1 over a whole circuit):
+    /// ops/s of a workload whose unit cost is `cost`, at an *observed*
+    /// error-free column fraction — what `pudtune run`, the workload
+    /// benches and [`crate::coordinator::service`] report for served
+    /// [`crate::pud::plan::WorkloadPlan`]s (pass `plan.cost` and the
+    /// plan's mask density).
+    pub fn workload_ops(&self, cost: &CircuitCost, fc: &FracConfig, error_free_frac: f64) -> f64 {
+        self.ops_per_sec(&self.circuit_cost_ns(cost, fc), error_free_frac)
+    }
+
     /// Aggregate command cost of a majority circuit under `fc`.
     pub fn circuit_cost_ns(&self, c: &CircuitCost, fc: &FracConfig) -> MajxCost {
         let maj3 = self.majx(3, fc);
@@ -159,6 +169,24 @@ mod tests {
         assert!((110.0..240.0).contains(&r_mul), "r_mul={r_mul}");
         // MUL:ADD cost ratio near the paper's 153/17.7 = 8.6x.
         assert!((6.0..14.0).contains(&(r_mul / r_add)), "{}", r_mul / r_add);
+    }
+
+    #[test]
+    fn workload_ops_scales_with_the_error_free_fraction() {
+        // Equal Frac budgets -> equal latency, so the effective uplift
+        // of a served workload is exactly the mask-density ratio (how
+        // Table I's 1.88x/1.89x add/mul gains arise).
+        let m = model();
+        let base = FracConfig::baseline(3);
+        let tune = FracConfig::pudtune([2, 1, 0]);
+        let add = adder::add8_cost();
+        let full = m.workload_ops(&add, &tune, 1.0);
+        let half = m.workload_ops(&add, &tune, 0.5);
+        assert!((full / half - 2.0).abs() < 1e-9);
+        assert_eq!(full, m.ops_per_sec(&m.circuit_cost_ns(&add, &tune), 1.0));
+        let uplift = m.workload_ops(&add, &tune, 1.0 - 0.062)
+            / m.workload_ops(&add, &base, 1.0 - 0.50);
+        assert!((1.7..2.0).contains(&uplift), "uplift={uplift}");
     }
 
     #[test]

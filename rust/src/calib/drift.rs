@@ -167,6 +167,13 @@ impl DriftMonitor {
         env.hours - self.cal_hours
     }
 
+    /// The environment the active calibration was identified/accepted
+    /// under — what store-format v2 persists per entry
+    /// ([`crate::calib::store::CalibStore::insert_with_env`]).
+    pub fn calib_env(&self) -> Environment {
+        Environment { temp_c: self.cal_temp_c, hours: self.cal_hours }
+    }
+
     /// Evaluate the drift signals against a policy. Returns the first
     /// firing signal in fixed priority order — temperature excursion,
     /// then age, then rolling ECR — so repeated polls are stable.
@@ -211,6 +218,14 @@ mod tests {
         assert!(p.validate().is_err());
         let p = DriftPolicy { serve_window: 0, ..DriftPolicy::default() };
         assert!(p.validate().unwrap_err().contains("serve_window"));
+    }
+
+    #[test]
+    fn calib_env_tracks_anchor_and_rebase() {
+        let mut m = DriftMonitor::new(&env(45.0, 2.0), 4);
+        assert_eq!(m.calib_env(), env(45.0, 2.0));
+        m.rebase(&env(60.0, 9.0));
+        assert_eq!(m.calib_env(), env(60.0, 9.0));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The backend-agnostic calibration-engine API.
+//! The backend-agnostic calibration *and compute* engine API.
 //!
 //! The paper's pipeline — offset-search calibration (Algorithm 1,
 //! §IV-A) followed by mass ECR measurement — used to be implemented
@@ -25,6 +25,16 @@
 //!   ([`AnyEngine::auto`] opens the PJRT runtime when AOT artifacts are
 //!   present and falls back to the native kernel otherwise), so service
 //!   code is written once against the trait.
+//! * **[`ComputeEngine`]** — the same batch-first shape for *serving
+//!   arithmetic*: a [`ComputeRequest`] pairs a compiled, bank-agnostic
+//!   [`WorkloadPlan`] with one bank (geometry + seed + environment),
+//!   its current [`Calibration`] and an optional error-free column
+//!   mask; `execute_batch` runs the whole slice (native: worker-pool
+//!   fan-out over [`crate::pud::exec::run_plan`]; PJRT: per-bank
+//!   native fallback until circuit-execution artifacts exist).
+//!   Malformed requests surface as typed
+//!   [`PudError`]s, and [`execute_isolated`] degrades a faulty bank to
+//!   one error slot exactly like [`calibrate_isolated`].
 //!
 //! ## Determinism contract
 //!
@@ -45,10 +55,15 @@ use crate::analysis::ecr::EcrReport;
 use crate::calib::algorithm::{CalibParams, Calibration, NativeEngine, ECR_MASTER_SEED};
 use crate::calib::lattice::FracConfig;
 use crate::config::device::DeviceConfig;
+use crate::config::system::Ddr4Timing;
 use crate::coordinator::engine::{ColumnBank, PjrtEngine};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::worker;
+use crate::dram::geometry::RowMap;
 use crate::dram::subarray::Subarray;
+use crate::dram::temperature::Environment;
+use crate::pud::exec::run_plan;
+use crate::pud::plan::{PudError, WorkloadPlan};
 use crate::runtime::Runtime;
 use crate::util::rng::derive_seed;
 use std::sync::Arc;
@@ -223,6 +238,157 @@ impl BankBatch {
     }
 }
 
+/// One bank's arithmetic-workload job: a compiled plan plus everything
+/// needed to materialise the bank (geometry + variation seed +
+/// environment), the calibration to run under, per-column operand
+/// values, and an optional error-free column mask (from an ECR
+/// battery) restricting which columns' outputs are trusted/reported.
+#[derive(Clone, Debug)]
+pub struct ComputeRequest {
+    /// The compiled workload (shared across banks/batches via `Arc`).
+    pub plan: Arc<WorkloadPlan>,
+    /// Subarray geometry to execute on.
+    pub rows: usize,
+    pub cols: usize,
+    /// Variation-field seed (same derivation as `Subarray`).
+    pub seed: u64,
+    /// Calibration state to execute under (its lattice fixes the Frac
+    /// configuration of every MAJX flow).
+    pub calib: Calibration,
+    /// Environment override (die temperature + retention clock);
+    /// `None` executes at the nominal calibration temperature. The
+    /// variation field is re-drawn from `seed`, so accumulated
+    /// Brownian aging drift is *not* carried — the serving lifecycle
+    /// handles aging by recalibrating, not by replaying the walk.
+    pub env: Option<Environment>,
+    /// Command timing grade for the latency account.
+    pub grade: Ddr4Timing,
+    /// Per-column operand values, `plan.op.n_operands()` vectors of
+    /// `cols` values each.
+    pub operands: Vec<Vec<u64>>,
+    /// Error-free column mask (`None` = trust every column).
+    pub mask: Option<Vec<bool>>,
+}
+
+impl ComputeRequest {
+    pub fn new(
+        plan: Arc<WorkloadPlan>,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        calib: Calibration,
+        operands: Vec<Vec<u64>>,
+    ) -> Self {
+        Self {
+            plan,
+            rows,
+            cols,
+            seed,
+            calib,
+            env: None,
+            grade: Ddr4Timing::ddr4_2133(),
+            operands,
+            mask: None,
+        }
+    }
+
+    /// Request against an existing subarray's geometry + environment
+    /// (`seed` is the seed the subarray was built from).
+    pub fn from_subarray(
+        sub: &Subarray,
+        seed: u64,
+        plan: Arc<WorkloadPlan>,
+        calib: Calibration,
+        operands: Vec<Vec<u64>>,
+    ) -> Self {
+        Self {
+            env: Some(sub.env),
+            ..Self::new(plan, sub.rows, sub.cols, seed, calib, operands)
+        }
+    }
+
+    /// Restrict execution reporting to an error-free column mask.
+    pub fn with_mask(mut self, mask: Vec<bool>) -> Self {
+        self.mask = Some(mask);
+        self
+    }
+
+    /// Software golden model of this request: the expected per-column
+    /// output values via [`crate::pud::graph::MajCircuit::eval`].
+    pub fn golden_outputs(&self) -> Result<Vec<u64>, PudError> {
+        self.plan.golden_outputs(&self.operands, self.cols)
+    }
+}
+
+/// One bank's executed workload batch.
+#[derive(Clone, Debug)]
+pub struct ComputeResult {
+    /// Decoded per-column output values (every column; only masked
+    /// columns are trusted).
+    pub outputs: Vec<u64>,
+    /// The mask execution reported under (all-true when the request
+    /// carried none).
+    pub mask: Vec<bool>,
+    /// DRAM command latency of the run, ns.
+    pub elapsed_ns: f64,
+    /// Peak simultaneous scratch rows.
+    pub peak_rows: usize,
+}
+
+impl ComputeResult {
+    /// Error-free columns the workload served.
+    pub fn active_cols(&self) -> usize {
+        self.mask.iter().filter(|&&m| m).count()
+    }
+
+    /// A masked column's output (`None` off-mask or out of range).
+    pub fn output(&self, col: usize) -> Option<u64> {
+        match self.mask.get(col) {
+            Some(true) => self.outputs.get(col).copied(),
+            _ => None,
+        }
+    }
+
+    /// Masked columns whose outputs equal the golden-model values —
+    /// the serving-quality figure every caller reports.
+    pub fn golden_correct(&self, golden: &[u64]) -> usize {
+        self.outputs
+            .iter()
+            .zip(golden)
+            .zip(&self.mask)
+            .filter(|((o, g), &m)| m && o == g)
+            .count()
+    }
+}
+
+/// An arithmetic-serving backend, mirroring [`CalibEngine`]'s
+/// batch-first shape: `execute_batch` is the primitive, `execute_one`
+/// is sugar.
+pub trait ComputeEngine {
+    /// Short backend tag for logs/reports ("native", ...).
+    fn compute_backend(&self) -> &'static str;
+
+    /// Run every request, results in request order.
+    fn execute_batch(&self, reqs: &[ComputeRequest]) -> Result<Vec<ComputeResult>>;
+
+    /// Single-bank sugar over [`Self::execute_batch`].
+    fn execute_one(&self, req: &ComputeRequest) -> Result<ComputeResult> {
+        let mut out = self.execute_batch(std::slice::from_ref(req))?;
+        anyhow::ensure!(out.len() == 1, "engine returned {} results for 1 request", out.len());
+        Ok(out.pop().unwrap())
+    }
+}
+
+impl<E: ComputeEngine + ?Sized> ComputeEngine for &E {
+    fn compute_backend(&self) -> &'static str {
+        (**self).compute_backend()
+    }
+
+    fn execute_batch(&self, reqs: &[ComputeRequest]) -> Result<Vec<ComputeResult>> {
+        (**self).execute_batch(reqs)
+    }
+}
+
 /// A calibration + measurement backend.
 ///
 /// Batch methods are the primitive: implementations are free to
@@ -322,6 +488,127 @@ impl CalibEngine for NativeEngine {
     }
 }
 
+impl NativeEngine {
+    /// Execute one compute request on a freshly materialised
+    /// golden-model subarray (variation field from the request seed,
+    /// environment from the request). All validation happens before
+    /// any DRAM state is touched, so a malformed request is a clean
+    /// per-bank `Err`.
+    fn execute_request(&self, req: &ComputeRequest) -> Result<ComputeResult, PudError> {
+        for v in &req.operands {
+            if v.len() != req.cols {
+                return Err(PudError::WidthMismatch { expected: req.cols, got: v.len() });
+            }
+        }
+        if req.calib.cols() != req.cols {
+            return Err(PudError::WidthMismatch {
+                expected: req.cols,
+                got: req.calib.cols(),
+            });
+        }
+        if let Some(mask) = &req.mask {
+            if mask.len() != req.cols {
+                return Err(PudError::WidthMismatch { expected: req.cols, got: mask.len() });
+            }
+        }
+        if req.rows < 32 {
+            // `RowMap::standard` needs the reserved-row layout.
+            return Err(PudError::RowBudgetExceeded { needed: 32, available: req.rows });
+        }
+        let inputs = req.plan.encode_operands(&req.operands)?;
+        let mut sub = Subarray::with_geometry(&self.cfg, req.rows, req.cols, req.seed);
+        if let Some(env) = req.env {
+            sub.env = env;
+        }
+        let map = RowMap::standard(req.rows);
+        let fc = req.calib.lattice.config;
+        let run = run_plan(&mut sub, &map, &req.calib, &fc, &req.grade, &req.plan, &inputs)?;
+        let outputs = (0..req.cols)
+            .map(|c| req.plan.decode_output(&run.outputs, c))
+            .collect();
+        let mask = req.mask.clone().unwrap_or_else(|| vec![true; req.cols]);
+        Ok(ComputeResult {
+            outputs,
+            mask,
+            elapsed_ns: run.elapsed_ns,
+            peak_rows: run.peak_rows,
+        })
+    }
+}
+
+/// The golden-model executor behind the compute trait: one request
+/// runs inline; multiple requests fan across the worker pool at bank
+/// grain (workload execution is serial per bank, so there is no inner
+/// tile fan-out to budget against).
+impl ComputeEngine for NativeEngine {
+    fn compute_backend(&self) -> &'static str {
+        "native"
+    }
+
+    fn execute_batch(&self, reqs: &[ComputeRequest]) -> Result<Vec<ComputeResult>> {
+        if reqs.len() <= 1 {
+            return reqs
+                .iter()
+                .map(|r| self.execute_request(r).map_err(anyhow::Error::from))
+                .collect();
+        }
+        worker::parallel_map((0..reqs.len()).collect(), self.threads, |i| {
+            self.execute_request(&reqs[i])
+        })
+        .into_iter()
+        .map(|r| r.map_err(anyhow::Error::from))
+        .collect()
+    }
+}
+
+/// One calibration's arithmetic battery: the per-arity ECR reports a
+/// majority circuit's reliability decomposes into. A column serves a
+/// circuit only if *every* constituent arity is error-free on it, so
+/// workload masks come from [`ArithBattery::arith`], never from a
+/// single-arity report.
+#[derive(Clone, Debug)]
+pub struct ArithBattery {
+    /// MAJ5 battery (sum bits, the reliability bottleneck).
+    pub maj5: EcrReport,
+    /// MAJ3 battery (carries / boolean logic).
+    pub maj3: EcrReport,
+}
+
+impl ArithBattery {
+    /// The arithmetic-usable battery: columns error-free under both
+    /// arities (paper Table I's ADD/MUL column population).
+    pub fn arith(&self) -> EcrReport {
+        self.maj5.intersect(&self.maj3)
+    }
+}
+
+/// Measure the arithmetic batteries of several calibrations of one
+/// subarray in a single batched ECR phase (2 requests per calibration,
+/// which the PJRT backend may fuse per arity) — the shared mask
+/// derivation behind `pudtune run`, the workload benches and the
+/// examples.
+pub fn measure_arith_batteries<E: CalibEngine>(
+    engine: &E,
+    sub: &Subarray,
+    seed: u64,
+    calibs: &[&Calibration],
+    samples: u32,
+) -> Result<Vec<ArithBattery>> {
+    let mut reqs = Vec::with_capacity(2 * calibs.len());
+    for calib in calibs {
+        reqs.push(EcrRequest::from_subarray(sub, seed, (*calib).clone(), 5, samples));
+        reqs.push(EcrRequest::from_subarray(sub, seed, (*calib).clone(), 3, samples));
+    }
+    let mut reports = engine.measure_ecr_batch(&reqs)?.into_iter();
+    Ok(calibs
+        .iter()
+        .map(|_| ArithBattery {
+            maj5: reports.next().expect("engine returned one report per request"),
+            maj3: reports.next().expect("engine returned one report per request"),
+        })
+        .collect())
+}
+
 /// Run a calibration batch with **per-bank fault isolation**: the
 /// batched call is attempted first (keeping worker-pool fan-out / PJRT
 /// fusion on the fast path); if it errors or panics, every request is
@@ -329,29 +616,19 @@ impl CalibEngine for NativeEngine {
 /// so one bad bank degrades to one `Err` slot instead of failing the
 /// whole batch — or aborting the process. This is the execution
 /// primitive of the recalibration service
-/// ([`crate::coordinator::service`]).
+/// ([`crate::coordinator::service`]); the shared pattern lives in
+/// [`worker::isolate_batch`].
 pub fn calibrate_isolated<E: CalibEngine + Sync>(
     engine: &E,
     reqs: &[CalibRequest],
     threads: usize,
 ) -> Vec<Result<Calibration, String>> {
-    use std::panic::{catch_unwind, AssertUnwindSafe};
-    if reqs.is_empty() {
-        return Vec::new();
-    }
-    match catch_unwind(AssertUnwindSafe(|| engine.calibrate_batch(reqs))) {
-        Ok(Ok(v)) if v.len() == reqs.len() => return v.into_iter().map(Ok).collect(),
-        Ok(Ok(_)) | Ok(Err(_)) | Err(_) => {}
-    }
-    worker::try_parallel_map((0..reqs.len()).collect(), threads, |i| {
-        engine.calibrate_one(&reqs[i]).map_err(|e| format!("{e:#}"))
-    })
-    .into_iter()
-    .map(|slot| match slot {
-        Ok(inner) => inner,
-        Err(job) => Err(job.to_string()),
-    })
-    .collect()
+    worker::isolate_batch(
+        reqs,
+        threads,
+        |rs| engine.calibrate_batch(rs),
+        |r| engine.calibrate_one(r).map_err(|e| format!("{e:#}")),
+    )
 }
 
 /// [`calibrate_isolated`] for ECR measurement batches.
@@ -360,23 +637,28 @@ pub fn measure_ecr_isolated<E: CalibEngine + Sync>(
     reqs: &[EcrRequest],
     threads: usize,
 ) -> Vec<Result<EcrReport, String>> {
-    use std::panic::{catch_unwind, AssertUnwindSafe};
-    if reqs.is_empty() {
-        return Vec::new();
-    }
-    match catch_unwind(AssertUnwindSafe(|| engine.measure_ecr_batch(reqs))) {
-        Ok(Ok(v)) if v.len() == reqs.len() => return v.into_iter().map(Ok).collect(),
-        Ok(Ok(_)) | Ok(Err(_)) | Err(_) => {}
-    }
-    worker::try_parallel_map((0..reqs.len()).collect(), threads, |i| {
-        engine.measure_ecr_one(&reqs[i]).map_err(|e| format!("{e:#}"))
-    })
-    .into_iter()
-    .map(|slot| match slot {
-        Ok(inner) => inner,
-        Err(job) => Err(job.to_string()),
-    })
-    .collect()
+    worker::isolate_batch(
+        reqs,
+        threads,
+        |rs| engine.measure_ecr_batch(rs),
+        |r| engine.measure_ecr_one(r).map_err(|e| format!("{e:#}")),
+    )
+}
+
+/// [`calibrate_isolated`] for compute batches: one malformed or
+/// panicking workload request degrades to one `Err` slot while the
+/// rest of the banks keep serving.
+pub fn execute_isolated<E: ComputeEngine + Sync>(
+    engine: &E,
+    reqs: &[ComputeRequest],
+    threads: usize,
+) -> Vec<Result<ComputeResult, String>> {
+    worker::isolate_batch(
+        reqs,
+        threads,
+        |rs| engine.execute_batch(rs),
+        |r| engine.execute_one(r).map_err(|e| format!("{e:#}")),
+    )
 }
 
 /// Runtime-selected backend: one concrete type service code can hold
@@ -438,6 +720,22 @@ impl CalibEngine for AnyEngine {
         match self {
             AnyEngine::Native(e) => e.measure_ecr_batch(reqs),
             AnyEngine::Pjrt(e) => e.measure_ecr_batch(reqs),
+        }
+    }
+}
+
+impl ComputeEngine for AnyEngine {
+    fn compute_backend(&self) -> &'static str {
+        match self {
+            AnyEngine::Native(e) => e.compute_backend(),
+            AnyEngine::Pjrt(e) => e.compute_backend(),
+        }
+    }
+
+    fn execute_batch(&self, reqs: &[ComputeRequest]) -> Result<Vec<ComputeResult>> {
+        match self {
+            AnyEngine::Native(e) => e.execute_batch(reqs),
+            AnyEngine::Pjrt(e) => e.execute_batch(reqs),
         }
     }
 }
@@ -553,6 +851,73 @@ mod tests {
             let got = out[i].as_ref().expect("healthy bank");
             assert_eq!(got.levels, clean.calibrate_one(&reqs[i]).unwrap().levels);
         }
+    }
+
+    fn quiet_cfg() -> DeviceConfig {
+        DeviceConfig {
+            sigma_sa: 1e-6,
+            tail_weight: 0.0,
+            sigma_noise: 1e-6,
+            ..DeviceConfig::default()
+        }
+    }
+
+    fn add_request(cfg: &DeviceConfig, cols: usize, seed: u64) -> ComputeRequest {
+        use crate::pud::plan::PudOp;
+        let plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 4 }).unwrap());
+        let fc = FracConfig::pudtune([2, 1, 0]);
+        let calib = fc.uncalibrated(cfg, cols);
+        let a: Vec<u64> = (0..cols as u64).map(|c| c % 16).collect();
+        let b: Vec<u64> = (0..cols as u64).map(|c| (c * 3 + 1) % 16).collect();
+        ComputeRequest::new(plan, 96, cols, seed, calib, vec![a, b])
+    }
+
+    #[test]
+    fn compute_batch_matches_golden_and_singles() {
+        let cfg = quiet_cfg();
+        let eng = NativeEngine::new(cfg.clone());
+        let reqs: Vec<ComputeRequest> =
+            (0..3).map(|i| add_request(&cfg, 16, 0xADD + i)).collect();
+        let batched = eng.execute_batch(&reqs).unwrap();
+        assert_eq!(batched.len(), 3);
+        for (req, res) in reqs.iter().zip(&batched) {
+            // Quiet device: every column equals the software model.
+            assert_eq!(res.outputs, req.golden_outputs().unwrap());
+            assert_eq!(res.active_cols(), 16);
+            assert!(res.elapsed_ns > 0.0);
+            assert_eq!(res.peak_rows, req.plan.peak_rows);
+            // Batch shape never changes results.
+            assert_eq!(eng.execute_one(req).unwrap().outputs, res.outputs);
+        }
+    }
+
+    #[test]
+    fn compute_mask_restricts_reporting() {
+        let cfg = quiet_cfg();
+        let eng = NativeEngine::new(cfg.clone());
+        let mut mask = vec![true; 16];
+        mask[3] = false;
+        let req = add_request(&cfg, 16, 7).with_mask(mask);
+        let res = eng.execute_one(&req).unwrap();
+        assert_eq!(res.active_cols(), 15);
+        assert_eq!(res.output(3), None);
+        assert_eq!(res.output(4), Some(req.golden_outputs().unwrap()[4]));
+        assert_eq!(res.output(99), None);
+    }
+
+    #[test]
+    fn malformed_compute_request_degrades_one_bank() {
+        let cfg = quiet_cfg();
+        let eng = NativeEngine::new(cfg.clone());
+        let mut reqs: Vec<ComputeRequest> =
+            (0..3).map(|i| add_request(&cfg, 16, 0xBAD + i)).collect();
+        reqs[1].operands.pop(); // arity violation on one bank only
+        let err = eng.execute_batch(&reqs).unwrap_err();
+        assert!(err.to_string().contains("arity"), "{err:#}");
+        let isolated = execute_isolated(&eng, &reqs, 2);
+        assert!(isolated[0].is_ok());
+        assert!(isolated[1].as_ref().unwrap_err().contains("arity"));
+        assert!(isolated[2].is_ok());
     }
 
     #[test]

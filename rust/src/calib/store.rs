@@ -33,13 +33,35 @@
 //! scratch), and `Err(_)` (entry present but *incompatible* with the
 //! current device — corrupt levels, wrong geometry — which callers must
 //! treat as a hard fault, not a cache miss).
+//!
+//! ## Format versions
+//!
+//! Stores carry a versioned header: [`STORE_FORMAT_V2`] (written by
+//! [`CalibStore::to_json`]) adds optional per-entry
+//! calibration-environment metadata — die temperature and
+//! retention-clock hours at identification time
+//! ([`CalibStore::insert_with_env`] / [`CalibStore::stored_env`]) —
+//! while [`STORE_FORMAT_V1`] files keep loading unchanged with no
+//! metadata.
 
 use crate::calib::algorithm::Calibration;
 use crate::calib::lattice::{ConfigKind, FracConfig, OffsetLattice};
 use crate::config::device::DeviceConfig;
 use crate::dram::geometry::SubarrayId;
+use crate::dram::temperature::Environment;
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
+
+/// The v1 store header: levels only, no calibration-environment
+/// metadata. Still accepted on load (entries rehydrate with
+/// [`StoredCalib::env`] = `None`).
+pub const STORE_FORMAT_V1: &str = "pudtune-calib-v1";
+/// The v2 store header written by [`CalibStore::to_json`]: adds
+/// optional per-entry calibration-environment metadata (die
+/// temperature and retention-clock hours at identification time), the
+/// groundwork for acceptance policies that skip the load-time spot
+/// check when conditions match exactly.
+pub const STORE_FORMAT_V2: &str = "pudtune-calib-v2";
 
 /// Maximum plausible stored per-row Frac count: `frac_charge` converges
 /// geometrically, so anything beyond this is indistinguishable from
@@ -64,14 +86,39 @@ pub struct CalibStore {
 pub struct StoredCalib {
     pub config: FracConfig,
     pub levels: Vec<u8>,
+    /// v2 metadata: the environment the levels were identified under
+    /// (`None` for v1 entries and inserts without telemetry).
+    pub env: Option<Environment>,
 }
 
 impl CalibStore {
     pub fn insert(&mut self, id: SubarrayId, calib: &Calibration) {
         self.entries.insert(
             id,
-            StoredCalib { config: calib.lattice.config, levels: calib.levels.clone() },
+            StoredCalib {
+                config: calib.lattice.config,
+                levels: calib.levels.clone(),
+                env: None,
+            },
         );
+    }
+
+    /// [`Self::insert`] with v2 calibration-environment metadata.
+    pub fn insert_with_env(&mut self, id: SubarrayId, calib: &Calibration, env: Environment) {
+        self.entries.insert(
+            id,
+            StoredCalib {
+                config: calib.lattice.config,
+                levels: calib.levels.clone(),
+                env: Some(env),
+            },
+        );
+    }
+
+    /// The calibration-environment metadata stored for `id`, if any
+    /// (v1 entries and telemetry-free inserts have none).
+    pub fn stored_env(&self, id: SubarrayId) -> Option<Environment> {
+        self.entries.get(&id).and_then(|e| e.env)
     }
 
     /// Rehydrate one subarray's calibration against a device config.
@@ -144,18 +191,26 @@ impl CalibStore {
             );
             m.insert("levels_rle".into(), rle_encode(&e.levels));
             m.insert("cols".into(), Json::Num(e.levels.len() as f64));
+            if let Some(env) = e.env {
+                let mut em = BTreeMap::new();
+                em.insert("temp_c".into(), Json::Num(env.temp_c));
+                em.insert("hours".into(), Json::Num(env.hours));
+                m.insert("env".into(), Json::Obj(em));
+            }
             subarrays.push(Json::Obj(m));
         }
         let mut root = BTreeMap::new();
-        root.insert("format".into(), Json::Str("pudtune-calib-v1".into()));
+        root.insert("format".into(), Json::Str(STORE_FORMAT_V2.into()));
         root.insert("subarrays".into(), Json::Arr(subarrays));
         Json::Obj(root)
     }
 
     pub fn from_json(j: &Json) -> Result<Self, String> {
-        if j.get("format").as_str() != Some("pudtune-calib-v1") {
-            return Err("unknown calibration store format".into());
-        }
+        let v2 = match j.get("format").as_str() {
+            Some(STORE_FORMAT_V1) => false,
+            Some(STORE_FORMAT_V2) => true,
+            _ => return Err("unknown calibration store format".into()),
+        };
         let mut store = CalibStore::default();
         for e in j.get("subarrays").as_arr().ok_or("missing subarrays")? {
             // Identifiers and counts decode through the checked-integral
@@ -190,7 +245,20 @@ impl CalibStore {
             if levels.len() != cols {
                 return Err(format!("RLE length {} != cols {cols}", levels.len()));
             }
-            store.entries.insert(id, StoredCalib { config, levels });
+            // v2 metadata is optional per entry; v1 never carries it.
+            let env = match e.get("env") {
+                Json::Null => None,
+                ej if v2 => {
+                    let temp_c = ej.get("temp_c").as_f64().ok_or("bad env temp_c")?;
+                    let hours = ej.get("hours").as_f64().ok_or("bad env hours")?;
+                    if !temp_c.is_finite() || !hours.is_finite() {
+                        return Err("non-finite env metadata".into());
+                    }
+                    Some(Environment { temp_c, hours })
+                }
+                _ => return Err("env metadata requires a v2 store header".into()),
+            };
+            store.entries.insert(id, StoredCalib { config, levels, env });
         }
         Ok(store)
     }
@@ -291,7 +359,11 @@ mod tests {
         let id = SubarrayId::new(0, 0, 0);
         store.entries.insert(
             id,
-            StoredCalib { config: FracConfig::pudtune([2, 1, 0]), levels: vec![0, 3, 9, 1] },
+            StoredCalib {
+                config: FracConfig::pudtune([2, 1, 0]),
+                levels: vec![0, 3, 9, 1],
+                env: None,
+            },
         );
         let err = store.load(id, &cfg).unwrap_err();
         assert!(err.contains("level index 9"), "{err}");
@@ -304,7 +376,11 @@ mod tests {
         let id = SubarrayId::new(0, 0, 0);
         store.entries.insert(
             id,
-            StoredCalib { config: FracConfig::pudtune([99, 1, 0]), levels: vec![0; 8] },
+            StoredCalib {
+                config: FracConfig::pudtune([99, 1, 0]),
+                levels: vec![0; 8],
+                env: None,
+            },
         );
         assert!(store.load(id, &cfg).unwrap_err().contains("Frac count 99"));
 
@@ -368,6 +444,58 @@ mod tests {
         assert!(CalibStore::from_json(&json::parse(huge).unwrap())
             .unwrap_err()
             .contains("plausible maximum"));
+    }
+
+    #[test]
+    fn v2_roundtrips_environment_metadata() {
+        let cfg = DeviceConfig::default();
+        let mut store = CalibStore::default();
+        let with_env = SubarrayId::new(0, 0, 0);
+        let without = SubarrayId::new(0, 1, 0);
+        store.insert_with_env(
+            with_env,
+            &sample_calib(&cfg, 32),
+            Environment { temp_c: 58.5, hours: 12.25 },
+        );
+        store.insert(without, &sample_calib(&cfg, 32));
+        let j = store.to_json();
+        assert_eq!(j.get("format").as_str(), Some(STORE_FORMAT_V2));
+        let back = CalibStore::from_json(&json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.entries, store.entries);
+        assert_eq!(back.stored_env(with_env), Some(Environment { temp_c: 58.5, hours: 12.25 }));
+        assert_eq!(back.stored_env(without), None);
+        // The metadata never affects the rehydrated calibration.
+        assert!(back.load(with_env, &cfg).unwrap().is_some());
+    }
+
+    #[test]
+    fn v1_stores_still_load() {
+        let v1 = r#"{"format":"pudtune-calib-v1","subarrays":[
+            {"channel":0,"bank":2,"subarray":0,"kind":"pudtune",
+             "fracs":[2,1,0],"levels_rle":[4,8],"cols":8}]}"#;
+        let store = CalibStore::from_json(&json::parse(v1).unwrap()).unwrap();
+        let id = SubarrayId::new(0, 2, 0);
+        assert_eq!(store.entries[&id].levels, vec![4; 8]);
+        assert_eq!(store.stored_env(id), None);
+        // A v1 header must not smuggle v2 metadata past validation.
+        let mixed = r#"{"format":"pudtune-calib-v1","subarrays":[
+            {"channel":0,"bank":0,"subarray":0,"kind":"pudtune",
+             "fracs":[2,1,0],"levels_rle":[4,8],"cols":8,
+             "env":{"temp_c":45.0,"hours":0.0}}]}"#;
+        assert!(CalibStore::from_json(&json::parse(mixed).unwrap())
+            .unwrap_err()
+            .contains("v2 store header"));
+    }
+
+    #[test]
+    fn v2_rejects_corrupt_environment_metadata() {
+        let missing_field = r#"{"format":"pudtune-calib-v2","subarrays":[
+            {"channel":0,"bank":0,"subarray":0,"kind":"pudtune",
+             "fracs":[2,1,0],"levels_rle":[4,8],"cols":8,
+             "env":{"temp_c":45.0}}]}"#;
+        assert!(CalibStore::from_json(&json::parse(missing_field).unwrap())
+            .unwrap_err()
+            .contains("bad env hours"));
     }
 
     #[test]

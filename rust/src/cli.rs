@@ -83,6 +83,20 @@ impl Args {
         }
     }
 
+    /// Comma-separated list option (`--op add8,mul8`); empty when the
+    /// option is absent.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.options
+            .get(name)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
     /// Parse a `--fracs x,y,z` style triple.
     pub fn fracs(&self, name: &str, default: [u32; 3]) -> Result<[u32; 3], String> {
         match self.options.get(name) {
@@ -134,6 +148,13 @@ mod tests {
         assert_eq!(a.f64_opt("drift-age").unwrap(), None);
         let bad = parse(&v(&["serve", "--drift-temp", "warm"]), &[]).unwrap();
         assert!(bad.f64_opt("drift-temp").is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&v(&["run", "--op", "add8, mul8,"]), &[]).unwrap();
+        assert_eq!(a.list("op"), vec!["add8".to_string(), "mul8".to_string()]);
+        assert!(a.list("missing").is_empty());
     }
 
     #[test]

@@ -27,8 +27,11 @@ use std::fmt;
 use std::sync::Arc;
 
 use crate::analysis::ecr::EcrReport;
-use crate::calib::algorithm::{const_q, CalibParams, Calibration};
-use crate::calib::engine::{BankBatch, CalibEngine, CalibRequest, EcrRequest};
+use crate::calib::algorithm::{const_q, CalibParams, Calibration, NativeEngine};
+use crate::calib::engine::{
+    BankBatch, CalibEngine, CalibRequest, ComputeEngine, ComputeRequest, ComputeResult,
+    EcrRequest,
+};
 use crate::calib::lattice::{ConfigKind, FracConfig, OffsetLattice};
 use crate::config::device::DeviceConfig;
 use crate::config::system::SystemConfig;
@@ -380,6 +383,26 @@ impl CalibEngine for PjrtEngine {
             }
         }
         Ok(out.into_iter().map(|o| o.expect("all requests answered")).collect())
+    }
+}
+
+/// Arithmetic serving on the PJRT backend: no AOT circuit-execution
+/// artifacts exist yet, so every request falls back cleanly to the
+/// native golden-model executor **per bank**, with the misses counted
+/// in [`Metrics`] (`pjrt.compute.fallback`) the way unfusable
+/// calibration batches count `pjrt.batch.unfused`. The trait shape is
+/// already batch-first, so compiling circuit graphs to executables
+/// later is a drop-in change here.
+impl ComputeEngine for PjrtEngine {
+    fn compute_backend(&self) -> &'static str {
+        "pjrt-native-fallback"
+    }
+
+    fn execute_batch(&self, reqs: &[ComputeRequest]) -> Result<Vec<ComputeResult>> {
+        self.metrics.add("pjrt.compute.fallback", reqs.len() as u64);
+        self.metrics.time("pjrt.compute", || {
+            NativeEngine::new(self.cfg.clone()).execute_batch(reqs)
+        })
     }
 }
 

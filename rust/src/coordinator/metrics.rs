@@ -9,7 +9,11 @@
 //!   by fused multi-bank calls;
 //! * `pjrt.batch.unfused` — fusable batches that fell back to per-bank
 //!   calls because no artifact matched the stacked width;
-//! * `pjrt.step` / `pjrt.ecr` (timers) — seconds inside the runtime.
+//! * `pjrt.compute.fallback` — compute requests served by the native
+//!   golden-model executor because no circuit-execution artifact
+//!   exists yet (every PJRT compute request, for now);
+//! * `pjrt.step` / `pjrt.ecr` / `pjrt.compute` (timers) — seconds
+//!   inside the runtime (or its native fallback).
 //!
 //! Recalibration service (`coordinator::service`):
 //!
@@ -25,6 +29,21 @@
 //!   recalibration outcomes;
 //! * `service.spot_check` / `service.serve` / `service.recalibrate`
 //!   (timers) — seconds per lifecycle phase.
+//!
+//! Arithmetic serving (`RecalibService::serve_workload` /
+//! `serve_plan`):
+//!
+//! * `compute.batches` — workload batches executed successfully (one
+//!   per bank per serve call);
+//! * `compute.bank_failures` — batches degraded by a per-bank fault
+//!   (malformed request, engine panic); the other banks still serve;
+//! * `compute.columns_served` — error-free (masked) columns that
+//!   produced a trusted output, summed over batches — the Eq. 1
+//!   numerator of effective workload throughput;
+//! * `compute.golden_mismatch` — masked columns whose output diverged
+//!   from the software golden model (`MajCircuit::eval`) — expected to
+//!   stay near zero, the serving-quality alarm;
+//! * `compute.serve` (timer) — seconds executing workload batches.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

@@ -9,15 +9,25 @@
 //! the AOT-compiled sampling executables, and aggregates the results
 //! the analysis layer turns into Table I / Figs. 5-6.
 //!
+//! The layer stack mirrors the plan → engine → serve split documented
+//! in [`crate::pud`]: plans and calibrations are compiled/identified
+//! once, the engine traits ([`crate::calib::engine::CalibEngine`] and
+//! [`crate::calib::engine::ComputeEngine`]) execute request batches on
+//! a backend, and the service here owns the serving lifecycle on top.
+//!
 //! * [`engine`] — PJRT-backed calibration + ECR engine (one Algorithm-1
 //!   iteration per executable call, multi-bank batches fused into one
 //!   call) and the device-level coordinator, generic over any
-//!   [`crate::calib::engine::CalibEngine`] backend;
+//!   [`crate::calib::engine::CalibEngine`] backend; also the PJRT
+//!   `ComputeEngine` fallback (per-bank native execution until
+//!   circuit-execution artifacts exist);
 //! * [`service`] — the drift-aware recalibration service: rehydrates
 //!   calibrations from the non-volatile store, spot-checks them,
-//!   serves workloads, and schedules background recalibration when
-//!   drift signals fire (the persist → load → validate → recalibrate
-//!   lifecycle);
+//!   serves measurement batteries *and arithmetic workloads*
+//!   (`serve_workload`: current calibration + error-free column mask,
+//!   golden-model-checked outputs), and schedules background
+//!   recalibration when drift signals fire (the persist → load →
+//!   validate → recalibrate lifecycle);
 //! * [`worker`] — std::thread scoped worker pool (`parallel_map` /
 //!   panic-contained `try_parallel_map`);
 //! * [`batcher`] — generic micro-batching queue (used by the e2e GEMV

@@ -34,6 +34,23 @@
 //! queue, and a recalibration failure leaves the previous calibration
 //! serving. All engine work goes through the batch-first
 //! [`CalibEngine`] trait, so the service is backend-agnostic.
+//!
+//! ## Serving arithmetic
+//!
+//! With an engine that also implements
+//! [`crate::calib::engine::ComputeEngine`], the service serves real
+//! workloads, not just measurement batteries:
+//! [`RecalibService::serve_workload`] compiles a
+//! [`crate::pud::plan::PudOp`] once and executes it on every
+//! registered subarray under its **current** calibration and the
+//! arithmetic-usable column mask (MAJ5 ∧ MAJ3 error-free — circuits
+//! chain both arities) from its most recent battery (spot check or
+//! served batch), with the same per-bank fault isolation
+//! ([`crate::calib::engine::execute_isolated`]) — so drift-scheduled
+//! recalibration and arithmetic serving share one lifecycle: a stale
+//! bank keeps serving its last-good levels and mask until background
+//! recalibration lands, and each outcome reports how many masked
+//! columns matched the software golden model.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
@@ -42,7 +59,8 @@ use crate::analysis::ecr::EcrReport;
 use crate::calib::algorithm::{CalibParams, Calibration, SPOT_CHECK_SAMPLES};
 use crate::calib::drift::{DriftMonitor, DriftPolicy, DriftSignal};
 use crate::calib::engine::{
-    calibrate_isolated, measure_ecr_isolated, CalibEngine, CalibRequest, EcrRequest,
+    calibrate_isolated, execute_isolated, measure_ecr_isolated, CalibEngine, CalibRequest,
+    ComputeEngine, ComputeRequest, ComputeResult, EcrRequest,
 };
 use crate::calib::lattice::FracConfig;
 use crate::calib::store::CalibStore;
@@ -51,6 +69,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::worker;
 use crate::dram::geometry::SubarrayId;
 use crate::dram::subarray::Subarray;
+use crate::pud::plan::{PudError, PudOp, WorkloadPlan};
 use crate::util::rng::derive_seed;
 
 /// Stream-domain tag of served workload batteries (each serve call
@@ -127,6 +146,22 @@ pub struct ServeOutcome {
     pub report: Result<EcrReport, String>,
 }
 
+/// One subarray's result from a served arithmetic workload batch
+/// ([`RecalibService::serve_workload`]).
+#[derive(Clone, Debug)]
+pub struct WorkloadOutcome {
+    pub id: SubarrayId,
+    /// Entry state at serve time (stale entries still serve).
+    pub state: EntryState,
+    /// The executed batch, or the per-bank failure that degraded it.
+    pub result: Result<ComputeResult, String>,
+    /// Masked (error-free) columns whose outputs matched the software
+    /// golden model.
+    pub golden_correct: usize,
+    /// Masked columns the workload was served on.
+    pub active_cols: usize,
+}
+
 struct Entry {
     sub: Subarray,
     seed: u64,
@@ -135,6 +170,11 @@ struct Entry {
     monitor: DriftMonitor,
     /// Whether the entry currently sits in the recalibration queue.
     queued: bool,
+    /// Arithmetic-usable column mask (MAJ5 ∧ MAJ3 error-free) from the
+    /// most recent battery measured under the *current* calibration
+    /// (spot check or served batch); `None` until one lands, and
+    /// cleared when recalibration swaps the levels.
+    mask: Option<Vec<bool>>,
 }
 
 /// The drift-aware recalibration service (module docs for the loop).
@@ -178,7 +218,15 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
         let monitor = DriftMonitor::new(&sub.env, self.svc.policy.serve_window);
         self.entries.insert(
             id,
-            Entry { sub, seed, calib, state: EntryState::Uncalibrated, monitor, queued: false },
+            Entry {
+                sub,
+                seed,
+                calib,
+                state: EntryState::Uncalibrated,
+                monitor,
+                queued: false,
+                mask: None,
+            },
         );
         self.enqueue(id);
     }
@@ -236,27 +284,37 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
                 }
             }
         }
-        // One batched spot check for every candidate.
-        let reqs: Vec<EcrRequest> = candidates
-            .iter()
-            .map(|(id, calib)| {
-                let entry = &self.entries[id];
-                EcrRequest::from_subarray(
-                    &entry.sub,
-                    entry.seed,
-                    calib.clone(),
-                    self.svc.serve_m,
-                    self.svc.spot_check_samples,
-                )
-                .with_seed(SPOT_CHECK_STREAM)
+        // One batched spot check for every candidate: both MAJ
+        // arities, so an accepted entry starts with a trustworthy
+        // arithmetic-usable mask, not just a MAJ-`serve_m` one.
+        let other_m = 8 - self.svc.serve_m;
+        let mut reqs = Vec::with_capacity(2 * candidates.len());
+        for (id, calib) in &candidates {
+            let entry = &self.entries[id];
+            for m in [self.svc.serve_m, other_m] {
+                reqs.push(
+                    EcrRequest::from_subarray(
+                        &entry.sub,
+                        entry.seed,
+                        calib.clone(),
+                        m,
+                        self.svc.spot_check_samples,
+                    )
+                    .with_seed(SPOT_CHECK_STREAM),
+                );
+            }
+        }
+        let mut reports = self
+            .metrics
+            .time("service.spot_check", || {
+                measure_ecr_isolated(&self.engine, &reqs, self.threads)
             })
-            .collect();
-        let reports = self.metrics.time("service.spot_check", || {
-            measure_ecr_isolated(&self.engine, &reqs, self.threads)
-        });
-        for ((id, calib), report) in candidates.into_iter().zip(reports) {
-            let outcome = match report {
-                Ok(rep) => {
+            .into_iter();
+        for (id, calib) in candidates {
+            let primary = reports.next().expect("one primary spot check per candidate");
+            let secondary = reports.next().expect("one secondary spot check per candidate");
+            let outcome = match (primary, secondary) {
+                (Ok(rep), Ok(sec)) => {
                     let spot_ecr = rep.ecr();
                     if spot_ecr <= self.svc.policy.accept_max_ecr {
                         let window = self.svc.policy.serve_window;
@@ -265,6 +323,7 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
                         entry.state = EntryState::Accepted;
                         entry.monitor = DriftMonitor::new(&entry.sub.env, window);
                         entry.queued = false; // drop any pending cold-start job
+                        entry.mask = Some(rep.intersect(&sec).error_free_mask());
                         self.metrics.incr("recalib.accepted_on_load");
                         LoadOutcome::Accepted { spot_ecr }
                     } else {
@@ -272,7 +331,7 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
                         LoadOutcome::Rejected { spot_ecr }
                     }
                 }
-                Err(e) => {
+                (Err(e), _) | (_, Err(e)) => {
                     self.metrics.incr("recalib.rejected_on_load");
                     LoadOutcome::Incompatible(format!("spot check failed: {e}"))
                 }
@@ -285,43 +344,61 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
 
     /// Serve one workload batch on every subarray (one batched engine
     /// call, per-bank fault isolation): measures `serve_samples`
-    /// random MAJ-m patterns under each entry's current calibration,
-    /// feeds the observed ECR into the drift monitors, and never
-    /// touches the recalibration queue — a stale entry keeps serving
-    /// its old levels until background recalibration lands.
+    /// random patterns at *both* MAJ arities under each entry's
+    /// current calibration, feeds the primary (MAJ-`serve_m`) ECR into
+    /// the drift monitors, refreshes the entry's arithmetic-usable
+    /// mask (MAJ5 ∧ MAJ3 error-free — what [`Self::serve_plan`]
+    /// restricts compute to), and never touches the recalibration
+    /// queue — a stale entry keeps serving its old levels until
+    /// background recalibration lands.
     pub fn serve(&mut self) -> Vec<ServeOutcome> {
         self.serve_epoch += 1;
         let seed = derive_seed(SERVE_STREAM, &[self.serve_epoch]);
+        let other_m = 8 - self.svc.serve_m;
         let ids: Vec<SubarrayId> = self.entries.keys().copied().collect();
-        let reqs: Vec<EcrRequest> = ids
-            .iter()
-            .map(|id| {
-                let entry = &self.entries[id];
-                EcrRequest::from_subarray(
-                    &entry.sub,
-                    entry.seed,
-                    entry.calib.clone(),
-                    self.svc.serve_m,
-                    self.svc.serve_samples,
-                )
-                .with_seed(seed)
+        let mut reqs = Vec::with_capacity(2 * ids.len());
+        for id in &ids {
+            let entry = &self.entries[id];
+            for m in [self.svc.serve_m, other_m] {
+                reqs.push(
+                    EcrRequest::from_subarray(
+                        &entry.sub,
+                        entry.seed,
+                        entry.calib.clone(),
+                        m,
+                        self.svc.serve_samples,
+                    )
+                    .with_seed(seed),
+                );
+            }
+        }
+        let mut reports = self
+            .metrics
+            .time("service.serve", || {
+                measure_ecr_isolated(&self.engine, &reqs, self.threads)
             })
-            .collect();
-        let reports = self.metrics.time("service.serve", || {
-            measure_ecr_isolated(&self.engine, &reqs, self.threads)
-        });
+            .into_iter();
         ids.into_iter()
-            .zip(reports)
-            .map(|(id, report)| {
+            .map(|id| {
+                let primary = reports.next().expect("one primary report per entry");
+                let secondary = reports.next().expect("one secondary report per entry");
                 let entry = self.entries.get_mut(&id).expect("serving a registered entry");
-                match &report {
-                    Ok(rep) => {
+                match (&primary, secondary) {
+                    (Ok(rep), Ok(sec)) => {
                         entry.monitor.observe_ecr(rep.ecr());
+                        entry.mask = Some(rep.intersect(&sec).error_free_mask());
                         self.metrics.incr("serve.batches");
                     }
-                    Err(_) => self.metrics.incr("serve.bank_failures"),
+                    (Ok(rep), Err(_)) => {
+                        // The primary battery still monitors drift; the
+                        // mask keeps its last trusted value.
+                        entry.monitor.observe_ecr(rep.ecr());
+                        self.metrics.incr("serve.batches");
+                        self.metrics.incr("serve.bank_failures");
+                    }
+                    (Err(_), _) => self.metrics.incr("serve.bank_failures"),
                 }
-                ServeOutcome { id, state: entry.state, report }
+                ServeOutcome { id, state: entry.state, report: primary }
             })
             .collect()
     }
@@ -407,6 +484,10 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
                         entry.calib = calib;
                         entry.state = EntryState::Accepted;
                         entry.monitor.rebase(&entry.sub.env);
+                        // The old mask measured the old levels; the
+                        // next battery under the new calibration
+                        // re-establishes it.
+                        entry.mask = None;
                         self.metrics.incr("recalib.completed");
                         Ok(())
                     }
@@ -431,7 +512,9 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
         let mut store = CalibStore::default();
         for (&id, entry) in &self.entries {
             if entry.state != EntryState::Uncalibrated {
-                store.insert(id, &entry.calib);
+                // v2 metadata: the environment the levels were
+                // identified/accepted under.
+                store.insert_with_env(id, &entry.calib, entry.monitor.calib_env());
             }
         }
         store
@@ -455,6 +538,97 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
         for entry in self.entries.values_mut() {
             entry.sub.advance_time(dt_hours);
         }
+    }
+}
+
+/// Arithmetic serving (engines that also execute workloads).
+impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
+    /// Compile `op` once and serve it on every registered subarray —
+    /// see [`Self::serve_plan`]. An invalid op is a request-level
+    /// error; per-bank faults live inside the returned outcomes.
+    pub fn serve_workload(
+        &mut self,
+        op: PudOp,
+        operands: &[Vec<u64>],
+    ) -> Result<Vec<WorkloadOutcome>, PudError> {
+        let plan = Arc::new(WorkloadPlan::compile(op)?);
+        Ok(self.serve_plan(&plan, operands))
+    }
+
+    /// Serve one compiled workload batch on every subarray (one
+    /// batched engine call, per-bank fault isolation): each bank
+    /// executes under its *current* calibration and the error-free
+    /// column mask from its most recent battery, stale entries
+    /// included — arithmetic never waits on the recalibration queue.
+    /// `operands` are per-column values broadcast to every bank; a
+    /// bank whose geometry disagrees degrades to one `Err` outcome.
+    /// Each outcome counts how many masked columns matched the
+    /// software golden model (`compute.golden_mismatch` tracks the
+    /// shortfall).
+    pub fn serve_plan(
+        &mut self,
+        plan: &Arc<WorkloadPlan>,
+        operands: &[Vec<u64>],
+    ) -> Vec<WorkloadOutcome> {
+        let ids: Vec<SubarrayId> = self.entries.keys().copied().collect();
+        let reqs: Vec<ComputeRequest> = ids
+            .iter()
+            .map(|id| {
+                let entry = &self.entries[id];
+                let mut req = ComputeRequest::from_subarray(
+                    &entry.sub,
+                    entry.seed,
+                    plan.clone(),
+                    entry.calib.clone(),
+                    operands.to_vec(),
+                );
+                if let Some(mask) = &entry.mask {
+                    req = req.with_mask(mask.clone());
+                }
+                req
+            })
+            .collect();
+        let results = self.metrics.time("compute.serve", || {
+            execute_isolated(&self.engine, &reqs, self.threads)
+        });
+        // The golden model depends only on the plan and the broadcast
+        // operands — evaluate the circuit once, not once per bank. A
+        // 0-operand plan computes one constant; a bank that executed
+        // successfully at a different width re-broadcasts it below.
+        let shared_cols = operands.first().map(|v| v.len()).unwrap_or(1);
+        let golden = plan.golden_outputs(operands, shared_cols);
+        ids.into_iter()
+            .zip(results)
+            .map(|(id, result)| {
+                let state = self.entries[&id].state;
+                let (golden_correct, active_cols) = match (&result, &golden) {
+                    (Ok(res), Ok(golden)) => {
+                        self.metrics.incr("compute.batches");
+                        let active = res.active_cols();
+                        self.metrics.add("compute.columns_served", active as u64);
+                        let correct = if golden.len() == res.outputs.len() {
+                            res.golden_correct(golden)
+                        } else {
+                            // Only reachable for 0-operand plans (any
+                            // width mismatch fails execution): compare
+                            // every column to the broadcast constant.
+                            let constant = vec![golden[0]; res.outputs.len()];
+                            res.golden_correct(&constant)
+                        };
+                        if correct < active {
+                            self.metrics
+                                .add("compute.golden_mismatch", (active - correct) as u64);
+                        }
+                        (correct, active)
+                    }
+                    _ => {
+                        self.metrics.incr("compute.bank_failures");
+                        (0, 0)
+                    }
+                };
+                WorkloadOutcome { id, state, result, golden_correct, active_cols }
+            })
+            .collect()
     }
 }
 
@@ -588,5 +762,52 @@ mod tests {
     fn unknown_id_set_temperature_is_reported() {
         let mut s = service(1, 128);
         assert!(!s.set_temperature(SubarrayId::new(7, 7, 7), 60.0));
+    }
+
+    #[test]
+    fn serve_workload_runs_under_current_masks() {
+        use crate::pud::plan::PudOp;
+        let cols = 64;
+        let mut s = service(2, cols);
+        s.run_pending(usize::MAX);
+        // A served battery establishes each bank's error-free mask.
+        s.serve();
+        // width 2: the add2 plan needs ~10 scratch rows, well inside
+        // the 16 the test geometry's data region provides.
+        let a: Vec<u64> = (0..cols as u64).map(|c| c % 4).collect();
+        let b: Vec<u64> = (0..cols as u64).map(|c| (c * 5 + 2) % 4).collect();
+        let out = s
+            .serve_workload(PudOp::Add { width: 2 }, &[a.clone(), b.clone()])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        for o in &out {
+            let res = o.result.as_ref().expect("served");
+            assert_eq!(o.state, EntryState::Accepted);
+            // The battery-derived mask restricts reporting.
+            assert!(res.mask.len() == cols && o.active_cols <= cols);
+            assert!(o.golden_correct <= o.active_cols);
+            assert!(res.elapsed_ns > 0.0);
+        }
+        assert_eq!(s.metrics.counter("compute.batches"), 2);
+        assert_eq!(s.metrics.counter("compute.bank_failures"), 0);
+        // An invalid op fails the request, not the banks.
+        assert!(s.serve_workload(PudOp::Add { width: 0 }, &[a, b]).is_err());
+        assert_eq!(s.metrics.counter("compute.bank_failures"), 0);
+    }
+
+    #[test]
+    fn snapshot_persists_calibration_environment_metadata() {
+        let mut s = service(1, 128);
+        s.run_pending(usize::MAX);
+        let id = SubarrayId::new(0, 0, 0);
+        // An excursion past the policy bound schedules recalibration;
+        // the repaired entry re-anchors its monitor at the hot
+        // temperature, which is what the v2 store must record.
+        s.set_temperature(id, 85.0);
+        assert_eq!(s.poll_drift().len(), 1);
+        s.run_pending(usize::MAX);
+        let store = s.snapshot_store();
+        let env = store.stored_env(id).expect("v2 entries carry an environment");
+        assert_eq!(env.temp_c, 85.0);
     }
 }

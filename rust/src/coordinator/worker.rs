@@ -121,6 +121,35 @@ where
         .collect()
 }
 
+/// The isolation pattern shared by the engine helpers
+/// (`calibrate_isolated`, `measure_ecr_isolated`, `execute_isolated`
+/// in `calib::engine`): try the batched call first — keeping
+/// worker-pool fan-out / PJRT fusion on the fast path, with panics
+/// contained — and on any error, panic, or short result retry every
+/// request individually across the pool, so one bad item degrades to
+/// one `Err` slot instead of failing (or aborting) the whole batch.
+pub fn isolate_batch<Q: Sync, R: Send>(
+    reqs: &[Q],
+    threads: usize,
+    batch: impl FnOnce(&[Q]) -> anyhow::Result<Vec<R>>,
+    one: impl Fn(&Q) -> Result<R, String> + Sync,
+) -> Vec<Result<R, String>> {
+    if reqs.is_empty() {
+        return Vec::new();
+    }
+    match catch_unwind(AssertUnwindSafe(|| batch(reqs))) {
+        Ok(Ok(v)) if v.len() == reqs.len() => return v.into_iter().map(Ok).collect(),
+        _ => {}
+    }
+    try_parallel_map((0..reqs.len()).collect(), threads, |i| one(&reqs[i]))
+        .into_iter()
+        .map(|slot| match slot {
+            Ok(inner) => inner,
+            Err(job) => Err(job.to_string()),
+        })
+        .collect()
+}
+
 /// Default worker count: available parallelism.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
@@ -211,6 +240,36 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn isolate_batch_uses_the_fast_path_then_degrades_per_item() {
+        // Healthy batch: one call, results pass through.
+        let reqs = vec![1u32, 2, 3];
+        let out = isolate_batch(
+            &reqs,
+            2,
+            |rs| Ok(rs.iter().map(|x| x * 10).collect()),
+            |_| unreachable!("fast path must satisfy a healthy batch"),
+        );
+        assert_eq!(out, vec![Ok(10), Ok(20), Ok(30)]);
+        // Batched call panics: every item retried, one bad item
+        // degrades to one error slot.
+        let out = isolate_batch(
+            &reqs,
+            2,
+            |_| panic!("injected batch fault"),
+            |&x| if x == 2 { Err("bad item".into()) } else { Ok(x * 10) },
+        );
+        assert_eq!(out[0], Ok(10));
+        assert_eq!(out[1], Err("bad item".to_string()));
+        assert_eq!(out[2], Ok(30));
+        // Short batched result is treated as a fault, not truncated.
+        let out = isolate_batch(&reqs, 2, |_| Ok(vec![7u32]), |&x| Ok(x));
+        assert_eq!(out, vec![Ok(1), Ok(2), Ok(3)]);
+        let empty: Vec<Result<u32, String>> =
+            isolate_batch(&[] as &[u32], 2, |_| Ok(Vec::new()), |&x| Ok(x));
+        assert!(empty.is_empty());
     }
 
     #[test]

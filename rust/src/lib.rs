@@ -88,9 +88,15 @@
 //! println!("{}", BankSummary::from_outcomes(&outcomes));
 //! ```
 //!
+//! Arithmetic workloads flow through the same batch-first shape:
+//! compile a [`pud::plan::PudOp`] into a [`pud::plan::WorkloadPlan`]
+//! once, then submit [`calib::engine::ComputeRequest`]s to any
+//! [`calib::engine::ComputeEngine`] (or serve them with drift-aware
+//! recalibration through `RecalibService::serve_workload`).
+//!
 //! The `pudtune` binary exposes every experiment in the paper
-//! (`pudtune table1`, `pudtune fig5`, ...); `rust/benches/` regenerates
-//! each table and figure.
+//! (`pudtune table1`, `pudtune fig5`, `pudtune run --op add8`, ...);
+//! `rust/benches/` regenerates each table and figure.
 
 pub mod analysis;
 pub mod calib;
@@ -114,7 +120,10 @@ pub mod prelude {
     pub use crate::analysis::throughput::{ThroughputModel, ThroughputReport};
     pub use crate::calib::algorithm::{CalibParams, Calibration, NativeEngine};
     pub use crate::calib::drift::{DriftMonitor, DriftPolicy, DriftSignal};
-    pub use crate::calib::engine::{AnyEngine, BankBatch, CalibEngine, CalibRequest, EcrRequest};
+    pub use crate::calib::engine::{
+        AnyEngine, BankBatch, CalibEngine, CalibRequest, ComputeEngine, ComputeRequest,
+        ComputeResult, EcrRequest,
+    };
     pub use crate::calib::lattice::{FracConfig, OffsetLattice};
     pub use crate::calib::store::CalibStore;
     pub use crate::config::device::DeviceConfig;
@@ -123,11 +132,12 @@ pub mod prelude {
         BankOutcome, BankSummary, ColumnBank, DeviceCoordinator, PjrtEngine,
     };
     pub use crate::coordinator::service::{
-        EntryState, LoadOutcome, RecalibService, ServeOutcome, ServiceConfig,
+        EntryState, LoadOutcome, RecalibService, ServeOutcome, ServiceConfig, WorkloadOutcome,
     };
     pub use crate::dram::device::Device;
     pub use crate::dram::geometry::SubarrayId;
     pub use crate::dram::subarray::{OpCounts, RowStorage, Subarray};
     pub use crate::pud::majx::MajX;
+    pub use crate::pud::plan::{BitwiseOp, PudError, PudOp, WorkloadPlan};
     pub use crate::util::rng::Rng;
 }

@@ -7,6 +7,8 @@
 //! pudtune fig6a    [--cols N]
 //! pudtune fig6b    [--cols N]
 //! pudtune ecr      [--fracs x,y,z] [--baseline x] [--cols N]
+//! pudtune run      [--op add8,mul8|and|or|not|maj3|maj5] [--cols N]
+//!                  [--rows N] [--samples N] [--fracs x,y,z] [--native]
 //! pudtune calibrate [--cols N] [--store path] [--timed]
 //! pudtune serve    [--banks N] [--cols N] [--ticks N] [--store path]
 //!                  [--tick-hours H] [--excursion-temp C] [--excursion-tick K]
@@ -83,6 +85,7 @@ fn run(raw: &[String]) -> Result<()> {
         "fig6a" => cmd_fig6(&args, true),
         "fig6b" => cmd_fig6(&args, false),
         "ecr" => cmd_ecr(&args),
+        "run" => cmd_run(&args),
         "calibrate" => cmd_calibrate(&args),
         "serve" => cmd_serve(&args),
         "fit-model" => cmd_fit_model(&args),
@@ -216,6 +219,116 @@ fn cmd_ecr(args: &cli::Args) -> Result<()> {
         "arithmetic-usable columns: {:.2}%",
         (1.0 - rep5.intersect(&rep3).ecr()) * 100.0
     );
+    Ok(())
+}
+
+/// Serve arithmetic workloads end to end through the batch-first
+/// stack: calibrate via `CalibEngine`, derive conventional vs PUDTune
+/// error-free column masks from arithmetic (MAJ5 ∧ MAJ3) batteries,
+/// execute each op through `ComputeEngine`, check outputs against the
+/// software golden model, and report Eq. 1 *effective* throughput for
+/// both masks — the paper's Table-I add/mul uplift, reproduced on the
+/// serving path.
+fn cmd_run(args: &cli::Args) -> Result<()> {
+    use pudtune::analysis::throughput::ThroughputModel;
+    use pudtune::calib::engine::{measure_arith_batteries, ComputeEngine, ComputeRequest};
+    use pudtune::pud::plan::{PudOp, WorkloadPlan};
+    use pudtune::util::rng::Rng;
+    use std::sync::Arc;
+
+    let (cfg, _, exp) = load_configs(args)?;
+    let cols = args.usize("cols", 1024).map_err(anyhow::Error::msg)?;
+    let rows = args.usize("rows", 192).map_err(anyhow::Error::msg)?;
+    let mut op_names = args.list("op");
+    if op_names.is_empty() {
+        op_names = vec!["add8".into(), "mul8".into()];
+    }
+    let ops = op_names
+        .iter()
+        .map(|name| {
+            PudOp::parse(name).ok_or_else(|| {
+                anyhow!("unknown op '{name}' (try add8, mul8, and, or, not, maj3, maj5)")
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let engine = engine_for(args, &cfg);
+    let seed = exp.seed;
+    let sub = Subarray::with_geometry(&cfg, rows, cols, seed);
+    let tune = FracConfig::pudtune(args.fracs("fracs", [2, 1, 0]).map_err(anyhow::Error::msg)?);
+    let base = FracConfig::baseline(3);
+    let params = CalibParams {
+        iterations: exp.calib_iterations,
+        samples: exp.calib_samples,
+        tau: exp.bias_tau,
+        seed: exp.seed,
+    };
+    let t0 = std::time::Instant::now();
+    let calib = engine.calibrate_one(&CalibRequest::from_subarray(&sub, seed, tune, params))?;
+    let base_cal = base.uncalibrated(&cfg, cols);
+
+    // Arithmetic-usable masks: a column serves a circuit only if both
+    // its MAJ5 and MAJ3 are error-free (one batched ECR phase).
+    let batteries =
+        measure_arith_batteries(&engine, &sub, seed, &[&base_cal, &calib], exp.ecr_samples)?;
+    let base_arith = batteries[0].arith();
+    let tune_arith = batteries[1].arith();
+    println!(
+        "workload serving via ComputeEngine ({} backend), {cols} cols x {rows} rows:",
+        engine.compute_backend()
+    );
+    println!(
+        "  arithmetic-usable columns: conventional {} ({:.1}%), PUDTune {} ({:.1}%)",
+        base_arith.error_free(),
+        100.0 * (1.0 - base_arith.ecr()),
+        tune_arith.error_free(),
+        100.0 * (1.0 - tune_arith.ecr())
+    );
+
+    let tput = ThroughputModel::new(&SystemConfig::paper());
+    let mut rng = Rng::new(seed ^ 0x50D);
+    for op in ops {
+        let plan = Arc::new(WorkloadPlan::compile(op).map_err(|e| anyhow!("{e}"))?);
+        let width = plan.op.operand_width();
+        let operands: Vec<Vec<u64>> = (0..plan.op.n_operands())
+            .map(|_| (0..cols).map(|_| rng.below(1u64 << width)).collect())
+            .collect();
+        println!("\n{} ({} MAJ3 + {} MAJ5 + {} NOT per column):",
+            plan.op.label(), plan.cost.maj3, plan.cost.maj5, plan.cost.not_ops);
+        let mut effective = Vec::with_capacity(2);
+        for (label, fc, cal, battery) in [
+            ("conventional", &base, &base_cal, &base_arith),
+            ("PUDTune     ", &tune, &calib, &tune_arith),
+        ] {
+            let req = ComputeRequest::from_subarray(
+                &sub,
+                seed,
+                plan.clone(),
+                cal.clone(),
+                operands.clone(),
+            )
+            .with_mask(battery.error_free_mask());
+            let golden = req.golden_outputs().map_err(|e| anyhow!("{e}"))?;
+            let res = engine.execute_one(&req)?;
+            let correct = res.golden_correct(&golden);
+            let free_frac = res.active_cols() as f64 / cols as f64;
+            let ops_s = tput.workload_ops(&plan.cost, fc, free_frac);
+            effective.push(ops_s);
+            println!(
+                "  {label}: {correct}/{} masked columns golden-correct, \
+                 {:.1} us of DRAM commands, effective {}",
+                res.active_cols(),
+                res.elapsed_ns / 1000.0,
+                table::fmt_ops(ops_s)
+            );
+        }
+        println!(
+            "  PUDTune uplift: {:.2}x effective {} throughput (paper: 1.88x ADD / 1.89x MUL)",
+            effective[1] / effective[0],
+            plan.op.label()
+        );
+    }
+    println!("\nelapsed: {:.1}s", t0.elapsed().as_secs_f64());
     Ok(())
 }
 

@@ -1,11 +1,17 @@
 //! Bit-serial circuit execution on the subarray.
 //!
-//! Runs a [`MajCircuit`] gate by gate through the full MAJX flow
-//! (RowCopy-in, Frac, SiMRA, copy-out), with wire rows recycled by
-//! last-use analysis. This is the functional path the examples use to
-//! run real 8-bit arithmetic *in* the simulated DRAM; throughput
-//! numbers come from `analysis::throughput` which uses the same
-//! command-cost model.
+//! Runs a compiled [`WorkloadPlan`] gate by gate through the full MAJX
+//! flow (RowCopy-in, Frac, SiMRA, copy-out), with wire rows recycled by
+//! the plan's precomputed last-use analysis. This is the functional
+//! path the compute engines use to run real arithmetic *in* the
+//! simulated DRAM; throughput numbers come from `analysis::throughput`
+//! which prices the same command-cost model over the plan's
+//! `CircuitCost`.
+//!
+//! Request validation is typed: arity/width/row-budget violations
+//! surface as [`PudError`]s *before* the subarray is touched, so a
+//! malformed request degrades one bank instead of poisoning a worker
+//! pool ([`crate::calib::engine::execute_isolated`]).
 //!
 //! The executor is also the heaviest consumer of the subarray's hybrid
 //! row storage: wire traffic is pure RowCopy/write between full-swing
@@ -22,6 +28,7 @@ use crate::dram::geometry::RowMap;
 use crate::dram::subarray::Subarray;
 use crate::pud::graph::{MajCircuit, Signal};
 use crate::pud::majx::{execute_majx, setup_subarray, MajX};
+use crate::pud::plan::{PudError, WorkloadPlan};
 use crate::pud::rowalloc::RowAlloc;
 use std::collections::HashMap;
 
@@ -40,11 +47,11 @@ pub struct CircuitRun {
     pub storage_bytes: usize,
 }
 
-/// Execute `circuit` over per-column operand bit-vectors.
+/// Execute an ad-hoc circuit over per-column operand bit-vectors.
 ///
-/// `inputs[i]` is the bit-vector of primary input `i` (length = cols).
-/// The calibration rows must already be identified; `setup_subarray`
-/// is invoked to (re)store them.
+/// Compiles a throwaway [`WorkloadPlan`] and runs it — callers
+/// executing the same circuit repeatedly (or across banks) should
+/// compile once and use [`run_plan`].
 pub fn run_circuit(
     sub: &mut Subarray,
     map: &RowMap,
@@ -53,34 +60,51 @@ pub fn run_circuit(
     grade: &Ddr4Timing,
     circuit: &MajCircuit,
     inputs: &[Vec<u8>],
-) -> CircuitRun {
-    assert_eq!(inputs.len(), circuit.n_inputs, "operand arity mismatch");
+) -> Result<CircuitRun, PudError> {
+    let plan = WorkloadPlan::from_circuit(circuit.clone())?;
+    run_plan(sub, map, calib, fc, grade, &plan, inputs)
+}
+
+/// Execute a compiled plan over per-column operand bit-vectors.
+///
+/// `inputs[i]` is the bit-vector of primary input `i` (length = cols).
+/// The calibration rows must already be identified; `setup_subarray`
+/// is invoked to (re)store them. Validation happens up front: the
+/// subarray is untouched when an `Err` is returned.
+pub fn run_plan(
+    sub: &mut Subarray,
+    map: &RowMap,
+    calib: &Calibration,
+    fc: &FracConfig,
+    grade: &Ddr4Timing,
+    plan: &WorkloadPlan,
+    inputs: &[Vec<u8>],
+) -> Result<CircuitRun, PudError> {
+    let circuit = &plan.circuit;
+    if inputs.len() != circuit.n_inputs {
+        return Err(PudError::ArityMismatch {
+            expected: circuit.n_inputs,
+            got: inputs.len(),
+        });
+    }
     for v in inputs {
-        assert_eq!(v.len(), sub.cols, "operand width must equal columns");
+        if v.len() != sub.cols {
+            return Err(PudError::WidthMismatch { expected: sub.cols, got: v.len() });
+        }
+    }
+    if calib.cols() != sub.cols {
+        return Err(PudError::WidthMismatch { expected: sub.cols, got: calib.cols() });
+    }
+    let available = sub.rows.saturating_sub(map.data_base);
+    if available == 0 || plan.peak_rows > available {
+        return Err(PudError::RowBudgetExceeded {
+            needed: plan.peak_rows.max(1),
+            available,
+        });
     }
     setup_subarray(sub, map, calib);
 
     let mut elapsed = 0.0f64;
-
-    // Last gate index using each signal, for row recycling.
-    let mut last_use: HashMap<Signal, usize> = HashMap::new();
-    for (gi, gate) in circuit.gates.iter().enumerate() {
-        for &s in &gate.args {
-            last_use.insert(canonical(s), gi);
-        }
-    }
-    for &s in &circuit.outputs {
-        last_use.insert(canonical(s), usize::MAX); // outputs live forever
-    }
-    // Per-gate death lists, built once — releasing dead rows is then
-    // O(deaths) per gate instead of a scan over every live signal.
-    let mut deaths: Vec<Vec<Signal>> = vec![Vec::new(); circuit.gates.len()];
-    for (&sig, &lu) in &last_use {
-        if lu != usize::MAX {
-            deaths[lu].push(sig);
-        }
-    }
-
     let mut alloc = RowAlloc::new(map.data_base, sub.rows);
 
     // Materialise primary inputs.
@@ -143,13 +167,12 @@ pub fn run_circuit(
         let r = alloc.alloc();
         sub.write_row(r, &bits);
         gate_rows[gi] = Some(r);
-        // Recycle rows whose signals die at this gate (precomputed).
-        // Death lists hold canonical signals, and a canonical last-use
-        // index covers *both* polarities — so a dying gate releases its
-        // own row and any materialised negation of it (the seed kept
-        // NOT rows alive forever, leaking scratch rows on NOT-heavy
-        // circuits).
-        for sig in deaths[gi].drain(..) {
+        // Recycle rows whose signals die at this gate (the plan's
+        // precomputed death lists). Death lists hold canonical signals,
+        // and a canonical last-use index covers *both* polarities — so
+        // a dying gate releases its own row and any materialised
+        // negation of it.
+        for &sig in plan.deaths(gi) {
             match sig {
                 Signal::Gate(g) => {
                     if let Some(r) = gate_rows[g].take() {
@@ -187,21 +210,12 @@ pub fn run_circuit(
             || (map.simra_base..map.simra_base + 8).all(|r| sub.row_is_packed(r)),
         "circuit must leave its SiMRA group fully restored"
     );
-    CircuitRun {
+    Ok(CircuitRun {
         outputs,
         elapsed_ns: elapsed,
         peak_rows: alloc.high_water,
         storage_bytes: sub.approx_bytes(),
-    }
-}
-
-/// Canonical storage key: a signal and its negation share liveness.
-fn canonical(s: Signal) -> Signal {
-    match s {
-        Signal::NotInput(i) => Signal::Input(i),
-        Signal::NotGate(g) => Signal::Gate(g),
-        other => other,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -210,6 +224,7 @@ mod tests {
     use crate::calib::lattice::OffsetLattice;
     use crate::config::device::DeviceConfig;
     use crate::pud::adder::ripple_adder;
+    use crate::pud::plan::PudOp;
 
     fn quiet(cols: usize) -> Subarray {
         let mut cfg = DeviceConfig::default();
@@ -250,7 +265,8 @@ mod tests {
             &Ddr4Timing::ddr4_2133(),
             &circuit,
             &inputs,
-        );
+        )
+        .expect("well-formed request");
         assert_eq!(run.outputs.len(), width + 1);
         for col in 0..8 {
             let mut got = 0u64;
@@ -267,6 +283,40 @@ mod tests {
         // geometry is pinned in rust/tests/storage_parity.rs).
         assert_eq!(sub.analog_rows(), 0);
         assert_eq!(run.storage_bytes, sub.approx_bytes());
+    }
+
+    #[test]
+    fn plan_peak_rows_matches_the_executed_high_water() {
+        // The plan's allocation dry-run must predict the executor's
+        // scratch high-water mark exactly — it is what the row-budget
+        // admission check is based on.
+        for op in [PudOp::Add { width: 4 }, PudOp::Mul { width: 3 }] {
+            let plan = WorkloadPlan::compile(op).unwrap();
+            let mut sub = quiet(8);
+            let map = RowMap::standard(sub.rows);
+            let fc = FracConfig::pudtune([2, 1, 0]);
+            let calib =
+                Calibration::uniform(OffsetLattice::build(&sub.cfg, &fc), sub.cols);
+            let inputs = plan
+                .encode_operands(&[vec![3; 8], vec![5; 8]])
+                .unwrap();
+            let run = run_plan(
+                &mut sub,
+                &map,
+                &calib,
+                &fc,
+                &Ddr4Timing::ddr4_2133(),
+                &plan,
+                &inputs,
+            )
+            .unwrap();
+            assert_eq!(
+                run.peak_rows,
+                plan.peak_rows,
+                "dry-run peak diverged for {}",
+                plan.op.label()
+            );
+        }
     }
 
     #[test]
@@ -301,29 +351,60 @@ mod tests {
             &Ddr4Timing::ddr4_2133(),
             &c,
             &[vec![0u8; 8]],
-        );
+        )
+        .expect("well-formed request");
         // 24 chained negations of constant-0 input -> 0 again.
         assert!(run.outputs[0].iter().all(|&b| b == 0), "{:?}", run.outputs);
         assert!(run.peak_rows < 16, "NOT rows leaked: peak={}", run.peak_rows);
     }
 
     #[test]
-    #[should_panic(expected = "operand arity mismatch")]
-    fn wrong_input_count_panics() {
+    fn malformed_requests_error_without_touching_the_subarray() {
         let circuit = ripple_adder(2);
         let mut sub = quiet(4);
         let map = RowMap::standard(sub.rows);
         let fc = FracConfig::pudtune([2, 1, 0]);
         let calib =
             Calibration::uniform(OffsetLattice::build(&sub.cfg, &fc), sub.cols);
-        run_circuit(
+        let grade = Ddr4Timing::ddr4_2133();
+        let fingerprint = sub.rng_fingerprint();
+        // Wrong input count.
+        let err = run_circuit(&mut sub, &map, &calib, &fc, &grade, &circuit, &[vec![0u8; 4]])
+            .unwrap_err();
+        assert_eq!(err, PudError::ArityMismatch { expected: 4, got: 1 });
+        // Wrong operand width.
+        let err = run_circuit(
             &mut sub,
             &map,
             &calib,
             &fc,
-            &Ddr4Timing::ddr4_2133(),
+            &grade,
             &circuit,
-            &[vec![0u8; 4]],
+            &[vec![0u8; 3], vec![0; 4], vec![0; 4], vec![0; 4]],
+        )
+        .unwrap_err();
+        assert_eq!(err, PudError::WidthMismatch { expected: 4, got: 3 });
+        // Calibration for the wrong geometry.
+        let wide = Calibration::uniform(OffsetLattice::build(&sub.cfg, &fc), 8);
+        let err = run_circuit(&mut sub, &map, &wide, &fc, &grade, &circuit, &[vec![0u8; 4]; 4])
+            .unwrap_err();
+        assert_eq!(err, PudError::WidthMismatch { expected: 4, got: 8 });
+        // Row budget: a subarray whose data region cannot hold the
+        // plan's scratch set.
+        let plan = WorkloadPlan::compile(PudOp::Mul { width: 4 }).unwrap();
+        let mut tiny = quiet(4);
+        let tiny_map = RowMap {
+            data_base: tiny.rows - 2,
+            ..RowMap::standard(tiny.rows)
+        };
+        let inputs = plan.encode_operands(&[vec![1; 4], vec![2; 4]]).unwrap();
+        let err = run_plan(&mut tiny, &tiny_map, &calib, &fc, &grade, &plan, &inputs)
+            .unwrap_err();
+        assert!(
+            matches!(err, PudError::RowBudgetExceeded { available: 2, .. }),
+            "{err:?}"
         );
+        // Validation failures never consumed subarray randomness.
+        assert_eq!(sub.rng_fingerprint(), fingerprint);
     }
 }

@@ -7,6 +7,15 @@
 //! built by `logic` / `fulladder` / `adder` / `multiplier`, evaluated
 //! functionally for reference, costed for the throughput model, and
 //! executed bit-serially on the subarray by `exec`.
+//!
+//! Validation is typed: the `try_*` builder/eval forms return
+//! [`PudError`] so externally supplied circuits and inputs (e.g.
+//! [`crate::pud::plan::PudOp::Custom`] workloads) fail as one bank's
+//! error instead of a panic; the panicking `push`/`output`/`eval`
+//! wrappers remain for circuit constructors whose shapes are correct
+//! by construction.
+
+use crate::pud::plan::PudError;
 
 /// A signal consumed by a gate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -53,7 +62,7 @@ pub struct CircuitCost {
 }
 
 /// A majority DAG. Gates are stored in topological order.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct MajCircuit {
     pub n_inputs: usize,
     pub gates: Vec<Gate>,
@@ -65,39 +74,83 @@ impl MajCircuit {
         Self { n_inputs, gates: Vec::new(), outputs: Vec::new() }
     }
 
-    /// Append a gate; returns its signal.
-    pub fn push(&mut self, gate: Gate) -> Signal {
+    /// Append a gate; returns its signal. Typed-error form of
+    /// [`Self::push`] for externally supplied shapes.
+    pub fn try_push(&mut self, gate: Gate) -> Result<Signal, PudError> {
         for s in &gate.args {
-            self.check(*s, self.gates.len());
+            self.check_signal(*s, self.gates.len())?;
         }
-        assert!(
-            gate.arity() == 3 || gate.arity() == 5,
-            "majority gates are 3- or 5-ary"
-        );
+        if gate.arity() != 3 && gate.arity() != 5 {
+            return Err(PudError::MalformedCircuit(format!(
+                "majority gates are 3- or 5-ary, got arity {}",
+                gate.arity()
+            )));
+        }
         self.gates.push(gate);
-        Signal::Gate(self.gates.len() - 1)
+        Ok(Signal::Gate(self.gates.len() - 1))
+    }
+
+    /// Append a gate; panics on an invalid shape (builder convenience
+    /// for constructors that are correct by construction).
+    pub fn push(&mut self, gate: Gate) -> Signal {
+        self.try_push(gate).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Declare an output signal; typed-error form of [`Self::output`].
+    pub fn try_output(&mut self, s: Signal) -> Result<(), PudError> {
+        self.check_signal(s, self.gates.len())?;
+        self.outputs.push(s);
+        Ok(())
     }
 
     pub fn output(&mut self, s: Signal) {
-        self.check(s, self.gates.len());
-        self.outputs.push(s);
+        self.try_output(s).unwrap_or_else(|e| panic!("{e}"))
     }
 
-    fn check(&self, s: Signal, upto: usize) {
+    fn check_signal(&self, s: Signal, upto: usize) -> Result<(), PudError> {
         match s {
-            Signal::Input(i) | Signal::NotInput(i) => {
-                assert!(i < self.n_inputs, "input {i} out of range")
+            Signal::Input(i) | Signal::NotInput(i) if i >= self.n_inputs => {
+                Err(PudError::MalformedCircuit(format!(
+                    "input {i} out of range (circuit has {} inputs)",
+                    self.n_inputs
+                )))
             }
-            Signal::Gate(g) | Signal::NotGate(g) => {
-                assert!(g < upto, "gate {g} referenced before definition")
-            }
-            Signal::Const(_) => {}
+            Signal::Gate(g) | Signal::NotGate(g) if g >= upto => Err(
+                PudError::MalformedCircuit(format!("gate {g} referenced before definition")),
+            ),
+            _ => Ok(()),
         }
     }
 
-    /// Functional evaluation (the logic-level reference).
-    pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
-        assert_eq!(inputs.len(), self.n_inputs);
+    /// Re-validate a complete (possibly externally supplied) circuit:
+    /// gate arities, topological references, output references.
+    pub fn validate(&self) -> Result<(), PudError> {
+        for (gi, gate) in self.gates.iter().enumerate() {
+            if gate.arity() != 3 && gate.arity() != 5 {
+                return Err(PudError::MalformedCircuit(format!(
+                    "gate {gi} is {}-ary; majority gates are 3- or 5-ary",
+                    gate.arity()
+                )));
+            }
+            for &s in &gate.args {
+                self.check_signal(s, gi)?;
+            }
+        }
+        for &s in &self.outputs {
+            self.check_signal(s, self.gates.len())?;
+        }
+        Ok(())
+    }
+
+    /// Functional evaluation (the logic-level reference); typed-error
+    /// form of [`Self::eval`].
+    pub fn try_eval(&self, inputs: &[bool]) -> Result<Vec<bool>, PudError> {
+        if inputs.len() != self.n_inputs {
+            return Err(PudError::ArityMismatch {
+                expected: self.n_inputs,
+                got: inputs.len(),
+            });
+        }
         let mut vals = Vec::with_capacity(self.gates.len());
         let get = |vals: &Vec<bool>, s: Signal| -> bool {
             match s {
@@ -112,7 +165,12 @@ impl MajCircuit {
             let ones = gate.args.iter().filter(|&&s| get(&vals, s)).count();
             vals.push(ones * 2 > gate.arity());
         }
-        self.outputs.iter().map(|&s| get(&vals, s)).collect()
+        Ok(self.outputs.iter().map(|&s| get(&vals, s)).collect())
+    }
+
+    /// Functional evaluation; panics on an input-arity mismatch.
+    pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
+        self.try_eval(inputs).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Cost: gate counts plus distinct negations.
@@ -202,5 +260,46 @@ mod tests {
     fn bad_input_rejected() {
         let mut c = MajCircuit::new(1);
         c.output(Signal::Input(3));
+    }
+
+    #[test]
+    fn try_forms_return_typed_errors() {
+        use crate::pud::plan::PudError;
+        let mut c = MajCircuit::new(1);
+        let err = c
+            .try_push(Gate::maj3(Signal::Gate(5), Signal::Input(0), Signal::Const(false)))
+            .unwrap_err();
+        assert!(matches!(err, PudError::MalformedCircuit(_)));
+        assert!(c.gates.is_empty(), "failed push must not mutate the circuit");
+        assert!(c.try_output(Signal::Input(3)).is_err());
+        let bad_arity = Gate { args: vec![Signal::Input(0), Signal::Const(true)] };
+        assert!(c.try_push(bad_arity).is_err());
+
+        let g = c.try_push(Gate::maj3(
+            Signal::Input(0),
+            Signal::Const(false),
+            Signal::Const(true),
+        ));
+        assert_eq!(g, Ok(Signal::Gate(0)));
+        c.try_output(Signal::Gate(0)).unwrap();
+        assert_eq!(
+            c.try_eval(&[true, false]),
+            Err(PudError::ArityMismatch { expected: 1, got: 2 })
+        );
+        assert_eq!(c.try_eval(&[true]), Ok(vec![true]));
+    }
+
+    #[test]
+    fn validate_catches_hand_built_corruption() {
+        let mut c = MajCircuit::new(2);
+        let g = c.push(Gate::maj3(Signal::Input(0), Signal::Input(1), Signal::Const(false)));
+        c.output(g);
+        assert!(c.validate().is_ok());
+        // Corrupt the stored shape the way an external circuit could.
+        c.gates[0].args[0] = Signal::Gate(9);
+        assert!(c.validate().is_err());
+        c.gates[0].args[0] = Signal::Input(0);
+        c.outputs.push(Signal::NotGate(4));
+        assert!(c.validate().is_err());
     }
 }

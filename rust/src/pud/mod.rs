@@ -8,14 +8,37 @@
 //! shift-and-add multiplication, plus a small majority-graph IR with a
 //! row allocator so circuits schedule onto the subarray's row budget.
 //!
+//! ## Plan → engine → serve layering
+//!
+//! Workloads flow through three layers, mirroring the calibration
+//! stack's request/engine/service split:
+//!
+//! 1. **plan** — a [`plan::PudOp`] names the workload; compiling it
+//!    into a [`plan::WorkloadPlan`] runs circuit synthesis, last-use
+//!    analysis and command-cost pricing *once*, yielding a bank-
+//!    agnostic, `Arc`-shareable artifact. Malformed shapes surface as
+//!    typed [`plan::PudError`]s, not panics;
+//! 2. **engine** — [`crate::calib::engine::ComputeEngine`] executes
+//!    batches of `ComputeRequest`s (plan + bank + calibration +
+//!    error-free column mask) on a backend: the native engine fans
+//!    across the worker pool via [`exec::run_plan`], the PJRT engine
+//!    currently falls back per bank;
+//! 3. **serve** — `RecalibService::serve_workload`
+//!    ([`crate::coordinator::service`]) runs workloads on every
+//!    registered subarray under its *current* calibration and drift
+//!    state, so arithmetic serving and drift-scheduled recalibration
+//!    share one lifecycle.
+//!
 //! * [`majx`] — MAJX execution flows, conventional and PUDTune;
 //! * [`logic`] — AND / OR / NOT;
 //! * [`fulladder`] — sum/carry from MAJ3 + MAJ5 (MVDRAM);
 //! * [`adder`] — 8-bit (and general-width) ripple-carry addition;
 //! * [`multiplier`] — 8-bit shift-and-add multiplication;
 //! * [`graph`] — majority-graph IR + op/ACT cost accounting;
+//! * [`plan`] — the `PudOp` workload vocabulary and one-time plan
+//!   compilation (typed errors, death lists, peak-row precomputation);
 //! * [`rowalloc`] — scratch-row allocation inside the subarray;
-//! * [`exec`] — graph execution against the golden model.
+//! * [`exec`] — plan execution against the golden model.
 
 pub mod adder;
 pub mod exec;
@@ -24,4 +47,5 @@ pub mod graph;
 pub mod logic;
 pub mod majx;
 pub mod multiplier;
+pub mod plan;
 pub mod rowalloc;

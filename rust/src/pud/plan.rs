@@ -1,0 +1,555 @@
+//! Workload vocabulary and one-time compilation.
+//!
+//! The paper's headline arithmetic results (Table I: 1.88×/1.89×
+//! add/multiply throughput from more error-free columns) treat PUD
+//! operations as *schedulable primitives*, not ad-hoc scripts. This
+//! module is the typed half of that story:
+//!
+//! * [`PudOp`] — the operation vocabulary a serving system accepts:
+//!   ripple-carry addition, array multiplication, boolean logic,
+//!   majority reduction, or an arbitrary [`MajCircuit`];
+//! * [`WorkloadPlan`] — one op **compiled once**: circuit synthesis,
+//!   last-use analysis (per-gate death lists), the exact peak
+//!   scratch-row count the executor will reach, and the op/ACT cost
+//!   summary the throughput model prices. A plan holds no subarray
+//!   state, so it is reusable and cacheable across banks — build it
+//!   once, wrap it in an `Arc`, and hand it to every
+//!   [`crate::calib::engine::ComputeRequest`];
+//! * [`PudError`] — the typed failure surface that replaces the old
+//!   panicking asserts: a malformed request degrades one bank instead
+//!   of poisoning the worker pool.
+//!
+//! Execution lives in [`crate::pud::exec::run_plan`]; batch dispatch
+//! across banks/backends in [`crate::calib::engine::ComputeEngine`].
+
+use crate::pud::adder::ripple_adder;
+use crate::pud::graph::{CircuitCost, Gate, MajCircuit, Signal};
+use crate::pud::multiplier::array_multiplier;
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+/// Why a PUD workload request could not be planned or executed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PudError {
+    /// Operand count does not match what the circuit consumes.
+    ArityMismatch { expected: usize, got: usize },
+    /// An operand / calibration / mask width disagrees with the
+    /// subarray's column count (or with the other operands).
+    WidthMismatch { expected: usize, got: usize },
+    /// The circuit needs more simultaneous scratch rows than the
+    /// subarray's data region provides.
+    RowBudgetExceeded { needed: usize, available: usize },
+    /// The circuit itself is invalid (bad gate arity, dangling signal
+    /// reference, unsupported shape).
+    MalformedCircuit(String),
+}
+
+impl fmt::Display for PudError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PudError::ArityMismatch { expected, got } => {
+                write!(f, "operand arity mismatch: expected {expected} inputs, got {got}")
+            }
+            PudError::WidthMismatch { expected, got } => {
+                write!(f, "operand width mismatch: expected {expected} columns, got {got}")
+            }
+            PudError::RowBudgetExceeded { needed, available } => {
+                write!(
+                    f,
+                    "row budget exceeded: circuit needs {needed} scratch rows, \
+                     subarray has {available}"
+                )
+            }
+            PudError::MalformedCircuit(msg) => write!(f, "malformed circuit: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PudError {}
+
+/// Bitwise boolean operations (Ambit/ComputeDRAM constructions over
+/// constant-biased MAJ3 and inverted write-back).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BitwiseOp {
+    And,
+    Or,
+    Not,
+}
+
+/// A schedulable PUD workload.
+///
+/// Value-level operands are per-column unsigned integers; `Add`/`Mul`
+/// consume two `width`-bit operands per column, everything else
+/// consumes single-bit operands.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PudOp {
+    /// `width`-bit ripple-carry addition (outputs `width + 1` bits).
+    Add { width: usize },
+    /// `width`×`width`-bit array multiplication (outputs `2 * width`).
+    Mul { width: usize },
+    /// Single-bit boolean logic.
+    Bitwise(BitwiseOp),
+    /// One MAJ-m majority vote over m single-bit operands (m ∈ {3, 5}).
+    MajReduce { m: usize },
+    /// An arbitrary caller-supplied majority circuit (validated at
+    /// compile time; single-bit operands, one per circuit input).
+    Custom(MajCircuit),
+}
+
+impl PudOp {
+    /// Parse a CLI-style op name: `add8`, `mul4`, `and`, `or`, `not`,
+    /// `maj3`, `maj5`.
+    pub fn parse(name: &str) -> Option<PudOp> {
+        let t = name.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "and" => Some(PudOp::Bitwise(BitwiseOp::And)),
+            "or" => Some(PudOp::Bitwise(BitwiseOp::Or)),
+            "not" => Some(PudOp::Bitwise(BitwiseOp::Not)),
+            "maj3" => Some(PudOp::MajReduce { m: 3 }),
+            "maj5" => Some(PudOp::MajReduce { m: 5 }),
+            _ => {
+                if let Some(w) = t.strip_prefix("add") {
+                    w.parse().ok().map(|width| PudOp::Add { width })
+                } else if let Some(w) = t.strip_prefix("mul") {
+                    w.parse().ok().map(|width| PudOp::Mul { width })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Short name for logs/benches (`add8`, `mul4`, `maj5`, ...).
+    pub fn label(&self) -> String {
+        match self {
+            PudOp::Add { width } => format!("add{width}"),
+            PudOp::Mul { width } => format!("mul{width}"),
+            PudOp::Bitwise(BitwiseOp::And) => "and".into(),
+            PudOp::Bitwise(BitwiseOp::Or) => "or".into(),
+            PudOp::Bitwise(BitwiseOp::Not) => "not".into(),
+            PudOp::MajReduce { m } => format!("maj{m}"),
+            PudOp::Custom(_) => "custom".into(),
+        }
+    }
+
+    /// Value-level operands the op consumes per column.
+    pub fn n_operands(&self) -> usize {
+        match self {
+            PudOp::Add { .. } | PudOp::Mul { .. } => 2,
+            PudOp::Bitwise(BitwiseOp::Not) => 1,
+            PudOp::Bitwise(_) => 2,
+            PudOp::MajReduce { m } => *m,
+            PudOp::Custom(c) => c.n_inputs,
+        }
+    }
+
+    /// Bits per value-level operand.
+    pub fn operand_width(&self) -> usize {
+        match self {
+            PudOp::Add { width } | PudOp::Mul { width } => *width,
+            _ => 1,
+        }
+    }
+
+    /// Synthesise the majority circuit implementing the op.
+    pub fn circuit(&self) -> Result<MajCircuit, PudError> {
+        match self {
+            PudOp::Add { width } => {
+                require_width(*width, 63, "add")?;
+                Ok(ripple_adder(*width))
+            }
+            PudOp::Mul { width } => {
+                require_width(*width, 32, "mul")?;
+                Ok(array_multiplier(*width))
+            }
+            PudOp::Bitwise(BitwiseOp::And) => {
+                let mut c = MajCircuit::new(2);
+                let g = c.try_push(Gate::maj3(
+                    Signal::Input(0),
+                    Signal::Input(1),
+                    Signal::Const(false),
+                ))?;
+                c.try_output(g)?;
+                Ok(c)
+            }
+            PudOp::Bitwise(BitwiseOp::Or) => {
+                let mut c = MajCircuit::new(2);
+                let g = c.try_push(Gate::maj3(
+                    Signal::Input(0),
+                    Signal::Input(1),
+                    Signal::Const(true),
+                ))?;
+                c.try_output(g)?;
+                Ok(c)
+            }
+            PudOp::Bitwise(BitwiseOp::Not) => {
+                let mut c = MajCircuit::new(1);
+                c.try_output(Signal::NotInput(0))?;
+                Ok(c)
+            }
+            PudOp::MajReduce { m: 3 } => {
+                let mut c = MajCircuit::new(3);
+                let g = c.try_push(Gate::maj3(
+                    Signal::Input(0),
+                    Signal::Input(1),
+                    Signal::Input(2),
+                ))?;
+                c.try_output(g)?;
+                Ok(c)
+            }
+            PudOp::MajReduce { m: 5 } => {
+                let mut c = MajCircuit::new(5);
+                let g = c.try_push(Gate::maj5(
+                    Signal::Input(0),
+                    Signal::Input(1),
+                    Signal::Input(2),
+                    Signal::Input(3),
+                    Signal::Input(4),
+                ))?;
+                c.try_output(g)?;
+                Ok(c)
+            }
+            PudOp::MajReduce { m } => Err(PudError::MalformedCircuit(format!(
+                "MAJ{m} is not reducible under 8-row SiMRA (m must be 3 or 5)"
+            ))),
+            PudOp::Custom(c) => {
+                c.validate()?;
+                Ok(c.clone())
+            }
+        }
+    }
+}
+
+fn require_width(width: usize, max: usize, what: &str) -> Result<(), PudError> {
+    if width < 1 || width > max {
+        return Err(PudError::MalformedCircuit(format!(
+            "{what} width must be 1..={max}, got {width}"
+        )));
+    }
+    Ok(())
+}
+
+/// Canonical liveness key: a signal and its negation share a last use
+/// (the executor releases both polarities' rows together).
+fn canonical(s: Signal) -> Signal {
+    match s {
+        Signal::NotInput(i) => Signal::Input(i),
+        Signal::NotGate(g) => Signal::Gate(g),
+        other => other,
+    }
+}
+
+/// A [`PudOp`] compiled for execution: the synthesised circuit, the
+/// per-gate death lists from last-use analysis, the exact scratch-row
+/// high-water mark, and the command-cost summary. Plans are immutable
+/// and bank-agnostic — compile once, share via `Arc` across every bank
+/// and batch. (A `Custom` plan keeps the caller's circuit in `op` and
+/// the executable copy in `circuit` — a few KB per plan, paid once at
+/// compile time.)
+#[derive(Clone, Debug)]
+pub struct WorkloadPlan {
+    pub op: PudOp,
+    pub circuit: MajCircuit,
+    /// Gate/NOT counts for the throughput model
+    /// ([`crate::analysis::throughput::ThroughputModel::workload_ops`]).
+    pub cost: CircuitCost,
+    /// Exact peak simultaneous scratch rows the executor allocates
+    /// (inputs + live wires + materialised negations).
+    pub peak_rows: usize,
+    /// Per-gate lists of canonical signals whose last consumer is that
+    /// gate — the executor releases their rows right after it fires.
+    deaths: Vec<Vec<Signal>>,
+}
+
+impl WorkloadPlan {
+    /// Compile an op: synthesise + validate the circuit, run last-use
+    /// analysis and the allocation dry-run, price the gates.
+    pub fn compile(op: PudOp) -> Result<Self, PudError> {
+        let circuit = op.circuit()?;
+        if circuit.outputs.len() > 64 {
+            return Err(PudError::MalformedCircuit(format!(
+                "{} outputs do not fit the 64-bit value decode",
+                circuit.outputs.len()
+            )));
+        }
+        let (deaths, peak_rows) = analyse(&circuit);
+        let cost = circuit.cost();
+        Ok(Self { op, circuit, cost, peak_rows, deaths })
+    }
+
+    /// Plan an arbitrary circuit (sugar for [`PudOp::Custom`]).
+    pub fn from_circuit(circuit: MajCircuit) -> Result<Self, PudError> {
+        Self::compile(PudOp::Custom(circuit))
+    }
+
+    /// Canonical signals dying at gate `gi`.
+    pub fn deaths(&self, gi: usize) -> &[Signal] {
+        &self.deaths[gi]
+    }
+
+    /// Encode per-column operand values into the circuit's input
+    /// bit-planes (operand-major, LSB first — the layout
+    /// `ripple_adder`/`array_multiplier` consume).
+    pub fn encode_operands(&self, operands: &[Vec<u64>]) -> Result<Vec<Vec<u8>>, PudError> {
+        let n = self.op.n_operands();
+        if operands.len() != n {
+            return Err(PudError::ArityMismatch { expected: n, got: operands.len() });
+        }
+        let cols = operands.first().map(|v| v.len()).unwrap_or(0);
+        for v in operands {
+            if v.len() != cols {
+                return Err(PudError::WidthMismatch { expected: cols, got: v.len() });
+            }
+        }
+        let w = self.op.operand_width();
+        let mut planes = Vec::with_capacity(self.circuit.n_inputs);
+        for v in operands {
+            for bit in 0..w {
+                planes.push(v.iter().map(|&x| ((x >> bit) & 1) as u8).collect());
+            }
+        }
+        Ok(planes)
+    }
+
+    /// Decode one column's output bit-planes into a value (LSB first).
+    pub fn decode_output(&self, outputs: &[Vec<u8>], col: usize) -> u64 {
+        outputs
+            .iter()
+            .enumerate()
+            .fold(0u64, |acc, (bit, out)| acc | ((out[col] & 1) as u64) << bit)
+    }
+
+    /// Column-wise software golden model for broadcast operands: the
+    /// expected output value of each of `cols` columns. Compute it
+    /// once per served batch — it depends only on the plan and the
+    /// operands, never on the bank. A 0-operand plan broadcasts its
+    /// constant result to every column.
+    pub fn golden_outputs(&self, operands: &[Vec<u64>], cols: usize) -> Result<Vec<u64>, PudError> {
+        let n = self.op.n_operands();
+        if operands.len() != n {
+            return Err(PudError::ArityMismatch { expected: n, got: operands.len() });
+        }
+        for v in operands {
+            if v.len() != cols {
+                return Err(PudError::WidthMismatch { expected: cols, got: v.len() });
+            }
+        }
+        if operands.is_empty() {
+            return Ok(vec![self.golden(&[])?; cols]);
+        }
+        let mut vals = vec![0u64; n];
+        (0..cols)
+            .map(|c| {
+                for (slot, v) in vals.iter_mut().zip(operands) {
+                    *slot = v[c];
+                }
+                self.golden(&vals)
+            })
+            .collect()
+    }
+
+    /// Software golden model: the op on one column's operand values via
+    /// [`MajCircuit::eval`].
+    pub fn golden(&self, vals: &[u64]) -> Result<u64, PudError> {
+        let n = self.op.n_operands();
+        if vals.len() != n {
+            return Err(PudError::ArityMismatch { expected: n, got: vals.len() });
+        }
+        let w = self.op.operand_width();
+        let mut ins = Vec::with_capacity(self.circuit.n_inputs);
+        for &v in vals {
+            for bit in 0..w {
+                ins.push((v >> bit) & 1 == 1);
+            }
+        }
+        let out = self.circuit.try_eval(&ins)?;
+        Ok(out
+            .iter()
+            .enumerate()
+            .fold(0u64, |acc, (i, &b)| acc | (b as u64) << i))
+    }
+}
+
+/// Last-use analysis + allocation dry-run: death lists and the exact
+/// peak row count, mirroring `exec::run_plan`'s allocation discipline
+/// (inputs up front, NOT rows materialised at first use, one result
+/// row per gate, both polarities released at the canonical last use).
+fn analyse(circuit: &MajCircuit) -> (Vec<Vec<Signal>>, usize) {
+    let mut last_use: HashMap<Signal, usize> = HashMap::new();
+    for (gi, gate) in circuit.gates.iter().enumerate() {
+        for &s in &gate.args {
+            last_use.insert(canonical(s), gi);
+        }
+    }
+    for &s in &circuit.outputs {
+        last_use.insert(canonical(s), usize::MAX); // outputs live forever
+    }
+    let mut deaths: Vec<Vec<Signal>> = vec![Vec::new(); circuit.gates.len()];
+    for (&sig, &lu) in &last_use {
+        if lu != usize::MAX {
+            deaths[lu].push(sig);
+        }
+    }
+
+    let mut live = circuit.n_inputs;
+    let mut peak = live;
+    let mut gate_live = vec![false; circuit.gates.len()];
+    let mut not_live: HashSet<Signal> = HashSet::new();
+    for (gi, gate) in circuit.gates.iter().enumerate() {
+        for &s in &gate.args {
+            if matches!(s, Signal::NotInput(_) | Signal::NotGate(_)) && not_live.insert(s) {
+                live += 1;
+                peak = peak.max(live);
+            }
+        }
+        live += 1; // the gate's result row
+        peak = peak.max(live);
+        gate_live[gi] = true;
+        for &sig in &deaths[gi] {
+            match sig {
+                Signal::Gate(g) => {
+                    if gate_live[g] {
+                        gate_live[g] = false;
+                        live -= 1;
+                    }
+                    if not_live.remove(&Signal::NotGate(g)) {
+                        live -= 1;
+                    }
+                }
+                Signal::Input(i) => {
+                    if not_live.remove(&Signal::NotInput(i)) {
+                        live -= 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    // Negated outputs materialise one more NOT row each.
+    for &s in &circuit.outputs {
+        if matches!(s, Signal::NotInput(_) | Signal::NotGate(_)) && not_live.insert(s) {
+            live += 1;
+            peak = peak.max(live);
+        }
+    }
+    (deaths, peak)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pud::adder::eval_add;
+    use crate::pud::multiplier::eval_mul;
+
+    #[test]
+    fn parse_roundtrips_labels() {
+        for name in ["add8", "mul4", "and", "or", "not", "maj3", "maj5"] {
+            let op = PudOp::parse(name).unwrap();
+            assert_eq!(op.label(), name);
+        }
+        assert_eq!(PudOp::parse("xor"), None);
+        assert_eq!(PudOp::parse("add"), None);
+        assert_eq!(PudOp::parse("ADD8"), Some(PudOp::Add { width: 8 }));
+    }
+
+    #[test]
+    fn golden_matches_reference_arithmetic() {
+        let add = WorkloadPlan::compile(PudOp::Add { width: 8 }).unwrap();
+        let mul = WorkloadPlan::compile(PudOp::Mul { width: 4 }).unwrap();
+        for (a, b) in [(0u64, 0u64), (3, 5), (200, 255), (15, 15)] {
+            assert_eq!(add.golden(&[a, b]).unwrap(), a + b);
+            assert_eq!(add.golden(&[a, b]).unwrap(), eval_add(&add.circuit, 8, a, b));
+            let (a4, b4) = (a & 15, b & 15);
+            assert_eq!(mul.golden(&[a4, b4]).unwrap(), a4 * b4);
+            assert_eq!(mul.golden(&[a4, b4]).unwrap(), eval_mul(&mul.circuit, 4, a4, b4));
+        }
+    }
+
+    #[test]
+    fn bitwise_and_majreduce_golden() {
+        let and = WorkloadPlan::compile(PudOp::Bitwise(BitwiseOp::And)).unwrap();
+        let or = WorkloadPlan::compile(PudOp::Bitwise(BitwiseOp::Or)).unwrap();
+        let not = WorkloadPlan::compile(PudOp::Bitwise(BitwiseOp::Not)).unwrap();
+        for (a, b) in [(0u64, 0u64), (0, 1), (1, 0), (1, 1)] {
+            assert_eq!(and.golden(&[a, b]).unwrap(), a & b);
+            assert_eq!(or.golden(&[a, b]).unwrap(), a | b);
+        }
+        assert_eq!(not.golden(&[0]).unwrap(), 1);
+        assert_eq!(not.golden(&[1]).unwrap(), 0);
+        let maj3 = WorkloadPlan::compile(PudOp::MajReduce { m: 3 }).unwrap();
+        assert_eq!(maj3.golden(&[1, 1, 0]).unwrap(), 1);
+        assert_eq!(maj3.golden(&[1, 0, 0]).unwrap(), 0);
+        let maj5 = WorkloadPlan::compile(PudOp::MajReduce { m: 5 }).unwrap();
+        assert_eq!(maj5.golden(&[1, 1, 1, 0, 0]).unwrap(), 1);
+        assert_eq!(maj5.golden(&[1, 1, 0, 0, 0]).unwrap(), 0);
+    }
+
+    #[test]
+    fn golden_outputs_broadcasts_per_column() {
+        let plan = WorkloadPlan::compile(PudOp::Add { width: 2 }).unwrap();
+        let g = plan.golden_outputs(&[vec![1, 2, 3], vec![3, 2, 1]], 3).unwrap();
+        assert_eq!(g, vec![4, 4, 4]);
+        assert!(plan.golden_outputs(&[vec![1], vec![1]], 3).is_err());
+        // A 0-operand plan broadcasts its constant to every column.
+        let mut c = MajCircuit::new(0);
+        c.output(Signal::Const(true));
+        let konst = WorkloadPlan::compile(PudOp::Custom(c)).unwrap();
+        assert_eq!(konst.golden_outputs(&[], 4).unwrap(), vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn encode_operands_validates_shape() {
+        let plan = WorkloadPlan::compile(PudOp::Add { width: 4 }).unwrap();
+        let planes = plan.encode_operands(&[vec![5, 10], vec![3, 12]]).unwrap();
+        assert_eq!(planes.len(), 8); // 2 operands x 4 bit-planes
+        assert_eq!(planes[0], vec![1, 0]); // a bit 0 of 5, 10
+        assert_eq!(planes[4], vec![1, 0]); // b bit 0 of 3, 12
+        assert_eq!(
+            plan.encode_operands(&[vec![1]]),
+            Err(PudError::ArityMismatch { expected: 2, got: 1 })
+        );
+        assert_eq!(
+            plan.encode_operands(&[vec![1, 2], vec![1]]),
+            Err(PudError::WidthMismatch { expected: 2, got: 1 })
+        );
+    }
+
+    #[test]
+    fn invalid_ops_are_rejected() {
+        assert!(matches!(
+            WorkloadPlan::compile(PudOp::Add { width: 0 }),
+            Err(PudError::MalformedCircuit(_))
+        ));
+        assert!(matches!(
+            WorkloadPlan::compile(PudOp::MajReduce { m: 7 }),
+            Err(PudError::MalformedCircuit(_))
+        ));
+        // A dangling custom circuit is caught at compile time.
+        let bad = MajCircuit { n_inputs: 1, gates: Vec::new(), outputs: vec![Signal::Gate(0)] };
+        let err = WorkloadPlan::compile(PudOp::Custom(bad)).unwrap_err();
+        assert!(err.to_string().contains("referenced before definition"), "{err}");
+    }
+
+    #[test]
+    fn peak_rows_is_positive_and_bounded() {
+        // The dry-run peak must cover inputs and at least one wire, and
+        // stay well under naive all-live allocation.
+        let plan = WorkloadPlan::compile(PudOp::Add { width: 8 }).unwrap();
+        let naive = plan.circuit.n_inputs + plan.circuit.gates.len();
+        assert!(plan.peak_rows > plan.circuit.n_inputs);
+        assert!(plan.peak_rows < naive, "{} vs naive {naive}", plan.peak_rows);
+        // Death lists cover every gate index.
+        for gi in 0..plan.circuit.gates.len() {
+            let _ = plan.deaths(gi);
+        }
+    }
+
+    #[test]
+    fn errors_render_usefully() {
+        let e = PudError::ArityMismatch { expected: 2, got: 3 };
+        assert!(e.to_string().contains("operand arity mismatch"));
+        let e = PudError::RowBudgetExceeded { needed: 40, available: 8 };
+        assert!(e.to_string().contains("40"));
+        assert!(e.to_string().contains("8"));
+    }
+}

@@ -1,0 +1,271 @@
+//! Property suite for the unified workload API: every `PudOp` driven
+//! through `WorkloadPlan` → `ComputeEngine` must reproduce the
+//! software golden model (`MajCircuit::eval`) on the error-free column
+//! mask, for random widths/inputs/seeds — on the hybrid storage model
+//! via the engine, and (feature `reference-model`) on the dense
+//! reference model via a minimal gate executor over the same plan.
+
+use pudtune::calib::algorithm::Calibration;
+use pudtune::calib::engine::{ComputeEngine, ComputeRequest};
+use pudtune::calib::lattice::{FracConfig, OffsetLattice};
+use pudtune::config::device::DeviceConfig;
+use pudtune::prelude::NativeEngine;
+use pudtune::pud::graph::{Gate, MajCircuit, Signal};
+use pudtune::pud::logic::not;
+use pudtune::pud::plan::{BitwiseOp, PudOp, WorkloadPlan};
+use pudtune::util::rng::Rng;
+use std::sync::Arc;
+
+const ROWS: usize = 128;
+
+fn quiet_cfg() -> DeviceConfig {
+    DeviceConfig {
+        sigma_sa: 1e-6,
+        tail_weight: 0.0,
+        sigma_noise: 1e-6,
+        ..DeviceConfig::default()
+    }
+}
+
+/// A random op spanning the whole vocabulary.
+fn random_op(rng: &mut Rng) -> PudOp {
+    match rng.below(6) {
+        0 => PudOp::Add { width: 1 + rng.below(5) as usize },
+        1 => PudOp::Mul { width: 1 + rng.below(3) as usize },
+        2 => PudOp::Bitwise(match rng.below(3) {
+            0 => BitwiseOp::And,
+            1 => BitwiseOp::Or,
+            _ => BitwiseOp::Not,
+        }),
+        3 => PudOp::MajReduce { m: 3 },
+        4 => PudOp::MajReduce { m: 5 },
+        _ => PudOp::Custom(random_circuit(rng)),
+    }
+}
+
+/// A random well-formed majority DAG, with negated signals sprinkled
+/// in and (sometimes) a negated output.
+fn random_circuit(rng: &mut Rng) -> MajCircuit {
+    let n_inputs = 2 + rng.below(3) as usize;
+    let mut c = MajCircuit::new(n_inputs);
+    let gates = 1 + rng.below(6) as usize;
+    for gi in 0..gates {
+        let mut sig = |rng: &mut Rng| -> Signal {
+            let pool = n_inputs + gi;
+            let k = rng.below(pool as u64 + 1) as usize;
+            let base = if k < n_inputs {
+                Signal::Input(k)
+            } else if k < pool {
+                Signal::Gate(k - n_inputs)
+            } else {
+                Signal::Const(rng.below(2) == 1)
+            };
+            if rng.below(4) == 0 {
+                not(base)
+            } else {
+                base
+            }
+        };
+        if rng.below(2) == 0 {
+            c.push(Gate::maj3(sig(rng), sig(rng), sig(rng)));
+        } else {
+            c.push(Gate::maj5(sig(rng), sig(rng), sig(rng), sig(rng), sig(rng)));
+        }
+    }
+    c.output(Signal::Gate(gates - 1));
+    if rng.below(2) == 0 {
+        c.output(Signal::NotInput(0));
+    }
+    c
+}
+
+fn random_request(plan: Arc<WorkloadPlan>, cfg: &DeviceConfig, rng: &mut Rng) -> ComputeRequest {
+    let cols = [8usize, 16, 24][rng.below(3) as usize];
+    let width = plan.op.operand_width();
+    let operands: Vec<Vec<u64>> = (0..plan.op.n_operands())
+        .map(|_| (0..cols).map(|_| rng.below(1u64 << width)).collect())
+        .collect();
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let calib = Calibration::uniform(OffsetLattice::build(cfg, &fc), cols);
+    let seed = rng.below(1 << 30);
+    ComputeRequest::new(plan, ROWS, cols, seed, calib, operands)
+}
+
+#[test]
+fn every_op_matches_the_golden_model_on_a_quiet_device() {
+    let cfg = quiet_cfg();
+    let eng = NativeEngine::new(cfg.clone());
+    let mut rng = Rng::new(0x97A);
+    for trial in 0..24u64 {
+        let op = random_op(&mut rng);
+        let plan = Arc::new(
+            WorkloadPlan::compile(op.clone())
+                .unwrap_or_else(|e| panic!("trial {trial}: {op:?} failed to compile: {e}")),
+        );
+        let req = random_request(plan, &cfg, &mut rng);
+        let golden = req.golden_outputs().unwrap();
+        let res = eng.execute_one(&req).unwrap();
+        assert_eq!(
+            res.outputs,
+            golden,
+            "trial {trial}: {} diverged from MajCircuit::eval",
+            req.plan.op.label()
+        );
+        // No mask supplied: every column is trusted on a quiet device.
+        assert_eq!(res.active_cols(), req.cols);
+        assert_eq!(res.peak_rows, req.plan.peak_rows);
+
+        // The dense reference model executes the same plan to the same
+        // outputs (the representation-independence contract).
+        #[cfg(feature = "reference-model")]
+        assert_eq!(
+            run_on_dense(&cfg, &req),
+            golden,
+            "trial {trial}: dense model diverged for {}",
+            req.plan.op.label()
+        );
+    }
+}
+
+#[test]
+fn masks_rescue_noisy_columns() {
+    // On a default (noisy) device with the *baseline* uniform levels,
+    // roughly half the columns are arithmetic-unusable. Restricting to
+    // the battery-proven error-free mask must never lower the
+    // golden-correct rate.
+    use pudtune::calib::engine::measure_arith_batteries;
+    use pudtune::dram::subarray::Subarray;
+    let cfg = DeviceConfig::default();
+    let eng = NativeEngine::new(cfg.clone());
+    let cols = 128;
+    let seed = 0xA5C;
+    let base_cal = FracConfig::baseline(3).uncalibrated(&cfg, cols);
+    let sub = Subarray::with_geometry(&cfg, ROWS, cols, seed);
+    let batteries = measure_arith_batteries(&eng, &sub, seed, &[&base_cal], 2048).unwrap();
+    let mask = batteries[0].arith().error_free_mask();
+    let masked_cols = mask.iter().filter(|&&m| m).count();
+    assert!(masked_cols < cols, "a noisy baseline must lose some columns");
+    assert!(masked_cols > 0, "some columns must survive the battery");
+
+    let plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 4 }).unwrap());
+    let mut rng = Rng::new(3);
+    let a: Vec<u64> = (0..cols).map(|_| rng.below(16)).collect();
+    let b: Vec<u64> = (0..cols).map(|_| rng.below(16)).collect();
+    let req = ComputeRequest::new(plan, ROWS, cols, seed, base_cal, vec![a, b])
+        .with_mask(mask.clone());
+    let golden = req.golden_outputs().unwrap();
+    let res = eng.execute_one(&req).unwrap();
+    let all_rate = res.outputs.iter().zip(&golden).filter(|(o, g)| o == g).count() as f64
+        / cols as f64;
+    let masked_rate = res.golden_correct(&golden) as f64 / masked_cols as f64;
+    assert!(
+        masked_rate >= all_rate,
+        "mask must not hurt: masked {masked_rate:.3} vs all {all_rate:.3}"
+    );
+    assert!(masked_rate > 0.8, "error-free columns mostly compute: {masked_rate:.3}");
+}
+
+/// Minimal gate executor on the dense reference model: the same MAJX
+/// flow as `exec::run_plan` (RowCopy-in, Frac, SiMRA, copy-out)
+/// without timing or row recycling — on a quiet device the outputs
+/// must equal the golden model, and hence the hybrid engine's.
+#[cfg(feature = "reference-model")]
+fn run_on_dense(cfg: &DeviceConfig, req: &ComputeRequest) -> Vec<u64> {
+    use pudtune::dram::dense::DenseSubarray;
+    use pudtune::dram::geometry::RowMap;
+    use std::collections::HashMap;
+
+    let mut d = DenseSubarray::with_geometry(cfg, req.rows, req.cols, req.seed);
+    let map = RowMap::standard(req.rows);
+    let calib = &req.calib;
+    let fc = calib.lattice.config;
+    for (i, &row) in map.calib_store.iter().enumerate() {
+        d.write_row(row, &calib.row_bits(i));
+    }
+    d.fill_row(map.const0, 0);
+    d.fill_row(map.const1, 1);
+    let inputs = req.plan.encode_operands(&req.operands).unwrap();
+    let mut next = map.data_base;
+    let mut alloc = || {
+        let r = next;
+        next += 1;
+        r
+    };
+    let mut input_rows = Vec::new();
+    for bits in &inputs {
+        let r = alloc();
+        d.write_row(r, bits);
+        input_rows.push(r);
+    }
+    let mut gate_rows: Vec<usize> = Vec::new();
+    let mut not_rows: HashMap<Signal, usize> = HashMap::new();
+    macro_rules! row_of {
+        ($sig:expr) => {{
+            let sig: Signal = $sig;
+            match sig {
+                Signal::Input(i) => input_rows[i],
+                Signal::Gate(g) => gate_rows[g],
+                Signal::Const(false) => map.const0,
+                Signal::Const(true) => map.const1,
+                Signal::NotInput(_) | Signal::NotGate(_) => {
+                    if let Some(&r) = not_rows.get(&sig) {
+                        r
+                    } else {
+                        let src = match sig {
+                            Signal::NotInput(i) => input_rows[i],
+                            Signal::NotGate(g) => gate_rows[g],
+                            _ => unreachable!(),
+                        };
+                        let mut bits = d.read_row(src);
+                        for b in &mut bits {
+                            *b = 1 - *b;
+                        }
+                        let r = alloc();
+                        d.write_row(r, &bits);
+                        not_rows.insert(sig, r);
+                        r
+                    }
+                }
+            }
+        }};
+    }
+    for gate in &req.plan.circuit.gates {
+        let arity = gate.arity();
+        let op_rows: Vec<usize> = gate.args.iter().map(|&s| row_of!(s)).collect();
+        let base = map.simra_base;
+        for (i, &r) in op_rows.iter().enumerate() {
+            d.row_copy(r, base + i);
+        }
+        for (i, &store) in map.calib_store.iter().enumerate() {
+            d.row_copy(store, base + arity + i);
+        }
+        if arity + 3 < 8 {
+            d.row_copy(map.const0, base + arity + 3);
+            d.row_copy(map.const1, base + arity + 4);
+        }
+        for (i, &n) in fc.fracs.iter().enumerate() {
+            for _ in 0..n {
+                d.frac(base + arity + i);
+            }
+        }
+        let group: Vec<usize> = (base..base + 8).collect();
+        let bits = d.simra(&group);
+        let r = alloc();
+        d.write_row(r, &bits);
+        gate_rows.push(r);
+    }
+    let outputs: Vec<Vec<u8>> = req
+        .plan
+        .circuit
+        .outputs
+        .clone()
+        .into_iter()
+        .map(|s| {
+            let r = row_of!(s);
+            d.read_row(r)
+        })
+        .collect();
+    (0..req.cols)
+        .map(|c| req.plan.decode_output(&outputs, c))
+        .collect()
+}

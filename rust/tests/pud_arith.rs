@@ -50,7 +50,8 @@ fn correct_fraction(
     for bit in 0..width {
         inputs.push(encode(&b, bit));
     }
-    let run = run_circuit(sub, &map, calib, fc, &grade, circuit, &inputs);
+    let run = run_circuit(sub, &map, calib, fc, &grade, circuit, &inputs)
+        .expect("well-formed request");
     let mut ok = 0;
     for c in 0..cols {
         if decode(&run.outputs, c) == expect(a[c], b[c]) {
@@ -107,7 +108,8 @@ fn calibrated_multiplication_works_on_clean_columns() {
     for bit in 0..width {
         inputs.push(encode(&b, bit));
     }
-    let run = run_circuit(&mut sub, &map, &calib, &tune, &grade, &circuit, &inputs);
+    let run = run_circuit(&mut sub, &map, &calib, &tune, &grade, &circuit, &inputs)
+        .expect("well-formed request");
     let mut ok = 0;
     for c in 0..cols {
         if decode(&run.outputs, c) == a[c] * b[c] {

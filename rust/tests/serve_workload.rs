@@ -1,0 +1,138 @@
+//! Integration: arithmetic serving through `RecalibService::serve_workload`
+//! interleaved with drift-triggered background recalibration — outputs
+//! must stay golden-model-correct on the error-free masks throughout
+//! the whole lifecycle (accepted → stale → recalibrated), and a
+//! geometry-mismatched bank must degrade alone.
+
+use pudtune::calib::algorithm::{CalibParams, NativeEngine};
+use pudtune::calib::drift::{DriftPolicy, DriftSignal};
+use pudtune::config::device::DeviceConfig;
+use pudtune::coordinator::service::{EntryState, RecalibService, ServiceConfig};
+use pudtune::dram::geometry::SubarrayId;
+use pudtune::pud::plan::{PudOp, WorkloadPlan};
+use pudtune::util::rng::Rng;
+use std::sync::Arc;
+
+fn quiet_cfg() -> DeviceConfig {
+    DeviceConfig {
+        sigma_sa: 1e-6,
+        tail_weight: 0.0,
+        sigma_noise: 1e-6,
+        ..DeviceConfig::default()
+    }
+}
+
+fn quiet_service(policy: DriftPolicy, banks: usize, cols: usize) -> RecalibService<NativeEngine> {
+    let cfg = quiet_cfg();
+    let svc = ServiceConfig {
+        policy,
+        serve_samples: 512,
+        params: CalibParams::quick(),
+        ..ServiceConfig::default()
+    };
+    let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg)).unwrap();
+    for b in 0..banks {
+        s.register(SubarrayId::new(0, b, 0), 96, cols, 0x5EED);
+    }
+    s
+}
+
+#[test]
+fn serving_stays_golden_through_drift_and_recalibration() {
+    // Age-based drift: every 1.5 simulated hours the calibrations age;
+    // past 2 hours the policy schedules background recalibration. The
+    // quiet device keeps every column error-free, so every served
+    // output must equal the golden model at every lifecycle stage.
+    let policy = DriftPolicy { max_age_hours: 2.0, ..DriftPolicy::default() };
+    let cols = 64;
+    let mut s = quiet_service(policy, 2, cols);
+    s.run_pending(usize::MAX);
+    // One measurement battery establishes the per-bank masks.
+    for o in s.serve() {
+        assert!(o.report.is_ok());
+    }
+
+    let plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 4 }).unwrap());
+    let mut rng = Rng::new(7);
+    let mut saw_stale_serving = false;
+    let mut recalibrations = 0usize;
+    for tick in 0..5 {
+        let signals = s.poll_drift();
+        for (_, sig) in &signals {
+            assert!(matches!(sig, DriftSignal::RetentionAge { .. }), "{sig}");
+        }
+        // Serve arithmetic *while possibly stale* — serving never
+        // waits on the recalibration queue.
+        let a: Vec<u64> = (0..cols).map(|_| rng.below(16)).collect();
+        let b: Vec<u64> = (0..cols).map(|_| rng.below(16)).collect();
+        let out = s
+            .serve_workload(PudOp::Add { width: 4 }, &[a.clone(), b.clone()])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        for o in &out {
+            let res = o.result.as_ref().expect("bank served");
+            if o.state == EntryState::Stale {
+                saw_stale_serving = true;
+            }
+            assert_eq!(
+                o.golden_correct, o.active_cols,
+                "tick {tick} {:?}: served output diverged from the golden model",
+                o.id
+            );
+            assert!(o.active_cols > 0, "tick {tick}: empty mask");
+            for c in 0..cols {
+                if let Some(v) = res.output(c) {
+                    assert_eq!(v, a[c] + b[c], "tick {tick} col {c}");
+                }
+            }
+        }
+        // The precompiled-plan path serves identically.
+        let replay = s.serve_plan(&plan, &[a.clone(), b.clone()]);
+        for (o, r) in out.iter().zip(&replay) {
+            assert_eq!(
+                o.result.as_ref().unwrap().outputs,
+                r.result.as_ref().unwrap().outputs
+            );
+        }
+        // Background repair of whatever drift scheduled.
+        if !signals.is_empty() {
+            let done = s.run_pending(usize::MAX);
+            assert_eq!(done.len(), signals.len());
+            assert!(done.iter().all(|(_, r)| r.is_ok()));
+            recalibrations += done.len();
+            // A fresh battery re-establishes the masks the next
+            // workload serves under.
+            s.serve();
+        }
+        s.advance_time(1.5);
+    }
+    assert!(recalibrations >= 2, "age drift never fired ({recalibrations})");
+    assert!(saw_stale_serving, "stale entries must keep serving");
+    assert!(s.metrics.counter("recalib.scheduled") >= 1);
+    assert_eq!(s.metrics.counter("compute.golden_mismatch"), 0);
+    assert_eq!(s.metrics.counter("compute.bank_failures"), 0);
+    assert!(s.metrics.counter("compute.batches") >= 20);
+}
+
+#[test]
+fn geometry_mismatched_bank_degrades_alone() {
+    let cols = 64;
+    let mut s = quiet_service(DriftPolicy::default(), 1, cols);
+    // A second bank with a different geometry cannot serve 64-column
+    // operands: it must fail alone, typed, without poisoning the pool.
+    s.register(SubarrayId::new(0, 9, 0), 96, cols / 2, 0x5EED);
+    s.run_pending(usize::MAX);
+    let a: Vec<u64> = (0..cols).map(|c| c as u64 % 16).collect();
+    let b: Vec<u64> = (0..cols).map(|c| (c as u64 * 3) % 16).collect();
+    let out = s.serve_workload(PudOp::Add { width: 4 }, &[a, b]).unwrap();
+    assert_eq!(out.len(), 2);
+    let healthy = &out[0];
+    let mismatched = &out[1];
+    assert_eq!(healthy.id, SubarrayId::new(0, 0, 0));
+    assert!(healthy.result.is_ok());
+    assert_eq!(healthy.golden_correct, healthy.active_cols);
+    let err = mismatched.result.as_ref().unwrap_err();
+    assert!(err.contains("width mismatch"), "{err}");
+    assert_eq!(s.metrics.counter("compute.bank_failures"), 1);
+    assert_eq!(s.metrics.counter("compute.batches"), 1);
+}
