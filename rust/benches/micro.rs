@@ -139,18 +139,139 @@ fn workload_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
     suite
 }
 
+/// Reliability record (written to `BENCH_reliability.json`): the
+/// standard corruption campaign (`dram::faults::standard_campaign` —
+/// every fault class at p = 1 over a quiet analog substrate) served
+/// through `RecalibService` three ways — unprotected, quarantine +
+/// scrub, and 3x redundant execution with majority vote. Deriveds
+/// record each stack's masked golden correctness (the protected stack
+/// must reach 1.0 once quarantine converges), the quarantined column
+/// count, and the Eq. 1 effective-throughput retention the
+/// countermeasures cost. `PUDTUNE_FAST_BENCH=1` shrinks the geometry
+/// for the CI campaign-smoke job.
+fn reliability_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
+    use pudtune::analysis::throughput::ThroughputModel;
+    use pudtune::coordinator::service::{RecalibService, ServiceConfig, WorkloadOutcome};
+    use pudtune::dram::faults::standard_campaign;
+    use pudtune::dram::geometry::SubarrayId;
+    use pudtune::pud::plan::{PudOp, WorkloadPlan};
+    use std::sync::Arc;
+
+    /// Masked golden correctness and total served width over one
+    /// epoch's outcomes.
+    fn correctness(outs: &[WorkloadOutcome]) -> (f64, usize) {
+        let (mut ok, mut active) = (0usize, 0usize);
+        for o in outs {
+            ok += o.golden_correct;
+            active += o.active_cols;
+        }
+        let frac = if active == 0 { 1.0 } else { ok as f64 / active as f64 };
+        (frac, active)
+    }
+
+    let mut suite = BenchSuite::new();
+    let cols = if fast { 256 } else { 1024 };
+    let banks = if fast { 2 } else { 4 };
+    let epochs = if fast { 3 } else { 6 };
+    let campaign = standard_campaign(cfg);
+    let svc_base = ServiceConfig {
+        serve_samples: if fast { 512 } else { 2048 },
+        ..ServiceConfig::default()
+    };
+    let build = |svc: ServiceConfig| {
+        let mut s =
+            RecalibService::new(campaign.clone(), svc, NativeEngine::new(campaign.clone()))
+                .unwrap();
+        for b in 0..banks {
+            s.register(SubarrayId::new(0, b, 0), 32, cols, 0xBE5E);
+        }
+        s.run_pending(usize::MAX);
+        s
+    };
+    let plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 2 }).unwrap());
+    let mut rng = Rng::new(0xBE11);
+    let operands: Vec<Vec<u64>> = (0..plan.op.n_operands())
+        .map(|_| (0..cols).map(|_| rng.below(4)).collect())
+        .collect();
+
+    // Unprotected: the corruption the campaign inflicts every epoch.
+    let mut unprot = build(svc_base);
+    let mut raw = (1.0, 0usize);
+    for _ in 0..epochs {
+        raw = correctness(&unprot.serve_plan(&plan, &operands));
+    }
+    suite.derive("reliability_masked_correctness_unprotected", raw.0);
+
+    // Quarantine + scrub: converge, then time a steady-state epoch.
+    let mut prot = build(ServiceConfig {
+        quarantine_strikes: 2,
+        quarantine_clean_passes: 2,
+        scrub_every: 1,
+        ..svc_base
+    });
+    for _ in 0..epochs {
+        prot.serve_plan(&plan, &operands);
+        prot.maintain();
+    }
+    suite.bench(
+        &format!("reliability/protected-epoch-{banks}x{cols}"),
+        0,
+        if fast { 2 } else { 3 },
+        || {
+            let outs = prot.serve_plan(&plan, &operands);
+            std::hint::black_box(outs.len());
+            let (_, scrubs) = prot.maintain();
+            std::hint::black_box(scrubs.len());
+        },
+    );
+    let steady = correctness(&prot.serve_plan(&plan, &operands));
+    suite.derive("reliability_masked_correctness_protected", steady.0);
+    let quarantined: usize = prot
+        .ids()
+        .iter()
+        .map(|id| prot.quarantine(*id).map_or(0, |q| q.quarantined_cols()))
+        .sum();
+    suite.derive("reliability_quarantined_cols", quarantined as f64);
+    // Eq. 1 accounting for the protection cost: quarantined columns
+    // stop serving, shrinking effective throughput against the clean
+    // full-width device.
+    let tput = ThroughputModel::new(&SystemConfig::paper());
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let full = tput.workload_ops(&plan.cost, &fc, 1.0);
+    let retained =
+        tput.workload_ops(&plan.cost, &fc, steady.1 as f64 / (banks * cols) as f64);
+    suite.derive("reliability_throughput_retention", retained / full);
+
+    // 3x redundant execution: majority vote over independent replica
+    // fault fields, no quarantine state needed.
+    let mut red = build(ServiceConfig { redundancy: 3, ..svc_base });
+    let voted = correctness(&red.serve_plan(&plan, &operands));
+    suite.derive("reliability_masked_correctness_redundant3", voted.0);
+    suite
+}
+
 fn main() {
     let cfg = DeviceConfig::default();
     let mut suite = BenchSuite::new();
 
-    // Workload serving record (fast mode + the option to skip the rest
-    // keep the CI bench-smoke job cheap).
+    // Workload serving + reliability records (fast mode + the option
+    // to skip the rest keep the CI smoke jobs cheap).
     let fast = std::env::var_os("PUDTUNE_FAST_BENCH").is_some();
-    let wsuite = workload_suite(&cfg, fast);
-    let wout = std::path::Path::new("BENCH_workload.json");
-    wsuite.write_json(wout).expect("writing BENCH_workload.json");
-    println!("wrote {}", wout.display());
-    if std::env::var("PUDTUNE_BENCH_ONLY").map(|v| v == "workload").unwrap_or(false) {
+    let only = std::env::var("PUDTUNE_BENCH_ONLY").ok();
+    if only.as_deref() != Some("reliability") {
+        let wsuite = workload_suite(&cfg, fast);
+        let wout = std::path::Path::new("BENCH_workload.json");
+        wsuite.write_json(wout).expect("writing BENCH_workload.json");
+        println!("wrote {}", wout.display());
+        if only.as_deref() == Some("workload") {
+            return;
+        }
+    }
+    let rsuite = reliability_suite(&cfg, fast);
+    let rout = std::path::Path::new("BENCH_reliability.json");
+    rsuite.write_json(rout).expect("writing BENCH_reliability.json");
+    println!("wrote {}", rout.display());
+    if only.as_deref() == Some("reliability") {
         return;
     }
 

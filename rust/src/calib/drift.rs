@@ -146,8 +146,16 @@ impl DriftMonitor {
         self.window.clear();
     }
 
-    /// Record one served batch's ECR.
+    /// Record one served batch's ECR. Non-finite samples (a failed or
+    /// degenerate measurement) are dropped: one NaN would poison the
+    /// rolling mean forever — NaN propagates through the sum and never
+    /// compares greater than the policy bound, silently disabling the
+    /// ECR signal — mirroring the NaN/∞ guards `DriftState::advance`
+    /// and `Subarray::advance_time` apply to their inputs.
     pub fn observe_ecr(&mut self, ecr: f64) {
+        if !ecr.is_finite() {
+            return;
+        }
         if self.window.len() == self.capacity {
             self.window.pop_front();
         }
@@ -283,6 +291,30 @@ mod tests {
         m.observe_ecr(0.0);
         m.observe_ecr(0.0);
         assert_eq!(m.check(&p, &env(45.0, 0.0)), None);
+    }
+
+    #[test]
+    fn non_finite_ecr_samples_cannot_poison_the_window() {
+        let p = DriftPolicy { serve_window: 3, max_serve_ecr: 0.05, ..DriftPolicy::default() };
+        let mut m = DriftMonitor::new(&env(45.0, 0.0), p.serve_window);
+        // Dropped outright: the window stays empty.
+        m.observe_ecr(f64::NAN);
+        m.observe_ecr(f64::INFINITY);
+        m.observe_ecr(f64::NEG_INFINITY);
+        assert_eq!(m.rolling_ecr(), None);
+        // Interleaved bad samples neither fill nor skew the window:
+        // three hot finite batches still fire the signal exactly.
+        m.observe_ecr(0.5);
+        m.observe_ecr(f64::NAN);
+        m.observe_ecr(0.5);
+        assert_eq!(m.check(&p, &env(45.0, 0.0)), None, "window not full yet");
+        m.observe_ecr(0.5);
+        match m.check(&p, &env(45.0, 0.0)) {
+            Some(DriftSignal::EcrDegradation { rolling_ecr }) => {
+                assert!((rolling_ecr - 0.5).abs() < 1e-9, "NaN must not skew the mean")
+            }
+            other => panic!("expected degradation, got {other:?}"),
+        }
     }
 
     #[test]

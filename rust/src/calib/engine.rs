@@ -268,6 +268,12 @@ pub struct ComputeRequest {
     pub operands: Vec<Vec<u64>>,
     /// Error-free column mask (`None` = trust every column).
     pub mask: Option<Vec<bool>>,
+    /// Redundant-execution factor: the workload runs on this many
+    /// independently seeded spare banks and the per-column outputs are
+    /// combined by bitwise majority vote (`1` = single run, the
+    /// default; `0` is treated as `1`). Latency is accounted as the
+    /// sum of all replica runs — redundancy is never free.
+    pub replicas: usize,
 }
 
 impl ComputeRequest {
@@ -289,6 +295,7 @@ impl ComputeRequest {
             grade: Ddr4Timing::ddr4_2133(),
             operands,
             mask: None,
+            replicas: 1,
         }
     }
 
@@ -313,6 +320,13 @@ impl ComputeRequest {
         self
     }
 
+    /// Run on `n` independently seeded replicas with per-column
+    /// bitwise majority vote (see [`Self::replicas`]).
+    pub fn with_replicas(mut self, n: usize) -> Self {
+        self.replicas = n;
+        self
+    }
+
     /// Software golden model of this request: the expected per-column
     /// output values via [`crate::pud::graph::MajCircuit::eval`].
     pub fn golden_outputs(&self) -> Result<Vec<u64>, PudError> {
@@ -329,10 +343,14 @@ pub struct ComputeResult {
     /// The mask execution reported under (all-true when the request
     /// carried none).
     pub mask: Vec<bool>,
-    /// DRAM command latency of the run, ns.
+    /// DRAM command latency of the run, ns (summed over replicas when
+    /// the request asked for redundant execution).
     pub elapsed_ns: f64,
-    /// Peak simultaneous scratch rows.
+    /// Peak simultaneous scratch rows (max over replicas).
     pub peak_rows: usize,
+    /// Fault-injection bit flips the run(s) absorbed (summed over
+    /// replicas; 0 unless the device config enables `dram::faults`).
+    pub fault_flips: u64,
 }
 
 impl ComputeResult {
@@ -488,12 +506,43 @@ impl CalibEngine for NativeEngine {
     }
 }
 
+/// Stream tag of the spare banks redundant execution runs on: replica
+/// `i > 0` of a request executes on the variation field drawn from
+/// `derive_seed(req.seed, &[SPARE_STREAM, i])`, so every replica sees
+/// independent variation *and* an independent fault field — which is
+/// what lets the majority vote outvote a faulty column.
+pub const SPARE_STREAM: u64 = 0x5AFE;
+
 impl NativeEngine {
+    /// One workload run on a freshly materialised golden-model
+    /// subarray seeded from `seed`. Returns the decoded per-column
+    /// outputs, DRAM latency, peak scratch rows and fault flips.
+    fn execute_single(
+        &self,
+        req: &ComputeRequest,
+        seed: u64,
+    ) -> Result<(Vec<u64>, f64, usize, u64), PudError> {
+        let inputs = req.plan.encode_operands(&req.operands)?;
+        let mut sub = Subarray::with_geometry(&self.cfg, req.rows, req.cols, seed);
+        if let Some(env) = req.env {
+            sub.env = env;
+        }
+        let map = RowMap::standard(req.rows);
+        let fc = req.calib.lattice.config;
+        let run = run_plan(&mut sub, &map, &req.calib, &fc, &req.grade, &req.plan, &inputs)?;
+        let outputs = (0..req.cols)
+            .map(|c| req.plan.decode_output(&run.outputs, c))
+            .collect();
+        Ok((outputs, run.elapsed_ns, run.peak_rows, sub.fault_flips()))
+    }
+
     /// Execute one compute request on a freshly materialised
     /// golden-model subarray (variation field from the request seed,
     /// environment from the request). All validation happens before
     /// any DRAM state is touched, so a malformed request is a clean
-    /// per-bank `Err`.
+    /// per-bank `Err`. `req.replicas > 1` runs the workload on that
+    /// many independently seeded spare banks and combines the outputs
+    /// by per-column bitwise majority vote ([`SPARE_STREAM`]).
     fn execute_request(&self, req: &ComputeRequest) -> Result<ComputeResult, PudError> {
         for v in &req.operands {
             if v.len() != req.cols {
@@ -515,24 +564,43 @@ impl NativeEngine {
             // `RowMap::standard` needs the reserved-row layout.
             return Err(PudError::RowBudgetExceeded { needed: 32, available: req.rows });
         }
-        let inputs = req.plan.encode_operands(&req.operands)?;
-        let mut sub = Subarray::with_geometry(&self.cfg, req.rows, req.cols, req.seed);
-        if let Some(env) = req.env {
-            sub.env = env;
+        let runs = req.replicas.max(1);
+        let mut all = Vec::with_capacity(runs);
+        let mut elapsed_ns = 0.0;
+        let mut peak_rows = 0usize;
+        let mut fault_flips = 0u64;
+        for i in 0..runs {
+            let seed = if i == 0 {
+                req.seed
+            } else {
+                derive_seed(req.seed, &[SPARE_STREAM, i as u64])
+            };
+            let (outputs, e, p, f) = self.execute_single(req, seed)?;
+            elapsed_ns += e;
+            peak_rows = peak_rows.max(p);
+            fault_flips += f;
+            all.push(outputs);
         }
-        let map = RowMap::standard(req.rows);
-        let fc = req.calib.lattice.config;
-        let run = run_plan(&mut sub, &map, &req.calib, &fc, &req.grade, &req.plan, &inputs)?;
-        let outputs = (0..req.cols)
-            .map(|c| req.plan.decode_output(&run.outputs, c))
-            .collect();
+        let outputs: Vec<u64> = if runs == 1 {
+            all.pop().expect("one replica ran")
+        } else {
+            // Per-column bitwise majority vote across the replicas.
+            (0..req.cols)
+                .map(|c| {
+                    let mut v = 0u64;
+                    for bit in 0..u64::BITS {
+                        let votes =
+                            all.iter().filter(|o| (o[c] >> bit) & 1 != 0).count();
+                        if votes * 2 > runs {
+                            v |= 1u64 << bit;
+                        }
+                    }
+                    v
+                })
+                .collect()
+        };
         let mask = req.mask.clone().unwrap_or_else(|| vec![true; req.cols]);
-        Ok(ComputeResult {
-            outputs,
-            mask,
-            elapsed_ns: run.elapsed_ns,
-            peak_rows: run.peak_rows,
-        })
+        Ok(ComputeResult { outputs, mask, elapsed_ns, peak_rows, fault_flips })
     }
 }
 
@@ -903,6 +971,47 @@ mod tests {
         assert_eq!(res.output(3), None);
         assert_eq!(res.output(4), Some(req.golden_outputs().unwrap()[4]));
         assert_eq!(res.output(99), None);
+    }
+
+    #[test]
+    fn replicas_are_transparent_on_a_quiet_device() {
+        let cfg = quiet_cfg();
+        let eng = NativeEngine::new(cfg.clone());
+        let req = add_request(&cfg, 16, 0x3E9);
+        let single = eng.execute_one(&req).unwrap();
+        let voted = eng.execute_one(&req.clone().with_replicas(3)).unwrap();
+        assert_eq!(voted.outputs, single.outputs);
+        assert_eq!(voted.outputs, req.golden_outputs().unwrap());
+        assert_eq!(single.fault_flips, 0);
+        assert_eq!(voted.fault_flips, 0);
+        // Redundancy is accounted: three runs cost three latencies.
+        assert!((voted.elapsed_ns - 3.0 * single.elapsed_ns).abs() < 1e-3);
+        assert_eq!(voted.peak_rows, single.peak_rows);
+        // replicas = 0 is treated as a single run.
+        let zero = eng.execute_one(&req.clone().with_replicas(0)).unwrap();
+        assert_eq!(zero.outputs, single.outputs);
+    }
+
+    #[test]
+    fn majority_vote_outvotes_fault_campaign_corruption() {
+        use crate::dram::faults::standard_campaign;
+        let cfg = standard_campaign(&DeviceConfig::default());
+        let eng = NativeEngine::new(cfg.clone());
+        let req = add_request(&cfg, 256, 0xFA57);
+        let golden = req.golden_outputs().unwrap();
+        let single = eng.execute_one(&req).unwrap();
+        assert!(single.fault_flips > 0, "campaign must inject flips");
+        let single_ok = single.golden_correct(&golden);
+        assert!(single_ok < 256, "campaign must corrupt an unprotected run");
+        let voted = eng.execute_one(&req.clone().with_replicas(3)).unwrap();
+        // Flips accumulate across replicas (the base replica's flips
+        // are a subset), and the vote repairs almost every column —
+        // a column only survives corruption when independently drawn
+        // fault fields corrupt the same bits in two of three replicas.
+        assert!(voted.fault_flips >= single.fault_flips);
+        let voted_ok = voted.golden_correct(&golden);
+        assert!(voted_ok >= single_ok, "vote must not lose columns: {voted_ok} < {single_ok}");
+        assert!(voted_ok >= 248, "vote must repair almost every column; got {voted_ok}");
     }
 
     #[test]

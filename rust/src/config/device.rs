@@ -61,6 +61,28 @@ pub struct DeviceConfig {
     /// modelling a refresh interval should advance time in steps of
     /// that interval.
     pub retention_swing_min: f64,
+    /// Fraction of columns carrying an injected PuDGhost-style fault
+    /// (`dram::faults`). 0 (the default) disables fault injection
+    /// entirely — the fault field is empty and SiMRA behaves
+    /// byte-identically to the fault-free model.
+    pub fault_col_rate: f64,
+    /// Flip probability of pattern-dependent faults: applied whenever
+    /// a faulty column's SiMRA latches a contested data pattern
+    /// (summed charge near the majority boundary). 0 removes the
+    /// class from the draw.
+    pub fault_pattern_p: f64,
+    /// Flip probability of aggressor/victim row-coupling faults:
+    /// applied whenever the column's aggressor row position inside the
+    /// activated group is strongly driven high. 0 removes the class.
+    pub fault_coupling_p: f64,
+    /// Flip probability of intermittent-column faults, applied during
+    /// the active window of the column's duty cycle. 0 removes the
+    /// class.
+    pub fault_intermittent_p: f64,
+    /// Duty-cycle period of intermittent columns, in SiMRA operations
+    /// of the owning subarray (the active window is `period / 4`, at
+    /// least 1). Must be ≥ 1.
+    pub fault_intermittent_period: u64,
 }
 
 impl Default for DeviceConfig {
@@ -90,6 +112,13 @@ impl Default for DeviceConfig {
             t_cal: 45.0,
             tau_retention_hours: f64::INFINITY,
             retention_swing_min: 0.9,
+            // Fault injection (dram::faults) is opt-in: a clean-lab
+            // device by default, PuDGhost campaigns when enabled.
+            fault_col_rate: 0.0,
+            fault_pattern_p: 0.0,
+            fault_coupling_p: 0.0,
+            fault_intermittent_p: 0.0,
+            fault_intermittent_period: 64,
         }
     }
 }
@@ -144,6 +173,20 @@ impl DeviceConfig {
                 self.drift_per_hour
             ));
         }
+        // `contains` is false for NaN, so these reject NaN too.
+        for (name, v) in [
+            ("fault_col_rate", self.fault_col_rate),
+            ("fault_pattern_p", self.fault_pattern_p),
+            ("fault_coupling_p", self.fault_coupling_p),
+            ("fault_intermittent_p", self.fault_intermittent_p),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("{name} must lie in [0, 1], got {v}"));
+            }
+        }
+        if self.fault_intermittent_period == 0 {
+            return Err("fault_intermittent_period must be at least 1".into());
+        }
         Ok(())
     }
 
@@ -171,6 +214,27 @@ impl DeviceConfig {
         }
         if let Some(v) = j.get("retention_swing_min").as_f64() {
             cfg.retention_swing_min = v;
+        }
+        // Fault-injection keys are likewise optional (default: no
+        // faults); `validate` rejects out-of-range rates/probabilities
+        // and a zero duty-cycle period at parse time.
+        if let Some(v) = j.get("fault_col_rate").as_f64() {
+            cfg.fault_col_rate = v;
+        }
+        if let Some(v) = j.get("fault_pattern_p").as_f64() {
+            cfg.fault_pattern_p = v;
+        }
+        if let Some(v) = j.get("fault_coupling_p").as_f64() {
+            cfg.fault_coupling_p = v;
+        }
+        if let Some(v) = j.get("fault_intermittent_p").as_f64() {
+            cfg.fault_intermittent_p = v;
+        }
+        if !matches!(j.get("fault_intermittent_period"), Json::Null) {
+            cfg.fault_intermittent_period = j
+                .get("fault_intermittent_period")
+                .as_exact_u64()
+                .ok_or("fault_intermittent_period must be a non-negative integer")?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -275,6 +339,63 @@ mod tests {
         let cfg = DeviceConfig::from_physics_json(&json::parse(src).unwrap()).unwrap();
         assert_eq!(cfg.tau_retention_hours, 64.0);
         assert_eq!(cfg.retention_swing_min, 0.8);
+    }
+
+    #[test]
+    fn fault_defaults_are_off_and_validate() {
+        let d = DeviceConfig::default();
+        assert_eq!(d.fault_col_rate, 0.0);
+        assert_eq!(d.fault_pattern_p, 0.0);
+        assert_eq!(d.fault_coupling_p, 0.0);
+        assert_eq!(d.fault_intermittent_p, 0.0);
+        assert!(d.fault_intermittent_period >= 1);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_fault_knobs() {
+        let ok = DeviceConfig::default();
+        for bad_p in [-0.1, 1.5, f64::NAN] {
+            let bad = DeviceConfig { fault_col_rate: bad_p, ..ok.clone() };
+            assert!(bad.validate().unwrap_err().contains("fault_col_rate"));
+            let bad = DeviceConfig { fault_pattern_p: bad_p, ..ok.clone() };
+            assert!(bad.validate().unwrap_err().contains("fault_pattern_p"));
+            let bad = DeviceConfig { fault_coupling_p: bad_p, ..ok.clone() };
+            assert!(bad.validate().unwrap_err().contains("fault_coupling_p"));
+            let bad = DeviceConfig { fault_intermittent_p: bad_p, ..ok.clone() };
+            assert!(bad.validate().unwrap_err().contains("fault_intermittent_p"));
+        }
+        let bad = DeviceConfig { fault_intermittent_period: 0, ..ok };
+        assert!(bad.validate().unwrap_err().contains("fault_intermittent_period"));
+    }
+
+    #[test]
+    fn physics_json_fault_keys_parse_and_validate() {
+        use crate::util::json;
+        let base = r#""cc_ff":30.0,"cb_ff":270.0,"v_pre":0.5,"simra_rows":8,
+            "frac_r":0.65,"sigma_sa":0.0284,"tail_weight":0.1,"tail_ratio":2.5,
+            "sigma_noise":0.002"#;
+        let src = format!(
+            r#"{{{base},"fault_col_rate":0.05,"fault_pattern_p":1.0,
+                "fault_intermittent_p":0.5,"fault_intermittent_period":32}}"#
+        );
+        let cfg = DeviceConfig::from_physics_json(&json::parse(&src).unwrap()).unwrap();
+        assert_eq!(cfg.fault_col_rate, 0.05);
+        assert_eq!(cfg.fault_pattern_p, 1.0);
+        assert_eq!(cfg.fault_coupling_p, 0.0, "absent keys keep the off default");
+        assert_eq!(cfg.fault_intermittent_p, 0.5);
+        assert_eq!(cfg.fault_intermittent_period, 32);
+        // Out-of-range probability and fractional/zero periods are
+        // parse-time errors, not silently accepted configs.
+        let bad = format!(r#"{{{base},"fault_col_rate":1.5}}"#);
+        let err = DeviceConfig::from_physics_json(&json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.contains("fault_col_rate"), "{err}");
+        for bad_period in ["0", "2.5", "-4"] {
+            let bad = format!(r#"{{{base},"fault_intermittent_period":{bad_period}}}"#);
+            let err =
+                DeviceConfig::from_physics_json(&json::parse(&bad).unwrap()).unwrap_err();
+            assert!(err.contains("fault_intermittent_period"), "{err}");
+        }
     }
 
     #[test]

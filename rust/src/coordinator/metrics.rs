@@ -44,6 +44,25 @@
 //!   from the software golden model (`MajCircuit::eval`) — expected to
 //!   stay near zero, the serving-quality alarm;
 //! * `compute.serve` (timer) — seconds executing workload batches.
+//!
+//! Fault countermeasures (`RecalibService` quarantine / scrub,
+//! `dram::faults` injection):
+//!
+//! * `fault.flips` — injected SiMRA bit flips observed by executed
+//!   batches (serve and scrub; summed over redundant replicas) — zero
+//!   on a healthy device;
+//! * `quarantine.observed_mismatches` — masked columns a served
+//!   workload caught diverging from the golden model while quarantine
+//!   was enabled (each is a strike toward quarantining that column);
+//! * `quarantine.entered` / `quarantine.released` — columns crossing
+//!   the hysteresis thresholds (strikes in, consecutive clean scrub
+//!   passes out);
+//! * `scrub.passes` — scrub replays of the last served workload;
+//! * `scrub.dirty_cols` — columns a scrub pass caught mismatching the
+//!   golden model (full-width, mask ignored);
+//! * `scrub.bank_failures` — scrub replays degraded by a per-bank
+//!   engine fault (no quarantine state changes on that bank);
+//! * `service.scrub` (timer) — seconds inside scrub replays.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

@@ -51,6 +51,41 @@
 //! bank keeps serving its last-good levels and mask until background
 //! recalibration lands, and each outcome reports how many masked
 //! columns matched the software golden model.
+//!
+//! ## Fault countermeasures
+//!
+//! Calibration cancels *smooth* error sources; PuDGhost-style faults
+//! ([`crate::dram::faults`]) are invisible to every ECR battery (the
+//! sampling kernel runs on sense amps alone, no cell array) and only
+//! surface as golden mismatches on served workloads. Three opt-in
+//! countermeasures (all off by default) close that gap:
+//!
+//! * **quarantine with hysteresis** ([`Quarantine`],
+//!   `ServiceConfig::quarantine_strikes` /
+//!   `quarantine_clean_passes`) — a column leaves the
+//!   arithmetic-usable mask after K observed golden mismatches and
+//!   re-enters only after M consecutive clean scrub passes, so
+//!   intermittent columns cannot flap back in;
+//! * **redundant execution** (`ServiceConfig::redundancy`) — served
+//!   workloads run on N independently seeded spare banks with
+//!   per-column bitwise majority vote
+//!   ([`crate::calib::engine::SPARE_STREAM`]); latency is accounted as
+//!   the sum of the replica runs;
+//! * **scrub passes** (`ServiceConfig::scrub_every`,
+//!   [`RecalibService::scrub`]) — every Nth maintenance poll replays
+//!   the last served workload *unmasked* and compares every column to
+//!   the golden model: mismatching columns strike toward quarantine,
+//!   clean quarantined columns count toward release. Because a scrub
+//!   replays the exact serving workload, it detects precisely the
+//!   corruption serving would see — unlike a one-shot spot check,
+//!   which duty-cycled faults evade.
+//!
+//! Costs and effects are reported via the `fault.*` / `quarantine.*` /
+//! `scrub.*` metrics ([`crate::coordinator::metrics`]) and measured by
+//! the `BENCH_reliability.json` bench case; `rust/tests/fault_campaign.rs`
+//! pins that a protected service reaches zero steady-state mismatches
+//! under the standard corruption campaign while an unprotected one
+//! keeps mismatching.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
@@ -94,6 +129,19 @@ pub struct ServiceConfig {
     pub serve_samples: u32,
     /// Battery depth of the load-time acceptance spot check.
     pub spot_check_samples: u32,
+    /// Golden mismatches before a column is quarantined out of the
+    /// arithmetic mask (`0` disables quarantine — the default).
+    pub quarantine_strikes: usize,
+    /// Consecutive clean scrub passes before a quarantined column
+    /// re-enters the mask (hysteresis; ignored while quarantine is
+    /// disabled).
+    pub quarantine_clean_passes: usize,
+    /// Redundant-execution factor for served workloads (`1` = single
+    /// run, the default; `N > 1` majority-votes N replica runs).
+    pub redundancy: usize,
+    /// Run a scrub pass every N maintenance polls (`0` disables scrub
+    /// — the default). See [`RecalibService::scrub`].
+    pub scrub_every: usize,
 }
 
 impl Default for ServiceConfig {
@@ -105,7 +153,142 @@ impl Default for ServiceConfig {
             serve_m: 5,
             serve_samples: 2048,
             spot_check_samples: SPOT_CHECK_SAMPLES,
+            quarantine_strikes: 0,
+            quarantine_clean_passes: 2,
+            redundancy: 1,
+            scrub_every: 0,
         }
+    }
+}
+
+/// Per-column quarantine state with hysteresis: a column is expelled
+/// from the arithmetic mask after `strikes_to_enter` observed golden
+/// mismatches (served batches and scrub passes both strike) and
+/// readmitted only after `clean_to_release` *consecutive* clean scrub
+/// passes — a dirty scrub resets the clean counter, so duty-cycled
+/// intermittent columns cannot flap back into service.
+/// `strikes_to_enter == 0` disables the whole mechanism.
+#[derive(Clone, Debug)]
+pub struct Quarantine {
+    strikes_to_enter: usize,
+    clean_to_release: usize,
+    /// Cumulative mismatch strikes per column (not reset by clean
+    /// serves: intermittent faults must not launder their history).
+    strikes: Vec<u32>,
+    /// Columns currently quarantined out of the mask.
+    out: Vec<bool>,
+    /// Consecutive clean scrub passes per quarantined column.
+    clean: Vec<u32>,
+}
+
+/// One quarantine update's bookkeeping (fed into the `quarantine.*` /
+/// `scrub.*` metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QuarantineDelta {
+    /// Columns newly quarantined by this observation.
+    pub entered: usize,
+    /// Quarantined columns released back into the mask.
+    pub released: usize,
+    /// Columns observed mismatching in this observation.
+    pub dirty: usize,
+}
+
+impl Quarantine {
+    pub fn new(cols: usize, strikes_to_enter: usize, clean_to_release: usize) -> Self {
+        Self {
+            strikes_to_enter,
+            clean_to_release: clean_to_release.max(1),
+            strikes: vec![0; cols],
+            out: vec![false; cols],
+            clean: vec![0; cols],
+        }
+    }
+
+    /// Whether the mechanism is active at all.
+    pub fn enabled(&self) -> bool {
+        self.strikes_to_enter > 0
+    }
+
+    /// Columns currently quarantined.
+    pub fn quarantined_cols(&self) -> usize {
+        self.out.iter().filter(|&&q| q).count()
+    }
+
+    /// Whether column `c` is currently quarantined.
+    pub fn is_quarantined(&self, c: usize) -> bool {
+        self.out.get(c).copied().unwrap_or(false)
+    }
+
+    /// Remove quarantined columns from an arithmetic mask.
+    pub fn apply(&self, mask: &mut [bool]) {
+        if !self.enabled() {
+            return;
+        }
+        for (m, &q) in mask.iter_mut().zip(&self.out) {
+            if q {
+                *m = false;
+            }
+        }
+    }
+
+    /// Record one served batch's per-column golden mismatches
+    /// (`bad[c]` = column `c` was served and mismatched). Serving only
+    /// strikes toward entry; release requires scrub evidence.
+    pub fn observe_serve(&mut self, bad: &[bool]) -> QuarantineDelta {
+        let mut delta = QuarantineDelta::default();
+        if !self.enabled() {
+            return delta;
+        }
+        for (c, &b) in bad.iter().enumerate() {
+            if !b {
+                continue;
+            }
+            delta.dirty += 1;
+            if !self.out[c] {
+                self.strikes[c] += 1;
+                if self.strikes[c] as usize >= self.strikes_to_enter {
+                    self.out[c] = true;
+                    self.clean[c] = 0;
+                    delta.entered += 1;
+                }
+            }
+        }
+        delta
+    }
+
+    /// Record one *unmasked* scrub pass: dirty columns strike toward
+    /// (or stay in) quarantine, clean quarantined columns count toward
+    /// hysteresis release.
+    pub fn observe_scrub(&mut self, bad: &[bool]) -> QuarantineDelta {
+        let mut delta = QuarantineDelta::default();
+        if !self.enabled() {
+            return delta;
+        }
+        for (c, &b) in bad.iter().enumerate() {
+            if self.out[c] {
+                if b {
+                    delta.dirty += 1;
+                    self.clean[c] = 0;
+                } else {
+                    self.clean[c] += 1;
+                    if self.clean[c] as usize >= self.clean_to_release {
+                        self.out[c] = false;
+                        self.strikes[c] = 0;
+                        self.clean[c] = 0;
+                        delta.released += 1;
+                    }
+                }
+            } else if b {
+                delta.dirty += 1;
+                self.strikes[c] += 1;
+                if self.strikes[c] as usize >= self.strikes_to_enter {
+                    self.out[c] = true;
+                    self.clean[c] = 0;
+                    delta.entered += 1;
+                }
+            }
+        }
+        delta
     }
 }
 
@@ -162,6 +345,17 @@ pub struct WorkloadOutcome {
     pub active_cols: usize,
 }
 
+/// One subarray's result from a scrub pass ([`RecalibService::scrub`]).
+#[derive(Clone, Debug)]
+pub struct ScrubOutcome {
+    pub id: SubarrayId,
+    /// The replayed batch's per-bank failure, if any (a failed replay
+    /// changes no quarantine state).
+    pub result: Result<(), String>,
+    /// Quarantine transitions this pass caused on the subarray.
+    pub delta: QuarantineDelta,
+}
+
 struct Entry {
     sub: Subarray,
     seed: u64,
@@ -175,6 +369,10 @@ struct Entry {
     /// (spot check or served batch); `None` until one lands, and
     /// cleared when recalibration swaps the levels.
     mask: Option<Vec<bool>>,
+    /// Per-column fault quarantine (disabled unless the service config
+    /// sets `quarantine_strikes`). Survives recalibration: faults are
+    /// a property of the column, not of the levels.
+    quarantine: Quarantine,
 }
 
 /// The drift-aware recalibration service (module docs for the loop).
@@ -188,6 +386,13 @@ pub struct RecalibService<E> {
     queue: VecDeque<SubarrayId>,
     /// Bumped per serve call: every batch draws fresh patterns.
     serve_epoch: u64,
+    /// Maintenance polls so far (drives the scrub cadence).
+    polls: u64,
+    /// Set when the scrub cadence fires; cleared by [`Self::scrub`].
+    scrub_pending: bool,
+    /// The last served workload — what a scrub pass replays unmasked,
+    /// so scrub detection sees exactly the corruption serving sees.
+    last_workload: Option<(Arc<WorkloadPlan>, Vec<Vec<u64>>)>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -203,6 +408,9 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
             entries: BTreeMap::new(),
             queue: VecDeque::new(),
             serve_epoch: 0,
+            polls: 0,
+            scrub_pending: false,
+            last_workload: None,
             metrics: Arc::new(Metrics::new()),
         })
     }
@@ -216,6 +424,11 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
         let sub = Subarray::with_geometry(&self.cfg, rows, cols, seed);
         let calib = self.svc.config.uncalibrated(&self.cfg, cols);
         let monitor = DriftMonitor::new(&sub.env, self.svc.policy.serve_window);
+        let quarantine = Quarantine::new(
+            cols,
+            self.svc.quarantine_strikes,
+            self.svc.quarantine_clean_passes,
+        );
         self.entries.insert(
             id,
             Entry {
@@ -226,6 +439,7 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
                 monitor,
                 queued: false,
                 mask: None,
+                quarantine,
             },
         );
         self.enqueue(id);
@@ -266,6 +480,16 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
         self.entries.values().filter(|e| e.queued).count()
     }
 
+    /// One subarray's quarantine state (`None` for unknown ids).
+    pub fn quarantine(&self, id: SubarrayId) -> Option<&Quarantine> {
+        self.entries.get(&id).map(|e| &e.quarantine)
+    }
+
+    /// Whether the scrub cadence has fired since the last scrub pass.
+    pub fn scrub_pending(&self) -> bool {
+        self.scrub_pending
+    }
+
     /// Rehydrate every registered subarray from a store: checked
     /// decode, then ONE batched ECR spot check over all decodable
     /// candidates, then per-entry accept/reject. Rejections and
@@ -276,7 +500,29 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
         let mut candidates: Vec<(SubarrayId, Calibration)> = Vec::new();
         for (&id, entry) in &self.entries {
             match store.load_expecting(id, &self.cfg, entry.sub.cols) {
-                Ok(Some(calib)) => candidates.push((id, calib)),
+                Ok(Some(calib)) => {
+                    // v2 env-metadata gate: levels identified at a die
+                    // temperature the drift policy would already have
+                    // flagged are rejected before spending a spot
+                    // check on them. v1 entries (no env) skip the gate
+                    // and rely on the spot check alone.
+                    if let Some(env) = store.stored_env(id) {
+                        let delta = (env.temp_c - entry.sub.env.temp_c).abs();
+                        if delta > self.svc.policy.max_temp_delta_c {
+                            self.metrics.incr("recalib.rejected_on_load");
+                            outcomes.push((
+                                id,
+                                LoadOutcome::Incompatible(format!(
+                                    "stored calibration env is {delta:.1} C from the \
+                                     current die temperature (policy allows {:.1} C)",
+                                    self.svc.policy.max_temp_delta_c
+                                )),
+                            ));
+                            continue;
+                        }
+                    }
+                    candidates.push((id, calib));
+                }
                 Ok(None) => outcomes.push((id, LoadOutcome::Missing)),
                 Err(e) => {
                     self.metrics.incr("recalib.rejected_on_load");
@@ -410,6 +656,13 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
     /// so faults retry on the next maintenance pass. Returns the fresh
     /// drift signals.
     pub fn poll_drift(&mut self) -> Vec<(SubarrayId, DriftSignal)> {
+        self.polls += 1;
+        if self.svc.scrub_every > 0 && self.polls % self.svc.scrub_every as u64 == 0 {
+            // Scrubbing needs a compute-capable engine; the poll only
+            // raises the flag, [`Self::maintain`] (or an explicit
+            // [`Self::scrub`]) runs the pass.
+            self.scrub_pending = true;
+        }
         let mut signals = Vec::new();
         let mut to_queue = Vec::new();
         for (&id, entry) in &mut self.entries {
@@ -570,6 +823,8 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
         plan: &Arc<WorkloadPlan>,
         operands: &[Vec<u64>],
     ) -> Vec<WorkloadOutcome> {
+        self.last_workload = Some((plan.clone(), operands.to_vec()));
+        let redundancy = self.svc.redundancy.max(1);
         let ids: Vec<SubarrayId> = self.entries.keys().copied().collect();
         let reqs: Vec<ComputeRequest> = ids
             .iter()
@@ -582,8 +837,17 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
                     entry.calib.clone(),
                     operands.to_vec(),
                 );
-                if let Some(mask) = &entry.mask {
-                    req = req.with_mask(mask.clone());
+                // Battery mask ∧ quarantine: a column serves only when
+                // both the ECR battery and the fault history trust it.
+                let quarantined = entry.quarantine.quarantined_cols() > 0;
+                if entry.mask.is_some() || quarantined {
+                    let mut mask =
+                        entry.mask.clone().unwrap_or_else(|| vec![true; entry.sub.cols]);
+                    entry.quarantine.apply(&mut mask);
+                    req = req.with_mask(mask);
+                }
+                if redundancy > 1 {
+                    req = req.with_replicas(redundancy);
                 }
                 req
             })
@@ -600,10 +864,12 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
         ids.into_iter()
             .zip(results)
             .map(|(id, result)| {
-                let state = self.entries[&id].state;
+                let entry = self.entries.get_mut(&id).expect("serving a registered entry");
+                let state = entry.state;
                 let (golden_correct, active_cols) = match (&result, &golden) {
                     (Ok(res), Ok(golden)) => {
                         self.metrics.incr("compute.batches");
+                        self.metrics.add("fault.flips", res.fault_flips);
                         let active = res.active_cols();
                         self.metrics.add("compute.columns_served", active as u64);
                         let correct = if golden.len() == res.outputs.len() {
@@ -619,6 +885,18 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
                             self.metrics
                                 .add("compute.golden_mismatch", (active - correct) as u64);
                         }
+                        if entry.quarantine.enabled() && golden.len() == res.outputs.len() {
+                            let bad: Vec<bool> = (0..res.outputs.len())
+                                .map(|c| {
+                                    matches!(res.mask.get(c), Some(true))
+                                        && res.outputs[c] != golden[c]
+                                })
+                                .collect();
+                            let delta = entry.quarantine.observe_serve(&bad);
+                            self.metrics
+                                .add("quarantine.observed_mismatches", delta.dirty as u64);
+                            self.metrics.add("quarantine.entered", delta.entered as u64);
+                        }
                         (correct, active)
                     }
                     _ => {
@@ -629,6 +907,79 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
                 WorkloadOutcome { id, state, result, golden_correct, active_cols }
             })
             .collect()
+    }
+
+    /// Replay the last served workload **unmasked** on every subarray
+    /// and feed each column's golden verdict into its quarantine:
+    /// mismatching columns strike toward (or stay in) quarantine,
+    /// clean quarantined columns count toward hysteresis release. A
+    /// scrub replays exactly what serving runs, so it observes exactly
+    /// the corruption serving would absorb — including duty-cycled
+    /// intermittent columns that a one-shot spot check misses. No-op
+    /// (empty result) before the first served workload.
+    pub fn scrub(&mut self) -> Vec<ScrubOutcome> {
+        self.scrub_pending = false;
+        let Some((plan, operands)) = self.last_workload.clone() else {
+            return Vec::new();
+        };
+        let ids: Vec<SubarrayId> = self.entries.keys().copied().collect();
+        let reqs: Vec<ComputeRequest> = ids
+            .iter()
+            .map(|id| {
+                let entry = &self.entries[id];
+                ComputeRequest::from_subarray(
+                    &entry.sub,
+                    entry.seed,
+                    plan.clone(),
+                    entry.calib.clone(),
+                    operands.clone(),
+                )
+            })
+            .collect();
+        let results = self.metrics.time("service.scrub", || {
+            execute_isolated(&self.engine, &reqs, self.threads)
+        });
+        self.metrics.incr("scrub.passes");
+        let shared_cols = operands.first().map(|v| v.len()).unwrap_or(1);
+        let golden = plan.golden_outputs(&operands, shared_cols);
+        ids.into_iter()
+            .zip(results)
+            .map(|(id, result)| {
+                let entry = self.entries.get_mut(&id).expect("scrubbing a registered entry");
+                let (result, delta) = match (result, &golden) {
+                    (Ok(res), Ok(golden)) if golden.len() == res.outputs.len() => {
+                        let bad: Vec<bool> = (0..res.outputs.len())
+                            .map(|c| res.outputs[c] != golden[c])
+                            .collect();
+                        let delta = entry.quarantine.observe_scrub(&bad);
+                        self.metrics.add("fault.flips", res.fault_flips);
+                        self.metrics.add("scrub.dirty_cols", delta.dirty as u64);
+                        self.metrics.add("quarantine.entered", delta.entered as u64);
+                        self.metrics.add("quarantine.released", delta.released as u64);
+                        (Ok(()), delta)
+                    }
+                    (Ok(_), Ok(_)) => (
+                        Err("scrub golden width mismatch".to_string()),
+                        QuarantineDelta::default(),
+                    ),
+                    (Ok(_), Err(e)) => (Err(format!("{e}")), QuarantineDelta::default()),
+                    (Err(e), _) => {
+                        self.metrics.incr("scrub.bank_failures");
+                        (Err(e), QuarantineDelta::default())
+                    }
+                };
+                ScrubOutcome { id, result, delta }
+            })
+            .collect()
+    }
+
+    /// One maintenance tick: evaluate drift signals
+    /// ([`Self::poll_drift`]) and, when the scrub cadence
+    /// (`ServiceConfig::scrub_every`) fires, run the scrub pass.
+    pub fn maintain(&mut self) -> (Vec<(SubarrayId, DriftSignal)>, Vec<ScrubOutcome>) {
+        let signals = self.poll_drift();
+        let scrubbed = if self.scrub_pending { self.scrub() } else { Vec::new() };
+        (signals, scrubbed)
     }
 }
 
@@ -793,6 +1144,102 @@ mod tests {
         // An invalid op fails the request, not the banks.
         assert!(s.serve_workload(PudOp::Add { width: 0 }, &[a, b]).is_err());
         assert_eq!(s.metrics.counter("compute.bank_failures"), 0);
+    }
+
+    #[test]
+    fn quarantine_hysteresis_enters_and_releases() {
+        let mut q = Quarantine::new(4, 2, 2);
+        assert!(q.enabled());
+        let bad = vec![false, true, false, true];
+        assert_eq!(
+            q.observe_serve(&bad),
+            QuarantineDelta { entered: 0, released: 0, dirty: 2 }
+        );
+        // The second strike quarantines both dirty columns.
+        assert_eq!(q.observe_serve(&bad).entered, 2);
+        assert_eq!(q.quarantined_cols(), 2);
+        assert!(q.is_quarantined(1) && q.is_quarantined(3));
+        let mut mask = vec![true; 4];
+        q.apply(&mut mask);
+        assert_eq!(mask, vec![true, false, true, false]);
+        // One clean scrub is not enough to release (hysteresis)...
+        let clean = vec![false; 4];
+        assert_eq!(q.observe_scrub(&clean).released, 0);
+        // ...a dirty scrub resets column 1's progress while column 3
+        // reaches two consecutive clean passes and is released.
+        let dirty1 = vec![false, true, false, false];
+        assert_eq!(
+            q.observe_scrub(&dirty1),
+            QuarantineDelta { entered: 0, released: 1, dirty: 1 }
+        );
+        assert!(q.is_quarantined(1) && !q.is_quarantined(3));
+        // Column 1 needs two fresh consecutive clean passes.
+        assert_eq!(q.observe_scrub(&clean).released, 0);
+        assert_eq!(q.observe_scrub(&clean).released, 1);
+        assert_eq!(q.quarantined_cols(), 0);
+        // Release clears the strike history: one new mismatch does not
+        // re-quarantine.
+        assert_eq!(q.observe_serve(&bad).entered, 0);
+    }
+
+    #[test]
+    fn disabled_quarantine_is_inert() {
+        let mut q = Quarantine::new(4, 0, 2);
+        assert!(!q.enabled());
+        let bad = vec![true; 4];
+        for _ in 0..5 {
+            assert_eq!(q.observe_serve(&bad), QuarantineDelta::default());
+            assert_eq!(q.observe_scrub(&bad), QuarantineDelta::default());
+        }
+        assert_eq!(q.quarantined_cols(), 0);
+        let mut mask = vec![true; 4];
+        q.apply(&mut mask);
+        assert_eq!(mask, vec![true; 4]);
+    }
+
+    #[test]
+    fn scrub_observations_strike_toward_quarantine() {
+        let mut q = Quarantine::new(2, 2, 1);
+        let bad = vec![true, false];
+        assert_eq!(q.observe_scrub(&bad).entered, 0);
+        assert_eq!(q.observe_scrub(&bad).entered, 1);
+        assert!(q.is_quarantined(0));
+        // clean_to_release is clamped to at least one pass.
+        assert_eq!(q.observe_scrub(&[false, false]).released, 1);
+    }
+
+    #[test]
+    fn scrub_cadence_fires_through_maintenance_polls() {
+        use crate::pud::plan::PudOp;
+        let cols = 32;
+        let cfg = DeviceConfig::default();
+        let svc = ServiceConfig {
+            serve_samples: 256,
+            quarantine_strikes: 2,
+            scrub_every: 2,
+            ..ServiceConfig::default()
+        };
+        let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg)).unwrap();
+        s.register(SubarrayId::new(0, 0, 0), 32, cols, 0x5EED);
+        s.run_pending(usize::MAX);
+        // Poll 1: cadence not due yet.
+        let (_, sc) = s.maintain();
+        assert!(sc.is_empty() && !s.scrub_pending());
+        // Poll 2: due, but nothing served yet — the pass is empty and
+        // the flag still clears.
+        let (_, sc) = s.maintain();
+        assert!(sc.is_empty() && !s.scrub_pending());
+        assert_eq!(s.metrics.counter("scrub.passes"), 0);
+        // Serve a workload, then the next due poll scrubs it.
+        let a: Vec<u64> = (0..cols as u64).map(|c| c % 4).collect();
+        let b: Vec<u64> = (0..cols as u64).map(|c| (c * 5 + 2) % 4).collect();
+        s.serve_workload(PudOp::Add { width: 2 }, &[a, b]).unwrap();
+        let (_, sc) = s.maintain(); // poll 3: not due
+        assert!(sc.is_empty());
+        let (_, sc) = s.maintain(); // poll 4: due
+        assert_eq!(sc.len(), 1);
+        assert!(sc[0].result.is_ok());
+        assert_eq!(s.metrics.counter("scrub.passes"), 1);
     }
 
     #[test]

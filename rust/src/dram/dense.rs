@@ -24,6 +24,7 @@
 
 use crate::config::device::DeviceConfig;
 use crate::config::system::SystemConfig;
+use crate::dram::faults::{FaultField, FAULT_STREAM};
 use crate::dram::retention;
 use crate::dram::sense_amp::SenseAmps;
 use crate::dram::subarray::OpCounts;
@@ -43,6 +44,9 @@ pub struct DenseSubarray {
     /// Per-operation noise stream.
     rng: Rng,
     pub counts: OpCounts,
+    /// Seeded fault-injection field — drawn from the same dedicated
+    /// child stream as the hybrid model, so both corrupt in lockstep.
+    faults: FaultField,
     /// Per-row full-swing state (see module docs).
     full_swing: Vec<bool>,
     /// Reusable row-width scratch (RowCopy sense buffer).
@@ -60,6 +64,8 @@ impl DenseSubarray {
     pub fn with_geometry(cfg: &DeviceConfig, rows: usize, cols: usize, seed: u64) -> Self {
         let mut field_rng = Rng::new(seed);
         let sa = SenseAmps::new(cfg, cols, &mut field_rng);
+        let mut fault_rng = field_rng.child(&[FAULT_STREAM]);
+        let faults = FaultField::draw(cfg, cols, &mut fault_rng);
         Self {
             cfg: cfg.clone(),
             rows,
@@ -69,6 +75,7 @@ impl DenseSubarray {
             env: Environment::nominal(cfg.t_cal),
             rng: field_rng.child(&[0xC0FFEE]),
             counts: OpCounts::default(),
+            faults,
             full_swing: vec![true; rows],
             row_buf: Vec::new(),
         }
@@ -112,6 +119,21 @@ impl DenseSubarray {
     /// Digest of the per-operation noise-stream position.
     pub fn rng_fingerprint(&self) -> u64 {
         self.rng.fingerprint()
+    }
+
+    /// The fault field drawn for this subarray (introspection).
+    pub fn fault_field(&self) -> &FaultField {
+        &self.faults
+    }
+
+    /// Total fault-induced SiMRA bit flips so far.
+    pub fn fault_flips(&self) -> u64 {
+        self.faults.flips()
+    }
+
+    /// Order-sensitive digest of the fault field and its fired flips.
+    pub fn fault_fingerprint(&self) -> u64 {
+        self.faults.fingerprint()
     }
 
     /// Write full-swing data into a row (column-interface transfer:
@@ -203,22 +225,30 @@ impl DenseSubarray {
         self.counts.simras += 1;
         self.counts.activates += 2; // ACT-PRE-ACT decoder glitch sequence
         self.counts.precharges += 1;
-        for c in 0..self.cols {
-            let total: f64 = rows
-                .iter()
-                .map(|&r| self.charges[self.idx(r, c)] as f64)
-                .sum();
-            let v = self.cfg.bitline_voltage(total, rows.len());
-            let bit = self.sa.sense(&self.cfg, &self.env, c, v, &mut self.rng);
+        // SiMRA operation index for the fault clock (1-based; shared
+        // with the hybrid model because both bump the counter first).
+        let op_idx = self.counts.simras;
+        let cols = self.cols;
+        let Self { cfg, charges, sa, env, rng, faults, full_swing, .. } = self;
+        for c in 0..cols {
+            let total: f64 = rows.iter().map(|&r| charges[r * cols + c] as f64).sum();
+            let v = cfg.bitline_voltage(total, rows.len());
+            let mut bit = sa.sense(cfg, env, c, v, rng);
+            if faults.is_enabled()
+                && faults.flip_simra(c, op_idx, total, rows.len(), |pos| {
+                    charges[rows[pos] * cols + c]
+                })
+            {
+                bit = !bit;
+            }
             out[c] = bit as u8;
             let q = if bit { 1.0 } else { 0.0 };
             for &r in rows {
-                let i = self.idx(r, c);
-                self.charges[i] = q;
+                charges[r * cols + c] = q;
             }
         }
         for &r in rows {
-            self.full_swing[r] = true;
+            full_swing[r] = true;
         }
     }
 

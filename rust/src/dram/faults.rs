@@ -1,0 +1,435 @@
+//! Seeded PuDGhost-style fault injection (PAPERS.md: PuDGhost, arxiv
+//! 2606.19119).
+//!
+//! The variation field ([`crate::dram::variation`]) and the drift model
+//! cover the *smooth* error sources the paper calibrates against:
+//! static per-column threshold offsets, temperature walks, retention
+//! decay. Real PUD chips additionally exhibit result corruption that no
+//! static calibration can cancel, because it depends on what the chip
+//! is computing *right now*. [`FaultField`] models the three
+//! characterized classes, all scoped to SiMRA (the many-row
+//! charge-sharing step, where noise margins are a fraction of a cell
+//! and the PuDGhost effects concentrate; single-row activation keeps
+//! the full V_DD/2 margin and is left clean):
+//!
+//! * **pattern-dependent flips** ([`Fault::PatternFlip`]) — the flip
+//!   chance is conditioned on the data pattern latched across the open
+//!   rows: a SiMRA whose summed charge lands within
+//!   [`PATTERN_WINDOW`] cells of the majority boundary (a *contested*
+//!   pattern) has reduced margin and flips with probability `p`;
+//!   unanimous patterns are unaffected;
+//! * **aggressor/victim row coupling** ([`Fault::Coupling`]) — a
+//!   victim column flips when a specific aggressor position inside the
+//!   activated group is strongly driven high
+//!   (≥ [`COUPLING_AGGRESSOR_MIN`] of full swing);
+//! * **intermittent columns** ([`Fault::Intermittent`]) — duty-cycled
+//!   misbehavior: the column corrupts results only during a periodic
+//!   active window of the subarray's SiMRA clock, so a one-shot spot
+//!   check (or a short probe workload) can land in the quiet phase and
+//!   pass while live workloads keep hitting the active window.
+//!
+//! ## Determinism contract
+//!
+//! The field is drawn once per subarray from a dedicated child of the
+//! geometry seed ([`FAULT_STREAM`]), so the hybrid [`Subarray`] and the
+//! dense reference model draw bit-identical faults — the storage-parity
+//! suite compares [`FaultField::fingerprint`] after every command.
+//! Flip decisions draw from *address-based* streams
+//! (`stream(flip_seed, &[op_index, column])`), never from the shared
+//! per-operation noise stream: injecting a fault therefore does not
+//! move the noise-stream position, and a fault-free column behaves
+//! byte-identically whether or not its neighbours are faulty.
+//!
+//! Crucially for the serving stack, none of this is visible to the
+//! calibration/ECR sampling kernel: ECR batteries run on
+//! [`crate::coordinator::engine::ColumnBank`] (sense amps +
+//! environment only, no cell array, no SiMRA), so a faulty column
+//! passes every spot check and then corrupts live workloads — exactly
+//! the PuDGhost failure mode the quarantine/scrub countermeasures in
+//! [`crate::coordinator::service`] exist to catch.
+//!
+//! [`Subarray`]: crate::dram::subarray::Subarray
+
+use crate::config::device::DeviceConfig;
+use crate::util::rng::{derive_seed, stream, Rng};
+
+/// Stream tag of the per-subarray fault-field child RNG (sibling of
+/// the `0xC0FFEE` operation-noise stream).
+pub const FAULT_STREAM: u64 = 0xFA17;
+
+/// Pattern-dependent faults trigger when the summed charge across the
+/// opened rows lands within this many cell-charges of the majority
+/// decision boundary (`rows/2`). With the standard 8-row group and
+/// near-neutral calibration, every non-unanimous MAJ3/MAJ5 operand
+/// pattern sits within ~1 cell of the boundary while unanimous
+/// patterns sit ≥ 1.5 cells away — contested computations corrupt,
+/// data-at-rest does not.
+pub const PATTERN_WINDOW: f64 = 1.25;
+
+/// An aggressor row couples into its victim column only while driven
+/// to at least this fraction of full swing.
+pub const COUPLING_AGGRESSOR_MIN: f32 = 0.75;
+
+/// Intermittent columns are active for `period / INTERMITTENT_DUTY`
+/// (at least one) of every `period` SiMRA operations.
+pub const INTERMITTENT_DUTY: u64 = 4;
+
+/// One column's injected fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Flip with probability `p` whenever the latched pattern is
+    /// contested (within [`PATTERN_WINDOW`] of the majority boundary).
+    PatternFlip { p: f64 },
+    /// Flip with probability `p` whenever the row at position
+    /// `agg_pos` inside the activated group is strongly driven high.
+    Coupling { agg_pos: u8, p: f64 },
+    /// Flip with probability `p` while the subarray's SiMRA clock is
+    /// inside the active window: `(op + phase) % period < active`.
+    Intermittent { period: u64, phase: u64, active: u64, p: f64 },
+}
+
+/// Per-subarray fault assignment plus the injection bookkeeping the
+/// parity suite pins. Drawn once at construction (like
+/// [`crate::dram::variation::VariationField`]); disabled by default —
+/// every fault knob in [`DeviceConfig`] defaults to zero, in which
+/// case the field is empty and the SiMRA hot path pays one branch.
+#[derive(Clone, Debug)]
+pub struct FaultField {
+    /// Per-column fault assignment (`None` = healthy column).
+    faults: Vec<Option<Fault>>,
+    /// Seed of the address-based flip-decision streams.
+    flip_seed: u64,
+    /// Number of flips injected so far.
+    flips: u64,
+    /// Order-sensitive digest over the (op, column) address of every
+    /// injected flip.
+    digest: u64,
+    /// Fast-out for the hot path: any fault assigned at all.
+    enabled: bool,
+}
+
+impl FaultField {
+    /// An empty field (no faulty columns, nothing ever flips).
+    pub fn none(cols: usize) -> Self {
+        Self { faults: vec![None; cols], flip_seed: 0, flips: 0, digest: 0, enabled: false }
+    }
+
+    /// Draw the per-column fault assignment for one subarray. The
+    /// draw sequence depends only on `cfg` and the RNG state, so both
+    /// golden models (seeded identically) assign identical faults.
+    pub fn draw(cfg: &DeviceConfig, cols: usize, rng: &mut Rng) -> Self {
+        let mut classes: Vec<u8> = Vec::new();
+        if cfg.fault_pattern_p > 0.0 {
+            classes.push(0);
+        }
+        if cfg.fault_coupling_p > 0.0 {
+            classes.push(1);
+        }
+        if cfg.fault_intermittent_p > 0.0 {
+            classes.push(2);
+        }
+        if cfg.fault_col_rate <= 0.0 || classes.is_empty() {
+            return Self::none(cols);
+        }
+        let flip_seed = rng.next_u64();
+        let period = cfg.fault_intermittent_period.max(1);
+        let active = (period / INTERMITTENT_DUTY).max(1);
+        let mut faults = Vec::with_capacity(cols);
+        for _ in 0..cols {
+            if !rng.bool(cfg.fault_col_rate) {
+                faults.push(None);
+                continue;
+            }
+            let fault = match classes[rng.below(classes.len() as u64) as usize] {
+                0 => Fault::PatternFlip { p: cfg.fault_pattern_p },
+                1 => Fault::Coupling {
+                    agg_pos: rng.below(cfg.simra_rows as u64) as u8,
+                    p: cfg.fault_coupling_p,
+                },
+                _ => Fault::Intermittent {
+                    period,
+                    phase: rng.below(period),
+                    active,
+                    p: cfg.fault_intermittent_p,
+                },
+            };
+            faults.push(Some(fault));
+        }
+        let enabled = faults.iter().any(|f| f.is_some());
+        Self { faults, flip_seed, flips: 0, digest: 0, enabled }
+    }
+
+    /// Whether any column carries a fault (hot-path fast-out).
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Decide whether column `c`'s sensed SiMRA decision is corrupted.
+    ///
+    /// `op` is the subarray's SiMRA ordinal (its operation clock),
+    /// `total_charge` the column's summed cell charge across the
+    /// `rows_opened` activated rows, and `agg_charge` resolves the
+    /// pre-share charge of an opened row by its position in the group
+    /// (only consulted for coupling faults). The flip randomness is
+    /// address-based — `(op, c)` fully determines the draw — so
+    /// injection never perturbs the shared noise stream.
+    #[inline]
+    pub fn flip_simra(
+        &mut self,
+        c: usize,
+        op: u64,
+        total_charge: f64,
+        rows_opened: usize,
+        agg_charge: impl FnOnce(usize) -> f32,
+    ) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        let Some(fault) = self.faults.get(c).copied().flatten() else {
+            return false;
+        };
+        let (triggered, p) = match fault {
+            Fault::PatternFlip { p } => {
+                ((total_charge - rows_opened as f64 * 0.5).abs() <= PATTERN_WINDOW, p)
+            }
+            Fault::Coupling { agg_pos, p } => {
+                let pos = (agg_pos as usize).min(rows_opened.saturating_sub(1));
+                (agg_charge(pos) >= COUPLING_AGGRESSOR_MIN, p)
+            }
+            Fault::Intermittent { period, phase, active, p } => {
+                ((op.wrapping_add(phase)) % period < active, p)
+            }
+        };
+        if !triggered {
+            return false;
+        }
+        let fire = p >= 1.0 || stream(self.flip_seed, &[op, c as u64]).f64() < p;
+        if fire {
+            self.flips += 1;
+            self.digest = derive_seed(self.digest, &[op, c as u64]);
+        }
+        fire
+    }
+
+    /// Number of flips injected so far.
+    pub fn flips(&self) -> u64 {
+        self.flips
+    }
+
+    /// Order-sensitive digest of the fault assignment *and* every
+    /// injected flip's (op, column) address — two models with equal
+    /// fingerprints drew the same faults and corrupted the same bits
+    /// in the same order.
+    pub fn fingerprint(&self) -> u64 {
+        let mut acc = derive_seed(self.flip_seed, &[self.flips, self.digest]);
+        for (c, f) in self.faults.iter().enumerate() {
+            if let Some(fault) = f {
+                let tag = match *fault {
+                    Fault::PatternFlip { p } => derive_seed(1, &[p.to_bits()]),
+                    Fault::Coupling { agg_pos, p } => {
+                        derive_seed(2, &[agg_pos as u64, p.to_bits()])
+                    }
+                    Fault::Intermittent { period, phase, active, p } => {
+                        derive_seed(3, &[period, phase, active, p.to_bits()])
+                    }
+                };
+                acc = derive_seed(acc, &[c as u64, tag]);
+            }
+        }
+        acc
+    }
+
+    /// Number of columns carrying a fault.
+    pub fn faulty_cols(&self) -> usize {
+        self.faults.iter().filter(|f| f.is_some()).count()
+    }
+
+    /// The fault assigned to column `c`, if any.
+    pub fn fault_at(&self, c: usize) -> Option<Fault> {
+        self.faults.get(c).copied().flatten()
+    }
+}
+
+/// The standard corruption campaign used by the `fault_campaign`
+/// integration test, the `BENCH_reliability.json` bench case, and
+/// `pudtune campaign`: a quiet device (negligible Gaussian noise, so
+/// every golden mismatch is attributable to an injected fault) with
+/// all three fault classes enabled deterministically (`p = 1`) on a
+/// `fault_col_rate` fraction of columns. Deterministic flip
+/// probabilities make campaign outcomes a pure function of the seeds:
+/// a faulty column mismatches identically on every identical request,
+/// which is what lets the campaign assert *exact* convergence
+/// (protected runs reach zero steady-state mismatches) instead of
+/// statistical bounds.
+pub fn standard_campaign(base: &DeviceConfig) -> DeviceConfig {
+    DeviceConfig {
+        sigma_sa: 1e-6,
+        tail_weight: 0.0,
+        sigma_noise: 1e-6,
+        fault_col_rate: 0.08,
+        fault_pattern_p: 1.0,
+        fault_coupling_p: 1.0,
+        fault_intermittent_p: 1.0,
+        fault_intermittent_period: 32,
+        ..base.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn campaign_cfg() -> DeviceConfig {
+        standard_campaign(&DeviceConfig::default())
+    }
+
+    #[test]
+    fn default_config_draws_nothing() {
+        let cfg = DeviceConfig::default();
+        let mut rng = Rng::new(7);
+        let mut f = FaultField::draw(&cfg, 256, &mut rng);
+        assert!(!f.is_enabled());
+        assert_eq!(f.faulty_cols(), 0);
+        for c in 0..256 {
+            assert!(!f.flip_simra(c, 0, 4.0, 8, |_| 1.0));
+        }
+        assert_eq!(f.flips(), 0);
+    }
+
+    #[test]
+    fn field_is_deterministic_per_seed() {
+        let cfg = campaign_cfg();
+        let mut a = FaultField::draw(&cfg, 512, &mut Rng::new(42));
+        let mut b = FaultField::draw(&cfg, 512, &mut Rng::new(42));
+        let c = FaultField::draw(&cfg, 512, &mut Rng::new(43));
+        assert!(a.is_enabled(), "campaign rate over 512 cols must assign faults");
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // Identical flip decisions, address by address.
+        for col in 0..512 {
+            assert_eq!(a.fault_at(col), b.fault_at(col));
+            for op in 0..16u64 {
+                assert_eq!(
+                    a.flip_simra(col, op, 3.5, 8, |_| 1.0),
+                    b.flip_simra(col, op, 3.5, 8, |_| 1.0),
+                    "col {col} op {op}"
+                );
+            }
+        }
+        assert_eq!(a.flips(), b.flips());
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn pattern_fault_triggers_only_near_the_boundary() {
+        let mut f = FaultField {
+            faults: vec![Some(Fault::PatternFlip { p: 1.0 })],
+            flip_seed: 9,
+            flips: 0,
+            digest: 0,
+            enabled: true,
+        };
+        // Contested patterns (within the window of rows/2 = 4.0) flip.
+        assert!(f.flip_simra(0, 0, 3.5, 8, |_| 0.0));
+        assert!(f.flip_simra(0, 1, 4.5, 8, |_| 0.0));
+        // Unanimous patterns keep their full margin.
+        assert!(!f.flip_simra(0, 2, 1.5, 8, |_| 0.0));
+        assert!(!f.flip_simra(0, 3, 6.5, 8, |_| 0.0));
+        assert_eq!(f.flips(), 2);
+    }
+
+    #[test]
+    fn coupling_fault_follows_the_aggressor_charge() {
+        let mut f = FaultField {
+            faults: vec![Some(Fault::Coupling { agg_pos: 3, p: 1.0 })],
+            flip_seed: 9,
+            flips: 0,
+            digest: 0,
+            enabled: true,
+        };
+        assert!(f.flip_simra(0, 0, 4.0, 8, |pos| if pos == 3 { 1.0 } else { 0.0 }));
+        assert!(!f.flip_simra(0, 1, 4.0, 8, |pos| if pos == 3 { 0.2 } else { 1.0 }));
+        // Partial drive below the coupling threshold stays clean.
+        assert!(!f.flip_simra(0, 2, 4.0, 8, |_| 0.5));
+    }
+
+    #[test]
+    fn intermittent_fault_is_duty_cycled() {
+        let (period, phase, active) = (8u64, 3u64, 2u64);
+        let mut f = FaultField {
+            faults: vec![Some(Fault::Intermittent { period, phase, active, p: 1.0 })],
+            flip_seed: 9,
+            flips: 0,
+            digest: 0,
+            enabled: true,
+        };
+        let mut fired = Vec::new();
+        for op in 0..24u64 {
+            if f.flip_simra(0, op, 4.0, 8, |_| 0.0) {
+                fired.push(op);
+            }
+        }
+        // Active exactly when (op + phase) % period < active: ops 5, 6
+        // in every period of 8 — and an op-probe outside the window
+        // (e.g. a one-shot spot check at op 0) sees a healthy column.
+        assert_eq!(fired, vec![5, 6, 13, 14, 21, 22]);
+    }
+
+    #[test]
+    fn sub_unit_probability_is_address_deterministic() {
+        let mk = || FaultField {
+            faults: vec![Some(Fault::PatternFlip { p: 0.5 })],
+            flip_seed: 0xABCD,
+            flips: 0,
+            digest: 0,
+            enabled: true,
+        };
+        let (mut a, mut b) = (mk(), mk());
+        let decisions: Vec<bool> =
+            (0..64u64).map(|op| a.flip_simra(0, op, 4.0, 8, |_| 0.0)).collect();
+        for (op, &d) in decisions.iter().enumerate() {
+            assert_eq!(b.flip_simra(0, op as u64, 4.0, 8, |_| 0.0), d);
+        }
+        // p = 0.5 over 64 triggered ops: both outcomes occur.
+        assert!(decisions.iter().any(|&d| d) && decisions.iter().any(|&d| !d));
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_tracks_flip_order() {
+        let mk = || FaultField {
+            faults: vec![Some(Fault::PatternFlip { p: 1.0 }); 2],
+            flip_seed: 1,
+            flips: 0,
+            digest: 0,
+            enabled: true,
+        };
+        let (mut a, mut b) = (mk(), mk());
+        a.flip_simra(0, 0, 4.0, 8, |_| 0.0);
+        a.flip_simra(1, 0, 4.0, 8, |_| 0.0);
+        b.flip_simra(1, 0, 4.0, 8, |_| 0.0);
+        b.flip_simra(0, 0, 4.0, 8, |_| 0.0);
+        assert_eq!(a.flips(), b.flips());
+        assert_ne!(a.fingerprint(), b.fingerprint(), "digest must be order-sensitive");
+    }
+
+    #[test]
+    fn standard_campaign_validates_and_enables_every_class() {
+        let cfg = campaign_cfg();
+        cfg.validate().unwrap();
+        let f = FaultField::draw(&cfg, 4096, &mut Rng::new(0xCA3));
+        let mut seen = [false; 3];
+        for c in 0..4096 {
+            match f.fault_at(c) {
+                Some(Fault::PatternFlip { .. }) => seen[0] = true,
+                Some(Fault::Coupling { .. }) => seen[1] = true,
+                Some(Fault::Intermittent { .. }) => seen[2] = true,
+                None => {}
+            }
+        }
+        assert_eq!(seen, [true; 3], "all three classes drawn at campaign rates");
+        let frac = f.faulty_cols() as f64 / 4096.0;
+        assert!((0.04..0.12).contains(&frac), "faulty fraction {frac}");
+    }
+}

@@ -16,13 +16,35 @@
 //! * `dense` — the dense-`f32` reference implementation the hybrid
 //!   storage is validated against (compiled under `cfg(test)` or the
 //!   `reference-model` feature);
+//! * [`faults`] — seeded PuDGhost-style fault injection, off by
+//!   default (every fault knob in `DeviceConfig` defaults to zero);
 //! * [`bank`], [`device`] — the hierarchy above subarrays;
 //! * [`temperature`], [`retention`] — environment models for Fig. 6.
+//!
+//! ## Fault model
+//!
+//! Beyond the smooth variation/drift/retention physics, the simulator
+//! injects the *discrete* corruption modes PuDGhost characterized on
+//! real PUD chips ([`faults`]): pattern-dependent flips (a faulty
+//! column corrupts its SiMRA decision only when the data latched
+//! across the open rows is contested — near the majority boundary,
+//! where margin is thinnest), aggressor/victim row coupling (a victim
+//! column flips while a specific row position in the activated group
+//! is driven high), and intermittent columns (duty-cycled misbehavior
+//! keyed to the subarray's SiMRA operation clock, so one-shot spot
+//! checks can pass while sustained workloads keep corrupting). All
+//! three are scoped to SiMRA — single-row activation keeps its full
+//! margin — drawn per subarray from a dedicated seed stream shared
+//! bit-identically by the hybrid and dense models, and invisible to
+//! the calibration/ECR sampling kernel, which is exactly why the
+//! serving stack pairs them with quarantine/scrub countermeasures
+//! ([`crate::coordinator::service`]).
 
 pub mod bank;
 #[cfg(any(test, feature = "reference-model"))]
 pub mod dense;
 pub mod device;
+pub mod faults;
 pub mod geometry;
 pub mod retention;
 pub mod sense_amp;

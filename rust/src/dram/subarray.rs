@@ -74,6 +74,7 @@
 
 use crate::config::device::DeviceConfig;
 use crate::config::system::SystemConfig;
+use crate::dram::faults::{FaultField, FAULT_STREAM};
 use crate::dram::retention;
 use crate::dram::sense_amp::SenseAmps;
 use crate::dram::temperature::Environment;
@@ -152,6 +153,10 @@ pub struct Subarray {
     /// Per-operation noise stream.
     rng: Rng,
     pub counts: OpCounts,
+    /// Seeded fault-injection field (`dram::faults`; empty unless the
+    /// config enables fault knobs). Drawn from a dedicated child stream
+    /// so disabling it leaves every other draw byte-identical.
+    faults: FaultField,
     /// Reusable packed decision words (SiMRA restore buffer).
     decision_buf: Vec<u64>,
     /// Reusable charge-count -> bitline-voltage table (SiMRA fast path).
@@ -167,6 +172,10 @@ impl Subarray {
     pub fn with_geometry(cfg: &DeviceConfig, rows: usize, cols: usize, seed: u64) -> Self {
         let mut field_rng = Rng::new(seed);
         let sa = SenseAmps::new(cfg, cols, &mut field_rng);
+        // Child stream: does not advance `field_rng`, so the op-noise
+        // stream below is unchanged whether or not faults are enabled.
+        let mut fault_rng = field_rng.child(&[FAULT_STREAM]);
+        let faults = FaultField::draw(cfg, cols, &mut fault_rng);
         let nwords = words_for(cols);
         Self {
             cfg: cfg.clone(),
@@ -177,6 +186,7 @@ impl Subarray {
             env: Environment::nominal(cfg.t_cal),
             rng: field_rng.child(&[0xC0FFEE]),
             counts: OpCounts::default(),
+            faults,
             decision_buf: Vec::new(),
             volt_buf: Vec::new(),
         }
@@ -223,6 +233,23 @@ impl Subarray {
     /// parity suite: dense and hybrid must consume noise in lockstep).
     pub fn rng_fingerprint(&self) -> u64 {
         self.rng.fingerprint()
+    }
+
+    /// The fault field drawn for this subarray (introspection).
+    pub fn fault_field(&self) -> &FaultField {
+        &self.faults
+    }
+
+    /// Total fault-induced SiMRA bit flips so far.
+    pub fn fault_flips(&self) -> u64 {
+        self.faults.flips()
+    }
+
+    /// Order-sensitive digest of the fault field and every flip it has
+    /// fired (storage parity: hybrid and dense must corrupt in
+    /// lockstep).
+    pub fn fault_fingerprint(&self) -> u64 {
+        self.faults.fingerprint()
     }
 
     /// Reset `slot` to an all-zero packed row of `nwords` words,
@@ -409,6 +436,9 @@ impl Subarray {
         self.counts.simras += 1;
         self.counts.activates += 2; // ACT-PRE-ACT decoder glitch sequence
         self.counts.precharges += 1;
+        // SiMRA operation index for the fault clock (1-based; shared
+        // with the dense model because both bump the counter first).
+        let op_idx = self.counts.simras;
         let cols = self.cols;
         let nwords = words_for(cols);
         let mut decision = std::mem::take(&mut self.decision_buf);
@@ -416,7 +446,7 @@ impl Subarray {
         decision.resize(nwords, 0);
         // The 4-bit sliced counters below hold up to 15 opened rows.
         let fast = rows.len() <= 15 && rows.iter().all(|&r| self.storage[r].is_packed());
-        let Self { cfg, storage, sa, env, rng, volt_buf, .. } = self;
+        let Self { cfg, storage, sa, env, rng, faults, volt_buf, .. } = self;
         if fast {
             volt_buf.clear();
             volt_buf.extend((0..=rows.len()).map(|k| cfg.bitline_voltage(k as f64, rows.len())));
@@ -446,7 +476,14 @@ impl Subarray {
                         | (((p1 >> i) & 1) << 1)
                         | (((p2 >> i) & 1) << 2)
                         | (((p3 >> i) & 1) << 3)) as usize;
-                    let bit = sa.sense(cfg, env, c, volt_buf[k], rng);
+                    let mut bit = sa.sense(cfg, env, c, volt_buf[k], rng);
+                    if faults.is_enabled()
+                        && faults.flip_simra(c, op_idx, k as f64, rows.len(), |pos| {
+                            storage[rows[pos]].charge(c)
+                        })
+                    {
+                        bit = !bit;
+                    }
                     out[c] = bit as u8;
                     dword |= (bit as u64) << i;
                 }
@@ -456,7 +493,14 @@ impl Subarray {
             for c in 0..cols {
                 let total: f64 = rows.iter().map(|&r| storage[r].charge(c) as f64).sum();
                 let v = cfg.bitline_voltage(total, rows.len());
-                let bit = sa.sense(cfg, env, c, v, rng);
+                let mut bit = sa.sense(cfg, env, c, v, rng);
+                if faults.is_enabled()
+                    && faults.flip_simra(c, op_idx, total, rows.len(), |pos| {
+                        storage[rows[pos]].charge(c)
+                    })
+                {
+                    bit = !bit;
+                }
                 out[c] = bit as u8;
                 if bit {
                     decision[c >> 6] |= 1u64 << (c & 63);
@@ -808,6 +852,45 @@ mod tests {
             s.read_row(0)
         };
         assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn default_config_never_draws_faults() {
+        let mut s = small();
+        for r in 0..8 {
+            s.fill_row(r, (r % 2) as u8);
+        }
+        let rows: Vec<usize> = (0..8).collect();
+        for _ in 0..16 {
+            s.simra(&rows);
+        }
+        assert!(!s.fault_field().is_enabled());
+        assert_eq!(s.fault_flips(), 0);
+    }
+
+    #[test]
+    fn campaign_config_flips_simra_decisions_deterministically() {
+        let cfg = crate::dram::faults::standard_campaign(&DeviceConfig::default());
+        let run = || {
+            let mut s = Subarray::with_geometry(&cfg, 32, 256, 7);
+            // Contested pattern (4 of 8 high) sits on the majority
+            // boundary: every pattern-fault column fires each op.
+            for r in 0..4 {
+                s.fill_row(r, 1);
+            }
+            for r in 4..8 {
+                s.fill_row(r, 0);
+            }
+            let rows: Vec<usize> = (0..8).collect();
+            let out = s.simra(&rows);
+            (out, s.fault_flips(), s.fault_fingerprint())
+        };
+        let (out_a, flips_a, fp_a) = run();
+        let (out_b, flips_b, fp_b) = run();
+        assert!(flips_a > 0, "campaign config must corrupt contested SiMRA");
+        assert_eq!(out_a, out_b);
+        assert_eq!(flips_a, flips_b);
+        assert_eq!(fp_a, fp_b);
     }
 
     #[test]

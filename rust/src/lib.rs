@@ -132,9 +132,11 @@ pub mod prelude {
         BankOutcome, BankSummary, ColumnBank, DeviceCoordinator, PjrtEngine,
     };
     pub use crate::coordinator::service::{
-        EntryState, LoadOutcome, RecalibService, ServeOutcome, ServiceConfig, WorkloadOutcome,
+        EntryState, LoadOutcome, Quarantine, QuarantineDelta, RecalibService, ScrubOutcome,
+        ServeOutcome, ServiceConfig, WorkloadOutcome,
     };
     pub use crate::dram::device::Device;
+    pub use crate::dram::faults::{standard_campaign, FaultField};
     pub use crate::dram::geometry::SubarrayId;
     pub use crate::dram::subarray::{OpCounts, RowStorage, Subarray};
     pub use crate::pud::majx::MajX;

@@ -13,6 +13,8 @@
 //! pudtune serve    [--banks N] [--cols N] [--ticks N] [--store path]
 //!                  [--tick-hours H] [--excursion-temp C] [--excursion-tick K]
 //!                  [--drift-temp dC] [--drift-age H] [--drift-ecr F] [--native]
+//! pudtune campaign [--banks N] [--cols N] [--epochs N] [--op add2]
+//!                  [--redundancy N] [--native]
 //! pudtune fit-model [--target 0.466]
 //! pudtune trace    [maj5|maj3] [--fracs x,y,z]
 //! pudtune artifacts
@@ -88,6 +90,7 @@ fn run(raw: &[String]) -> Result<()> {
         "run" => cmd_run(&args),
         "calibrate" => cmd_calibrate(&args),
         "serve" => cmd_serve(&args),
+        "campaign" => cmd_campaign(&args),
         "fit-model" => cmd_fit_model(&args),
         "trace" => cmd_trace(&args),
         "artifacts" => cmd_artifacts(),
@@ -245,11 +248,7 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
     }
     let ops = op_names
         .iter()
-        .map(|name| {
-            PudOp::parse(name).ok_or_else(|| {
-                anyhow!("unknown op '{name}' (try add8, mul8, and, or, not, maj3, maj5)")
-            })
-        })
+        .map(|name| PudOp::parse_or_list(name).map_err(|e| anyhow!(e)))
         .collect::<Result<Vec<_>>>()?;
 
     let engine = engine_for(args, &cfg);
@@ -497,6 +496,121 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         println!("\nstore written to {}", path.display());
     }
     println!("\nservice metrics:\n{}", service.metrics.render());
+    Ok(())
+}
+
+/// Fault-injection campaign: run the standard corruption campaign
+/// (`dram::faults::standard_campaign`) against two serving stacks — an
+/// unprotected baseline and a protected service with quarantine +
+/// periodic scrub (plus optional redundant execution) — and report
+/// per-epoch golden mismatches as the countermeasures converge.
+fn cmd_campaign(args: &cli::Args) -> Result<()> {
+    use pudtune::coordinator::service::{RecalibService, ServiceConfig, WorkloadOutcome};
+    use pudtune::dram::faults::standard_campaign;
+    use pudtune::pud::plan::{PudOp, WorkloadPlan};
+    use pudtune::util::rng::Rng;
+
+    /// Sum golden mismatches / served columns / bank failures over one
+    /// epoch's outcomes.
+    fn tally(outs: &[WorkloadOutcome]) -> (usize, usize, usize) {
+        let mut bad = 0;
+        let mut active = 0;
+        let mut failures = 0;
+        for o in outs {
+            match &o.result {
+                Ok(_) => {
+                    bad += o.active_cols - o.golden_correct;
+                    active += o.active_cols;
+                }
+                Err(_) => failures += 1,
+            }
+        }
+        (bad, active, failures)
+    }
+
+    let (base_cfg, sys, exp) = load_configs(args)?;
+    let cfg = standard_campaign(&base_cfg);
+    let epochs = args.usize("epochs", 6).map_err(anyhow::Error::msg)?;
+    let redundancy = args.usize("redundancy", 1).map_err(anyhow::Error::msg)?;
+    let op_name = args.str("op").unwrap_or("add2");
+    let op = PudOp::parse_or_list(op_name).map_err(|e| anyhow!(e))?;
+    let plan = Arc::new(WorkloadPlan::compile(op).map_err(|e| anyhow!("{e}"))?);
+    let params = CalibParams {
+        iterations: exp.calib_iterations,
+        samples: exp.calib_samples,
+        tau: exp.bias_tau,
+        seed: exp.seed,
+    };
+    let protected_svc = ServiceConfig {
+        serve_samples: exp.ecr_samples,
+        params,
+        quarantine_strikes: 2,
+        quarantine_clean_passes: 2,
+        scrub_every: 1,
+        redundancy,
+        ..ServiceConfig::default()
+    };
+    let baseline_svc = ServiceConfig {
+        serve_samples: exp.ecr_samples,
+        params,
+        ..ServiceConfig::default()
+    };
+    let mut protected = RecalibService::new(cfg.clone(), protected_svc, engine_for(args, &cfg))
+        .map_err(anyhow::Error::msg)?;
+    let mut baseline = RecalibService::new(cfg.clone(), baseline_svc, engine_for(args, &cfg))
+        .map_err(anyhow::Error::msg)?;
+    for b in 0..exp.banks {
+        let id = SubarrayId::new(0, b, 0);
+        protected.register(id, 32, sys.cols, exp.seed);
+        baseline.register(id, 32, sys.cols, exp.seed);
+    }
+    protected.run_pending(usize::MAX);
+    baseline.run_pending(usize::MAX);
+
+    // A fixed workload: identical (plan, operands, seed) every epoch,
+    // so fault behaviour repeats and quarantine converges on the same
+    // columns it observed mismatching.
+    let mut rng = Rng::new(exp.seed ^ 0xCA4);
+    let width = plan.op.operand_width();
+    let operands: Vec<Vec<u64>> = (0..plan.op.n_operands())
+        .map(|_| (0..sys.cols).map(|_| rng.below(1u64 << width)).collect())
+        .collect();
+
+    println!(
+        "fault campaign: {} banks x {} cols, op {}, {} epochs, redundancy {}x",
+        exp.banks,
+        sys.cols,
+        plan.op.label(),
+        epochs,
+        redundancy.max(1)
+    );
+    for epoch in 1..=epochs {
+        let prot = protected.serve_plan(&plan, &operands);
+        let base = baseline.serve_plan(&plan, &operands);
+        let (p_bad, p_active, p_fail) = tally(&prot);
+        let (b_bad, b_active, b_fail) = tally(&base);
+        let quarantined: usize = protected
+            .ids()
+            .iter()
+            .map(|id| protected.quarantine(*id).map_or(0, |q| q.quarantined_cols()))
+            .sum();
+        println!(
+            "epoch {epoch}: unprotected {b_bad}/{b_active} mismatching, \
+             protected {p_bad}/{p_active} mismatching, {quarantined} cols quarantined"
+        );
+        for (label, fails) in [("protected", p_fail), ("unprotected", b_fail)] {
+            if fails > 0 {
+                println!("  {fails} {label} bank(s) failed to serve");
+            }
+        }
+        let (_, scrubs) = protected.maintain();
+        for s in &scrubs {
+            if let Err(e) = &s.result {
+                println!("  scrub failed on bank {}: {e}", s.id.bank);
+            }
+        }
+    }
+    println!("\nprotected service metrics:\n{}", protected.metrics.render());
     Ok(())
 }
 

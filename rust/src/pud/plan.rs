@@ -119,6 +119,20 @@ impl PudOp {
         }
     }
 
+    /// [`PudOp::parse`] with a CLI-grade error: the failure message
+    /// enumerates the full op vocabulary so callers (e.g. `pudtune run
+    /// --op` and `pudtune campaign --op`) never have to maintain their
+    /// own copy of the list.
+    pub fn parse_or_list(name: &str) -> Result<PudOp, String> {
+        PudOp::parse(name).ok_or_else(|| {
+            format!(
+                "unknown op '{}'; valid ops: add<W> (W in 1..=63), \
+                 mul<W> (W in 1..=32), and, or, not, maj3, maj5",
+                name.trim()
+            )
+        })
+    }
+
     /// Short name for logs/benches (`add8`, `mul4`, `maj5`, ...).
     pub fn label(&self) -> String {
         match self {
@@ -450,6 +464,16 @@ mod tests {
         assert_eq!(PudOp::parse("xor"), None);
         assert_eq!(PudOp::parse("add"), None);
         assert_eq!(PudOp::parse("ADD8"), Some(PudOp::Add { width: 8 }));
+    }
+
+    #[test]
+    fn parse_or_list_reports_the_vocabulary() {
+        assert_eq!(PudOp::parse_or_list("maj5"), Ok(PudOp::MajReduce { m: 5 }));
+        let err = PudOp::parse_or_list("xor").unwrap_err();
+        assert!(err.contains("unknown op 'xor'"), "{err}");
+        for item in ["add<W>", "mul<W>", "and", "or", "not", "maj3", "maj5"] {
+            assert!(err.contains(item), "missing {item} in: {err}");
+        }
     }
 
     #[test]

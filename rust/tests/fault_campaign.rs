@@ -1,0 +1,169 @@
+//! End-to-end fault campaign: the standard corruption campaign
+//! (`dram::faults::standard_campaign` — pattern-dependent flips,
+//! aggressor/victim coupling, and duty-cycled intermittent columns,
+//! all at p = 1 over a quiet analog substrate) against
+//! `RecalibService`, with and without countermeasures.
+//!
+//! The injected faults are invisible to the calibration/ECR sampling
+//! path (which runs on `ColumnBank`, not the cell-array golden model),
+//! so every service here calibrates cleanly and then corrupts real
+//! workloads — exactly the failure mode quarantine + scrub exist for.
+//! Because faults are seeded per column address and every serve
+//! rebuilds the subarray from the same (plan, operands, seed), the
+//! corrupting column set is identical every epoch: an unprotected
+//! service mismatches forever, a protected one converges to zero
+//! steady-state golden mismatches.
+
+use std::sync::Arc;
+
+use pudtune::dram::faults::standard_campaign;
+use pudtune::prelude::*;
+
+const BANKS: usize = 2;
+const COLS: usize = 256;
+const SEED: u64 = 0xFA57;
+
+fn campaign_service(cfg: &DeviceConfig, svc: ServiceConfig) -> RecalibService<NativeEngine> {
+    let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg.clone())).unwrap();
+    for b in 0..BANKS {
+        s.register(SubarrayId::new(0, b, 0), 32, COLS, SEED);
+    }
+    let done = s.run_pending(usize::MAX);
+    assert!(done.iter().all(|(_, r)| r.is_ok()), "campaign device must calibrate cleanly");
+    s
+}
+
+/// One fixed workload, reused every epoch: per-column random 2-bit
+/// additions. Identical requests draw identical faults.
+fn workload() -> (Arc<WorkloadPlan>, Vec<Vec<u64>>) {
+    let plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 2 }).unwrap());
+    let mut rng = Rng::new(0xCA3);
+    let operands: Vec<Vec<u64>> = (0..plan.op.n_operands())
+        .map(|_| (0..COLS).map(|_| rng.below(4)).collect())
+        .collect();
+    (plan, operands)
+}
+
+fn mismatches(outs: &[WorkloadOutcome]) -> usize {
+    outs.iter()
+        .map(|o| {
+            assert!(o.result.is_ok(), "{:?}: {:?}", o.id, o.result);
+            o.active_cols - o.golden_correct
+        })
+        .sum()
+}
+
+fn active(outs: &[WorkloadOutcome]) -> usize {
+    outs.iter().map(|o| o.active_cols).sum()
+}
+
+#[test]
+fn unprotected_service_keeps_serving_corrupted_outputs() {
+    let cfg = standard_campaign(&DeviceConfig::default());
+    let svc = ServiceConfig { serve_samples: 512, ..ServiceConfig::default() };
+    let mut service = campaign_service(&cfg, svc);
+    let (plan, operands) = workload();
+
+    let mut per_epoch = Vec::new();
+    for _ in 0..4 {
+        per_epoch.push(mismatches(&service.serve_plan(&plan, &operands)));
+        // Countermeasures are off by default: maintain() polls drift
+        // but never scrubs, and no quarantine state exists to change.
+        let (_, scrubs) = service.maintain();
+        assert!(scrubs.is_empty());
+    }
+    assert!(per_epoch[0] > 0, "campaign must corrupt the unprotected serve: {per_epoch:?}");
+    assert!(
+        per_epoch.windows(2).all(|w| w[0] == w[1]),
+        "deterministic faults repeat identically every epoch: {per_epoch:?}"
+    );
+    assert_eq!(
+        service.metrics.counter("compute.golden_mismatch"),
+        per_epoch.iter().sum::<usize>() as u64
+    );
+    assert!(service.metrics.counter("fault.flips") > 0);
+    assert_eq!(service.metrics.counter("quarantine.entered"), 0);
+    assert_eq!(service.metrics.counter("scrub.passes"), 0);
+}
+
+#[test]
+fn quarantine_and_scrub_drive_steady_state_mismatches_to_zero() {
+    let cfg = standard_campaign(&DeviceConfig::default());
+    let svc = ServiceConfig {
+        serve_samples: 512,
+        quarantine_strikes: 2,
+        quarantine_clean_passes: 2,
+        scrub_every: 1,
+        ..ServiceConfig::default()
+    };
+    let mut service = campaign_service(&cfg, svc);
+    let (plan, operands) = workload();
+
+    let epochs = 6;
+    let mut bad = Vec::new();
+    let mut served = Vec::new();
+    for _ in 0..epochs {
+        let outs = service.serve_plan(&plan, &operands);
+        bad.push(mismatches(&outs));
+        served.push(active(&outs));
+        let (_, scrubs) = service.maintain();
+        assert_eq!(scrubs.len(), BANKS);
+        assert!(scrubs.iter().all(|s| s.result.is_ok()), "{scrubs:?}");
+    }
+
+    // Epoch 0 serves corrupted outputs (the faults pass calibration),
+    // but each corrupting column collects a serve strike plus a scrub
+    // strike that same epoch — reaching `quarantine_strikes` — so from
+    // epoch 1 on the service masks them out and serves zero mismatches.
+    assert!(bad[0] > 0, "campaign must corrupt the first serve: {bad:?}");
+    for (e, &b) in bad.iter().enumerate().skip(1) {
+        assert_eq!(b, 0, "epoch {e} must serve clean: {bad:?}");
+    }
+
+    let quarantined: usize = service
+        .ids()
+        .iter()
+        .map(|id| service.quarantine(*id).unwrap().quarantined_cols())
+        .sum();
+    assert!(quarantined > 0, "clean steady state must come from quarantine, not luck");
+    // The throughput cost of protection: quarantined columns stop
+    // serving, so the steady-state active width shrinks but stays
+    // well above zero.
+    assert!(served[epochs - 1] < served[0], "{served:?}");
+    assert!(served[epochs - 1] > 0, "{served:?}");
+
+    assert_eq!(service.metrics.counter("scrub.passes"), epochs as u64);
+    assert!(service.metrics.counter("quarantine.entered") >= quarantined as u64);
+    assert!(service.metrics.counter("quarantine.observed_mismatches") > 0);
+    assert!(service.metrics.counter("fault.flips") > 0);
+    assert!(service.metrics.counter("scrub.dirty_cols") > 0);
+    // Persistent (deterministic, p = 1) faults never replay clean, so
+    // hysteresis must never release a quarantined column.
+    assert_eq!(service.metrics.counter("quarantine.released"), 0);
+}
+
+#[test]
+fn redundant_execution_outvotes_most_corruption() {
+    let cfg = standard_campaign(&DeviceConfig::default());
+    let mut plain =
+        campaign_service(&cfg, ServiceConfig { serve_samples: 512, ..ServiceConfig::default() });
+    let mut voted = campaign_service(
+        &cfg,
+        ServiceConfig { serve_samples: 512, redundancy: 3, ..ServiceConfig::default() },
+    );
+    let (plan, operands) = workload();
+
+    let single = mismatches(&plain.serve_plan(&plan, &operands));
+    let majority = mismatches(&voted.serve_plan(&plan, &operands));
+    assert!(single > 0, "campaign must corrupt the single-shot serve");
+    // Replicas draw independent fault fields from derived seeds, so a
+    // column corrupted in the primary is overwhelmingly likely to be
+    // clean in both replicas and the per-column majority vote repairs
+    // it — without any quarantine state or scrub passes.
+    assert!(
+        majority < single,
+        "majority vote must outvote independent per-replica faults: {majority} vs {single}"
+    );
+    assert!(voted.metrics.counter("fault.flips") >= plain.metrics.counter("fault.flips"));
+    assert_eq!(voted.metrics.counter("scrub.passes"), 0);
+}

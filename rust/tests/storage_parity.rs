@@ -136,6 +136,15 @@ fn parity(h: &Subarray, d: &DenseSubarray) -> Result<(), String> {
     if h.rng_fingerprint() != d.rng_fingerprint() {
         return Err("noise-stream positions diverge".into());
     }
+    if h.fault_flips() != d.fault_flips() || h.fault_fingerprint() != d.fault_fingerprint() {
+        return Err(format!(
+            "fault state diverges: {} flips (fp {:#018x}) vs {} flips (fp {:#018x})",
+            h.fault_flips(),
+            h.fault_fingerprint(),
+            d.fault_flips(),
+            d.fault_fingerprint()
+        ));
+    }
     if h.env.temp_c != d.env.temp_c || h.env.hours != d.env.hours {
         return Err("environments diverge".into());
     }
@@ -535,6 +544,39 @@ fn multiplier_workload_parity() {
     workload_parity(&mul, width, &DeviceConfig::default(), 0x3A);
     // eval_mul sanity on the same circuit (logic-level reference).
     assert_eq!(eval_mul(&mul, width, 3, 2), 6);
+}
+
+#[test]
+fn fault_campaign_trace_parity() {
+    // The standard corruption campaign on both models: the fault-field
+    // draw, every injected flip (count and order digest, via
+    // `parity`), and the corrupted read-outs must be bit-identical.
+    // The trace is SiMRA-heavy — contested 4-of-8 patterns inside the
+    // pattern window, full-swing aggressor rows on alternating rounds
+    // for the coupling class, and enough op clock to sweep the
+    // intermittent duty cycle (period 32).
+    use pudtune::dram::faults::standard_campaign;
+    let cfg = standard_campaign(&DeviceConfig::default());
+    for seed in [1u64, 0x6057, 0xFA57] {
+        let mut ops = Vec::new();
+        for round in 0..40usize {
+            for r in 0..8 {
+                ops.push(Op::Fill { row: r, bit: ((r + round) % 2) as u8 });
+            }
+            ops.push(Op::Simra { base: 0 });
+        }
+        let mut h = Subarray::with_geometry(&cfg, TRACE_ROWS, 128, seed);
+        let mut d = DenseSubarray::with_geometry(&cfg, TRACE_ROWS, 128, seed);
+        assert!(h.fault_field().is_enabled());
+        assert!(h.fault_field().faulty_cols() > 0, "seed {seed:#x} drew no faults");
+        for (i, op) in ops.iter().enumerate() {
+            let oh = apply(&mut h, op);
+            let od = apply(&mut d, op);
+            assert_eq!(oh, od, "seed {seed:#x} op {i} {op:?}: read-outs diverge");
+            parity(&h, &d).unwrap_or_else(|e| panic!("seed {seed:#x} op {i} {op:?}: {e}"));
+        }
+        assert!(h.fault_flips() > 0, "seed {seed:#x}: campaign trace must inject flips");
+    }
 }
 
 #[test]

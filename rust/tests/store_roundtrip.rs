@@ -5,6 +5,7 @@
 //! load` must reproduce every `Calibration` bit for bit.
 
 use pudtune::calib::lattice::OffsetLattice;
+use pudtune::dram::temperature::Environment;
 use pudtune::prelude::*;
 use pudtune::util::json;
 
@@ -119,4 +120,104 @@ fn fuzz_roundtrip_covers_all_frac_configs() {
         assert_eq!(loaded.levels, original.levels);
         assert_eq!(loaded.lattice.config, original.lattice.config);
     }
+}
+
+#[test]
+fn fuzz_roundtrip_preserves_v2_env_metadata() {
+    // Random calibration environments — including awkward non-integral
+    // floats — survive `insert_with_env → to_json → parse → from_json
+    // → stored_env` exactly, and entries inserted without telemetry
+    // stay env-free rather than inventing metadata.
+    let cfg = DeviceConfig::default();
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let neutral = OffsetLattice::build(&cfg, &fc).neutral_level() as u8;
+    let mut rng = Rng::new(0xE27);
+
+    for trial in 0..32 {
+        let cols = 1 + (rng.next_u64() as usize) % 1024;
+        let mut store = CalibStore::default();
+        let mut expected: Vec<(SubarrayId, Option<Environment>)> = Vec::new();
+        for b in 0..4usize {
+            let id = SubarrayId::new(0, b, trial);
+            let calib = lattice_calib(&cfg, fc, random_levels(&mut rng, cols, 64, neutral));
+            if b % 2 == 0 {
+                let env = Environment {
+                    temp_c: 20.0 + rng.f64() * 80.0,
+                    hours: rng.f64() * 500.0,
+                };
+                store.insert_with_env(id, &calib, env);
+                expected.push((id, Some(env)));
+            } else {
+                store.insert(id, &calib);
+                expected.push((id, None));
+            }
+        }
+        let back = CalibStore::from_json(&json::parse(&store.to_json().to_string()).unwrap())
+            .unwrap_or_else(|e| panic!("trial {trial}: decode failed: {e}"));
+        assert_eq!(back.entries, store.entries, "trial {trial}");
+        for (id, env) in expected {
+            assert_eq!(back.stored_env(id), env, "trial {trial} {id:?}");
+        }
+    }
+}
+
+#[test]
+fn service_snapshot_env_metadata_gates_rehydration() {
+    // The full service loop around the v2 metadata: `snapshot_store`
+    // records the calibration environment, rehydration at the same die
+    // temperature accepts, v1-style entries (no env) still accept
+    // purely on the spot check, and a temperature excursion beyond
+    // `DriftPolicy::max_temp_delta_c` rejects the stored entry before
+    // any spot check is spent on it.
+    let cfg = DeviceConfig::default();
+    let (banks, cols) = (2usize, 256);
+    let fresh = |cfg: &DeviceConfig| {
+        let svc = ServiceConfig { serve_samples: 512, ..ServiceConfig::default() };
+        let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg.clone())).unwrap();
+        for b in 0..banks {
+            s.register(SubarrayId::new(0, b, 0), 32, cols, 0xE27E);
+        }
+        s
+    };
+
+    let mut first = fresh(&cfg);
+    assert!(first.run_pending(usize::MAX).iter().all(|(_, r)| r.is_ok()));
+    let store = first.snapshot_store();
+    for id in first.ids() {
+        assert!(store.stored_env(id).is_some(), "snapshot must carry v2 env metadata");
+    }
+
+    // Same temperature: the env gate passes and the spot check accepts.
+    let mut warm = fresh(&cfg);
+    for (id, o) in warm.load_store(&store) {
+        assert!(matches!(o, LoadOutcome::Accepted { .. }), "{id:?}: {o:?}");
+    }
+    assert!(warm.run_pending(usize::MAX).is_empty(), "accepted loads satisfy cold-start jobs");
+
+    // v1-style store (no env metadata): accepted on the spot check alone.
+    let mut v1 = CalibStore::default();
+    for id in first.ids() {
+        assert!(v1.stored_env(id).is_none());
+        v1.insert(id, first.calibration(id).unwrap());
+    }
+    let mut legacy = fresh(&cfg);
+    for (id, o) in legacy.load_store(&v1) {
+        assert!(matches!(o, LoadOutcome::Accepted { .. }), "{id:?}: {o:?}");
+    }
+
+    // Excursion beyond the policy bound (20 C default): the stored env
+    // no longer matches the die, so the entry is rejected up front and
+    // stays queued for recalibration.
+    let mut hot = fresh(&cfg);
+    for id in hot.ids() {
+        assert!(hot.set_temperature(id, 85.0));
+    }
+    for (id, o) in hot.load_store(&store) {
+        assert!(
+            matches!(&o, LoadOutcome::Incompatible(e) if e.contains("die temperature")),
+            "{id:?}: {o:?}"
+        );
+    }
+    assert_eq!(hot.metrics.counter("recalib.rejected_on_load"), banks as u64);
+    assert_eq!(hot.run_pending(usize::MAX).len(), banks);
 }
