@@ -198,7 +198,7 @@ fn reliability_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
     let mut unprot = build(svc_base);
     let mut raw = (1.0, 0usize);
     for _ in 0..epochs {
-        raw = correctness(&unprot.serve_plan(&plan, &operands));
+        raw = correctness(&unprot.serve_plan(&plan, &operands).expect("compiled plan serves"));
     }
     suite.derive("reliability_masked_correctness_unprotected", raw.0);
 
@@ -210,7 +210,7 @@ fn reliability_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
         ..svc_base
     });
     for _ in 0..epochs {
-        prot.serve_plan(&plan, &operands);
+        prot.serve_plan(&plan, &operands).expect("compiled plan serves");
         prot.maintain();
     }
     suite.bench(
@@ -218,13 +218,13 @@ fn reliability_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
         0,
         if fast { 2 } else { 3 },
         || {
-            let outs = prot.serve_plan(&plan, &operands);
+            let outs = prot.serve_plan(&plan, &operands).expect("compiled plan serves");
             std::hint::black_box(outs.len());
             let (_, scrubs) = prot.maintain();
             std::hint::black_box(scrubs.len());
         },
     );
-    let steady = correctness(&prot.serve_plan(&plan, &operands));
+    let steady = correctness(&prot.serve_plan(&plan, &operands).expect("compiled plan serves"));
     suite.derive("reliability_masked_correctness_protected", steady.0);
     let quarantined: usize = prot
         .ids()
@@ -245,7 +245,7 @@ fn reliability_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
     // 3x redundant execution: majority vote over independent replica
     // fault fields, no quarantine state needed.
     let mut red = build(ServiceConfig { redundancy: 3, ..svc_base });
-    let voted = correctness(&red.serve_plan(&plan, &operands));
+    let voted = correctness(&red.serve_plan(&plan, &operands).expect("compiled plan serves"));
     suite.derive("reliability_masked_correctness_redundant3", voted.0);
     suite
 }
@@ -284,6 +284,26 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
+
+    // Static verification: the admission-path cost of re-verifying an
+    // unverified plan (compiled plans skip this in O(1)), on the
+    // cheapest and costliest common arithmetic plans.
+    {
+        use pudtune::pud::plan::{PudOp, WorkloadPlan};
+        use pudtune::pud::verify::verify_plan;
+        let add8 = WorkloadPlan::compile(PudOp::Add { width: 8 }).unwrap();
+        let mul8 = WorkloadPlan::compile(PudOp::Mul { width: 8 }).unwrap();
+        suite.bench("micro/verify-add8", 2, 20, || {
+            let report = verify_plan(&add8);
+            assert!(report.is_clean());
+            std::hint::black_box(report.peak_rows);
+        });
+        suite.bench("micro/verify-mul8", 2, 20, || {
+            let report = verify_plan(&mul8);
+            assert!(report.is_clean());
+            std::hint::black_box(report.peak_rows);
+        });
+    }
 
     // Native sampling batch: 512 samples x 8,192 columns (one
     // Algorithm-1 iteration's work), seed kernel vs tiled kernel.

@@ -544,6 +544,9 @@ impl NativeEngine {
     /// many independently seeded spare banks and combines the outputs
     /// by per-column bitwise majority vote ([`SPARE_STREAM`]).
     fn execute_request(&self, req: &ComputeRequest) -> Result<ComputeResult, PudError> {
+        // Admission: reject unverified (hand-assembled) plans before
+        // any replica touches a subarray. Compiled plans pass in O(1).
+        crate::pud::verify::admit(&req.plan)?;
         for v in &req.operands {
             if v.len() != req.cols {
                 return Err(PudError::WidthMismatch { expected: req.cols, got: v.len() });

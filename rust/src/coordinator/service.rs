@@ -805,7 +805,7 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
         operands: &[Vec<u64>],
     ) -> Result<Vec<WorkloadOutcome>, PudError> {
         let plan = Arc::new(WorkloadPlan::compile(op)?);
-        Ok(self.serve_plan(&plan, operands))
+        self.serve_plan(&plan, operands)
     }
 
     /// Serve one compiled workload batch on every subarray (one
@@ -817,12 +817,16 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
     /// bank whose geometry disagrees degrades to one `Err` outcome.
     /// Each outcome counts how many masked columns matched the
     /// software golden model (`compute.golden_mismatch` tracks the
-    /// shortfall).
+    /// shortfall). A plan that did not come out of
+    /// `WorkloadPlan::compile` is statically verified first and a
+    /// charge-state violation rejects the whole request before any
+    /// bank executes (`PudError::Verification`).
     pub fn serve_plan(
         &mut self,
         plan: &Arc<WorkloadPlan>,
         operands: &[Vec<u64>],
-    ) -> Vec<WorkloadOutcome> {
+    ) -> Result<Vec<WorkloadOutcome>, PudError> {
+        crate::pud::verify::admit(plan)?;
         self.last_workload = Some((plan.clone(), operands.to_vec()));
         let redundancy = self.svc.redundancy.max(1);
         let ids: Vec<SubarrayId> = self.entries.keys().copied().collect();
@@ -861,7 +865,8 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
         // successfully at a different width re-broadcasts it below.
         let shared_cols = operands.first().map(|v| v.len()).unwrap_or(1);
         let golden = plan.golden_outputs(operands, shared_cols);
-        ids.into_iter()
+        let outcomes = ids
+            .into_iter()
             .zip(results)
             .map(|(id, result)| {
                 let entry = self.entries.get_mut(&id).expect("serving a registered entry");
@@ -906,7 +911,8 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
                 };
                 WorkloadOutcome { id, state, result, golden_correct, active_cols }
             })
-            .collect()
+            .collect();
+        Ok(outcomes)
     }
 
     /// Replay the last served workload **unmasked** on every subarray

@@ -94,9 +94,21 @@
 //! [`calib::engine::ComputeEngine`] (or serve them with drift-aware
 //! recalibration through `RecalibService::serve_workload`).
 //!
+//! Every plan is **statically verified** before it touches a subarray:
+//! [`pud::verify`] lowers it to the abstract command stream the
+//! executor would issue and checks a four-state charge machine
+//! (Uninitialized → Packed ⇄ Fracd-analog → Dead) plus independent
+//! liveness and shape analyses, reporting violations as stable
+//! `P001`–`P008` diagnostics (catalogued in the [`pud`] module docs).
+//! `WorkloadPlan::compile` self-checks its output, the engines and
+//! `RecalibService` reject unverified custom plans at admission, and
+//! `pudtune lint` sweeps the whole built-in op vocabulary — plus
+//! user-supplied circuit files — exiting nonzero on any diagnostic.
+//!
 //! The `pudtune` binary exposes every experiment in the paper
-//! (`pudtune table1`, `pudtune fig5`, `pudtune run --op add8`, ...);
-//! `rust/benches/` regenerates each table and figure.
+//! (`pudtune table1`, `pudtune fig5`, `pudtune run --op add8`,
+//! `pudtune lint`, ...); `rust/benches/` regenerates each table and
+//! figure.
 
 pub mod analysis;
 pub mod calib;
@@ -141,5 +153,8 @@ pub mod prelude {
     pub use crate::dram::subarray::{OpCounts, RowStorage, Subarray};
     pub use crate::pud::majx::MajX;
     pub use crate::pud::plan::{BitwiseOp, PudError, PudOp, WorkloadPlan};
+    pub use crate::pud::verify::{
+        verify_circuit, verify_plan, DiagCode, Diagnostic, VerifyReport,
+    };
     pub use crate::util::rng::Rng;
 }

@@ -15,6 +15,7 @@
 //!                  [--drift-temp dC] [--drift-age H] [--drift-ecr F] [--native]
 //! pudtune campaign [--banks N] [--cols N] [--epochs N] [--op add2]
 //!                  [--redundancy N] [--native]
+//! pudtune lint     [--max-width N] [--json] [circuit.pud ...]
 //! pudtune fit-model [--target 0.466]
 //! pudtune trace    [maj5|maj3] [--fracs x,y,z]
 //! pudtune artifacts
@@ -44,7 +45,7 @@ use pudtune::experiments;
 use pudtune::runtime::Runtime;
 use pudtune::util::table;
 
-const BOOL_FLAGS: &[&str] = &["native", "timed", "full", "help"];
+const BOOL_FLAGS: &[&str] = &["native", "timed", "full", "help", "json"];
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -91,6 +92,7 @@ fn run(raw: &[String]) -> Result<()> {
         "calibrate" => cmd_calibrate(&args),
         "serve" => cmd_serve(&args),
         "campaign" => cmd_campaign(&args),
+        "lint" => cmd_lint(&args),
         "fit-model" => cmd_fit_model(&args),
         "trace" => cmd_trace(&args),
         "artifacts" => cmd_artifacts(),
@@ -585,8 +587,8 @@ fn cmd_campaign(args: &cli::Args) -> Result<()> {
         redundancy.max(1)
     );
     for epoch in 1..=epochs {
-        let prot = protected.serve_plan(&plan, &operands);
-        let base = baseline.serve_plan(&plan, &operands);
+        let prot = protected.serve_plan(&plan, &operands).map_err(anyhow::Error::new)?;
+        let base = baseline.serve_plan(&plan, &operands).map_err(anyhow::Error::new)?;
         let (p_bad, p_active, p_fail) = tally(&prot);
         let (b_bad, b_active, b_fail) = tally(&base);
         let quarantined: usize = protected
@@ -611,6 +613,58 @@ fn cmd_campaign(args: &cli::Args) -> Result<()> {
         }
     }
     println!("\nprotected service metrics:\n{}", protected.metrics.render());
+    Ok(())
+}
+
+/// Statically verify the entire built-in op vocabulary (arithmetic
+/// widths up to `--max-width`) and any user-supplied circuit files
+/// against the charge-state verifier, and exit nonzero on **any**
+/// diagnostic — warnings included. `--json` renders one
+/// machine-readable report line per target.
+fn cmd_lint(args: &cli::Args) -> Result<()> {
+    use pudtune::pud::plan::{PudOp, WorkloadPlan};
+    use pudtune::pud::verify;
+
+    let max_width = args.usize("max-width", 16).map_err(anyhow::Error::msg)?;
+    let json = args.flag("json");
+    let mut total = 0usize;
+    let mut targets = 0usize;
+
+    let report_one = |label: &str, report: &verify::VerifyReport| -> usize {
+        if json {
+            println!("{{\"target\":\"{label}\",\"report\":{}}}", report.to_json());
+        } else if report.is_clean() {
+            println!("{label}: clean (peak {} rows)", report.peak_rows);
+        } else {
+            println!("{label}: {} diagnostic(s)", report.diagnostics.len());
+            for d in &report.diagnostics {
+                println!("  {d}");
+            }
+        }
+        report.diagnostics.len()
+    };
+
+    for op in PudOp::vocabulary(max_width) {
+        let label = op.label();
+        targets += 1;
+        match WorkloadPlan::compile(op) {
+            Ok(plan) => total += report_one(&label, &verify::verify_plan(&plan)),
+            Err(e) => {
+                total += 1;
+                println!("{label}: failed to compile: {e}");
+            }
+        }
+    }
+    for path in &args.positional {
+        let text = std::fs::read_to_string(path)?;
+        let circuit = verify::parse_circuit(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        targets += 1;
+        total += report_one(path, &verify::verify_circuit(&circuit));
+    }
+    if total > 0 {
+        return Err(anyhow!("lint found {total} diagnostic(s) across {targets} target(s)"));
+    }
+    println!("lint: {targets} target(s) clean");
     Ok(())
 }
 

@@ -80,6 +80,10 @@ pub fn run_plan(
     plan: &WorkloadPlan,
     inputs: &[Vec<u8>],
 ) -> Result<CircuitRun, PudError> {
+    // Admission: plans from `WorkloadPlan::compile` pass in O(1);
+    // hand-assembled plans get the full charge-state verification and
+    // are rejected here, before the subarray is touched.
+    crate::pud::verify::admit(plan)?;
     let circuit = &plan.circuit;
     if inputs.len() != circuit.n_inputs {
         return Err(PudError::ArityMismatch {

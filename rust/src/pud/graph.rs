@@ -182,7 +182,9 @@ impl MajCircuit {
             match g.arity() {
                 3 => c.maj3 += 1,
                 5 => c.maj5 += 1,
-                _ => unreachable!(),
+                // Malformed arities are priced as zero; the verifier
+                // surfaces them as P008 instead of a panic here.
+                _ => {}
             }
             signals.extend(g.args.iter().copied());
         }

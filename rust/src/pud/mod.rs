@@ -38,7 +38,34 @@
 //! * [`plan`] — the `PudOp` workload vocabulary and one-time plan
 //!   compilation (typed errors, death lists, peak-row precomputation);
 //! * [`rowalloc`] — scratch-row allocation inside the subarray;
-//! * [`exec`] — plan execution against the golden model.
+//! * [`exec`] — plan execution against the golden model;
+//! * [`verify`] — the static charge-state verifier (below).
+//!
+//! ## Diagnostics
+//!
+//! [`verify`] lowers every plan to the abstract command stream the
+//! executor would issue and checks it against a four-state row machine
+//! (Uninitialized → Packed ⇄ Fracd-analog → Dead), plus independent
+//! liveness/shape analyses. Violations carry stable codes:
+//!
+//! | Code | Severity | Meaning | Fix hint |
+//! |------|----------|---------|----------|
+//! | `P001` | error | use after death: a row is consumed after its release | move the signal's death entry to (or after) its true last consumer |
+//! | `P002` | error | double-Frac / analog aliasing: charge op on a row already holding analog charge | restore the row with a SiMRA before charging or reusing it |
+//! | `P003` | error | read of a never-written row | write the row (input, constant or gate result) first |
+//! | `P004` | error | row-budget overflow, or replayed peak disagrees with the compiled `peak_rows` | shrink the circuit's live set or recompile to refresh `peak_rows` |
+//! | `P005` | warning | dead gate: a gate's output is never consumed | drop the gate or route its output to a consumer/output |
+//! | `P006` | error | plan exits with analog rows un-restored | end every MAJX flow with its SiMRA restore |
+//! | `P007` | error | death lists disagree with independent last-use analysis | recompile the plan instead of editing death lists |
+//! | `P008` | error | gate arity / signal range / operand shape mismatch | use 3- or 5-ary gates over in-range, already-defined signals |
+//!
+//! [`plan::WorkloadPlan::compile`] verifies its own output (errors fail
+//! the compile as [`plan::PudError::Verification`]); the executor,
+//! compute engines and `RecalibService::serve_plan` re-verify any plan
+//! that did not come out of `compile` before admission; and `pudtune
+//! lint` sweeps the whole built-in vocabulary plus user-supplied
+//! circuit files, exiting nonzero on any diagnostic (warnings
+//! included).
 
 pub mod adder;
 pub mod exec;
@@ -49,3 +76,4 @@ pub mod majx;
 pub mod multiplier;
 pub mod plan;
 pub mod rowalloc;
+pub mod verify;

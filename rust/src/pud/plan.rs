@@ -42,6 +42,10 @@ pub enum PudError {
     /// The circuit itself is invalid (bad gate arity, dangling signal
     /// reference, unsupported shape).
     MalformedCircuit(String),
+    /// The static charge-state verifier ([`crate::pud::verify`])
+    /// rejected the plan; `code` is the stable `P###` diagnostic code
+    /// and `message` the rendered diagnostic (with fix hint).
+    Verification { code: &'static str, message: String },
 }
 
 impl fmt::Display for PudError {
@@ -61,6 +65,9 @@ impl fmt::Display for PudError {
                 )
             }
             PudError::MalformedCircuit(msg) => write!(f, "malformed circuit: {msg}"),
+            PudError::Verification { code, message } => {
+                write!(f, "plan rejected by verifier ({code}): {message}")
+            }
         }
     }
 }
@@ -232,6 +239,26 @@ impl PudOp {
             }
         }
     }
+
+    /// The whole built-in op vocabulary, arithmetic widths capped at
+    /// `max_width` (and at each op's own hard limit). This is the set
+    /// `pudtune lint` and the verifier property tests sweep.
+    pub fn vocabulary(max_width: usize) -> Vec<PudOp> {
+        let mut v = vec![
+            PudOp::Bitwise(BitwiseOp::And),
+            PudOp::Bitwise(BitwiseOp::Or),
+            PudOp::Bitwise(BitwiseOp::Not),
+            PudOp::MajReduce { m: 3 },
+            PudOp::MajReduce { m: 5 },
+        ];
+        for width in 1..=max_width.min(63) {
+            v.push(PudOp::Add { width });
+        }
+        for width in 1..=max_width.min(32) {
+            v.push(PudOp::Mul { width });
+        }
+        v
+    }
 }
 
 fn require_width(width: usize, max: usize, what: &str) -> Result<(), PudError> {
@@ -273,11 +300,19 @@ pub struct WorkloadPlan {
     /// Per-gate lists of canonical signals whose last consumer is that
     /// gate — the executor releases their rows right after it fires.
     deaths: Vec<Vec<Signal>>,
+    /// Set only by [`WorkloadPlan::compile`] after the static verifier
+    /// ([`crate::pud::verify`]) passed its output — the admission
+    /// layers trust it and skip re-verification.
+    verified: bool,
 }
 
 impl WorkloadPlan {
     /// Compile an op: synthesise + validate the circuit, run last-use
-    /// analysis and the allocation dry-run, price the gates.
+    /// analysis and the allocation dry-run, price the gates — then run
+    /// the static charge-state verifier on the result. The self-check
+    /// pins `analyse` against the verifier's independent liveness and
+    /// allocation replay on every compile; an error-severity diagnostic
+    /// fails compilation as [`PudError::Verification`].
     pub fn compile(op: PudOp) -> Result<Self, PudError> {
         let circuit = op.circuit()?;
         if circuit.outputs.len() > 64 {
@@ -288,7 +323,13 @@ impl WorkloadPlan {
         }
         let (deaths, peak_rows) = analyse(&circuit);
         let cost = circuit.cost();
-        Ok(Self { op, circuit, cost, peak_rows, deaths })
+        let mut plan = Self { op, circuit, cost, peak_rows, deaths, verified: false };
+        let report = crate::pud::verify::verify_plan(&plan);
+        if let Some(d) = report.errors().next() {
+            return Err(d.clone().into());
+        }
+        plan.verified = true;
+        Ok(plan)
     }
 
     /// Plan an arbitrary circuit (sugar for [`PudOp::Custom`]).
@@ -296,9 +337,34 @@ impl WorkloadPlan {
         Self::compile(PudOp::Custom(circuit))
     }
 
+    /// Assemble a plan from raw parts **without** compiling or
+    /// verifying — the entry point for verifier tooling and mutation
+    /// tests that need to represent ill-formed plans. The result is
+    /// never marked verified, so every admission layer re-verifies it.
+    pub fn assemble(
+        op: PudOp,
+        circuit: MajCircuit,
+        deaths: Vec<Vec<Signal>>,
+        peak_rows: usize,
+    ) -> Self {
+        let cost = circuit.cost();
+        Self { op, circuit, cost, peak_rows, deaths, verified: false }
+    }
+
+    /// Whether this plan came out of [`WorkloadPlan::compile`] with a
+    /// clean verifier report (admission layers skip re-verification).
+    pub fn is_verified(&self) -> bool {
+        self.verified
+    }
+
     /// Canonical signals dying at gate `gi`.
     pub fn deaths(&self, gi: usize) -> &[Signal] {
         &self.deaths[gi]
+    }
+
+    /// All death lists, indexed by gate (one list per gate).
+    pub fn death_lists(&self) -> &[Vec<Signal>] {
+        &self.deaths
     }
 
     /// Encode per-column operand values into the circuit's input

@@ -1,0 +1,1314 @@
+//! Static charge-state verification of circuits and workload plans.
+//!
+//! PuDGhost-style corruption on real chips is systematic: specific
+//! command interleavings open rows in charge states the sequence
+//! designer never anticipated, and reliability collapses from there.
+//! Our compiler ([`crate::pud::plan::WorkloadPlan::compile`]) computes
+//! death lists and a peak-row dry-run, but nothing *proved* a plan was
+//! charge-state safe before it touched a subarray — a hand-built
+//! `Custom(MajCircuit)` could read a dead row, double-Frac a
+//! calibration row, alias analog charge, or exit un-restored, and the
+//! failure only surfaced as a golden-model mismatch at serve time.
+//!
+//! This module is the missing proof: an abstract interpreter that
+//! lowers a plan to the exact command stream the executor would issue
+//! ([`ChargeScript`]) and tracks every row through a four-state
+//! machine — **Uninitialized → Packed ⇄ Fracd-analog → Dead** —
+//! alongside independent (re-derived, not shared-code) liveness and
+//! shape analyses. Violations surface as typed [`Diagnostic`]s with
+//! stable `P###` codes (catalogued in [`DiagCode`] and the `pud`
+//! module docs), each carrying the gate index, the abstract row, a
+//! one-line fix hint and a machine-readable JSON rendering.
+//!
+//! Wiring:
+//!
+//! * [`WorkloadPlan::compile`] runs [`verify_plan`] on its own output
+//!   and refuses to return a plan with error-severity diagnostics —
+//!   the compiler's `analyse()` is pinned against this module's
+//!   independent recomputation on every compile;
+//! * [`crate::pud::exec::run_plan`], the compute engines and
+//!   `RecalibService::serve_plan` call [`admit`] before touching DRAM,
+//!   so an unverified hand-assembled plan is rejected at admission;
+//! * `pudtune lint` verifies the built-in [`PudOp`] vocabulary and
+//!   user-supplied circuit files ([`parse_circuit`]), exiting nonzero
+//!   on any diagnostic.
+
+use crate::pud::graph::{Gate, MajCircuit, Signal};
+use crate::pud::plan::{PudError, PudOp, WorkloadPlan};
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+/// Stable diagnostic codes. The numbering is part of the tool's
+/// contract (CI, lint output parsers); never renumber, only append.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DiagCode {
+    /// P001 — a row is read (or released again) after its death.
+    UseAfterDeath,
+    /// P002 — illegal charge operation on an analog row: a second
+    /// Frac without an intervening SiMRA restore, or reading/copying/
+    /// overwriting a row that still holds fractional charge.
+    DoubleFrac,
+    /// P003 — a row is consumed before anything was written to it.
+    ReadUninitialized,
+    /// P004 — the replayed scratch-row high-water mark overflows the
+    /// budget, or disagrees with the plan's compiled `peak_rows`.
+    RowBudgetOverflow,
+    /// P005 — a gate's output (either polarity) is never consumed.
+    DeadGate,
+    /// P006 — the plan exits with rows still in the analog state.
+    UnrestoredExit,
+    /// P007 — the plan's death lists disagree with an independent
+    /// last-use recomputation (or are structurally malformed).
+    DeathListMismatch,
+    /// P008 — gate arity, signal range, operand shape or output count
+    /// is inconsistent with the op.
+    ShapeMismatch,
+}
+
+/// Diagnostic severity. Errors block compilation and admission;
+/// warnings still fail `pudtune lint` (a clean vocabulary has zero
+/// diagnostics of either severity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl DiagCode {
+    /// Every code, in numeric order.
+    pub const ALL: [DiagCode; 8] = [
+        DiagCode::UseAfterDeath,
+        DiagCode::DoubleFrac,
+        DiagCode::ReadUninitialized,
+        DiagCode::RowBudgetOverflow,
+        DiagCode::DeadGate,
+        DiagCode::UnrestoredExit,
+        DiagCode::DeathListMismatch,
+        DiagCode::ShapeMismatch,
+    ];
+
+    /// The stable `P###` code string.
+    pub fn code(&self) -> &'static str {
+        match self {
+            DiagCode::UseAfterDeath => "P001",
+            DiagCode::DoubleFrac => "P002",
+            DiagCode::ReadUninitialized => "P003",
+            DiagCode::RowBudgetOverflow => "P004",
+            DiagCode::DeadGate => "P005",
+            DiagCode::UnrestoredExit => "P006",
+            DiagCode::DeathListMismatch => "P007",
+            DiagCode::ShapeMismatch => "P008",
+        }
+    }
+
+    /// One-line meaning (module docs, lint output).
+    pub fn meaning(&self) -> &'static str {
+        match self {
+            DiagCode::UseAfterDeath => "use after death: a row is consumed after its release",
+            DiagCode::DoubleFrac => {
+                "double-Frac / analog aliasing: charge op on a row already holding analog charge"
+            }
+            DiagCode::ReadUninitialized => "read of a never-written row",
+            DiagCode::RowBudgetOverflow => {
+                "row-budget overflow or peak-row disagreement with the compiled plan"
+            }
+            DiagCode::DeadGate => "dead gate: a gate's output is never consumed",
+            DiagCode::UnrestoredExit => "plan exits with analog rows un-restored",
+            DiagCode::DeathListMismatch => {
+                "death lists disagree with independent last-use analysis"
+            }
+            DiagCode::ShapeMismatch => "gate arity / signal range / operand shape mismatch",
+        }
+    }
+
+    /// One-line fix hint attached to every diagnostic of this code.
+    pub fn hint(&self) -> &'static str {
+        match self {
+            DiagCode::UseAfterDeath => {
+                "move the signal's death entry to (or after) its true last consumer"
+            }
+            DiagCode::DoubleFrac => "restore the row with a SiMRA before charging or reusing it",
+            DiagCode::ReadUninitialized => "write the row (input, constant or gate result) first",
+            DiagCode::RowBudgetOverflow => {
+                "shrink the circuit's live set or recompile to refresh peak_rows"
+            }
+            DiagCode::DeadGate => "drop the gate or route its output to a consumer/output",
+            DiagCode::UnrestoredExit => "end every MAJX flow with its SiMRA restore",
+            DiagCode::DeathListMismatch => "recompile the plan instead of editing death lists",
+            DiagCode::ShapeMismatch => {
+                "use 3- or 5-ary gates over in-range, already-defined signals"
+            }
+        }
+    }
+
+    /// Default severity: everything except a dead gate blocks
+    /// compilation/admission.
+    pub fn severity(&self) -> Severity {
+        match self {
+            DiagCode::DeadGate => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+}
+
+/// One verification finding: a stable code plus where (gate index in
+/// the circuit, abstract row in the replay) and a specific message.
+/// The fix hint is derived from the code ([`DiagCode::hint`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub code: DiagCode,
+    /// Gate index the violation is attributed to (`None` for
+    /// setup/readout/exit findings).
+    pub gate: Option<usize>,
+    /// Abstract row in the lowered script (`None` for plan-level
+    /// findings that concern a signal, not a physical row).
+    pub row: Option<usize>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn new(code: DiagCode, gate: Option<usize>, row: Option<usize>, message: String) -> Self {
+        Self { code, gate, row, message }
+    }
+
+    pub fn severity(&self) -> Severity {
+        self.code.severity()
+    }
+
+    pub fn hint(&self) -> &'static str {
+        self.code.hint()
+    }
+
+    /// Machine-readable rendering, one JSON object per diagnostic.
+    pub fn to_json(&self) -> String {
+        let opt = |v: Option<usize>| v.map_or("null".into(), |x| x.to_string());
+        format!(
+            "{{\"code\":\"{}\",\"severity\":\"{}\",\"gate\":{},\"row\":{},\
+             \"message\":\"{}\",\"hint\":\"{}\"}}",
+            self.code.code(),
+            match self.severity() {
+                Severity::Error => "error",
+                Severity::Warning => "warning",
+            },
+            opt(self.gate),
+            opt(self.row),
+            json_escape(&self.message),
+            json_escape(self.hint()),
+        )
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity() {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        write!(f, "{sev}[{}]", self.code.code())?;
+        if let Some(g) = self.gate {
+            write!(f, " gate {g}")?;
+        }
+        if let Some(r) = self.row {
+            write!(f, " row {r}")?;
+        }
+        write!(f, ": {} (hint: {})", self.message, self.hint())
+    }
+}
+
+impl std::error::Error for Diagnostic {}
+
+impl From<Diagnostic> for PudError {
+    fn from(d: Diagnostic) -> Self {
+        PudError::Verification { code: d.code.code(), message: d.to_string() }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The outcome of verifying one plan/circuit: every diagnostic found
+/// plus the replayed scratch-row high-water mark (0 when structural
+/// errors prevented the replay).
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Peak simultaneous scratch rows observed by the abstract replay
+    /// — must equal the compiler's dry-run `peak_rows` on any plan the
+    /// compiler produced.
+    pub peak_rows: usize,
+}
+
+impl VerifyReport {
+    /// No diagnostics of any severity.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Error-severity diagnostics (the ones that block admission).
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity() == Severity::Error)
+    }
+
+    /// Whether any diagnostic carries `code`.
+    pub fn has(&self, code: DiagCode) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    /// Machine-readable rendering of the whole report.
+    pub fn to_json(&self) -> String {
+        let items: Vec<String> = self.diagnostics.iter().map(|d| d.to_json()).collect();
+        format!(
+            "{{\"clean\":{},\"peak_rows\":{},\"diagnostics\":[{}]}}",
+            self.is_clean(),
+            self.peak_rows,
+            items.join(",")
+        )
+    }
+}
+
+impl fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_clean() {
+            return write!(f, "clean (peak {} rows)", self.peak_rows);
+        }
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if i > 0 {
+                writeln!(f)?;
+            }
+            write!(f, "{d}")?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Abstract command stream (the lowering target)
+// ---------------------------------------------------------------------------
+
+/// Abstract row layout mirroring [`crate::dram::geometry::RowMap::standard`]:
+/// the 8-row SiMRA group, the three calibration stores, the constant
+/// rows, then the data region the replay allocator hands out.
+pub const SIMRA_BASE: usize = 0;
+/// Rows holding the pre-identified calibration bits.
+pub const CALIB_STORE: [usize; 3] = [8, 9, 10];
+/// All-zeros constant row.
+pub const CONST0: usize = 11;
+/// All-ones constant row.
+pub const CONST1: usize = 12;
+/// First scratch row the replay allocator hands out.
+pub const DATA_BASE: usize = 16;
+
+/// One abstract DRAM command over abstract rows. `gate` attributes the
+/// command to the circuit gate whose MAJX flow issued it (`None` for
+/// setup, input materialisation and output readout).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ChargeOp {
+    /// Column-interface write of fresh full-swing data.
+    Write { row: usize, gate: Option<usize> },
+    /// RowCopy `src → dst` (operand/calibration staging).
+    Copy { src: usize, dst: usize, gate: Option<usize> },
+    /// One Frac application burst on a calibration row (the burst's
+    /// pulse count is a `FracConfig` runtime choice; a *second* burst
+    /// without an intervening restore is the P002 violation).
+    Frac { row: usize, gate: Option<usize> },
+    /// SiMRA over the aligned group `base..base+8`; the hardware flow
+    /// always restores every participating row to full swing —
+    /// `restore: false` models a truncated command sequence.
+    Simra { base: usize, restore: bool, gate: Option<usize> },
+    /// Column-interface read.
+    Read { row: usize, gate: Option<usize> },
+    /// Scratch row released back to the allocator (death list).
+    Release { row: usize, gate: Option<usize> },
+}
+
+impl ChargeOp {
+    fn gate(&self) -> Option<usize> {
+        match self {
+            ChargeOp::Write { gate, .. }
+            | ChargeOp::Copy { gate, .. }
+            | ChargeOp::Frac { gate, .. }
+            | ChargeOp::Simra { gate, .. }
+            | ChargeOp::Read { gate, .. }
+            | ChargeOp::Release { gate, .. } => *gate,
+        }
+    }
+}
+
+/// A plan lowered to the abstract command stream the executor would
+/// issue, with the replay allocator's high-water mark.
+#[derive(Clone, Debug)]
+pub struct ChargeScript {
+    pub ops: Vec<ChargeOp>,
+    /// Peak simultaneous scratch rows during the lowering replay.
+    pub peak_rows: usize,
+}
+
+/// Replay of [`crate::pud::rowalloc::RowAlloc`]'s discipline (LIFO
+/// free list, unbounded) so the abstract script reuses rows in exactly
+/// the order the executor would.
+struct ReplayAlloc {
+    free: Vec<usize>,
+    next: usize,
+    live: usize,
+    high: usize,
+}
+
+impl ReplayAlloc {
+    fn new() -> Self {
+        Self { free: Vec::new(), next: DATA_BASE, live: 0, high: 0 }
+    }
+
+    fn alloc(&mut self) -> usize {
+        let row = self.free.pop().unwrap_or_else(|| {
+            let r = self.next;
+            self.next += 1;
+            r
+        });
+        self.live += 1;
+        self.high = self.high.max(self.live);
+        row
+    }
+
+    fn release(&mut self, row: usize) {
+        self.live -= 1;
+        self.free.push(row);
+    }
+}
+
+/// Lower a plan to its abstract command stream, mirroring
+/// [`crate::pud::exec::run_plan`] step for step: setup writes, inputs
+/// materialised up front, NOT rows at first use, per-gate
+/// stage/Frac/SiMRA/copy-out, death-list releases, output readout.
+///
+/// Fails (with a P007/P008 diagnostic) only when the circuit or death
+/// lists are too malformed to walk — out-of-range references the
+/// abstract machine cannot even name rows for.
+pub fn lower_plan(plan: &WorkloadPlan) -> Result<ChargeScript, Diagnostic> {
+    let circuit = &plan.circuit;
+    let n_gates = circuit.gates.len();
+    if plan.death_lists().len() != n_gates {
+        return Err(Diagnostic::new(
+            DiagCode::DeathListMismatch,
+            None,
+            None,
+            format!(
+                "plan carries {} death lists for {n_gates} gates",
+                plan.death_lists().len()
+            ),
+        ));
+    }
+    let in_range = |s: Signal, upto: usize| match s {
+        Signal::Input(i) | Signal::NotInput(i) => i < circuit.n_inputs,
+        Signal::Gate(g) | Signal::NotGate(g) => g < upto,
+        Signal::Const(_) => true,
+    };
+    for (gi, gate) in circuit.gates.iter().enumerate() {
+        for &s in &gate.args {
+            if !in_range(s, gi) {
+                return Err(Diagnostic::new(
+                    DiagCode::ShapeMismatch,
+                    Some(gi),
+                    None,
+                    format!("gate {gi} references out-of-range signal {s:?}"),
+                ));
+            }
+        }
+    }
+    for &s in &circuit.outputs {
+        if !in_range(s, n_gates) {
+            return Err(Diagnostic::new(
+                DiagCode::ShapeMismatch,
+                None,
+                None,
+                format!("output references out-of-range signal {s:?}"),
+            ));
+        }
+    }
+
+    let mut ops = Vec::new();
+    let mut alloc = ReplayAlloc::new();
+    // setup_subarray: calibration stores + constants.
+    for &r in &CALIB_STORE {
+        ops.push(ChargeOp::Write { row: r, gate: None });
+    }
+    ops.push(ChargeOp::Write { row: CONST0, gate: None });
+    ops.push(ChargeOp::Write { row: CONST1, gate: None });
+
+    // Primary inputs.
+    let mut input_rows = Vec::with_capacity(circuit.n_inputs);
+    for _ in 0..circuit.n_inputs {
+        let r = alloc.alloc();
+        ops.push(ChargeOp::Write { row: r, gate: None });
+        input_rows.push(r);
+    }
+    // Gate result rows keep their id after release so a corrupt plan's
+    // stale read still names the row it would hit.
+    let mut gate_rows: Vec<Option<usize>> = vec![None; n_gates];
+    let mut gate_released = vec![false; n_gates];
+    let mut not_rows: HashMap<Signal, usize> = HashMap::new();
+
+    // Resolve a signal to a readable row, materialising negations on
+    // demand exactly like the executor's `row_of!`.
+    macro_rules! row_of {
+        ($sig:expr, $gate:expr) => {{
+            let sig: Signal = $sig;
+            match sig {
+                Signal::Input(i) => input_rows[i],
+                Signal::Gate(g) => gate_rows[g].expect("topological order checked above"),
+                Signal::Const(false) => CONST0,
+                Signal::Const(true) => CONST1,
+                Signal::NotInput(_) | Signal::NotGate(_) => {
+                    if let Some(&r) = not_rows.get(&sig) {
+                        r
+                    } else {
+                        let src = match sig {
+                            Signal::NotInput(i) => input_rows[i],
+                            Signal::NotGate(g) => {
+                                gate_rows[g].expect("topological order checked above")
+                            }
+                            _ => unreachable!(),
+                        };
+                        ops.push(ChargeOp::Read { row: src, gate: $gate });
+                        let r = alloc.alloc();
+                        ops.push(ChargeOp::Write { row: r, gate: $gate });
+                        not_rows.insert(sig, r);
+                        r
+                    }
+                }
+            }
+        }};
+    }
+
+    for (gi, gate) in circuit.gates.iter().enumerate() {
+        let m = gate.arity();
+        let op_rows: Vec<usize> = gate.args.iter().map(|&s| row_of!(s, Some(gi))).collect();
+        // ①' stage operands + calibration (+ constants for MAJ3) into
+        // the aligned 8-row group.
+        for (i, &r) in op_rows.iter().enumerate() {
+            ops.push(ChargeOp::Copy { src: r, dst: SIMRA_BASE + i, gate: Some(gi) });
+        }
+        for (j, &store) in CALIB_STORE.iter().enumerate() {
+            ops.push(ChargeOp::Copy { src: store, dst: SIMRA_BASE + m + j, gate: Some(gi) });
+        }
+        if m + 3 < 8 {
+            ops.push(ChargeOp::Copy { src: CONST0, dst: SIMRA_BASE + m + 3, gate: Some(gi) });
+            ops.push(ChargeOp::Copy { src: CONST1, dst: SIMRA_BASE + m + 4, gate: Some(gi) });
+        }
+        // ②' one Frac burst per calibration row.
+        for j in 0..CALIB_STORE.len() {
+            ops.push(ChargeOp::Frac { row: SIMRA_BASE + m + j, gate: Some(gi) });
+        }
+        // ③ SiMRA (restores the whole group to full swing).
+        ops.push(ChargeOp::Simra { base: SIMRA_BASE, restore: true, gate: Some(gi) });
+        // ④ copy the result out of the group.
+        let r = alloc.alloc();
+        ops.push(ChargeOp::Write { row: r, gate: Some(gi) });
+        gate_rows[gi] = Some(r);
+        // Death-list releases (both polarities at the canonical death,
+        // mirroring the executor's take()-guarded releases).
+        for &sig in plan.deaths(gi) {
+            match sig {
+                Signal::Gate(g) if g < n_gates => {
+                    if let Some(row) = gate_rows[g] {
+                        if !gate_released[g] {
+                            gate_released[g] = true;
+                            alloc.release(row);
+                            ops.push(ChargeOp::Release { row, gate: Some(gi) });
+                        }
+                    }
+                    if let Some(row) = not_rows.remove(&Signal::NotGate(g)) {
+                        alloc.release(row);
+                        ops.push(ChargeOp::Release { row, gate: Some(gi) });
+                    }
+                }
+                Signal::Input(i) if i < circuit.n_inputs => {
+                    if let Some(row) = not_rows.remove(&Signal::NotInput(i)) {
+                        alloc.release(row);
+                        ops.push(ChargeOp::Release { row, gate: Some(gi) });
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // Output readout (negated outputs materialise one more NOT row).
+    for &s in &circuit.outputs {
+        let r = row_of!(s, None);
+        ops.push(ChargeOp::Read { row: r, gate: None });
+    }
+
+    Ok(ChargeScript { ops, peak_rows: alloc.high })
+}
+
+/// Abstract row state during script interpretation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RowState {
+    Uninitialized,
+    Packed,
+    Analog,
+    Dead,
+}
+
+/// Run the four-state abstract machine over a lowered script. Every
+/// command checks its rows' states and transitions them; violations
+/// become P001/P002/P003/P006 diagnostics. Pure state-machine pass —
+/// no knowledge of the plan that produced the script, which is what
+/// lets mutation tests corrupt scripts directly.
+pub fn check_script(script: &ChargeScript) -> Vec<Diagnostic> {
+    let max_row = script
+        .ops
+        .iter()
+        .map(|op| match op {
+            ChargeOp::Write { row, .. }
+            | ChargeOp::Frac { row, .. }
+            | ChargeOp::Read { row, .. }
+            | ChargeOp::Release { row, .. } => *row,
+            ChargeOp::Copy { src, dst, .. } => (*src).max(*dst),
+            ChargeOp::Simra { base, .. } => base + 7,
+        })
+        .max()
+        .unwrap_or(0);
+    let mut state = vec![RowState::Uninitialized; max_row + 1];
+    let mut diags = Vec::new();
+
+    fn check_read(
+        state: &[RowState],
+        row: usize,
+        gate: Option<usize>,
+        what: &str,
+        diags: &mut Vec<Diagnostic>,
+    ) {
+        match state[row] {
+            RowState::Packed => {}
+            RowState::Analog => diags.push(Diagnostic::new(
+                DiagCode::DoubleFrac,
+                gate,
+                Some(row),
+                format!("{what} of row {row} while it holds analog charge"),
+            )),
+            RowState::Dead => diags.push(Diagnostic::new(
+                DiagCode::UseAfterDeath,
+                gate,
+                Some(row),
+                format!("{what} of row {row} after its release"),
+            )),
+            RowState::Uninitialized => diags.push(Diagnostic::new(
+                DiagCode::ReadUninitialized,
+                gate,
+                Some(row),
+                format!("{what} of row {row} before anything was written to it"),
+            )),
+        }
+    }
+
+    for op in &script.ops {
+        let gate = op.gate();
+        match *op {
+            ChargeOp::Write { row, .. } => {
+                if state[row] == RowState::Analog {
+                    diags.push(Diagnostic::new(
+                        DiagCode::DoubleFrac,
+                        gate,
+                        Some(row),
+                        format!("write over row {row} while it holds analog charge"),
+                    ));
+                }
+                state[row] = RowState::Packed;
+            }
+            ChargeOp::Copy { src, dst, .. } => {
+                check_read(&state, src, gate, "RowCopy source read", &mut diags);
+                if state[dst] == RowState::Analog {
+                    diags.push(Diagnostic::new(
+                        DiagCode::DoubleFrac,
+                        gate,
+                        Some(dst),
+                        format!("RowCopy over row {dst} while it holds analog charge"),
+                    ));
+                }
+                state[dst] = RowState::Packed;
+            }
+            ChargeOp::Frac { row, .. } => match state[row] {
+                RowState::Packed => state[row] = RowState::Analog,
+                RowState::Analog => diags.push(Diagnostic::new(
+                    DiagCode::DoubleFrac,
+                    gate,
+                    Some(row),
+                    format!("second Frac burst on row {row} without a SiMRA restore"),
+                )),
+                RowState::Dead => diags.push(Diagnostic::new(
+                    DiagCode::UseAfterDeath,
+                    gate,
+                    Some(row),
+                    format!("Frac on row {row} after its release"),
+                )),
+                RowState::Uninitialized => diags.push(Diagnostic::new(
+                    DiagCode::ReadUninitialized,
+                    gate,
+                    Some(row),
+                    format!("Frac on row {row} before anything was written to it"),
+                )),
+            },
+            ChargeOp::Simra { base, restore, .. } => {
+                for row in base..base + 8 {
+                    match state[row] {
+                        RowState::Packed | RowState::Analog => {}
+                        RowState::Dead => diags.push(Diagnostic::new(
+                            DiagCode::UseAfterDeath,
+                            gate,
+                            Some(row),
+                            format!("SiMRA opens row {row} after its release"),
+                        )),
+                        RowState::Uninitialized => diags.push(Diagnostic::new(
+                            DiagCode::ReadUninitialized,
+                            gate,
+                            Some(row),
+                            format!("SiMRA opens never-written row {row}"),
+                        )),
+                    }
+                    if restore {
+                        state[row] = RowState::Packed;
+                    }
+                }
+            }
+            ChargeOp::Read { row, .. } => {
+                check_read(&state, row, gate, "column read", &mut diags);
+            }
+            ChargeOp::Release { row, .. } => {
+                match state[row] {
+                    RowState::Packed => {}
+                    RowState::Analog => diags.push(Diagnostic::new(
+                        DiagCode::UnrestoredExit,
+                        gate,
+                        Some(row),
+                        format!("row {row} released while still analog"),
+                    )),
+                    RowState::Dead => diags.push(Diagnostic::new(
+                        DiagCode::UseAfterDeath,
+                        gate,
+                        Some(row),
+                        format!("double release of row {row}"),
+                    )),
+                    RowState::Uninitialized => diags.push(Diagnostic::new(
+                        DiagCode::ReadUninitialized,
+                        gate,
+                        Some(row),
+                        format!("release of never-written row {row}"),
+                    )),
+                }
+                state[row] = RowState::Dead;
+            }
+        }
+    }
+    for (row, s) in state.iter().enumerate() {
+        if *s == RowState::Analog {
+            diags.push(Diagnostic::new(
+                DiagCode::UnrestoredExit,
+                None,
+                Some(row),
+                format!("plan exits with row {row} still analog"),
+            ));
+        }
+    }
+    diags
+}
+
+// ---------------------------------------------------------------------------
+// Plan-level analyses (independent of the compiler's analyse())
+// ---------------------------------------------------------------------------
+
+/// Liveness key shared by both polarities of a signal (the executor
+/// releases a row and its materialised negation together). Re-derived
+/// here so the verifier never shares code with the compiler's pass.
+fn canonical(s: Signal) -> Signal {
+    match s {
+        Signal::NotInput(i) => Signal::Input(i),
+        Signal::NotGate(g) => Signal::Gate(g),
+        other => other,
+    }
+}
+
+/// Independent last-use recomputation: a single *reverse* scan (the
+/// compiler scans forward and overwrites), outputs pinned live
+/// forever. `None` = live at exit.
+fn independent_last_use(circuit: &MajCircuit) -> HashMap<Signal, Option<usize>> {
+    let mut last: HashMap<Signal, Option<usize>> = HashMap::new();
+    for &s in &circuit.outputs {
+        last.insert(canonical(s), None);
+    }
+    for (gi, gate) in circuit.gates.iter().enumerate().rev() {
+        for &s in &gate.args {
+            last.entry(canonical(s)).or_insert(Some(gi));
+        }
+    }
+    last
+}
+
+/// Structural (P008) checks: op/operand shape, output count, gate
+/// arities, signal ranges and topological order.
+fn structural_diags(plan: &WorkloadPlan) -> Vec<Diagnostic> {
+    let circuit = &plan.circuit;
+    let mut diags = Vec::new();
+    let expected = plan.op.n_operands() * plan.op.operand_width();
+    if circuit.n_inputs != expected {
+        diags.push(Diagnostic::new(
+            DiagCode::ShapeMismatch,
+            None,
+            None,
+            format!(
+                "op {} encodes {expected} input bit-planes but the circuit declares {}",
+                plan.op.label(),
+                circuit.n_inputs
+            ),
+        ));
+    }
+    if circuit.outputs.len() > 64 {
+        diags.push(Diagnostic::new(
+            DiagCode::ShapeMismatch,
+            None,
+            None,
+            format!("{} outputs do not fit the 64-bit value decode", circuit.outputs.len()),
+        ));
+    }
+    let mut check = |s: Signal, gi: Option<usize>, upto: usize, diags: &mut Vec<Diagnostic>| {
+        let bad = match s {
+            Signal::Input(i) | Signal::NotInput(i) if i >= circuit.n_inputs => Some(format!(
+                "input {i} out of range (circuit has {} inputs)",
+                circuit.n_inputs
+            )),
+            Signal::Gate(g) | Signal::NotGate(g) if g >= upto => {
+                Some(format!("gate {g} referenced before definition"))
+            }
+            _ => None,
+        };
+        if let Some(msg) = bad {
+            diags.push(Diagnostic::new(DiagCode::ShapeMismatch, gi, None, msg));
+        }
+    };
+    for (gi, gate) in circuit.gates.iter().enumerate() {
+        if gate.arity() != 3 && gate.arity() != 5 {
+            diags.push(Diagnostic::new(
+                DiagCode::ShapeMismatch,
+                Some(gi),
+                None,
+                format!("gate {gi} is {}-ary; majority gates are 3- or 5-ary", gate.arity()),
+            ));
+        }
+        for &s in &gate.args {
+            check(s, Some(gi), gi, &mut diags);
+        }
+    }
+    for &s in &circuit.outputs {
+        check(s, None, circuit.gates.len(), &mut diags);
+    }
+    diags
+}
+
+/// Death-list cross-checks: structural sanity of the entries (P007),
+/// set-equality against the independent liveness (P007), use/readout
+/// after a plan-declared death (P001) and dead gates (P005).
+fn liveness_diags(plan: &WorkloadPlan) -> Vec<Diagnostic> {
+    let circuit = &plan.circuit;
+    let n_gates = circuit.gates.len();
+    let mut diags = Vec::new();
+
+    // Entry sanity: death lists hold canonical, in-range signals.
+    let mut death_at: HashMap<Signal, usize> = HashMap::new();
+    for (gi, list) in plan.death_lists().iter().enumerate() {
+        for &sig in list {
+            let ok = match sig {
+                Signal::Gate(g) => g < n_gates,
+                Signal::Input(i) => i < circuit.n_inputs,
+                Signal::Const(_) => true,
+                Signal::NotGate(_) | Signal::NotInput(_) => false,
+            };
+            if !ok {
+                diags.push(Diagnostic::new(
+                    DiagCode::DeathListMismatch,
+                    Some(gi),
+                    None,
+                    format!("death list at gate {gi} holds non-canonical or out-of-range {sig:?}"),
+                ));
+            }
+            if death_at.insert(sig, gi).is_some() {
+                diags.push(Diagnostic::new(
+                    DiagCode::DeathListMismatch,
+                    Some(gi),
+                    None,
+                    format!("{sig:?} appears in more than one death list"),
+                ));
+            }
+        }
+    }
+
+    // Independent recomputation vs the plan's lists, per gate, as sets.
+    let last = independent_last_use(circuit);
+    let mut expect: Vec<HashSet<Signal>> = vec![HashSet::new(); n_gates];
+    for (&sig, &lu) in &last {
+        if let Some(gi) = lu {
+            expect[gi].insert(sig);
+        }
+    }
+    for gi in 0..n_gates {
+        let got: HashSet<Signal> = plan.deaths(gi).iter().copied().collect();
+        if got != expect[gi] {
+            let missing: Vec<Signal> = expect[gi].difference(&got).copied().collect();
+            let extra: Vec<Signal> = got.difference(&expect[gi]).copied().collect();
+            diags.push(Diagnostic::new(
+                DiagCode::DeathListMismatch,
+                Some(gi),
+                None,
+                format!(
+                    "death list at gate {gi} disagrees with independent liveness \
+                     (missing {missing:?}, extra {extra:?})"
+                ),
+            ));
+        }
+    }
+
+    // P001: any consumer after the plan-declared death.
+    for (gi, gate) in circuit.gates.iter().enumerate() {
+        for &s in &gate.args {
+            if let Some(&d) = death_at.get(&canonical(s)) {
+                if d < gi {
+                    diags.push(Diagnostic::new(
+                        DiagCode::UseAfterDeath,
+                        Some(gi),
+                        None,
+                        format!("gate {gi} reads {s:?}, released after gate {d}"),
+                    ));
+                }
+            }
+        }
+    }
+    for &s in &circuit.outputs {
+        if let Some(&d) = death_at.get(&canonical(s)) {
+            diags.push(Diagnostic::new(
+                DiagCode::UseAfterDeath,
+                None,
+                None,
+                format!("output {s:?} is released after gate {d}; outputs must live to exit"),
+            ));
+        }
+    }
+
+    // P005: gates whose output no one consumes.
+    for g in 0..n_gates {
+        if !last.contains_key(&Signal::Gate(g)) {
+            diags.push(Diagnostic::new(
+                DiagCode::DeadGate,
+                Some(g),
+                None,
+                format!("gate {g}'s output is never consumed by a gate or output"),
+            ));
+        }
+    }
+    diags
+}
+
+/// Verify a compiled plan: structural shape, death lists against an
+/// independent liveness recomputation, and the abstract charge-state
+/// replay, with the replayed peak checked against the plan's compiled
+/// `peak_rows`. See the module docs for the diagnostic catalogue.
+pub fn verify_plan(plan: &WorkloadPlan) -> VerifyReport {
+    verify_plan_with_budget(plan, None)
+}
+
+/// [`verify_plan`], additionally checking the replayed peak against a
+/// scratch-row budget (e.g. `sub.rows - map.data_base`): exceeding it
+/// is a P004 error before any subarray is touched.
+pub fn verify_plan_with_budget(plan: &WorkloadPlan, budget: Option<usize>) -> VerifyReport {
+    let mut diags = structural_diags(plan);
+    if plan.death_lists().len() != plan.circuit.gates.len() {
+        diags.push(Diagnostic::new(
+            DiagCode::DeathListMismatch,
+            None,
+            None,
+            format!(
+                "plan carries {} death lists for {} gates",
+                plan.death_lists().len(),
+                plan.circuit.gates.len()
+            ),
+        ));
+        return VerifyReport { diagnostics: diags, peak_rows: 0 };
+    }
+    if diags.iter().any(|d| d.severity() == Severity::Error) {
+        // Out-of-range references: the lowering cannot even name rows.
+        return VerifyReport { diagnostics: diags, peak_rows: 0 };
+    }
+    diags.extend(liveness_diags(plan));
+    let mut peak_rows = 0;
+    match lower_plan(plan) {
+        Ok(script) => {
+            diags.extend(check_script(&script));
+            peak_rows = script.peak_rows;
+            if peak_rows != plan.peak_rows {
+                diags.push(Diagnostic::new(
+                    DiagCode::RowBudgetOverflow,
+                    None,
+                    None,
+                    format!(
+                        "plan declares peak_rows {} but the replay reaches {peak_rows}",
+                        plan.peak_rows
+                    ),
+                ));
+            }
+        }
+        Err(d) => diags.push(d),
+    }
+    if let Some(b) = budget {
+        let need = peak_rows.max(plan.peak_rows);
+        if need > b {
+            diags.push(Diagnostic::new(
+                DiagCode::RowBudgetOverflow,
+                None,
+                None,
+                format!("circuit needs {need} scratch rows, budget is {b}"),
+            ));
+        }
+    }
+    VerifyReport { diagnostics: diags, peak_rows }
+}
+
+/// Verify a raw circuit (no compiled plan): derives its own death
+/// lists from the independent liveness pass, then runs the full plan
+/// verification. This is the `pudtune lint` path for user-supplied
+/// circuit files — shape violations surface as diagnostics, never as
+/// compile errors.
+pub fn verify_circuit(circuit: &MajCircuit) -> VerifyReport {
+    verify_circuit_with_budget(circuit, None)
+}
+
+/// [`verify_circuit`] with a scratch-row budget (P004 on overflow).
+pub fn verify_circuit_with_budget(circuit: &MajCircuit, budget: Option<usize>) -> VerifyReport {
+    let mut deaths: Vec<Vec<Signal>> = vec![Vec::new(); circuit.gates.len()];
+    for (&sig, &lu) in &independent_last_use(circuit) {
+        if let Some(gi) = lu {
+            deaths[gi].push(sig);
+        }
+    }
+    // Probe the replay once for the true peak, so the assembled plan
+    // carries a self-consistent `peak_rows` and any P004 the caller
+    // sees is about the *budget*, not our own placeholder.
+    let probe = WorkloadPlan::assemble(
+        PudOp::Custom(circuit.clone()),
+        circuit.clone(),
+        deaths.clone(),
+        0,
+    );
+    let peak = lower_plan(&probe).map(|s| s.peak_rows).unwrap_or(0);
+    let plan =
+        WorkloadPlan::assemble(PudOp::Custom(circuit.clone()), circuit.clone(), deaths, peak);
+    verify_plan_with_budget(&plan, budget)
+}
+
+/// Admission gate for the executor, compute engines and the serving
+/// layer: a compiler-verified plan passes in O(1); anything else (a
+/// hand-assembled plan) is fully verified here and rejected on the
+/// first error-severity diagnostic.
+pub fn admit(plan: &WorkloadPlan) -> Result<(), PudError> {
+    if plan.is_verified() {
+        return Ok(());
+    }
+    let report = verify_plan(plan);
+    match report.errors().next() {
+        Some(d) => Err(d.clone().into()),
+        None => Ok(()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Circuit text format (pudtune lint)
+// ---------------------------------------------------------------------------
+
+/// Parse the `pudtune lint` circuit file format:
+///
+/// ```text
+/// # comment
+/// inputs 2
+/// gate i0 i1 0        # MAJ3 over input 0, input 1, const 0
+/// gate i0 i1 g0 g0 1  # MAJ5; gN = gate N's output
+/// output g1
+/// output !g0          # negated signals: !iN / !gN
+/// ```
+///
+/// The parser is deliberately permissive — wrong arities, out-of-range
+/// and forward references all parse, so the *verifier* reports them as
+/// P008 diagnostics instead of the parser hiding them.
+pub fn parse_circuit(text: &str) -> Result<MajCircuit, String> {
+    let mut circuit = MajCircuit::new(0);
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let key = toks.next().unwrap();
+        let parse_sig = |tok: &str| -> Result<Signal, String> {
+            let (neg, body) = match tok.strip_prefix('!') {
+                Some(rest) => (true, rest),
+                None => (false, tok),
+            };
+            let sig = if let Some(n) = body.strip_prefix('i') {
+                let i: usize =
+                    n.parse().map_err(|_| format!("line {}: bad input '{tok}'", ln + 1))?;
+                if neg { Signal::NotInput(i) } else { Signal::Input(i) }
+            } else if let Some(n) = body.strip_prefix('g') {
+                let g: usize =
+                    n.parse().map_err(|_| format!("line {}: bad gate '{tok}'", ln + 1))?;
+                if neg { Signal::NotGate(g) } else { Signal::Gate(g) }
+            } else if body == "0" && !neg {
+                Signal::Const(false)
+            } else if body == "1" && !neg {
+                Signal::Const(true)
+            } else {
+                return Err(format!("line {}: bad signal '{tok}'", ln + 1));
+            };
+            Ok(sig)
+        };
+        match key {
+            "inputs" => {
+                let n = toks
+                    .next()
+                    .ok_or_else(|| format!("line {}: inputs needs a count", ln + 1))?;
+                circuit.n_inputs =
+                    n.parse().map_err(|_| format!("line {}: bad count '{n}'", ln + 1))?;
+            }
+            "gate" => {
+                let args: Result<Vec<Signal>, String> = toks.map(parse_sig).collect();
+                circuit.gates.push(Gate { args: args? });
+            }
+            "output" => {
+                let tok = toks
+                    .next()
+                    .ok_or_else(|| format!("line {}: output needs a signal", ln + 1))?;
+                circuit.outputs.push(parse_sig(tok)?);
+            }
+            other => return Err(format!("line {}: unknown directive '{other}'", ln + 1)),
+        }
+    }
+    Ok(circuit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pud::plan::BitwiseOp;
+
+    fn compiled(op: PudOp) -> WorkloadPlan {
+        WorkloadPlan::compile(op).unwrap()
+    }
+
+    #[test]
+    fn vocabulary_plans_verify_clean() {
+        for op in PudOp::vocabulary(8) {
+            let label = op.label();
+            let plan = compiled(op);
+            let report = verify_plan(&plan);
+            assert!(report.is_clean(), "{label}: {report}");
+            assert_eq!(report.peak_rows, plan.peak_rows, "{label}: replay peak diverged");
+        }
+    }
+
+    #[test]
+    fn codes_are_stable_and_documented() {
+        let codes: Vec<&str> = DiagCode::ALL.iter().map(|c| c.code()).collect();
+        assert_eq!(
+            codes,
+            vec!["P001", "P002", "P003", "P004", "P005", "P006", "P007", "P008"]
+        );
+        for c in DiagCode::ALL {
+            assert!(!c.meaning().is_empty());
+            assert!(!c.hint().is_empty());
+        }
+    }
+
+    #[test]
+    fn diagnostics_render_json_and_display() {
+        let d = Diagnostic::new(
+            DiagCode::UseAfterDeath,
+            Some(3),
+            Some(17),
+            "read of row 17 \"after\" death".into(),
+        );
+        let j = d.to_json();
+        assert!(j.contains("\"code\":\"P001\""), "{j}");
+        assert!(j.contains("\"gate\":3"), "{j}");
+        assert!(j.contains("\"row\":17"), "{j}");
+        assert!(j.contains("\\\"after\\\""), "escaping: {j}");
+        assert!(d.to_string().contains("error[P001] gate 3 row 17"), "{d}");
+        let report = VerifyReport { diagnostics: vec![d], peak_rows: 9 };
+        let rj = report.to_json();
+        assert!(rj.contains("\"clean\":false"), "{rj}");
+        assert!(rj.contains("\"peak_rows\":9"), "{rj}");
+        assert!(!report.is_clean());
+        assert_eq!(report.errors().count(), 1);
+    }
+
+    #[test]
+    fn early_death_is_use_after_death() {
+        // add2: move Input(0)'s death to gate 0 — its real consumers
+        // at later gates now read a released row.
+        let good = compiled(PudOp::Add { width: 2 });
+        let mut deaths: Vec<Vec<Signal>> =
+            (0..good.circuit.gates.len()).map(|gi| good.deaths(gi).to_vec()).collect();
+        let victim = Signal::Input(0);
+        let from = deaths
+            .iter()
+            .position(|l| l.contains(&victim))
+            .expect("input 0 dies somewhere");
+        assert!(from > 0, "need an earlier gate to move the death to");
+        deaths[from].retain(|&s| s != victim);
+        deaths[0].push(victim);
+        let plan =
+            WorkloadPlan::assemble(good.op.clone(), good.circuit.clone(), deaths, good.peak_rows);
+        let report = verify_plan(&plan);
+        assert!(report.has(DiagCode::UseAfterDeath), "{report}");
+        assert!(report.has(DiagCode::DeathListMismatch), "{report}");
+        assert!(admit(&plan).is_err());
+    }
+
+    #[test]
+    fn script_mutations_hit_the_state_machine() {
+        let plan = compiled(PudOp::MajReduce { m: 3 });
+        let script = lower_plan(&plan).unwrap();
+        assert!(check_script(&script).is_empty());
+
+        // Drop a SiMRA restore: the calibration slots stay analog, so
+        // the next command over them is P002 or the exit is P006.
+        let mut broken = script.clone();
+        for op in broken.ops.iter_mut() {
+            if let ChargeOp::Simra { restore, .. } = op {
+                *restore = false;
+            }
+        }
+        let diags = check_script(&broken);
+        assert!(
+            diags.iter().any(|d| matches!(d.code, DiagCode::DoubleFrac | DiagCode::UnrestoredExit)),
+            "{diags:?}"
+        );
+
+        // Duplicate a Frac burst: P002 exactly.
+        let mut doubled = script.clone();
+        let fi = doubled
+            .ops
+            .iter()
+            .position(|op| matches!(op, ChargeOp::Frac { .. }))
+            .unwrap();
+        let dup = doubled.ops[fi].clone();
+        doubled.ops.insert(fi + 1, dup);
+        assert!(check_script(&doubled).iter().any(|d| d.code == DiagCode::DoubleFrac));
+
+        // Drop the first data-row write: its readers hit Uninitialized.
+        let mut unwritten = script.clone();
+        let wi = unwritten
+            .ops
+            .iter()
+            .position(|op| matches!(op, ChargeOp::Write { row, .. } if *row >= DATA_BASE))
+            .unwrap();
+        unwritten.ops.remove(wi);
+        assert!(check_script(&unwritten)
+            .iter()
+            .any(|d| d.code == DiagCode::ReadUninitialized));
+    }
+
+    #[test]
+    fn budget_overflow_is_p004() {
+        let plan = compiled(PudOp::Mul { width: 4 });
+        let report = verify_plan_with_budget(&plan, Some(plan.peak_rows - 1));
+        assert!(report.has(DiagCode::RowBudgetOverflow), "{report}");
+        assert!(verify_plan_with_budget(&plan, Some(plan.peak_rows)).is_clean());
+    }
+
+    #[test]
+    fn dead_gate_is_a_warning() {
+        let mut c = MajCircuit::new(2);
+        let g = c.push(Gate::maj3(Signal::Input(0), Signal::Input(1), Signal::Const(false)));
+        c.push(Gate::maj3(Signal::Input(0), Signal::Input(1), Signal::Const(true)));
+        c.output(g);
+        let report = verify_circuit(&c);
+        assert!(report.has(DiagCode::DeadGate), "{report}");
+        assert_eq!(report.errors().count(), 0, "{report}");
+        // A dead gate compiles (warning), but still fails lint.
+        let plan = WorkloadPlan::from_circuit(c).unwrap();
+        assert!(verify_plan(&plan).has(DiagCode::DeadGate));
+        assert!(admit(&plan).is_ok());
+    }
+
+    #[test]
+    fn shape_violations_are_p008() {
+        // 4-ary gate.
+        let mut c = MajCircuit::new(2);
+        c.gates.push(Gate {
+            args: vec![
+                Signal::Input(0),
+                Signal::Input(1),
+                Signal::Const(false),
+                Signal::Const(true),
+            ],
+        });
+        c.outputs.push(Signal::Gate(0));
+        assert!(verify_circuit(&c).has(DiagCode::ShapeMismatch));
+
+        // Bumped input index (out of range).
+        let mut plan = compiled(PudOp::Bitwise(BitwiseOp::And));
+        plan.circuit.gates[0].args[0] = Signal::Input(7);
+        assert!(verify_plan(&plan).has(DiagCode::ShapeMismatch));
+
+        // Forward gate reference.
+        let mut fwd = MajCircuit::new(1);
+        fwd.gates.push(Gate {
+            args: vec![Signal::Gate(5), Signal::Input(0), Signal::Const(false)],
+        });
+        fwd.outputs.push(Signal::Gate(0));
+        assert!(verify_circuit(&fwd).has(DiagCode::ShapeMismatch));
+    }
+
+    #[test]
+    fn lint_format_roundtrips() {
+        let text = "
+# MAJ3 with a spare negation
+inputs 3
+gate i0 i1 i2
+gate !g0 0 1   # identity of the negation
+output g1
+";
+        let c = parse_circuit(text).unwrap();
+        assert_eq!(c.n_inputs, 3);
+        assert_eq!(c.gates.len(), 2);
+        assert_eq!(c.gates[1].args[0], Signal::NotGate(0));
+        assert_eq!(c.outputs, vec![Signal::Gate(1)]);
+        assert!(verify_circuit(&c).is_clean());
+
+        assert!(parse_circuit("gate i0 iX 0").is_err());
+        assert!(parse_circuit("widgets 3").is_err());
+        // Malformed shapes parse; the verifier reports them.
+        let four = parse_circuit("inputs 1\ngate i0 i0 0 1\noutput g0").unwrap();
+        assert!(verify_circuit(&four).has(DiagCode::ShapeMismatch));
+    }
+
+    #[test]
+    fn vocabulary_covers_every_op_family() {
+        let v = PudOp::vocabulary(16);
+        assert!(v.contains(&PudOp::Bitwise(BitwiseOp::And)));
+        assert!(v.contains(&PudOp::Bitwise(BitwiseOp::Or)));
+        assert!(v.contains(&PudOp::Bitwise(BitwiseOp::Not)));
+        assert!(v.contains(&PudOp::MajReduce { m: 3 }));
+        assert!(v.contains(&PudOp::MajReduce { m: 5 }));
+        for w in 1..=16 {
+            assert!(v.contains(&PudOp::Add { width: w }));
+            assert!(v.contains(&PudOp::Mul { width: w }));
+        }
+    }
+}

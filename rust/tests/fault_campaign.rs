@@ -66,7 +66,7 @@ fn unprotected_service_keeps_serving_corrupted_outputs() {
 
     let mut per_epoch = Vec::new();
     for _ in 0..4 {
-        per_epoch.push(mismatches(&service.serve_plan(&plan, &operands)));
+        per_epoch.push(mismatches(&service.serve_plan(&plan, &operands).unwrap()));
         // Countermeasures are off by default: maintain() polls drift
         // but never scrubs, and no quarantine state exists to change.
         let (_, scrubs) = service.maintain();
@@ -103,7 +103,7 @@ fn quarantine_and_scrub_drive_steady_state_mismatches_to_zero() {
     let mut bad = Vec::new();
     let mut served = Vec::new();
     for _ in 0..epochs {
-        let outs = service.serve_plan(&plan, &operands);
+        let outs = service.serve_plan(&plan, &operands).unwrap();
         bad.push(mismatches(&outs));
         served.push(active(&outs));
         let (_, scrubs) = service.maintain();
@@ -153,8 +153,8 @@ fn redundant_execution_outvotes_most_corruption() {
     );
     let (plan, operands) = workload();
 
-    let single = mismatches(&plain.serve_plan(&plan, &operands));
-    let majority = mismatches(&voted.serve_plan(&plan, &operands));
+    let single = mismatches(&plain.serve_plan(&plan, &operands).unwrap());
+    let majority = mismatches(&voted.serve_plan(&plan, &operands).unwrap());
     assert!(single > 0, "campaign must corrupt the single-shot serve");
     // Replicas draw independent fault fields from derived seeds, so a
     // column corrupted in the primary is overwhelmingly likely to be

@@ -87,7 +87,7 @@ fn serving_stays_golden_through_drift_and_recalibration() {
             }
         }
         // The precompiled-plan path serves identically.
-        let replay = s.serve_plan(&plan, &[a.clone(), b.clone()]);
+        let replay = s.serve_plan(&plan, &[a.clone(), b.clone()]).expect("compiled plan serves");
         for (o, r) in out.iter().zip(&replay) {
             assert_eq!(
                 o.result.as_ref().unwrap().outputs,

@@ -1,0 +1,320 @@
+//! Mutation testing for the static plan verifier: corrupt known-good
+//! compiled plans (and their lowered charge scripts) one class at a
+//! time and assert every diagnostic class P001–P008 is caught, then
+//! prove the admission layers (`ComputeEngine`, `RecalibService`)
+//! reject the corrupted plans before touching any subarray.
+//!
+//! Plan-level mutants go through `WorkloadPlan::assemble`, which never
+//! marks its result verified — exactly the hole a hand-crafted or
+//! bit-rotted plan would arrive through.
+
+use pudtune::calib::algorithm::{CalibParams, Calibration, NativeEngine};
+use pudtune::calib::engine::{ComputeEngine, ComputeRequest};
+use pudtune::calib::lattice::{FracConfig, OffsetLattice};
+use pudtune::config::device::DeviceConfig;
+use pudtune::coordinator::service::{RecalibService, ServiceConfig};
+use pudtune::dram::geometry::SubarrayId;
+use pudtune::pud::graph::{Gate, MajCircuit, Signal};
+use pudtune::pud::plan::{BitwiseOp, PudError, PudOp, WorkloadPlan};
+use pudtune::pud::verify::{
+    self, check_script, lower_plan, ChargeOp, DiagCode, Severity, DATA_BASE,
+};
+use pudtune::util::rng::Rng;
+use std::sync::Arc;
+
+fn compiled(op: PudOp) -> WorkloadPlan {
+    WorkloadPlan::compile(op).unwrap()
+}
+
+/// Re-assemble a plan with mutated parts; the result is unverified.
+fn reassemble(plan: &WorkloadPlan, deaths: Vec<Vec<Signal>>, peak: usize) -> WorkloadPlan {
+    WorkloadPlan::assemble(plan.op.clone(), plan.circuit.clone(), deaths, peak)
+}
+
+/// The canonical P001 mutant: move one death entry to an earlier gate,
+/// so the signal's true last consumer reads a released row.
+fn early_death_mutant(plan: &WorkloadPlan, rng: &mut Rng) -> WorkloadPlan {
+    let mut deaths = plan.death_lists().to_vec();
+    let candidates: Vec<(usize, usize)> = deaths
+        .iter()
+        .enumerate()
+        .filter(|(gi, _)| *gi > 0)
+        .flat_map(|(gi, list)| (0..list.len()).map(move |k| (gi, k)))
+        .collect();
+    assert!(!candidates.is_empty(), "{}: no movable death entry", plan.op.label());
+    let (gi, k) = candidates[rng.below(candidates.len() as u64) as usize];
+    let sig = deaths[gi].remove(k);
+    let earlier = rng.below(gi as u64) as usize;
+    deaths[earlier].push(sig);
+    reassemble(plan, deaths, plan.peak_rows)
+}
+
+#[test]
+fn p001_moved_death_entry_is_use_after_death() {
+    let mut rng = Rng::new(0x001);
+    for op in [
+        PudOp::Add { width: 2 },
+        PudOp::Add { width: 5 },
+        PudOp::Mul { width: 2 },
+        PudOp::Mul { width: 3 },
+    ] {
+        let plan = compiled(op);
+        for _ in 0..4 {
+            let mutant = early_death_mutant(&plan, &mut rng);
+            assert!(!mutant.is_verified());
+            let report = verify::verify_plan(&mutant);
+            assert!(
+                report.has(DiagCode::UseAfterDeath),
+                "{}: moving a death entry earlier must be P001\n{report}",
+                plan.op.label()
+            );
+            assert!(
+                report.has(DiagCode::DeathListMismatch),
+                "{}: the edited lists must also disagree with liveness\n{report}",
+                plan.op.label()
+            );
+            assert!(verify::admit(&mutant).is_err());
+        }
+    }
+}
+
+#[test]
+fn p002_duplicated_frac_and_dropped_restore_are_caught() {
+    let plan = compiled(PudOp::Add { width: 2 });
+    let script = lower_plan(&plan).unwrap();
+    assert!(check_script(&script).is_empty(), "baseline script must be clean");
+
+    // Mutation: replay one Frac burst (a double-charge without an
+    // intervening restore).
+    let frac_at = script
+        .ops
+        .iter()
+        .position(|op| matches!(op, ChargeOp::Frac { .. }))
+        .expect("every MAJX flow fracs");
+    let mut doubled = script.clone();
+    doubled.ops.insert(frac_at + 1, doubled.ops[frac_at].clone());
+    let diags = check_script(&doubled);
+    assert!(
+        diags.iter().any(|d| d.code == DiagCode::DoubleFrac),
+        "duplicated Frac must be P002: {diags:?}"
+    );
+
+    // Mutation: truncate the first SiMRA's restore phase — the group's
+    // analog rows leak into the next gate's staging copies (P002)
+    // and/or survive to exit (P006).
+    let simra_at = script
+        .ops
+        .iter()
+        .position(|op| matches!(op, ChargeOp::Simra { .. }))
+        .expect("every MAJX flow simras");
+    let mut truncated = script.clone();
+    if let ChargeOp::Simra { restore, .. } = &mut truncated.ops[simra_at] {
+        *restore = false;
+    }
+    let diags = check_script(&truncated);
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.code == DiagCode::DoubleFrac || d.code == DiagCode::UnrestoredExit),
+        "dropped restore must surface as P002/P006: {diags:?}"
+    );
+}
+
+#[test]
+fn p003_dropped_write_is_read_of_never_written_row() {
+    let plan = compiled(PudOp::Bitwise(BitwiseOp::And));
+    let script = lower_plan(&plan).unwrap();
+    // Drop the first scratch-region write (an input materialisation);
+    // the gate's staging copy then reads an uninitialised row.
+    let w = script
+        .ops
+        .iter()
+        .position(|op| matches!(op, ChargeOp::Write { row, .. } if *row >= DATA_BASE))
+        .expect("inputs are written into the data region");
+    let mut mutant = script.clone();
+    mutant.ops.remove(w);
+    let diags = check_script(&mutant);
+    assert!(
+        diags.iter().any(|d| d.code == DiagCode::ReadUninitialized),
+        "dropped input write must be P003: {diags:?}"
+    );
+}
+
+#[test]
+fn p004_peak_lies_and_budget_overflows_are_caught() {
+    let plan = compiled(PudOp::Add { width: 3 });
+    assert!(plan.peak_rows > 1, "add3 needs scratch rows");
+
+    // Mutation: bump the declared peak — the replay disagrees.
+    let deaths = plan.death_lists().to_vec();
+    let bumped = reassemble(&plan, deaths.clone(), plan.peak_rows + 1);
+    let report = verify::verify_plan(&bumped);
+    assert!(report.has(DiagCode::RowBudgetOverflow), "{report}");
+    assert!(verify::admit(&bumped).is_err());
+
+    // An honest plan against a too-small subarray budget.
+    let report = verify::verify_plan_with_budget(&plan, Some(plan.peak_rows - 1));
+    assert!(report.has(DiagCode::RowBudgetOverflow), "{report}");
+    // ...and against exactly its own peak: clean.
+    assert!(verify::verify_plan_with_budget(&plan, Some(plan.peak_rows)).is_clean());
+}
+
+#[test]
+fn p005_dead_gate_warns_but_does_not_block_admission() {
+    let mut c = MajCircuit::new(2);
+    let used = c.push(Gate::maj3(Signal::Input(0), Signal::Input(1), Signal::Const(false)));
+    c.push(Gate::maj3(Signal::Input(0), Signal::Input(1), Signal::Const(true)));
+    c.output(used);
+    let report = verify::verify_circuit(&c);
+    assert!(report.has(DiagCode::DeadGate), "{report}");
+    assert!(
+        report
+            .diagnostics
+            .iter()
+            .all(|d| d.code != DiagCode::DeadGate || d.severity() == Severity::Warning)
+    );
+    assert_eq!(report.errors().count(), 0, "a dead gate alone is warning-only\n{report}");
+    // Warnings fail lint but not compilation/admission.
+    let plan = WorkloadPlan::from_circuit(c).expect("warnings must not block compile");
+    assert!(plan.is_verified());
+    assert!(verify::admit(&plan).is_ok());
+}
+
+#[test]
+fn p006_analog_rows_at_exit_are_caught() {
+    let plan = compiled(PudOp::Bitwise(BitwiseOp::Or));
+    let mut script = lower_plan(&plan).unwrap();
+    // Mutation: a stray trailing Frac leaves a calibration row analog
+    // with no restore before exit.
+    script.ops.push(ChargeOp::Frac { row: verify::CALIB_STORE[0], gate: None });
+    let diags = check_script(&script);
+    assert!(
+        diags.iter().any(|d| d.code == DiagCode::UnrestoredExit),
+        "analog row at exit must be P006: {diags:?}"
+    );
+}
+
+#[test]
+fn p007_swapped_death_lists_disagree_with_liveness() {
+    let plan = compiled(PudOp::Add { width: 3 });
+    let mut deaths = plan.death_lists().to_vec();
+    let (a, b) = {
+        let nonempty: Vec<usize> =
+            (0..deaths.len()).filter(|&g| !deaths[g].is_empty()).collect();
+        let (a, b) = (nonempty[0], *nonempty.last().unwrap());
+        assert!(a < b, "add3 must have two distinct death sites");
+        assert_ne!(deaths[a], deaths[b]);
+        (a, b)
+    };
+    deaths.swap(a, b);
+    let mutant = reassemble(&plan, deaths, plan.peak_rows);
+    let report = verify::verify_plan(&mutant);
+    assert!(report.has(DiagCode::DeathListMismatch), "{report}");
+    match verify::admit(&mutant) {
+        Err(PudError::Verification { code, .. }) => {
+            assert!(code.starts_with('P'), "typed admission error, got {code}")
+        }
+        other => panic!("swapped death lists must be rejected, got {other:?}"),
+    }
+}
+
+#[test]
+fn p008_shape_mutations_are_caught() {
+    // Mutation: bump one gate input past the circuit's input count.
+    let plan = compiled(PudOp::Bitwise(BitwiseOp::And));
+    let mut circuit = plan.circuit.clone();
+    circuit.gates[0].args[0] = Signal::Input(circuit.n_inputs + 7);
+    let mutant = WorkloadPlan::assemble(
+        plan.op.clone(),
+        circuit,
+        plan.death_lists().to_vec(),
+        plan.peak_rows,
+    );
+    let report = verify::verify_plan(&mutant);
+    assert!(report.has(DiagCode::ShapeMismatch), "{report}");
+    assert!(verify::admit(&mutant).is_err());
+
+    // A 4-ary gate and a forward gate reference, via the lint path.
+    let mut c = MajCircuit::new(2);
+    c.gates.push(Gate {
+        args: vec![Signal::Input(0), Signal::Input(1), Signal::Input(0), Signal::Input(1)],
+    });
+    c.gates.push(Gate::maj3(Signal::Gate(5), Signal::Input(0), Signal::Const(true)));
+    c.outputs.push(Signal::Gate(1));
+    let report = verify::verify_circuit(&c);
+    assert!(report.has(DiagCode::ShapeMismatch), "{report}");
+    assert!(report.errors().count() >= 2, "both shape mutations must surface\n{report}");
+}
+
+#[test]
+fn engines_reject_corrupted_plans_at_admission() {
+    let cfg = DeviceConfig {
+        sigma_sa: 1e-6,
+        tail_weight: 0.0,
+        sigma_noise: 1e-6,
+        ..DeviceConfig::default()
+    };
+    let eng = NativeEngine::new(cfg.clone());
+    let mut rng = Rng::new(0xADA17);
+    let good = Arc::new(compiled(PudOp::Add { width: 2 }));
+    let mutant = Arc::new(early_death_mutant(&good, &mut rng));
+
+    let cols = 16;
+    let operands: Vec<Vec<u64>> = (0..2).map(|_| (0..cols as u64).map(|c| c % 4).collect()).collect();
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let calib = Calibration::uniform(OffsetLattice::build(&cfg, &fc), cols);
+    let req = |plan: Arc<WorkloadPlan>| {
+        ComputeRequest::new(plan, 128, cols, 0x5EED, calib.clone(), operands.clone())
+    };
+
+    // The compiled plan executes; the byte-identical-but-corrupted
+    // assembly is rejected before any subarray is touched.
+    eng.execute_one(&req(good.clone())).expect("verified plan must execute");
+    let err = eng.execute_one(&req(mutant.clone())).unwrap_err();
+    let rendered = format!("{err:#}");
+    assert!(
+        rendered.contains("plan rejected by verifier (P"),
+        "admission must return the typed verifier error: {rendered}"
+    );
+
+    // Batch admission: one bad request fails the whole batch, typed.
+    let err = eng.execute_batch(&[req(good.clone()), req(mutant)]).unwrap_err();
+    assert!(format!("{err:#}").contains("plan rejected by verifier (P"));
+}
+
+#[test]
+fn serving_layer_rejects_corrupted_plans_at_admission() {
+    let cfg = DeviceConfig {
+        sigma_sa: 1e-6,
+        tail_weight: 0.0,
+        sigma_noise: 1e-6,
+        ..DeviceConfig::default()
+    };
+    let svc = ServiceConfig {
+        serve_samples: 256,
+        params: CalibParams::quick(),
+        ..ServiceConfig::default()
+    };
+    let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg)).unwrap();
+    let cols = 16;
+    s.register(SubarrayId::new(0, 0, 0), 64, cols, 0x5EED);
+    s.run_pending(usize::MAX);
+
+    let good = Arc::new(compiled(PudOp::Add { width: 2 }));
+    let mut rng = Rng::new(0xADA18);
+    let mutant = Arc::new(early_death_mutant(&good, &mut rng));
+    let operands: Vec<Vec<u64>> =
+        (0..2).map(|_| (0..cols as u64).map(|c| c % 4).collect()).collect();
+
+    s.serve_plan(&good, &operands).expect("verified plan must serve");
+    match s.serve_plan(&mutant, &operands) {
+        Err(PudError::Verification { code, message }) => {
+            assert!(code.starts_with('P'), "{code}");
+            assert!(message.contains("hint:"), "diagnostics carry fix hints: {message}");
+        }
+        other => panic!("corrupted plan must be rejected before serving, got {other:?}"),
+    }
+    // Nothing was served for the rejected plan: the verifier runs
+    // before any bank executes.
+    assert_eq!(s.metrics.counter("compute.bank_failures"), 0);
+}

@@ -1,0 +1,188 @@
+//! Verifier ↔ compiler agreement properties: every compile-able op in
+//! the vocabulary (all widths up to 16) verifies clean, and the
+//! verifier's abstract replay reproduces the compiler's dry-run
+//! `peak_rows` exactly. Also pins the error-composition contract
+//! (`PudError` / `JobError` / `Diagnostic` all compose with `?` into
+//! `anyhow::Result`) and the machine-readable diagnostic renderings.
+
+use pudtune::coordinator::worker::JobError;
+use pudtune::pud::graph::{Gate, MajCircuit, Signal};
+use pudtune::pud::logic::not;
+use pudtune::pud::plan::{PudError, PudOp, WorkloadPlan};
+use pudtune::pud::verify::{self, DiagCode, Diagnostic, Severity};
+use pudtune::util::json;
+use pudtune::util::rng::Rng;
+
+#[test]
+fn whole_vocabulary_verifies_clean_and_peaks_agree() {
+    let vocab = PudOp::vocabulary(16);
+    assert!(vocab.len() > 30, "vocabulary(16) should sweep widths: {}", vocab.len());
+    for op in vocab {
+        let label = op.label();
+        let plan = WorkloadPlan::compile(op).unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert!(plan.is_verified(), "{label}: compile must self-verify");
+        let report = verify::verify_plan(&plan);
+        assert!(report.is_clean(), "{label}:\n{report}");
+        assert_eq!(
+            report.peak_rows, plan.peak_rows,
+            "{label}: abstract replay peak must equal the compiler dry-run"
+        );
+        // The budget the plan itself declares is, by construction,
+        // exactly enough.
+        let budgeted = verify::verify_plan_with_budget(&plan, Some(plan.peak_rows));
+        assert!(budgeted.is_clean(), "{label}: own peak must fit its own budget\n{budgeted}");
+    }
+}
+
+/// A random well-formed majority DAG (mirrors the compute_plan suite's
+/// generator): negated signals sprinkled in, sometimes a negated
+/// output, and — because only the last gate is guaranteed a consumer —
+/// possibly dead gates, which must surface as P005 warnings and
+/// nothing worse.
+fn random_circuit(rng: &mut Rng) -> MajCircuit {
+    let n_inputs = 2 + rng.below(3) as usize;
+    let mut c = MajCircuit::new(n_inputs);
+    let gates = 1 + rng.below(6) as usize;
+    for gi in 0..gates {
+        let mut sig = |rng: &mut Rng| -> Signal {
+            let pool = n_inputs + gi;
+            let k = rng.below(pool as u64 + 1) as usize;
+            let base = if k < n_inputs {
+                Signal::Input(k)
+            } else if k < pool {
+                Signal::Gate(k - n_inputs)
+            } else {
+                Signal::Const(rng.below(2) == 1)
+            };
+            if rng.below(4) == 0 {
+                not(base)
+            } else {
+                base
+            }
+        };
+        if rng.below(2) == 0 {
+            c.push(Gate::maj3(sig(rng), sig(rng), sig(rng)));
+        } else {
+            c.push(Gate::maj5(sig(rng), sig(rng), sig(rng), sig(rng), sig(rng)));
+        }
+    }
+    c.output(Signal::Gate(gates - 1));
+    if rng.below(2) == 0 {
+        c.output(Signal::NotInput(0));
+    }
+    c
+}
+
+#[test]
+fn random_custom_plans_verify_without_errors_and_peaks_agree() {
+    let mut rng = Rng::new(0x7E51F);
+    for trial in 0..60 {
+        let circuit = random_circuit(&mut rng);
+        let plan = WorkloadPlan::from_circuit(circuit)
+            .unwrap_or_else(|e| panic!("trial {trial}: well-formed circuit must compile: {e}"));
+        let report = verify::verify_plan(&plan);
+        assert_eq!(
+            report.errors().count(),
+            0,
+            "trial {trial}: compiled plan must have no error diagnostics\n{report}"
+        );
+        assert!(
+            report.diagnostics.iter().all(|d| d.code == DiagCode::DeadGate),
+            "trial {trial}: only dead-gate warnings may survive compile\n{report}"
+        );
+        assert_eq!(report.peak_rows, plan.peak_rows, "trial {trial}");
+    }
+}
+
+#[test]
+fn dead_gate_fixture_is_known_bad() {
+    let text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/dead_gate.pud"
+    ))
+    .expect("committed fixture");
+    let circuit = verify::parse_circuit(&text).expect("fixture parses");
+    let report = verify::verify_circuit(&circuit);
+    assert!(!report.is_clean(), "the fixture must stay known-bad (CI pins the lint exit)");
+    assert!(report.has(DiagCode::DeadGate), "{report}");
+    assert_eq!(report.errors().count(), 0, "fixture is warning-only\n{report}");
+    assert!(
+        report.diagnostics.iter().all(|d| d.severity() == Severity::Warning),
+        "{report}"
+    );
+}
+
+#[test]
+fn errors_compose_with_anyhow_and_question_mark() {
+    fn plan_err() -> anyhow::Result<()> {
+        Err(PudError::WidthMismatch { expected: 4, got: 2 })?;
+        Ok(())
+    }
+    let e = plan_err().unwrap_err();
+    assert!(e.to_string().contains("width mismatch"), "{e}");
+    assert!(e.downcast_ref::<PudError>().is_some());
+
+    fn job_err() -> anyhow::Result<()> {
+        Err(JobError::Panicked("boom".into()))?;
+        Ok(())
+    }
+    let e = job_err().unwrap_err();
+    assert!(e.downcast_ref::<JobError>().is_some());
+
+    // A Diagnostic is itself a std::error::Error...
+    let diag = Diagnostic {
+        code: DiagCode::UseAfterDeath,
+        gate: Some(3),
+        row: Some(17),
+        message: "Gate(1) read after its death at gate 2".into(),
+    };
+    fn diag_err(d: Diagnostic) -> anyhow::Result<()> {
+        Err(d)?;
+        Ok(())
+    }
+    let e = diag_err(diag.clone()).unwrap_err();
+    assert!(e.to_string().contains("error[P001]"), "{e}");
+
+    // ...and converts into the typed PudError the admission layers
+    // return, keeping the stable code and the rendered hint.
+    let pe = PudError::from(diag);
+    match &pe {
+        PudError::Verification { code, message } => {
+            assert_eq!(*code, "P001");
+            assert!(message.contains("gate 3"), "{message}");
+            assert!(message.contains("hint:"), "{message}");
+        }
+        other => panic!("expected Verification, got {other:?}"),
+    }
+    assert!(pe.to_string().contains("plan rejected by verifier (P001)"), "{pe}");
+}
+
+#[test]
+fn reports_and_diagnostics_render_well_formed_json() {
+    let plan = WorkloadPlan::compile(PudOp::Add { width: 3 }).unwrap();
+    let clean = json::parse(&verify::verify_plan(&plan).to_json()).expect("clean report JSON");
+    assert_eq!(clean.get("clean").as_bool(), Some(true));
+    assert_eq!(clean.get("peak_rows").as_usize(), Some(plan.peak_rows));
+    assert_eq!(clean.get("diagnostics").as_arr().map(|a| a.len()), Some(0));
+
+    let diag = Diagnostic {
+        code: DiagCode::DoubleFrac,
+        gate: None,
+        row: Some(8),
+        message: "row 8 \"quoted\"\nmultiline".into(),
+    };
+    let parsed = json::parse(&diag.to_json()).expect("diagnostic JSON survives escaping");
+    assert_eq!(parsed.get("code").as_str(), Some("P002"));
+    assert_eq!(parsed.get("severity").as_str(), Some("error"));
+    assert_eq!(parsed.get("gate"), &json::Json::Null);
+    assert_eq!(parsed.get("row").as_usize(), Some(8));
+    assert_eq!(parsed.get("message").as_str(), Some("row 8 \"quoted\"\nmultiline"));
+    assert_eq!(parsed.get("hint").as_str(), Some(DiagCode::DoubleFrac.hint()));
+
+    // Every code renders a distinct, stable identifier with docs.
+    let codes: Vec<&str> = DiagCode::ALL.iter().map(|c| c.code()).collect();
+    assert_eq!(codes, ["P001", "P002", "P003", "P004", "P005", "P006", "P007", "P008"]);
+    for c in DiagCode::ALL {
+        assert!(!c.meaning().is_empty() && !c.hint().is_empty());
+    }
+}
