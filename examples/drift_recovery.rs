@@ -35,7 +35,7 @@ fn main() {
     let (banks, cols, device_seed) = (4usize, 2048usize, 0xD21F7u64);
     let svc_cfg = ServiceConfig { serve_samples: 4096, ..ServiceConfig::default() };
     let make_service = || {
-        let mut s =
+        let s =
             RecalibService::new(cfg.clone(), svc_cfg, NativeEngine::new(cfg.clone())).unwrap();
         for b in 0..banks {
             s.register(SubarrayId::new(0, b, 0), 32, cols, device_seed);
@@ -45,7 +45,7 @@ fn main() {
 
     // ---- First boot: calibrate from scratch and persist. ----
     println!("first boot: calibrating {banks} banks x {cols} columns...");
-    let mut first = make_service();
+    let first = make_service();
     first.run_pending(usize::MAX);
     let nominal = mean_ecr(&first.serve());
     println!("  nominal serving ECR {:.2}%", nominal * 100.0);
@@ -57,7 +57,7 @@ fn main() {
     println!("\nreboot: rehydrating from the store...");
     let store = CalibStore::load_file(&path).unwrap();
     let _ = std::fs::remove_file(&path);
-    let mut svc = make_service();
+    let svc = make_service();
     for (id, outcome) in svc.load_store(&store) {
         match outcome {
             LoadOutcome::Accepted { spot_ecr } => {

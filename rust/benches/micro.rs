@@ -179,7 +179,7 @@ fn reliability_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
         ..ServiceConfig::default()
     };
     let build = |svc: ServiceConfig| {
-        let mut s =
+        let s =
             RecalibService::new(campaign.clone(), svc, NativeEngine::new(campaign.clone()))
                 .unwrap();
         for b in 0..banks {
@@ -195,7 +195,7 @@ fn reliability_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
         .collect();
 
     // Unprotected: the corruption the campaign inflicts every epoch.
-    let mut unprot = build(svc_base);
+    let unprot = build(svc_base);
     let mut raw = (1.0, 0usize);
     for _ in 0..epochs {
         raw = correctness(&unprot.serve_plan(&plan, &operands).expect("compiled plan serves"));
@@ -203,7 +203,7 @@ fn reliability_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
     suite.derive("reliability_masked_correctness_unprotected", raw.0);
 
     // Quarantine + scrub: converge, then time a steady-state epoch.
-    let mut prot = build(ServiceConfig {
+    let prot = build(ServiceConfig {
         quarantine_strikes: 2,
         quarantine_clean_passes: 2,
         scrub_every: 1,
@@ -244,9 +244,92 @@ fn reliability_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
 
     // 3x redundant execution: majority vote over independent replica
     // fault fields, no quarantine state needed.
-    let mut red = build(ServiceConfig { redundancy: 3, ..svc_base });
+    let red = build(ServiceConfig { redundancy: 3, ..svc_base });
     let voted = correctness(&red.serve_plan(&plan, &operands).expect("compiled plan serves"));
     suite.derive("reliability_masked_correctness_redundant3", voted.0);
+    suite
+}
+
+/// Concurrent-serving record (written to `BENCH_serve.json`): workload
+/// throughput through the admission-controlled `serve_plan` path with
+/// zero vs continuous background recalibration pressure (a
+/// `ServiceServer`'s worker threads repairing operator-requested
+/// recalibrations the whole time), plus the graceful-drain latency.
+/// Deriveds record the concurrent/idle throughput ratio — how much
+/// serving capacity background repair traffic costs — and
+/// `serve_drain_latency_s`. `PUDTUNE_FAST_BENCH=1` shrinks the
+/// geometry for the CI smoke job.
+fn serve_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
+    use pudtune::coordinator::service::{RecalibService, ServiceConfig, ServiceServer};
+    use pudtune::dram::geometry::SubarrayId;
+    use pudtune::pud::plan::{PudOp, WorkloadPlan};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let mut suite = BenchSuite::new();
+    let cols = if fast { 256 } else { 1024 };
+    let banks = if fast { 2 } else { 4 };
+    let iters = if fast { 3 } else { 5 };
+    let svc_cfg = ServiceConfig {
+        serve_samples: if fast { 512 } else { 2048 },
+        params: CalibParams::quick(),
+        maintain_every_ms: 5,
+        ..ServiceConfig::default()
+    };
+    let s = Arc::new(
+        RecalibService::new(cfg.clone(), svc_cfg, NativeEngine::new(cfg.clone())).unwrap(),
+    );
+    let ids: Vec<SubarrayId> = (0..banks)
+        .map(|b| {
+            let id = SubarrayId::new(b % 2, b, 0);
+            s.register(id, 32, cols, 0x5E7E);
+            id
+        })
+        .collect();
+    s.run_pending(usize::MAX);
+    for o in s.serve() {
+        o.report.as_ref().expect("mask battery");
+    }
+    let plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 2 }).unwrap());
+    let mut rng = Rng::new(0x5E7E);
+    let operands: Vec<Vec<u64>> = (0..plan.op.n_operands())
+        .map(|_| (0..cols).map(|_| rng.below(4)).collect())
+        .collect();
+
+    // Baseline: serving with no background work at all.
+    let idle = suite.bench(&format!("serve/idle-{banks}x{cols}"), 1, iters, || {
+        let outs = s.serve_plan(&plan, &operands).expect("compiled plan serves");
+        std::hint::black_box(outs.len());
+    });
+
+    // Concurrent: every iteration forces a fresh recalibration of all
+    // banks, so the worker threads repair continuously while the
+    // measured thread serves against the same shards.
+    let server = ServiceServer::start(s.clone(), 2);
+    let under = suite.bench(
+        &format!("serve/under-recalib-{banks}x{cols}"),
+        1,
+        iters,
+        || {
+            for &id in &ids {
+                s.request_recalibration(id);
+            }
+            let outs = s.serve_plan(&plan, &operands).expect("compiled plan serves");
+            std::hint::black_box(outs.len());
+        },
+    );
+    let served_cols = (banks * cols) as f64;
+    suite.derive("serve_idle_cols_per_s", served_cols / idle.min_s);
+    suite.derive("serve_under_recalib_cols_per_s", served_cols / under.min_s);
+    suite.derive("serve_concurrent_throughput_ratio", idle.min_s / under.min_s);
+
+    // Graceful drain with the recalibration queue still warm: finish
+    // every queued repair, join the workers, persist the store.
+    let t = Instant::now();
+    let store = server.drain();
+    let drain_s = t.elapsed().as_secs_f64();
+    assert_eq!(store.entries.len(), banks, "drain persists every bank");
+    suite.derive("serve_drain_latency_s", drain_s);
     suite
 }
 
@@ -254,24 +337,31 @@ fn main() {
     let cfg = DeviceConfig::default();
     let mut suite = BenchSuite::new();
 
-    // Workload serving + reliability records (fast mode + the option
-    // to skip the rest keep the CI smoke jobs cheap).
+    // Workload serving + reliability + concurrent-serving records
+    // (fast mode + the option to run one suite keep the CI smoke jobs
+    // cheap).
     let fast = std::env::var_os("PUDTUNE_FAST_BENCH").is_some();
     let only = std::env::var("PUDTUNE_BENCH_ONLY").ok();
-    if only.as_deref() != Some("reliability") {
+    let want = |name: &str| only.as_deref().is_none_or(|o| o == name);
+    if want("workload") {
         let wsuite = workload_suite(&cfg, fast);
         let wout = std::path::Path::new("BENCH_workload.json");
         wsuite.write_json(wout).expect("writing BENCH_workload.json");
         println!("wrote {}", wout.display());
-        if only.as_deref() == Some("workload") {
-            return;
-        }
     }
-    let rsuite = reliability_suite(&cfg, fast);
-    let rout = std::path::Path::new("BENCH_reliability.json");
-    rsuite.write_json(rout).expect("writing BENCH_reliability.json");
-    println!("wrote {}", rout.display());
-    if only.as_deref() == Some("reliability") {
+    if want("reliability") {
+        let rsuite = reliability_suite(&cfg, fast);
+        let rout = std::path::Path::new("BENCH_reliability.json");
+        rsuite.write_json(rout).expect("writing BENCH_reliability.json");
+        println!("wrote {}", rout.display());
+    }
+    if want("serve") {
+        let ssuite = serve_suite(&cfg, fast);
+        let sout = std::path::Path::new("BENCH_serve.json");
+        ssuite.write_json(sout).expect("writing BENCH_serve.json");
+        println!("wrote {}", sout.display());
+    }
+    if only.is_some() {
         return;
     }
 

@@ -47,6 +47,18 @@ pub struct DriftPolicy {
     /// fires once the window is full, so one noisy batch cannot
     /// trigger a recalibration storm.
     pub serve_window: usize,
+    /// Environment-match fast-accept, temperature half: a rehydrated
+    /// v2 entry whose stored identification temperature is within this
+    /// many °C of the live die temperature (and whose age matches per
+    /// [`Self::env_match_hours`]) is accepted **without** an ECR spot
+    /// check. `0.0` disables the fast path (the default): skipping the
+    /// spot check trades a measurement for trust in the stored
+    /// metadata, so it is opt-in.
+    pub env_match_temp_c: f64,
+    /// Environment-match fast-accept, age half: maximum |stored −
+    /// live| environment-clock delta, hours. Both halves must be
+    /// non-zero and satisfied for the fast accept to apply.
+    pub env_match_hours: f64,
 }
 
 impl Default for DriftPolicy {
@@ -62,6 +74,8 @@ impl Default for DriftPolicy {
             max_age_hours: 168.0,
             max_serve_ecr: 0.10,
             serve_window: 4,
+            env_match_temp_c: 0.0,
+            env_match_hours: 0.0,
         }
     }
 }
@@ -74,6 +88,8 @@ impl DriftPolicy {
             ("max_temp_delta_c", self.max_temp_delta_c),
             ("max_age_hours", self.max_age_hours),
             ("max_serve_ecr", self.max_serve_ecr),
+            ("env_match_temp_c", self.env_match_temp_c),
+            ("env_match_hours", self.env_match_hours),
         ] {
             if v.is_nan() || v < 0.0 {
                 return Err(format!("drift policy: {name} must be non-negative, got {v}"));
@@ -83,6 +99,19 @@ impl DriftPolicy {
             return Err("drift policy: serve_window must be at least 1".into());
         }
         Ok(())
+    }
+
+    /// Environment-match fast-accept test: `Some((temp_delta_c,
+    /// hours_delta))` when the fast path is enabled (both tolerances
+    /// non-zero) and `stored` is within tolerance of `live` on both
+    /// axes, else `None` (fall through to the ECR spot check).
+    pub fn env_matches(&self, stored: &Environment, live: &Environment) -> Option<(f64, f64)> {
+        if self.env_match_temp_c <= 0.0 || self.env_match_hours <= 0.0 {
+            return None;
+        }
+        let dt = (stored.temp_c - live.temp_c).abs();
+        let dh = (stored.hours - live.hours).abs();
+        (dt <= self.env_match_temp_c && dh <= self.env_match_hours).then_some((dt, dh))
     }
 }
 
@@ -226,6 +255,37 @@ mod tests {
         assert!(p.validate().is_err());
         let p = DriftPolicy { serve_window: 0, ..DriftPolicy::default() };
         assert!(p.validate().unwrap_err().contains("serve_window"));
+    }
+
+    #[test]
+    fn env_match_is_disabled_by_default_and_validated() {
+        let p = DriftPolicy::default();
+        // Even a bit-identical environment does not fast-match while
+        // the tolerances are zero.
+        assert_eq!(p.env_matches(&env(45.0, 0.0), &env(45.0, 0.0)), None);
+        let p = DriftPolicy { env_match_temp_c: f64::NAN, ..DriftPolicy::default() };
+        assert!(p.validate().unwrap_err().contains("env_match_temp_c"));
+        let p = DriftPolicy { env_match_hours: -1.0, ..DriftPolicy::default() };
+        assert!(p.validate().unwrap_err().contains("env_match_hours"));
+    }
+
+    #[test]
+    fn env_match_requires_both_axes_within_tolerance() {
+        let p = DriftPolicy {
+            env_match_temp_c: 2.0,
+            env_match_hours: 24.0,
+            ..DriftPolicy::default()
+        };
+        let stored = env(45.0, 100.0);
+        // In tolerance on both axes: matches, reporting the deltas.
+        let (dt, dh) = p.env_matches(&stored, &env(46.5, 90.0)).unwrap();
+        assert!((dt - 1.5).abs() < 1e-9 && (dh - 10.0).abs() < 1e-9);
+        // Near-miss on either single axis: no match.
+        assert_eq!(p.env_matches(&stored, &env(47.5, 100.0)), None);
+        assert_eq!(p.env_matches(&stored, &env(45.0, 130.0)), None);
+        // One zero tolerance disables the whole fast path.
+        let half = DriftPolicy { env_match_hours: 0.0, ..p };
+        assert_eq!(half.env_matches(&stored, &stored), None);
     }
 
     #[test]

@@ -20,15 +20,39 @@
 //! * `serve.batches` — served workload batches measured successfully;
 //! * `serve.bank_failures` — served batches degraded by a per-bank
 //!   engine fault (the batch itself still completes);
-//! * `recalib.accepted_on_load` / `recalib.rejected_on_load` — store
-//!   rehydration outcomes (rejections count spot-check failures AND
+//! * `recalib.accepted_on_load` / `recalib.accepted_on_env` /
+//!   `recalib.rejected_on_load` — store rehydration outcomes: accepted
+//!   by spot check, accepted by the environment-match fast path (no
+//!   spot check spent), or rejected (spot-check failures AND
 //!   incompatible/corrupt entries);
 //! * `recalib.scheduled` — background recalibrations scheduled by a
 //!   drift signal; `recalib.rescheduled` — retries of earlier faults;
+//!   `recalib.requested` — operator-forced recalibrations
+//!   (`RecalibService::request_recalibration`);
 //! * `recalib.completed` / `recalib.failed` — background
-//!   recalibration outcomes;
+//!   recalibration outcomes (worker threads and `run_pending` alike);
+//! * `recalib.background` — jobs executed by `ServiceServer` worker
+//!   threads (as opposed to explicit `run_pending` calls);
 //! * `service.spot_check` / `service.serve` / `service.recalibrate`
 //!   (timers) — seconds per lifecycle phase.
+//!
+//! Admission control and server lifecycle (`ServiceServer`, the
+//! threaded serve → admit → shard → worker → drain loop):
+//!
+//! * `admission.accepted` — serve requests admitted past the in-flight
+//!   bound; `admission.rejected` — typed `PudError::Overloaded`
+//!   rejections (the bound was full); `admission.rejected_draining` —
+//!   typed `PudError::Draining` rejections after drain began;
+//! * `serve.concurrent` — high-water mark of simultaneously admitted
+//!   serve requests (a max-gauge, never exceeds the configured bound);
+//! * `drain.pending_jobs` — recalibration jobs (queued + running) at
+//!   the moment drain began, all finished before drain returns;
+//! * `drain.abandoned_jobs` — queued jobs a fast `shutdown` dropped
+//!   (they re-queue from drift state on the next boot's polls);
+//! * `drain.persisted_entries` — calibrations persisted into the final
+//!   store snapshot;
+//! * `drain.seconds` (timer) — wall time from drain/shutdown start to
+//!   workers joined and store snapshot taken.
 //!
 //! Arithmetic serving (`RecalibService::serve_workload` /
 //! `serve_plan`):
@@ -92,6 +116,15 @@ impl Metrics {
         self.counters.lock().unwrap().get(key).copied().unwrap_or(0)
     }
 
+    /// Record a high-water mark: `key` keeps the maximum value ever
+    /// observed (e.g. `serve.concurrent`, the peak number of
+    /// simultaneously admitted serve requests).
+    pub fn gauge_max(&self, key: &str, v: u64) {
+        let mut counters = self.counters.lock().unwrap();
+        let slot = counters.entry(key.to_string()).or_insert(0);
+        *slot = (*slot).max(v);
+    }
+
     /// Time a closure under `key` (accumulating seconds).
     pub fn time<R>(&self, key: &str, f: impl FnOnce() -> R) -> R {
         let t = Instant::now();
@@ -133,6 +166,15 @@ mod tests {
         m.add("pjrt.calls", 2);
         assert_eq!(m.counter("pjrt.calls"), 3);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauge_keeps_the_high_water_mark() {
+        let m = Metrics::new();
+        m.gauge_max("serve.concurrent", 3);
+        m.gauge_max("serve.concurrent", 7);
+        m.gauge_max("serve.concurrent", 2);
+        assert_eq!(m.counter("serve.concurrent"), 7);
     }
 
     #[test]

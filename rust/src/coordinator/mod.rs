@@ -21,18 +21,27 @@
 //!   [`crate::calib::engine::CalibEngine`] backend; also the PJRT
 //!   `ComputeEngine` fallback (per-bank native execution until
 //!   circuit-execution artifacts exist);
-//! * [`service`] — the drift-aware recalibration service: rehydrates
-//!   calibrations from the non-volatile store, spot-checks them,
-//!   serves measurement batteries *and arithmetic workloads*
-//!   (`serve_workload`: current calibration + error-free column mask,
-//!   golden-model-checked outputs), and schedules background
-//!   recalibration when drift signals fire (the persist → load →
-//!   validate → recalibrate lifecycle);
+//! * [`service`] — the drift-aware recalibration **server**, built
+//!   around the threaded serve → admit → shard → worker → drain
+//!   lifecycle: any number of client threads serve measurement
+//!   batteries *and arithmetic workloads* (`serve_workload` /
+//!   `serve_plan`: current calibration + error-free column mask,
+//!   golden-model-checked outputs) through admission control (bounded
+//!   in-flight serves, typed `Overloaded`/`Draining` rejections)
+//!   against per-channel entry shards, while a `ServiceServer`'s
+//!   background threads rehydrate/spot-check stored calibrations,
+//!   poll drift, scrub, and recalibrate — and a graceful `drain()`
+//!   finishes in-flight work, persists the store and joins every
+//!   worker;
 //! * [`worker`] — std::thread scoped worker pool (`parallel_map` /
-//!   panic-contained `try_parallel_map`);
+//!   panic-contained `try_parallel_map` / single-job `run_contained`,
+//!   the containment the service's long-lived workers run jobs under);
 //! * [`batcher`] — generic micro-batching queue (used by the e2e GEMV
 //!   serving example);
-//! * [`metrics`] — counters/timers reported by the CLI and benches.
+//! * [`metrics`] — counters/timers reported by the CLI and benches
+//!   (see its module docs for the full metric-name reference,
+//!   including the `admission.*`, `serve.concurrent` and `drain.*`
+//!   lifecycle metrics).
 
 pub mod batcher;
 pub mod engine;

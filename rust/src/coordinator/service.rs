@@ -1,94 +1,88 @@
-//! Drift-aware recalibration service: the runtime loop that closes the
-//! paper's §III-A persistence story.
+//! Drift-aware recalibration **server**: the concurrent runtime loop
+//! that closes the paper's §III-A persistence story.
 //!
 //! The paper stores identified calibration bit patterns in non-volatile
 //! memory "so it can be reused across different environments and system
-//! reboots" — but reuse is only safe while conditions hold. This
-//! service treats each subarray's calibration as a **cached artifact
-//! with drift-driven invalidation**:
+//! reboots" — but reuse is only safe while conditions hold, and a
+//! serving deployment cannot stop the world to re-check them. This
+//! module therefore treats each subarray's calibration as a **cached
+//! artifact with drift-driven invalidation**, maintained *while the
+//! device keeps serving*:
 //!
-//! 1. **rehydrate** — [`RecalibService::load_store`] loads every
-//!    registered subarray's entry from a [`CalibStore`] (checked
-//!    decode + geometry validation), then runs one *batched* cheap ECR
-//!    spot check ([`crate::calib::algorithm::SPOT_CHECK_SAMPLES`]) and
-//!    accepts or rejects each candidate against
-//!    [`DriftPolicy::accept_max_ecr`];
-//! 2. **serve** — [`RecalibService::serve`] measures workload batches
-//!    from the current calibrations (accepted ones; stale or
-//!    uncalibrated entries keep serving their best-known levels so the
-//!    serving path never stalls) and feeds each batch's ECR into the
-//!    per-subarray [`DriftMonitor`];
-//! 3. **monitor** — [`RecalibService::poll_drift`] evaluates the drift
-//!    signals (temperature excursion from `dram::temperature`,
-//!    retention age from the `dram::retention` clock, rolling
-//!    served-batch ECR) and schedules background recalibration for
-//!    drifted entries;
-//! 4. **recalibrate** — [`RecalibService::run_pending`] drains the
-//!    queue through the engine with per-bank fault isolation
-//!    ([`crate::calib::engine::calibrate_isolated`]): the batch fans
-//!    across the worker pool, a panicking or failing bank degrades to
-//!    one error slot, and every success re-anchors its monitor;
-//!    [`RecalibService::snapshot_store`] re-persists the result.
+//! serve → admit → shard → worker → drain
 //!
-//! Serving and recalibration are decoupled: `serve` never waits on the
-//! queue, and a recalibration failure leaves the previous calibration
-//! serving. All engine work goes through the batch-first
-//! [`CalibEngine`] trait, so the service is backend-agnostic.
+//! 1. **serve** — any number of client threads call
+//!    [`RecalibService::serve_workload`] / [`RecalibService::serve_plan`]
+//!    (arithmetic) or [`RecalibService::serve`] (measurement batteries)
+//!    concurrently; every method takes `&self`;
+//! 2. **admit** — the serve path passes admission control first:
+//!    at most `ServiceConfig::max_inflight_serves` requests run at
+//!    once, the rest are rejected immediately with the typed
+//!    [`PudError::Overloaded`] (bounded backpressure — the caller
+//!    retries, nothing queues unboundedly), and a draining service
+//!    rejects with [`PudError::Draining`];
+//! 3. **shard** — entries live in per-channel shards, each behind its
+//!    own lock: banks on different channels never contend, and no lock
+//!    is ever held across an engine call, so background recalibration
+//!    of channel 0 cannot stall serving on channel 1 (nor can a
+//!    panicking engine poison the map — see `worker`);
+//! 4. **worker** — a [`ServiceServer`] owns background threads: N
+//!    recalibration workers drain the drift queue (claim → engine →
+//!    write-back, panic-contained per job) and one maintenance ticker
+//!    runs [`RecalibService::maintain`] (drift polls + scrub cadence)
+//!    every `ServiceConfig::maintain_every_ms`;
+//! 5. **drain** — [`ServiceServer::drain`] stops admission, lets
+//!    in-flight serves and every queued recalibration finish, joins
+//!    all threads and returns the persisted [`CalibStore`] snapshot
+//!    ([`ServiceServer::shutdown`] is the fast variant that abandons
+//!    still-queued jobs; both record `drain.*` metrics).
 //!
-//! ## Serving arithmetic
+//! The synchronous entry points ([`RecalibService::run_pending`],
+//! [`RecalibService::poll_drift`], ...) remain: a `ServiceServer` is
+//! how production serves, but experiments and tests may still drive
+//! the lifecycle step by step on one thread.
 //!
-//! With an engine that also implements
-//! [`crate::calib::engine::ComputeEngine`], the service serves real
-//! workloads, not just measurement batteries:
-//! [`RecalibService::serve_workload`] compiles a
-//! [`crate::pud::plan::PudOp`] once and executes it on every
-//! registered subarray under its **current** calibration and the
-//! arithmetic-usable column mask (MAJ5 ∧ MAJ3 error-free — circuits
-//! chain both arities) from its most recent battery (spot check or
-//! served batch), with the same per-bank fault isolation
-//! ([`crate::calib::engine::execute_isolated`]) — so drift-scheduled
-//! recalibration and arithmetic serving share one lifecycle: a stale
-//! bank keeps serving its last-good levels and mask until background
-//! recalibration lands, and each outcome reports how many masked
-//! columns matched the software golden model.
+//! ## Lifecycle
+//!
+//! * **rehydrate** — [`RecalibService::load_store`] decodes every
+//!   registered subarray's stored entry, then either fast-accepts it
+//!   when its stored identification environment matches the live one
+//!   within [`DriftPolicy::env_matches`] tolerance
+//!   ([`LoadOutcome::AcceptedOnEnv`] — no measurement spent) or runs
+//!   one *batched* cheap ECR spot check and accepts/rejects against
+//!   [`DriftPolicy::accept_max_ecr`];
+//! * **monitor** — [`RecalibService::poll_drift`] evaluates drift
+//!   signals (temperature excursion, retention age, rolling
+//!   served-batch ECR) and queues background recalibration;
+//! * **recalibrate** — worker threads (or `run_pending`) drain the
+//!   queue through [`crate::calib::engine::calibrate_isolated`]:
+//!   exactly-once per queued signal (a claimed entry is marked
+//!   `running`, so concurrent polls cannot double-schedule it), a
+//!   panicking bank degrades to one error slot, successes re-anchor
+//!   their monitor; [`RecalibService::snapshot_store`] re-persists.
+//!
+//! Serving and recalibration are decoupled: a stale bank keeps serving
+//! its last-good levels and mask until background recalibration lands.
 //!
 //! ## Fault countermeasures
 //!
 //! Calibration cancels *smooth* error sources; PuDGhost-style faults
-//! ([`crate::dram::faults`]) are invisible to every ECR battery (the
-//! sampling kernel runs on sense amps alone, no cell array) and only
-//! surface as golden mismatches on served workloads. Three opt-in
-//! countermeasures (all off by default) close that gap:
-//!
-//! * **quarantine with hysteresis** ([`Quarantine`],
-//!   `ServiceConfig::quarantine_strikes` /
-//!   `quarantine_clean_passes`) — a column leaves the
-//!   arithmetic-usable mask after K observed golden mismatches and
-//!   re-enters only after M consecutive clean scrub passes, so
-//!   intermittent columns cannot flap back in;
-//! * **redundant execution** (`ServiceConfig::redundancy`) — served
-//!   workloads run on N independently seeded spare banks with
-//!   per-column bitwise majority vote
-//!   ([`crate::calib::engine::SPARE_STREAM`]); latency is accounted as
-//!   the sum of the replica runs;
-//! * **scrub passes** (`ServiceConfig::scrub_every`,
-//!   [`RecalibService::scrub`]) — every Nth maintenance poll replays
-//!   the last served workload *unmasked* and compares every column to
-//!   the golden model: mismatching columns strike toward quarantine,
-//!   clean quarantined columns count toward release. Because a scrub
-//!   replays the exact serving workload, it detects precisely the
-//!   corruption serving would see — unlike a one-shot spot check,
-//!   which duty-cycled faults evade.
-//!
-//! Costs and effects are reported via the `fault.*` / `quarantine.*` /
-//! `scrub.*` metrics ([`crate::coordinator::metrics`]) and measured by
-//! the `BENCH_reliability.json` bench case; `rust/tests/fault_campaign.rs`
-//! pins that a protected service reaches zero steady-state mismatches
-//! under the standard corruption campaign while an unprotected one
-//! keeps mismatching.
+//! ([`crate::dram::faults`]) only surface as golden mismatches on
+//! served workloads. Three opt-in countermeasures close that gap:
+//! **quarantine with hysteresis** ([`Quarantine`]), **redundant
+//! execution** (`ServiceConfig::redundancy`), and **scrub passes**
+//! (`ServiceConfig::scrub_every`, [`RecalibService::scrub`] — replays
+//! the last served workload unmasked, so detection sees exactly the
+//! corruption serving sees). Costs and effects are reported via the
+//! `fault.*` / `quarantine.*` / `scrub.*` metrics and pinned by
+//! `rust/tests/fault_campaign.rs`; the threaded lifecycle itself is
+//! pinned by `rust/tests/concurrent_service.rs` under ThreadSanitizer.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::analysis::ecr::EcrReport;
 use crate::calib::algorithm::{CalibParams, Calibration, SPOT_CHECK_SAMPLES};
@@ -113,8 +107,17 @@ const SERVE_STREAM: u64 = 0x5E12F;
 /// Stream-domain tag of the load-time acceptance spot check.
 const SPOT_CHECK_STREAM: u64 = 0x57CC;
 
-/// Service-level configuration: what to calibrate for and how to judge
-/// drift.
+/// Lock a mutex, recovering the guard even if a previous holder
+/// panicked: every critical section here is short, pure bookkeeping
+/// (engine calls run outside all locks), so continuing past a poison
+/// marker is always sound — and it is what keeps the sharded map
+/// usable after an injected worker panic.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Service-level configuration: what to calibrate for, how to judge
+/// drift, and how the threaded server behaves.
 #[derive(Clone, Copy, Debug)]
 pub struct ServiceConfig {
     /// Frac configuration served and recalibrated (paper: T_{2,1,0}).
@@ -142,6 +145,13 @@ pub struct ServiceConfig {
     /// Run a scrub pass every N maintenance polls (`0` disables scrub
     /// — the default). See [`RecalibService::scrub`].
     pub scrub_every: usize,
+    /// Admission bound: maximum concurrently admitted
+    /// `serve_plan`/`serve_workload` calls; further calls are rejected
+    /// with [`PudError::Overloaded`] (`0` = unbounded).
+    pub max_inflight_serves: usize,
+    /// [`ServiceServer`] maintenance-ticker interval, milliseconds
+    /// (drift polls + scrub cadence).
+    pub maintain_every_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -157,6 +167,8 @@ impl Default for ServiceConfig {
             quarantine_clean_passes: 2,
             redundancy: 1,
             scrub_every: 0,
+            max_inflight_serves: 256,
+            maintain_every_ms: 25,
         }
     }
 }
@@ -310,6 +322,11 @@ pub enum EntryState {
 pub enum LoadOutcome {
     /// Entry decoded and passed the spot check.
     Accepted { spot_ecr: f64 },
+    /// Entry decoded and its stored identification environment matched
+    /// the live one within [`DriftPolicy::env_matches`] tolerance: the
+    /// ECR spot check was skipped entirely (opt-in fast path; deltas
+    /// are |stored − live| on each axis).
+    AcceptedOnEnv { temp_delta_c: f64, hours_delta: f64 },
     /// Entry decoded but its spot-check ECR exceeded the policy bound.
     Rejected { spot_ecr: f64 },
     /// The store has no entry for this subarray.
@@ -364,6 +381,12 @@ struct Entry {
     monitor: DriftMonitor,
     /// Whether the entry currently sits in the recalibration queue.
     queued: bool,
+    /// Whether a recalibration job for this entry is executing right
+    /// now (claimed off the queue, engine call in flight). Guards the
+    /// window between claim and write-back: `poll_drift` must not
+    /// re-queue an entry whose repair is already running, or one drift
+    /// signal would recalibrate twice.
+    running: bool,
     /// Arithmetic-usable column mask (MAJ5 ∧ MAJ3 error-free) from the
     /// most recent battery measured under the *current* calibration
     /// (spot check or served batch); `None` until one lands, and
@@ -375,24 +398,62 @@ struct Entry {
     quarantine: Quarantine,
 }
 
+/// One channel's entries behind their own lock: banks on different
+/// channels never contend, and recalibration write-backs on one
+/// channel cannot stall serve-path reads on another.
+struct ChannelShard {
+    channel: usize,
+    entries: Mutex<BTreeMap<SubarrayId, Entry>>,
+}
+
+/// Cross-thread scheduler state: the recalibration queue plus the
+/// admission/lifecycle flags, all behind one short-critical-section
+/// mutex (engine work never runs under it).
+struct Scheduler {
+    /// FIFO of subarrays awaiting background recalibration. An id
+    /// appears at most once (guarded by `Entry::queued`).
+    queue: VecDeque<SubarrayId>,
+    /// Cleared when drain/shutdown begins: the serve path stops
+    /// admitting and the maintenance ticker stops scheduling.
+    accepting: bool,
+    /// Set when workers must exit (after quiescence on drain).
+    stop: bool,
+    /// Recalibration jobs claimed off the queue and executing now.
+    active_jobs: usize,
+    /// Serve-path requests past admission and not yet finished.
+    inflight_serves: usize,
+}
+
 /// The drift-aware recalibration service (module docs for the loop).
+///
+/// Every method takes `&self`: state lives in per-channel shards and a
+/// scheduler mutex, so any number of threads may serve, poll and
+/// recalibrate concurrently — wrap one in an [`Arc`] and hand it to a
+/// [`ServiceServer`] for the background loop.
 pub struct RecalibService<E> {
     pub cfg: DeviceConfig,
     svc: ServiceConfig,
     engine: E,
     threads: usize,
-    entries: BTreeMap<SubarrayId, Entry>,
-    /// FIFO of subarrays awaiting background recalibration.
-    queue: VecDeque<SubarrayId>,
+    /// Per-channel shards, sorted by channel id (registration creates
+    /// them on demand; the outer lock is only written on registration).
+    shards: RwLock<Vec<Arc<ChannelShard>>>,
+    sched: Mutex<Scheduler>,
+    /// Wakes recalibration workers when jobs arrive or `stop` flips.
+    job_cv: Condvar,
+    /// Wakes the maintenance ticker early on drain.
+    tick_cv: Condvar,
+    /// Wakes drain when in-flight serves / active jobs finish.
+    idle_cv: Condvar,
     /// Bumped per serve call: every batch draws fresh patterns.
-    serve_epoch: u64,
+    serve_epoch: AtomicU64,
     /// Maintenance polls so far (drives the scrub cadence).
-    polls: u64,
+    polls: AtomicU64,
     /// Set when the scrub cadence fires; cleared by [`Self::scrub`].
-    scrub_pending: bool,
+    scrub_pending: AtomicBool,
     /// The last served workload — what a scrub pass replays unmasked,
     /// so scrub detection sees exactly the corruption serving sees.
-    last_workload: Option<(Arc<WorkloadPlan>, Vec<Vec<u64>>)>,
+    last_workload: Mutex<Option<(Arc<WorkloadPlan>, Arc<Vec<Vec<u64>>>)>>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -405,21 +466,56 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
             svc,
             engine,
             threads: worker::default_threads(),
-            entries: BTreeMap::new(),
-            queue: VecDeque::new(),
-            serve_epoch: 0,
-            polls: 0,
-            scrub_pending: false,
-            last_workload: None,
+            shards: RwLock::new(Vec::new()),
+            sched: Mutex::new(Scheduler {
+                queue: VecDeque::new(),
+                accepting: true,
+                stop: false,
+                active_jobs: 0,
+                inflight_serves: 0,
+            }),
+            job_cv: Condvar::new(),
+            tick_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+            serve_epoch: AtomicU64::new(0),
+            polls: AtomicU64::new(0),
+            scrub_pending: AtomicBool::new(false),
+            last_workload: Mutex::new(None),
             metrics: Arc::new(Metrics::new()),
         })
+    }
+
+    /// Shards sorted by channel: iterating them (each shard's BTreeMap
+    /// in order) yields globally id-ordered traversal, since `channel`
+    /// is [`SubarrayId`]'s leading `Ord` field.
+    fn shards_snapshot(&self) -> Vec<Arc<ChannelShard>> {
+        self.shards
+            .read()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone()
+    }
+
+    fn shard_of(&self, channel: usize) -> Option<Arc<ChannelShard>> {
+        let shards = self.shards.read().unwrap_or_else(|p| p.into_inner());
+        shards
+            .binary_search_by_key(&channel, |s| s.channel)
+            .ok()
+            .map(|i| shards[i].clone())
+    }
+
+    /// Run `f` on one entry under its shard lock (short sections only
+    /// — never call the engine from inside).
+    fn with_entry<R>(&self, id: SubarrayId, f: impl FnOnce(&mut Entry) -> R) -> Option<R> {
+        let shard = self.shard_of(id.channel)?;
+        let mut entries = lock_clean(&shard.entries);
+        entries.get_mut(&id).map(f)
     }
 
     /// Register one subarray, manufactured from the device seed along
     /// its address path (the same derivation the experiment paths
     /// use). Starts `Uncalibrated` (serving neutral levels) and queued
     /// for calibration; [`Self::load_store`] may satisfy it first.
-    pub fn register(&mut self, id: SubarrayId, rows: usize, cols: usize, device_seed: u64) {
+    pub fn register(&self, id: SubarrayId, rows: usize, cols: usize, device_seed: u64) {
         let seed = derive_seed(device_seed, &id.seed_path());
         let sub = Subarray::with_geometry(&self.cfg, rows, cols, seed);
         let calib = self.svc.config.uncalibrated(&self.cfg, cols);
@@ -429,127 +525,212 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
             self.svc.quarantine_strikes,
             self.svc.quarantine_clean_passes,
         );
-        self.entries.insert(
-            id,
-            Entry {
-                sub,
-                seed,
-                calib,
-                state: EntryState::Uncalibrated,
-                monitor,
-                queued: false,
-                mask: None,
-                quarantine,
-            },
-        );
+        let entry = Entry {
+            sub,
+            seed,
+            calib,
+            state: EntryState::Uncalibrated,
+            monitor,
+            queued: false,
+            running: false,
+            mask: None,
+            quarantine,
+        };
+        let shard = {
+            let mut shards = self.shards.write().unwrap_or_else(|p| p.into_inner());
+            match shards.binary_search_by_key(&id.channel, |s| s.channel) {
+                Ok(i) => shards[i].clone(),
+                Err(i) => {
+                    let shard = Arc::new(ChannelShard {
+                        channel: id.channel,
+                        entries: Mutex::new(BTreeMap::new()),
+                    });
+                    shards.insert(i, shard.clone());
+                    shard
+                }
+            }
+        };
+        lock_clean(&shard.entries).insert(id, entry);
         self.enqueue(id);
     }
 
-    fn enqueue(&mut self, id: SubarrayId) {
-        if let Some(e) = self.entries.get_mut(&id) {
-            if !e.queued {
-                e.queued = true;
-                self.queue.push_back(id);
-            }
+    /// Mark `id` queued (under its shard lock) and push it onto the
+    /// scheduler queue. The queued-flag transition guarantees an id
+    /// appears in the queue at most once.
+    fn enqueue(&self, id: SubarrayId) {
+        let newly_queued = self
+            .with_entry(id, |e| {
+                if e.queued {
+                    false
+                } else {
+                    e.queued = true;
+                    true
+                }
+            })
+            .unwrap_or(false);
+        if newly_queued {
+            lock_clean(&self.sched).queue.push_back(id);
+            self.job_cv.notify_all();
         }
     }
 
+    /// Force one subarray onto the recalibration queue (operator API /
+    /// bench driver): an `Accepted` entry goes `Stale` and background
+    /// workers repair it. Returns false for unknown ids.
+    pub fn request_recalibration(&self, id: SubarrayId) -> bool {
+        let known = self
+            .with_entry(id, |e| {
+                if e.state == EntryState::Accepted {
+                    e.state = EntryState::Stale;
+                }
+            })
+            .is_some();
+        if known {
+            self.metrics.incr("recalib.requested");
+            self.enqueue(id);
+        }
+        known
+    }
+
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.shards_snapshot()
+            .iter()
+            .map(|s| lock_clean(&s.entries).len())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.len() == 0
     }
 
     pub fn ids(&self) -> Vec<SubarrayId> {
-        self.entries.keys().copied().collect()
+        let mut out = Vec::new();
+        for shard in self.shards_snapshot() {
+            out.extend(lock_clean(&shard.entries).keys().copied());
+        }
+        out
     }
 
     pub fn state(&self, id: SubarrayId) -> Option<EntryState> {
-        self.entries.get(&id).map(|e| e.state)
+        self.with_entry(id, |e| e.state)
     }
 
-    /// The calibration currently serving for `id`.
-    pub fn calibration(&self, id: SubarrayId) -> Option<&Calibration> {
-        self.entries.get(&id).map(|e| &e.calib)
+    /// The calibration currently serving for `id` (a clone: entries
+    /// live behind shard locks, so references cannot escape).
+    pub fn calibration(&self, id: SubarrayId) -> Option<Calibration> {
+        self.with_entry(id, |e| e.calib.clone())
     }
 
     /// Subarrays awaiting background recalibration.
     pub fn pending(&self) -> usize {
-        self.entries.values().filter(|e| e.queued).count()
+        self.shards_snapshot()
+            .iter()
+            .map(|s| lock_clean(&s.entries).values().filter(|e| e.queued).count())
+            .sum()
     }
 
     /// One subarray's quarantine state (`None` for unknown ids).
-    pub fn quarantine(&self, id: SubarrayId) -> Option<&Quarantine> {
-        self.entries.get(&id).map(|e| &e.quarantine)
+    pub fn quarantine(&self, id: SubarrayId) -> Option<Quarantine> {
+        self.with_entry(id, |e| e.quarantine.clone())
     }
 
     /// Whether the scrub cadence has fired since the last scrub pass.
     pub fn scrub_pending(&self) -> bool {
-        self.scrub_pending
+        self.scrub_pending.load(Ordering::Relaxed)
+    }
+
+    /// Whether the service is still admitting serve requests (false
+    /// once a drain/shutdown began).
+    pub fn is_accepting(&self) -> bool {
+        lock_clean(&self.sched).accepting
     }
 
     /// Rehydrate every registered subarray from a store: checked
-    /// decode, then ONE batched ECR spot check over all decodable
-    /// candidates, then per-entry accept/reject. Rejections and
-    /// incompatibilities count into `recalib.rejected_on_load` and
-    /// leave the entry queued for recalibration.
-    pub fn load_store(&mut self, store: &CalibStore) -> Vec<(SubarrayId, LoadOutcome)> {
+    /// decode, then per entry either the environment-match fast accept
+    /// (stored v2 env within [`DriftPolicy::env_matches`] tolerance of
+    /// the live one — no measurement spent, `recalib.accepted_on_env`)
+    /// or ONE batched ECR spot check over all remaining candidates and
+    /// per-entry accept/reject. Rejections and incompatibilities count
+    /// into `recalib.rejected_on_load` and leave the entry queued for
+    /// recalibration.
+    pub fn load_store(&self, store: &CalibStore) -> Vec<(SubarrayId, LoadOutcome)> {
         let mut outcomes: Vec<(SubarrayId, LoadOutcome)> = Vec::new();
         let mut candidates: Vec<(SubarrayId, Calibration)> = Vec::new();
-        for (&id, entry) in &self.entries {
-            match store.load_expecting(id, &self.cfg, entry.sub.cols) {
-                Ok(Some(calib)) => {
-                    // v2 env-metadata gate: levels identified at a die
-                    // temperature the drift policy would already have
-                    // flagged are rejected before spending a spot
-                    // check on them. v1 entries (no env) skip the gate
-                    // and rely on the spot check alone.
-                    if let Some(env) = store.stored_env(id) {
-                        let delta = (env.temp_c - entry.sub.env.temp_c).abs();
-                        if delta > self.svc.policy.max_temp_delta_c {
-                            self.metrics.incr("recalib.rejected_on_load");
-                            outcomes.push((
-                                id,
-                                LoadOutcome::Incompatible(format!(
-                                    "stored calibration env is {delta:.1} C from the \
-                                     current die temperature (policy allows {:.1} C)",
-                                    self.svc.policy.max_temp_delta_c
-                                )),
-                            ));
-                            continue;
-                        }
-                    }
-                    candidates.push((id, calib));
-                }
-                Ok(None) => outcomes.push((id, LoadOutcome::Missing)),
-                Err(e) => {
-                    self.metrics.incr("recalib.rejected_on_load");
-                    outcomes.push((id, LoadOutcome::Incompatible(e)));
-                }
-            }
-        }
         // One batched spot check for every candidate: both MAJ
         // arities, so an accepted entry starts with a trustworthy
         // arithmetic-usable mask, not just a MAJ-`serve_m` one.
         let other_m = 8 - self.svc.serve_m;
-        let mut reqs = Vec::with_capacity(2 * candidates.len());
-        for (id, calib) in &candidates {
-            let entry = &self.entries[id];
-            for m in [self.svc.serve_m, other_m] {
-                reqs.push(
-                    EcrRequest::from_subarray(
-                        &entry.sub,
-                        entry.seed,
-                        calib.clone(),
-                        m,
-                        self.svc.spot_check_samples,
-                    )
-                    .with_seed(SPOT_CHECK_STREAM),
-                );
+        let mut reqs: Vec<EcrRequest> = Vec::new();
+        for shard in self.shards_snapshot() {
+            let mut entries = lock_clean(&shard.entries);
+            for (&id, entry) in entries.iter_mut() {
+                match store.load_expecting(id, &self.cfg, entry.sub.cols) {
+                    Ok(Some(calib)) => {
+                        if let Some(env) = store.stored_env(id) {
+                            // v2 env-metadata gate: levels identified at
+                            // a die temperature the drift policy would
+                            // already have flagged are rejected before
+                            // spending a spot check on them. v1 entries
+                            // (no env) skip the gate and rely on the
+                            // spot check alone.
+                            let delta = (env.temp_c - entry.sub.env.temp_c).abs();
+                            if delta > self.svc.policy.max_temp_delta_c {
+                                self.metrics.incr("recalib.rejected_on_load");
+                                outcomes.push((
+                                    id,
+                                    LoadOutcome::Incompatible(format!(
+                                        "stored calibration env is {delta:.1} C from the \
+                                         current die temperature (policy allows {:.1} C)",
+                                        self.svc.policy.max_temp_delta_c
+                                    )),
+                                ));
+                                continue;
+                            }
+                            // Environment-match fast accept (opt-in):
+                            // the stored env is close enough that the
+                            // calibration is trusted as-is — anchored
+                            // at its *stored* env, so aging continues
+                            // from identification, not from reboot.
+                            if let Some((temp_delta_c, hours_delta)) =
+                                self.svc.policy.env_matches(&env, &entry.sub.env)
+                            {
+                                entry.calib = calib;
+                                entry.state = EntryState::Accepted;
+                                entry.monitor =
+                                    DriftMonitor::new(&env, self.svc.policy.serve_window);
+                                entry.queued = false; // drop any pending cold-start job
+                                entry.mask = None; // first battery establishes it
+                                self.metrics.incr("recalib.accepted_on_env");
+                                outcomes.push((
+                                    id,
+                                    LoadOutcome::AcceptedOnEnv { temp_delta_c, hours_delta },
+                                ));
+                                continue;
+                            }
+                        }
+                        for m in [self.svc.serve_m, other_m] {
+                            reqs.push(
+                                EcrRequest::from_subarray(
+                                    &entry.sub,
+                                    entry.seed,
+                                    calib.clone(),
+                                    m,
+                                    self.svc.spot_check_samples,
+                                )
+                                .with_seed(SPOT_CHECK_STREAM),
+                            );
+                        }
+                        candidates.push((id, calib));
+                    }
+                    Ok(None) => outcomes.push((id, LoadOutcome::Missing)),
+                    Err(e) => {
+                        self.metrics.incr("recalib.rejected_on_load");
+                        outcomes.push((id, LoadOutcome::Incompatible(e)));
+                    }
+                }
             }
         }
+        // The batched measurement runs with no shard lock held.
         let mut reports = self
             .metrics
             .time("service.spot_check", || {
@@ -564,12 +745,14 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
                     let spot_ecr = rep.ecr();
                     if spot_ecr <= self.svc.policy.accept_max_ecr {
                         let window = self.svc.policy.serve_window;
-                        let entry = self.entries.get_mut(&id).expect("candidate is registered");
-                        entry.calib = calib;
-                        entry.state = EntryState::Accepted;
-                        entry.monitor = DriftMonitor::new(&entry.sub.env, window);
-                        entry.queued = false; // drop any pending cold-start job
-                        entry.mask = Some(rep.intersect(&sec).error_free_mask());
+                        let mask = rep.intersect(&sec).error_free_mask();
+                        self.with_entry(id, |entry| {
+                            entry.calib = calib;
+                            entry.state = EntryState::Accepted;
+                            entry.monitor = DriftMonitor::new(&entry.sub.env, window);
+                            entry.queued = false; // drop any pending cold-start job
+                            entry.mask = Some(mask);
+                        });
                         self.metrics.incr("recalib.accepted_on_load");
                         LoadOutcome::Accepted { spot_ecr }
                     } else {
@@ -597,25 +780,28 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
     /// restricts compute to), and never touches the recalibration
     /// queue — a stale entry keeps serving its old levels until
     /// background recalibration lands.
-    pub fn serve(&mut self) -> Vec<ServeOutcome> {
-        self.serve_epoch += 1;
-        let seed = derive_seed(SERVE_STREAM, &[self.serve_epoch]);
+    pub fn serve(&self) -> Vec<ServeOutcome> {
+        let epoch = self.serve_epoch.fetch_add(1, Ordering::Relaxed) + 1;
+        let seed = derive_seed(SERVE_STREAM, &[epoch]);
         let other_m = 8 - self.svc.serve_m;
-        let ids: Vec<SubarrayId> = self.entries.keys().copied().collect();
-        let mut reqs = Vec::with_capacity(2 * ids.len());
-        for id in &ids {
-            let entry = &self.entries[id];
-            for m in [self.svc.serve_m, other_m] {
-                reqs.push(
-                    EcrRequest::from_subarray(
-                        &entry.sub,
-                        entry.seed,
-                        entry.calib.clone(),
-                        m,
-                        self.svc.serve_samples,
-                    )
-                    .with_seed(seed),
-                );
+        let mut ids = Vec::new();
+        let mut reqs = Vec::new();
+        for shard in self.shards_snapshot() {
+            let entries = lock_clean(&shard.entries);
+            for (&id, entry) in entries.iter() {
+                ids.push(id);
+                for m in [self.svc.serve_m, other_m] {
+                    reqs.push(
+                        EcrRequest::from_subarray(
+                            &entry.sub,
+                            entry.seed,
+                            entry.calib.clone(),
+                            m,
+                            self.svc.serve_samples,
+                        )
+                        .with_seed(seed),
+                    );
+                }
             }
         }
         let mut reports = self
@@ -628,23 +814,28 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
             .map(|id| {
                 let primary = reports.next().expect("one primary report per entry");
                 let secondary = reports.next().expect("one secondary report per entry");
-                let entry = self.entries.get_mut(&id).expect("serving a registered entry");
-                match (&primary, secondary) {
-                    (Ok(rep), Ok(sec)) => {
-                        entry.monitor.observe_ecr(rep.ecr());
-                        entry.mask = Some(rep.intersect(&sec).error_free_mask());
-                        self.metrics.incr("serve.batches");
-                    }
-                    (Ok(rep), Err(_)) => {
-                        // The primary battery still monitors drift; the
-                        // mask keeps its last trusted value.
-                        entry.monitor.observe_ecr(rep.ecr());
-                        self.metrics.incr("serve.batches");
-                        self.metrics.incr("serve.bank_failures");
-                    }
-                    (Err(_), _) => self.metrics.incr("serve.bank_failures"),
-                }
-                ServeOutcome { id, state: entry.state, report: primary }
+                let state = self
+                    .with_entry(id, |entry| {
+                        match (&primary, &secondary) {
+                            (Ok(rep), Ok(sec)) => {
+                                entry.monitor.observe_ecr(rep.ecr());
+                                entry.mask = Some(rep.intersect(sec).error_free_mask());
+                                self.metrics.incr("serve.batches");
+                            }
+                            (Ok(rep), Err(_)) => {
+                                // The primary battery still monitors
+                                // drift; the mask keeps its last
+                                // trusted value.
+                                entry.monitor.observe_ecr(rep.ecr());
+                                self.metrics.incr("serve.batches");
+                                self.metrics.incr("serve.bank_failures");
+                            }
+                            (Err(_), _) => self.metrics.incr("serve.bank_failures"),
+                        }
+                        entry.state
+                    })
+                    .unwrap_or(EntryState::Uncalibrated);
+                ServeOutcome { id, state, report: primary }
             })
             .collect()
     }
@@ -652,41 +843,116 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
     /// Evaluate drift for every accepted entry and schedule background
     /// recalibration for the drifted ones (metric `recalib.scheduled`).
     /// Entries whose earlier recalibration failed (stale/uncalibrated,
-    /// no longer queued) are re-queued here too (`recalib.rescheduled`),
-    /// so faults retry on the next maintenance pass. Returns the fresh
-    /// drift signals.
-    pub fn poll_drift(&mut self) -> Vec<(SubarrayId, DriftSignal)> {
-        self.polls += 1;
-        if self.svc.scrub_every > 0 && self.polls % self.svc.scrub_every as u64 == 0 {
+    /// neither queued nor running) are re-queued here too
+    /// (`recalib.rescheduled`), so faults retry on the next
+    /// maintenance pass. Returns the fresh drift signals.
+    pub fn poll_drift(&self) -> Vec<(SubarrayId, DriftSignal)> {
+        let polls = self.polls.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.svc.scrub_every > 0 && polls % self.svc.scrub_every as u64 == 0 {
             // Scrubbing needs a compute-capable engine; the poll only
             // raises the flag, [`Self::maintain`] (or an explicit
             // [`Self::scrub`]) runs the pass.
-            self.scrub_pending = true;
+            self.scrub_pending.store(true, Ordering::Relaxed);
         }
         let mut signals = Vec::new();
-        let mut to_queue = Vec::new();
-        for (&id, entry) in &mut self.entries {
-            match entry.state {
-                EntryState::Accepted => {
-                    if let Some(sig) = entry.monitor.check(&self.svc.policy, &entry.sub.env) {
-                        entry.state = EntryState::Stale;
-                        self.metrics.incr("recalib.scheduled");
-                        signals.push((id, sig));
-                        to_queue.push(id);
+        let mut to_push = Vec::new();
+        for shard in self.shards_snapshot() {
+            let mut entries = lock_clean(&shard.entries);
+            for (&id, entry) in entries.iter_mut() {
+                match entry.state {
+                    EntryState::Accepted => {
+                        if let Some(sig) = entry.monitor.check(&self.svc.policy, &entry.sub.env)
+                        {
+                            entry.state = EntryState::Stale;
+                            self.metrics.incr("recalib.scheduled");
+                            signals.push((id, sig));
+                            if !entry.queued {
+                                entry.queued = true;
+                                to_push.push(id);
+                            }
+                        }
                     }
-                }
-                EntryState::Stale | EntryState::Uncalibrated => {
-                    if !entry.queued {
-                        self.metrics.incr("recalib.rescheduled");
-                        to_queue.push(id);
+                    EntryState::Stale | EntryState::Uncalibrated => {
+                        // `running` covers the claim→write-back window:
+                        // an entry being repaired right now must not be
+                        // queued a second time for the same signal.
+                        if !entry.queued && !entry.running {
+                            self.metrics.incr("recalib.rescheduled");
+                            entry.queued = true;
+                            to_push.push(id);
+                        }
                     }
                 }
             }
         }
-        for id in to_queue {
-            self.enqueue(id);
+        if !to_push.is_empty() {
+            lock_clean(&self.sched).queue.extend(to_push);
+            self.job_cv.notify_all();
         }
         signals
+    }
+
+    /// Claim one popped queue element: skip stale elements (their
+    /// entry was satisfied by a later `load_store`) and mark the entry
+    /// `running` so polls cannot double-schedule it while the engine
+    /// call is in flight.
+    fn claim(&self, id: SubarrayId) -> Option<CalibRequest> {
+        self.with_entry(id, |entry| {
+            if !entry.queued {
+                return None;
+            }
+            entry.queued = false;
+            entry.running = true;
+            Some(CalibRequest::from_subarray(
+                &entry.sub,
+                entry.seed,
+                self.svc.config,
+                self.svc.params,
+            ))
+        })
+        .flatten()
+    }
+
+    /// Write one recalibration result back under the shard lock.
+    fn finish_job(&self, id: SubarrayId, result: Result<Calibration, String>) -> Result<(), String> {
+        self.with_entry(id, |entry| {
+            entry.running = false;
+            match result {
+                Ok(calib) => {
+                    entry.calib = calib;
+                    entry.state = EntryState::Accepted;
+                    entry.monitor.rebase(&entry.sub.env);
+                    // The old mask measured the old levels; the next
+                    // battery under the new calibration re-establishes
+                    // it.
+                    entry.mask = None;
+                    self.metrics.incr("recalib.completed");
+                    Ok(())
+                }
+                Err(e) => {
+                    self.metrics.incr("recalib.failed");
+                    Err(e)
+                }
+            }
+        })
+        .unwrap_or_else(|| Err("entry disappeared during recalibration".to_string()))
+    }
+
+    /// One background worker job: claim, recalibrate (panic-contained
+    /// inside `calibrate_isolated`), write back.
+    fn run_one_background(&self, id: SubarrayId) {
+        let Some(req) = self.claim(id) else {
+            return;
+        };
+        self.metrics.incr("recalib.background");
+        let result = self
+            .metrics
+            .time("service.recalibrate", || {
+                calibrate_isolated(&self.engine, &[req], 1)
+            })
+            .pop()
+            .unwrap_or_else(|| Err("engine returned no result".to_string()));
+        let _ = self.finish_job(id, result);
     }
 
     /// Drain up to `max_jobs` queued recalibrations through the engine
@@ -694,63 +960,30 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
     /// degrades to one error). Successes swap in the new calibration
     /// and re-anchor their drift monitor; failures keep the previous
     /// levels serving and are retried on the next [`Self::poll_drift`].
-    pub fn run_pending(&mut self, max_jobs: usize) -> Vec<(SubarrayId, Result<(), String>)> {
+    /// Synchronous counterpart of the [`ServiceServer`] worker threads
+    /// (both claim from the same queue, so they compose).
+    pub fn run_pending(&self, max_jobs: usize) -> Vec<(SubarrayId, Result<(), String>)> {
         let mut ids = Vec::new();
+        let mut reqs = Vec::new();
         while ids.len() < max_jobs {
-            let Some(id) = self.queue.pop_front() else {
+            let popped = lock_clean(&self.sched).queue.pop_front();
+            let Some(id) = popped else {
                 break;
             };
-            let Some(entry) = self.entries.get_mut(&id) else {
-                continue;
-            };
-            // Skip stale queue entries (e.g. accepted by a later
-            // `load_store` after being queued at registration).
-            if entry.queued {
-                entry.queued = false;
+            if let Some(req) = self.claim(id) {
                 ids.push(id);
+                reqs.push(req);
             }
         }
         if ids.is_empty() {
             return Vec::new();
         }
-        let reqs: Vec<CalibRequest> = ids
-            .iter()
-            .map(|id| {
-                let entry = &self.entries[id];
-                CalibRequest::from_subarray(
-                    &entry.sub,
-                    entry.seed,
-                    self.svc.config,
-                    self.svc.params,
-                )
-            })
-            .collect();
         let results = self.metrics.time("service.recalibrate", || {
             calibrate_isolated(&self.engine, &reqs, self.threads)
         });
         ids.into_iter()
             .zip(results)
-            .map(|(id, result)| {
-                let entry = self.entries.get_mut(&id).expect("recalibrating a registered entry");
-                let outcome = match result {
-                    Ok(calib) => {
-                        entry.calib = calib;
-                        entry.state = EntryState::Accepted;
-                        entry.monitor.rebase(&entry.sub.env);
-                        // The old mask measured the old levels; the
-                        // next battery under the new calibration
-                        // re-establishes it.
-                        entry.mask = None;
-                        self.metrics.incr("recalib.completed");
-                        Ok(())
-                    }
-                    Err(e) => {
-                        self.metrics.incr("recalib.failed");
-                        Err(e)
-                    }
-                };
-                (id, outcome)
-            })
+            .map(|(id, result)| (id, self.finish_job(id, result)))
             .collect()
     }
 
@@ -763,11 +996,14 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
     /// uniform neutral levels — carry nothing worth persisting.
     pub fn snapshot_store(&self) -> CalibStore {
         let mut store = CalibStore::default();
-        for (&id, entry) in &self.entries {
-            if entry.state != EntryState::Uncalibrated {
-                // v2 metadata: the environment the levels were
-                // identified/accepted under.
-                store.insert_with_env(id, &entry.calib, entry.monitor.calib_env());
+        for shard in self.shards_snapshot() {
+            let entries = lock_clean(&shard.entries);
+            for (&id, entry) in entries.iter() {
+                if entry.state != EntryState::Uncalibrated {
+                    // v2 metadata: the environment the levels were
+                    // identified/accepted under.
+                    store.insert_with_env(id, &entry.calib, entry.monitor.calib_env());
+                }
             }
         }
         store
@@ -775,22 +1011,63 @@ impl<E: CalibEngine + Sync> RecalibService<E> {
 
     /// Set one subarray's die temperature (scenario driver / telemetry
     /// ingest). Returns false for unknown ids.
-    pub fn set_temperature(&mut self, id: SubarrayId, temp_c: f64) -> bool {
-        match self.entries.get_mut(&id) {
-            Some(e) => {
-                e.sub.set_temperature(temp_c);
-                true
-            }
-            None => false,
-        }
+    pub fn set_temperature(&self, id: SubarrayId, temp_c: f64) -> bool {
+        self.with_entry(id, |e| e.sub.set_temperature(temp_c)).is_some()
     }
 
     /// Advance simulated wall-clock time on every subarray (retention
     /// decay + aging drift).
-    pub fn advance_time(&mut self, dt_hours: f64) {
-        for entry in self.entries.values_mut() {
-            entry.sub.advance_time(dt_hours);
+    pub fn advance_time(&self, dt_hours: f64) {
+        for shard in self.shards_snapshot() {
+            let mut entries = lock_clean(&shard.entries);
+            for entry in entries.values_mut() {
+                entry.sub.advance_time(dt_hours);
+            }
         }
+    }
+
+    /// Admission control for the serve path: reject typed when the
+    /// in-flight bound is full ([`PudError::Overloaded`]) or the
+    /// service is draining ([`PudError::Draining`]); otherwise count
+    /// the request in-flight until the returned guard drops.
+    fn admit_serve(&self) -> Result<ServeGuard<'_>, PudError> {
+        let inflight = {
+            let mut sched = lock_clean(&self.sched);
+            if !sched.accepting {
+                drop(sched);
+                self.metrics.incr("admission.rejected_draining");
+                return Err(PudError::Draining);
+            }
+            let limit = self.svc.max_inflight_serves;
+            if limit > 0 && sched.inflight_serves >= limit {
+                let inflight = sched.inflight_serves;
+                drop(sched);
+                self.metrics.incr("admission.rejected");
+                return Err(PudError::Overloaded { inflight, limit });
+            }
+            sched.inflight_serves += 1;
+            sched.inflight_serves
+        };
+        self.metrics.incr("admission.accepted");
+        self.metrics.gauge_max("serve.concurrent", inflight as u64);
+        Ok(ServeGuard { sched: &self.sched, idle_cv: &self.idle_cv })
+    }
+}
+
+/// In-flight marker for one admitted serve request: dropping it (on
+/// any exit path, panic included) releases the admission slot and
+/// wakes a pending drain.
+struct ServeGuard<'a> {
+    sched: &'a Mutex<Scheduler>,
+    idle_cv: &'a Condvar,
+}
+
+impl Drop for ServeGuard<'_> {
+    fn drop(&mut self) {
+        let mut sched = lock_clean(self.sched);
+        sched.inflight_serves = sched.inflight_serves.saturating_sub(1);
+        drop(sched);
+        self.idle_cv.notify_all();
     }
 }
 
@@ -800,7 +1077,7 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
     /// see [`Self::serve_plan`]. An invalid op is a request-level
     /// error; per-bank faults live inside the returned outcomes.
     pub fn serve_workload(
-        &mut self,
+        &self,
         op: PudOp,
         operands: &[Vec<u64>],
     ) -> Result<Vec<WorkloadOutcome>, PudError> {
@@ -812,7 +1089,10 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
     /// batched engine call, per-bank fault isolation): each bank
     /// executes under its *current* calibration and the error-free
     /// column mask from its most recent battery, stale entries
-    /// included — arithmetic never waits on the recalibration queue.
+    /// included — arithmetic never waits on the recalibration queue,
+    /// and any number of threads may serve concurrently (up to the
+    /// admission bound; see [`PudError::Overloaded`] /
+    /// [`PudError::Draining`] for the typed rejections).
     /// `operands` are per-column values broadcast to every bank; a
     /// bank whose geometry disagrees degrades to one `Err` outcome.
     /// Each outcome counts how many masked columns matched the
@@ -822,18 +1102,20 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
     /// charge-state violation rejects the whole request before any
     /// bank executes (`PudError::Verification`).
     pub fn serve_plan(
-        &mut self,
+        &self,
         plan: &Arc<WorkloadPlan>,
         operands: &[Vec<u64>],
     ) -> Result<Vec<WorkloadOutcome>, PudError> {
+        let _guard = self.admit_serve()?;
         crate::pud::verify::admit(plan)?;
-        self.last_workload = Some((plan.clone(), operands.to_vec()));
+        *lock_clean(&self.last_workload) = Some((plan.clone(), Arc::new(operands.to_vec())));
         let redundancy = self.svc.redundancy.max(1);
-        let ids: Vec<SubarrayId> = self.entries.keys().copied().collect();
-        let reqs: Vec<ComputeRequest> = ids
-            .iter()
-            .map(|id| {
-                let entry = &self.entries[id];
+        let mut ids = Vec::new();
+        let mut reqs: Vec<ComputeRequest> = Vec::new();
+        for shard in self.shards_snapshot() {
+            let entries = lock_clean(&shard.entries);
+            for (&id, entry) in entries.iter() {
+                ids.push(id);
                 let mut req = ComputeRequest::from_subarray(
                     &entry.sub,
                     entry.seed,
@@ -853,9 +1135,9 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
                 if redundancy > 1 {
                     req = req.with_replicas(redundancy);
                 }
-                req
-            })
-            .collect();
+                reqs.push(req);
+            }
+        }
         let results = self.metrics.time("compute.serve", || {
             execute_isolated(&self.engine, &reqs, self.threads)
         });
@@ -869,46 +1151,58 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
             .into_iter()
             .zip(results)
             .map(|(id, result)| {
-                let entry = self.entries.get_mut(&id).expect("serving a registered entry");
-                let state = entry.state;
-                let (golden_correct, active_cols) = match (&result, &golden) {
-                    (Ok(res), Ok(golden)) => {
-                        self.metrics.incr("compute.batches");
-                        self.metrics.add("fault.flips", res.fault_flips);
-                        let active = res.active_cols();
-                        self.metrics.add("compute.columns_served", active as u64);
-                        let correct = if golden.len() == res.outputs.len() {
-                            res.golden_correct(golden)
-                        } else {
-                            // Only reachable for 0-operand plans (any
-                            // width mismatch fails execution): compare
-                            // every column to the broadcast constant.
-                            let constant = vec![golden[0]; res.outputs.len()];
-                            res.golden_correct(&constant)
+                let (state, golden_correct, active_cols) = self
+                    .with_entry(id, |entry| {
+                        let state = entry.state;
+                        let (correct, active) = match (&result, &golden) {
+                            (Ok(res), Ok(golden)) => {
+                                self.metrics.incr("compute.batches");
+                                self.metrics.add("fault.flips", res.fault_flips);
+                                let active = res.active_cols();
+                                self.metrics.add("compute.columns_served", active as u64);
+                                let correct = if golden.len() == res.outputs.len() {
+                                    res.golden_correct(golden)
+                                } else {
+                                    // Only reachable for 0-operand plans
+                                    // (any width mismatch fails
+                                    // execution): compare every column
+                                    // to the broadcast constant.
+                                    let constant = vec![golden[0]; res.outputs.len()];
+                                    res.golden_correct(&constant)
+                                };
+                                if correct < active {
+                                    self.metrics.add(
+                                        "compute.golden_mismatch",
+                                        (active - correct) as u64,
+                                    );
+                                }
+                                if entry.quarantine.enabled()
+                                    && golden.len() == res.outputs.len()
+                                {
+                                    let bad: Vec<bool> = (0..res.outputs.len())
+                                        .map(|c| {
+                                            matches!(res.mask.get(c), Some(true))
+                                                && res.outputs[c] != golden[c]
+                                        })
+                                        .collect();
+                                    let delta = entry.quarantine.observe_serve(&bad);
+                                    self.metrics.add(
+                                        "quarantine.observed_mismatches",
+                                        delta.dirty as u64,
+                                    );
+                                    self.metrics
+                                        .add("quarantine.entered", delta.entered as u64);
+                                }
+                                (correct, active)
+                            }
+                            _ => {
+                                self.metrics.incr("compute.bank_failures");
+                                (0, 0)
+                            }
                         };
-                        if correct < active {
-                            self.metrics
-                                .add("compute.golden_mismatch", (active - correct) as u64);
-                        }
-                        if entry.quarantine.enabled() && golden.len() == res.outputs.len() {
-                            let bad: Vec<bool> = (0..res.outputs.len())
-                                .map(|c| {
-                                    matches!(res.mask.get(c), Some(true))
-                                        && res.outputs[c] != golden[c]
-                                })
-                                .collect();
-                            let delta = entry.quarantine.observe_serve(&bad);
-                            self.metrics
-                                .add("quarantine.observed_mismatches", delta.dirty as u64);
-                            self.metrics.add("quarantine.entered", delta.entered as u64);
-                        }
-                        (correct, active)
-                    }
-                    _ => {
-                        self.metrics.incr("compute.bank_failures");
-                        (0, 0)
-                    }
-                };
+                        (state, correct, active)
+                    })
+                    .unwrap_or((EntryState::Uncalibrated, 0, 0));
                 WorkloadOutcome { id, state, result, golden_correct, active_cols }
             })
             .collect();
@@ -923,25 +1217,27 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
     /// the corruption serving would absorb — including duty-cycled
     /// intermittent columns that a one-shot spot check misses. No-op
     /// (empty result) before the first served workload.
-    pub fn scrub(&mut self) -> Vec<ScrubOutcome> {
-        self.scrub_pending = false;
-        let Some((plan, operands)) = self.last_workload.clone() else {
+    pub fn scrub(&self) -> Vec<ScrubOutcome> {
+        self.scrub_pending.store(false, Ordering::Relaxed);
+        let last = lock_clean(&self.last_workload).clone();
+        let Some((plan, operands)) = last else {
             return Vec::new();
         };
-        let ids: Vec<SubarrayId> = self.entries.keys().copied().collect();
-        let reqs: Vec<ComputeRequest> = ids
-            .iter()
-            .map(|id| {
-                let entry = &self.entries[id];
-                ComputeRequest::from_subarray(
+        let mut ids = Vec::new();
+        let mut reqs: Vec<ComputeRequest> = Vec::new();
+        for shard in self.shards_snapshot() {
+            let entries = lock_clean(&shard.entries);
+            for (&id, entry) in entries.iter() {
+                ids.push(id);
+                reqs.push(ComputeRequest::from_subarray(
                     &entry.sub,
                     entry.seed,
                     plan.clone(),
                     entry.calib.clone(),
-                    operands.clone(),
-                )
-            })
-            .collect();
+                    operands.as_ref().clone(),
+                ));
+            }
+        }
         let results = self.metrics.time("service.scrub", || {
             execute_isolated(&self.engine, &reqs, self.threads)
         });
@@ -951,29 +1247,32 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
         ids.into_iter()
             .zip(results)
             .map(|(id, result)| {
-                let entry = self.entries.get_mut(&id).expect("scrubbing a registered entry");
-                let (result, delta) = match (result, &golden) {
-                    (Ok(res), Ok(golden)) if golden.len() == res.outputs.len() => {
-                        let bad: Vec<bool> = (0..res.outputs.len())
-                            .map(|c| res.outputs[c] != golden[c])
-                            .collect();
-                        let delta = entry.quarantine.observe_scrub(&bad);
-                        self.metrics.add("fault.flips", res.fault_flips);
-                        self.metrics.add("scrub.dirty_cols", delta.dirty as u64);
-                        self.metrics.add("quarantine.entered", delta.entered as u64);
-                        self.metrics.add("quarantine.released", delta.released as u64);
-                        (Ok(()), delta)
-                    }
-                    (Ok(_), Ok(_)) => (
-                        Err("scrub golden width mismatch".to_string()),
-                        QuarantineDelta::default(),
-                    ),
-                    (Ok(_), Err(e)) => (Err(format!("{e}")), QuarantineDelta::default()),
-                    (Err(e), _) => {
-                        self.metrics.incr("scrub.bank_failures");
-                        (Err(e), QuarantineDelta::default())
-                    }
-                };
+                let (result, delta) = self
+                    .with_entry(id, |entry| match (result, &golden) {
+                        (Ok(res), Ok(golden)) if golden.len() == res.outputs.len() => {
+                            let bad: Vec<bool> = (0..res.outputs.len())
+                                .map(|c| res.outputs[c] != golden[c])
+                                .collect();
+                            let delta = entry.quarantine.observe_scrub(&bad);
+                            self.metrics.add("fault.flips", res.fault_flips);
+                            self.metrics.add("scrub.dirty_cols", delta.dirty as u64);
+                            self.metrics.add("quarantine.entered", delta.entered as u64);
+                            self.metrics.add("quarantine.released", delta.released as u64);
+                            (Ok(()), delta)
+                        }
+                        (Ok(_), Ok(_)) => (
+                            Err("scrub golden width mismatch".to_string()),
+                            QuarantineDelta::default(),
+                        ),
+                        (Ok(_), Err(e)) => (Err(format!("{e}")), QuarantineDelta::default()),
+                        (Err(e), _) => {
+                            self.metrics.incr("scrub.bank_failures");
+                            (Err(e), QuarantineDelta::default())
+                        }
+                    })
+                    .unwrap_or_else(|| {
+                        (Err("entry disappeared".to_string()), QuarantineDelta::default())
+                    });
                 ScrubOutcome { id, result, delta }
             })
             .collect()
@@ -981,11 +1280,189 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
 
     /// One maintenance tick: evaluate drift signals
     /// ([`Self::poll_drift`]) and, when the scrub cadence
-    /// (`ServiceConfig::scrub_every`) fires, run the scrub pass.
-    pub fn maintain(&mut self) -> (Vec<(SubarrayId, DriftSignal)>, Vec<ScrubOutcome>) {
+    /// (`ServiceConfig::scrub_every`) fires, run the scrub pass. The
+    /// [`ServiceServer`] ticker calls this every
+    /// `ServiceConfig::maintain_every_ms`.
+    pub fn maintain(&self) -> (Vec<(SubarrayId, DriftSignal)>, Vec<ScrubOutcome>) {
         let signals = self.poll_drift();
-        let scrubbed = if self.scrub_pending { self.scrub() } else { Vec::new() };
+        let scrubbed = if self.scrub_pending() { self.scrub() } else { Vec::new() };
         (signals, scrubbed)
+    }
+}
+
+/// One recalibration worker: block on the queue, claim jobs, run them
+/// panic-contained, and account `active_jobs` so drain can wait for
+/// quiescence.
+fn worker_loop<E: CalibEngine + Sync>(svc: &RecalibService<E>) {
+    loop {
+        let id = {
+            let mut sched = lock_clean(&svc.sched);
+            loop {
+                if sched.stop {
+                    return;
+                }
+                if let Some(id) = sched.queue.pop_front() {
+                    sched.active_jobs += 1;
+                    break id;
+                }
+                sched = svc.job_cv.wait(sched).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        // The engine call inside is already panic-contained; this
+        // outer containment guards the bookkeeping, so a worker thread
+        // can never die and strand `active_jobs`.
+        if worker::run_contained(|| svc.run_one_background(id)).is_err() {
+            svc.metrics.incr("recalib.worker_panics");
+        }
+        let mut sched = lock_clean(&svc.sched);
+        sched.active_jobs -= 1;
+        drop(sched);
+        svc.idle_cv.notify_all();
+    }
+}
+
+/// The maintenance ticker: periodic [`RecalibService::maintain`]
+/// (drift polls + scrub cadence) until drain/stop.
+fn maintenance_loop<E: CalibEngine + ComputeEngine + Sync>(svc: &RecalibService<E>) {
+    let interval = Duration::from_millis(svc.svc.maintain_every_ms.max(1));
+    loop {
+        {
+            let sched = lock_clean(&svc.sched);
+            if sched.stop || !sched.accepting {
+                return;
+            }
+        }
+        if worker::run_contained(|| svc.maintain()).is_err() {
+            svc.metrics.incr("recalib.worker_panics");
+        }
+        let sched = lock_clean(&svc.sched);
+        if sched.stop || !sched.accepting {
+            return;
+        }
+        let _ = svc
+            .tick_cv
+            .wait_timeout(sched, interval)
+            .unwrap_or_else(|p| p.into_inner());
+    }
+}
+
+/// Background threads over a shared [`RecalibService`]: N
+/// recalibration workers draining the drift queue plus one maintenance
+/// ticker, all owned by this handle. Serving keeps going through the
+/// shared `Arc<RecalibService<E>>` from any thread; [`Self::drain`] /
+/// [`Self::shutdown`] stop admission, finish work, join every thread
+/// and return the persisted store. Dropping an undrained server
+/// performs a fast shutdown (joins threads, abandons queued jobs).
+pub struct ServiceServer<E: CalibEngine + ComputeEngine + Send + Sync + 'static> {
+    service: Arc<RecalibService<E>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<E: CalibEngine + ComputeEngine + Send + Sync + 'static> ServiceServer<E> {
+    /// Spawn `workers.max(1)` recalibration worker threads plus the
+    /// maintenance ticker over `service` (restoring admission if a
+    /// previous server on the same service had drained it).
+    pub fn start(service: Arc<RecalibService<E>>, workers: usize) -> Self {
+        {
+            let mut sched = lock_clean(&service.sched);
+            sched.accepting = true;
+            sched.stop = false;
+        }
+        let mut handles = Vec::new();
+        for _ in 0..workers.max(1) {
+            let svc = service.clone();
+            handles.push(std::thread::spawn(move || worker_loop(svc.as_ref())));
+        }
+        let svc = service.clone();
+        handles.push(std::thread::spawn(move || maintenance_loop(svc.as_ref())));
+        Self { service, handles }
+    }
+
+    /// The shared service (serve / inspect from any thread).
+    pub fn service(&self) -> Arc<RecalibService<E>> {
+        self.service.clone()
+    }
+
+    /// Graceful drain: stop admitting serves, let in-flight serves and
+    /// **every queued recalibration** finish, join all threads, and
+    /// return the persisted store snapshot. Records `drain.*` metrics
+    /// (`drain.pending_jobs`, `drain.persisted_entries`, the
+    /// `drain.seconds` timer).
+    pub fn drain(mut self) -> CalibStore {
+        self.stop_and_persist(true)
+    }
+
+    /// Fast shutdown: like [`Self::drain`] but queued-not-yet-running
+    /// jobs are abandoned (`drain.abandoned_jobs`; their entries
+    /// re-queue from drift state on the next boot's polls). In-flight
+    /// serves and running jobs still finish.
+    pub fn shutdown(mut self) -> CalibStore {
+        self.stop_and_persist(false)
+    }
+
+    fn stop_and_persist(&mut self, finish_queue: bool) -> CalibStore {
+        let service = self.service.clone();
+        let handles = std::mem::take(&mut self.handles);
+        service.metrics.time("drain.seconds", || {
+            let (pending, abandoned) = {
+                let mut sched = lock_clean(&service.sched);
+                sched.accepting = false;
+                let pending = sched.queue.len() + sched.active_jobs;
+                let abandoned: Vec<SubarrayId> = if finish_queue {
+                    Vec::new()
+                } else {
+                    sched.queue.drain(..).collect()
+                };
+                (pending, abandoned)
+            };
+            service.metrics.add("drain.pending_jobs", pending as u64);
+            if !finish_queue {
+                service.metrics.add("drain.abandoned_jobs", abandoned.len() as u64);
+                for id in abandoned {
+                    // Un-mark so the next boot's polls re-queue them.
+                    service.with_entry(id, |e| e.queued = false);
+                }
+            }
+            service.job_cv.notify_all();
+            service.tick_cv.notify_all();
+            // Quiesce: workers keep claiming until the queue is empty
+            // (drain) or already cleared (shutdown); serve guards
+            // release their slots. The timeout re-checks the predicate
+            // even if a wake-up is missed, so drain always terminates.
+            {
+                let mut sched = lock_clean(&service.sched);
+                while sched.inflight_serves > 0
+                    || sched.active_jobs > 0
+                    || !sched.queue.is_empty()
+                {
+                    sched = service
+                        .idle_cv
+                        .wait_timeout(sched, Duration::from_millis(50))
+                        .unwrap_or_else(|p| p.into_inner())
+                        .0;
+                }
+                sched.stop = true;
+            }
+            service.job_cv.notify_all();
+            service.tick_cv.notify_all();
+            for h in handles {
+                let _ = h.join();
+            }
+            let store = service.snapshot_store();
+            service
+                .metrics
+                .add("drain.persisted_entries", store.entries.len() as u64);
+            store
+        })
+    }
+}
+
+impl<E: CalibEngine + ComputeEngine + Send + Sync + 'static> Drop for ServiceServer<E> {
+    fn drop(&mut self) {
+        if self.handles.is_empty() {
+            return; // drained/shut down explicitly
+        }
+        let _ = self.stop_and_persist(false);
     }
 }
 
@@ -997,16 +1474,54 @@ mod tests {
     fn service(banks: usize, cols: usize) -> RecalibService<NativeEngine> {
         let cfg = DeviceConfig::default();
         let svc = ServiceConfig { serve_samples: 512, ..ServiceConfig::default() };
-        let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg)).unwrap();
+        service_with(NativeEngine::new(cfg.clone()), cfg, svc, banks, cols)
+    }
+
+    fn service_with<E: CalibEngine + Sync>(
+        engine: E,
+        cfg: DeviceConfig,
+        svc: ServiceConfig,
+        banks: usize,
+        cols: usize,
+    ) -> RecalibService<E> {
+        let s = RecalibService::new(cfg, svc, engine).unwrap();
         for b in 0..banks {
             s.register(SubarrayId::new(0, b, 0), 32, cols, 0x5EED);
         }
         s
     }
 
+    /// Drift policy with the environment-match fast path enabled.
+    fn env_match_cfg(temp_c: f64, hours: f64) -> ServiceConfig {
+        let mut svc = ServiceConfig { serve_samples: 512, ..ServiceConfig::default() };
+        svc.policy.env_match_temp_c = temp_c;
+        svc.policy.env_match_hours = hours;
+        svc
+    }
+
+    /// Engine whose spot-check path must never run: calibration
+    /// delegates, but any ECR measurement is an injected failure.
+    struct NoSpotCheckEngine {
+        inner: NativeEngine,
+    }
+
+    impl CalibEngine for NoSpotCheckEngine {
+        fn backend(&self) -> &'static str {
+            "no-spot-check"
+        }
+
+        fn calibrate_batch(&self, reqs: &[CalibRequest]) -> anyhow::Result<Vec<Calibration>> {
+            self.inner.calibrate_batch(reqs)
+        }
+
+        fn measure_ecr_batch(&self, _reqs: &[EcrRequest]) -> anyhow::Result<Vec<EcrReport>> {
+            panic!("spot check must be skipped on an env-matched load");
+        }
+    }
+
     #[test]
     fn cold_start_calibrates_and_persists() {
-        let mut s = service(2, 512);
+        let s = service(2, 512);
         assert_eq!(s.pending(), 2);
         assert!(s.ids().iter().all(|&id| s.state(id) == Some(EntryState::Uncalibrated)));
         let done = s.run_pending(usize::MAX);
@@ -1020,12 +1535,12 @@ mod tests {
 
     #[test]
     fn load_accepts_good_entries_and_skips_their_cold_start() {
-        let mut warm = service(2, 512);
+        let warm = service(2, 512);
         warm.run_pending(usize::MAX);
         let store = warm.snapshot_store();
 
         // "Reboot": a fresh service over the same manufactured device.
-        let mut s = service(2, 512);
+        let s = service(2, 512);
         let outcomes = s.load_store(&store);
         for (id, o) in &outcomes {
             assert!(matches!(o, LoadOutcome::Accepted { .. }), "{id:?}: {o:?}");
@@ -1045,8 +1560,104 @@ mod tests {
     }
 
     #[test]
+    fn env_match_fast_accepts_without_spot_check() {
+        let warm = service(2, 256);
+        warm.run_pending(usize::MAX);
+        let store = warm.snapshot_store();
+
+        // Same device, same environment: the fast path must accept
+        // every entry without spending a single ECR measurement — the
+        // engine's measurement path is an injected panic.
+        let cfg = DeviceConfig::default();
+        let s = service_with(
+            NoSpotCheckEngine { inner: NativeEngine::new(cfg.clone()) },
+            cfg,
+            env_match_cfg(1.0, 1.0),
+            2,
+            256,
+        );
+        let outcomes = s.load_store(&store);
+        for (id, o) in &outcomes {
+            match o {
+                LoadOutcome::AcceptedOnEnv { temp_delta_c, hours_delta } => {
+                    assert!(*temp_delta_c <= 1.0 && *hours_delta <= 1.0, "{id:?}: {o:?}");
+                }
+                other => panic!("{id:?}: expected AcceptedOnEnv, got {other:?}"),
+            }
+        }
+        assert_eq!(s.metrics.counter("recalib.accepted_on_env"), 2);
+        assert_eq!(s.metrics.counter("recalib.accepted_on_load"), 0);
+        assert_eq!(s.pending(), 0);
+        for &id in &s.ids() {
+            assert_eq!(s.state(id), Some(EntryState::Accepted));
+            assert_eq!(
+                s.calibration(id).unwrap().levels,
+                warm.calibration(id).unwrap().levels
+            );
+        }
+        // The cold-start queue entries were satisfied by the load.
+        assert!(s.run_pending(usize::MAX).is_empty());
+    }
+
+    #[test]
+    fn env_near_miss_falls_back_to_the_spot_check() {
+        let warm = service(1, 256);
+        warm.run_pending(usize::MAX);
+        let store = warm.snapshot_store();
+
+        let cfg = DeviceConfig::default();
+        let s = service_with(
+            NativeEngine::new(cfg.clone()),
+            cfg,
+            env_match_cfg(1.0, 1.0),
+            1,
+            256,
+        );
+        // Two hours of retention age: outside the one-hour match
+        // tolerance, inside every drift-policy bound — the entry is
+        // still good, it just has to prove it with a spot check.
+        s.advance_time(2.0);
+        let outcomes = s.load_store(&store);
+        assert!(
+            matches!(outcomes[0].1, LoadOutcome::Accepted { .. }),
+            "near miss must spot check: {:?}",
+            outcomes[0].1
+        );
+        assert_eq!(s.metrics.counter("recalib.accepted_on_env"), 0);
+        assert_eq!(s.metrics.counter("recalib.accepted_on_load"), 1);
+    }
+
+    #[test]
+    fn v1_entry_without_env_spot_checks_even_with_fast_path_enabled() {
+        let warm = service(1, 256);
+        warm.run_pending(usize::MAX);
+        let id = SubarrayId::new(0, 0, 0);
+        // A v1 store entry: raw calibration, no environment metadata.
+        let mut store = CalibStore::default();
+        store.insert(id, &warm.calibration(id).unwrap());
+        assert!(store.stored_env(id).is_none());
+
+        let cfg = DeviceConfig::default();
+        let s = service_with(
+            NativeEngine::new(cfg.clone()),
+            cfg,
+            env_match_cfg(10.0, 1000.0),
+            1,
+            256,
+        );
+        let outcomes = s.load_store(&store);
+        assert!(
+            matches!(outcomes[0].1, LoadOutcome::Accepted { .. }),
+            "v1 entries carry no env to match: {:?}",
+            outcomes[0].1
+        );
+        assert_eq!(s.metrics.counter("recalib.accepted_on_env"), 0);
+        assert_eq!(s.metrics.counter("recalib.accepted_on_load"), 1);
+    }
+
+    #[test]
     fn load_rejects_tampered_entries() {
-        let mut warm = service(1, 512);
+        let warm = service(1, 512);
         warm.run_pending(usize::MAX);
         let mut store = warm.snapshot_store();
         let id = SubarrayId::new(0, 0, 0);
@@ -1054,7 +1665,7 @@ mod tests {
         // wrong calibration that the spot check must catch.
         store.entries.get_mut(&id).unwrap().levels = vec![0; 512];
 
-        let mut s = service(1, 512);
+        let s = service(1, 512);
         let outcomes = s.load_store(&store);
         assert!(matches!(outcomes[0].1, LoadOutcome::Rejected { spot_ecr } if spot_ecr > 0.5));
         assert_eq!(s.metrics.counter("recalib.rejected_on_load"), 1);
@@ -1067,10 +1678,10 @@ mod tests {
 
     #[test]
     fn geometry_mismatch_is_incompatible_not_a_miss() {
-        let mut warm = service(1, 512);
+        let warm = service(1, 512);
         warm.run_pending(usize::MAX);
         let store = warm.snapshot_store();
-        let mut s = service(1, 256);
+        let s = service(1, 256);
         let outcomes = s.load_store(&store);
         assert!(matches!(&outcomes[0].1, LoadOutcome::Incompatible(e) if e.contains("512")));
         assert_eq!(s.metrics.counter("recalib.rejected_on_load"), 1);
@@ -1078,7 +1689,7 @@ mod tests {
 
     #[test]
     fn serve_feeds_monitors_without_touching_the_queue() {
-        let mut s = service(1, 512);
+        let s = service(1, 512);
         s.run_pending(usize::MAX);
         let out = s.serve();
         assert_eq!(out.len(), 1);
@@ -1092,7 +1703,7 @@ mod tests {
 
     #[test]
     fn temperature_excursion_schedules_background_recalibration() {
-        let mut s = service(2, 512);
+        let s = service(2, 512);
         s.run_pending(usize::MAX);
         let hot = SubarrayId::new(0, 1, 0);
         assert!(s.set_temperature(hot, 85.0));
@@ -1116,8 +1727,26 @@ mod tests {
     }
 
     #[test]
+    fn request_recalibration_marks_stale_and_queues() {
+        let s = service(1, 128);
+        s.run_pending(usize::MAX);
+        let id = SubarrayId::new(0, 0, 0);
+        assert!(s.request_recalibration(id));
+        assert_eq!(s.state(id), Some(EntryState::Stale));
+        assert_eq!(s.pending(), 1);
+        assert_eq!(s.metrics.counter("recalib.requested"), 1);
+        // Idempotent while queued: no duplicate queue element.
+        assert!(s.request_recalibration(id));
+        assert_eq!(s.pending(), 1);
+        let done = s.run_pending(usize::MAX);
+        assert_eq!(done.len(), 1);
+        assert_eq!(s.state(id), Some(EntryState::Accepted));
+        assert!(!s.request_recalibration(SubarrayId::new(7, 7, 7)));
+    }
+
+    #[test]
     fn unknown_id_set_temperature_is_reported() {
-        let mut s = service(1, 128);
+        let s = service(1, 128);
         assert!(!s.set_temperature(SubarrayId::new(7, 7, 7), 60.0));
     }
 
@@ -1125,7 +1754,7 @@ mod tests {
     fn serve_workload_runs_under_current_masks() {
         use crate::pud::plan::PudOp;
         let cols = 64;
-        let mut s = service(2, cols);
+        let s = service(2, cols);
         s.run_pending(usize::MAX);
         // A served battery establishes each bank's error-free mask.
         s.serve();
@@ -1147,9 +1776,31 @@ mod tests {
         }
         assert_eq!(s.metrics.counter("compute.batches"), 2);
         assert_eq!(s.metrics.counter("compute.bank_failures"), 0);
+        assert_eq!(s.metrics.counter("admission.accepted"), 1);
+        assert_eq!(s.metrics.counter("serve.concurrent"), 1);
         // An invalid op fails the request, not the banks.
         assert!(s.serve_workload(PudOp::Add { width: 0 }, &[a, b]).is_err());
         assert_eq!(s.metrics.counter("compute.bank_failures"), 0);
+    }
+
+    #[test]
+    fn drained_service_rejects_serves_with_a_typed_error() {
+        use crate::pud::plan::PudOp;
+        let cols = 32;
+        let s = Arc::new(service(1, cols));
+        s.run_pending(usize::MAX);
+        let server = ServiceServer::start(s.clone(), 1);
+        assert!(s.is_accepting());
+        let store = server.drain();
+        assert_eq!(store.entries.len(), 1);
+        assert!(!s.is_accepting());
+        let a: Vec<u64> = (0..cols as u64).map(|c| c % 4).collect();
+        let err = s
+            .serve_workload(PudOp::Add { width: 2 }, &[a.clone(), a])
+            .unwrap_err();
+        assert_eq!(err, PudError::Draining);
+        assert_eq!(s.metrics.counter("admission.rejected_draining"), 1);
+        assert!(s.metrics.counter("drain.persisted_entries") >= 1);
     }
 
     #[test]
@@ -1225,7 +1876,7 @@ mod tests {
             scrub_every: 2,
             ..ServiceConfig::default()
         };
-        let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg)).unwrap();
+        let s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg)).unwrap();
         s.register(SubarrayId::new(0, 0, 0), 32, cols, 0x5EED);
         s.run_pending(usize::MAX);
         // Poll 1: cadence not due yet.
@@ -1250,7 +1901,7 @@ mod tests {
 
     #[test]
     fn snapshot_persists_calibration_environment_metadata() {
-        let mut s = service(1, 128);
+        let s = service(1, 128);
         s.run_pending(usize::MAX);
         let id = SubarrayId::new(0, 0, 0);
         // An excursion past the policy bound schedules recalibration;

@@ -150,6 +150,14 @@ pub fn isolate_batch<Q: Sync, R: Send>(
         .collect()
 }
 
+/// Run one closure with panic containment — the single-job form of
+/// [`try_parallel_map`], used by the service's background worker
+/// threads so a panicking job body can never kill (or leak the
+/// bookkeeping of) a long-lived worker.
+pub fn run_contained<R>(f: impl FnOnce() -> R) -> Result<R, JobError> {
+    catch_unwind(AssertUnwindSafe(f)).map_err(|p| JobError::Panicked(panic_message(p)))
+}
+
 /// Default worker count: available parallelism.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
@@ -270,6 +278,15 @@ mod tests {
         let empty: Vec<Result<u32, String>> =
             isolate_batch(&[] as &[u32], 2, |_| Ok(Vec::new()), |&x| Ok(x));
         assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn run_contained_returns_or_reports() {
+        assert_eq!(run_contained(|| 41 + 1), Ok(42));
+        match run_contained(|| -> i32 { panic!("contained boom") }) {
+            Err(JobError::Panicked(msg)) => assert!(msg.contains("contained boom")),
+            other => panic!("expected a contained panic, got {other:?}"),
+        }
     }
 
     #[test]

@@ -145,7 +145,7 @@ pub mod prelude {
     };
     pub use crate::coordinator::service::{
         EntryState, LoadOutcome, Quarantine, QuarantineDelta, RecalibService, ScrubOutcome,
-        ServeOutcome, ServiceConfig, WorkloadOutcome,
+        ServeOutcome, ServiceConfig, ServiceServer, WorkloadOutcome,
     };
     pub use crate::dram::device::Device;
     pub use crate::dram::faults::{standard_campaign, FaultField};

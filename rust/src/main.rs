@@ -13,6 +13,8 @@
 //! pudtune serve    [--banks N] [--cols N] [--ticks N] [--store path]
 //!                  [--tick-hours H] [--excursion-temp C] [--excursion-tick K]
 //!                  [--drift-temp dC] [--drift-age H] [--drift-ecr F] [--native]
+//!                  [--workers N] [--burst N] [--env-match-temp dC]
+//!                  [--env-match-hours H]
 //! pudtune campaign [--banks N] [--cols N] [--epochs N] [--op add2]
 //!                  [--redundancy N] [--native]
 //! pudtune lint     [--max-width N] [--json] [circuit.pud ...]
@@ -381,7 +383,11 @@ fn cmd_calibrate(args: &cli::Args) -> Result<()> {
 /// write the refreshed store back.
 fn cmd_serve(args: &cli::Args) -> Result<()> {
     use pudtune::calib::drift::DriftPolicy;
-    use pudtune::coordinator::service::{LoadOutcome, RecalibService, ServiceConfig};
+    use pudtune::coordinator::service::{
+        LoadOutcome, RecalibService, ServiceConfig, ServiceServer,
+    };
+    use pudtune::coordinator::worker;
+    use pudtune::pud::plan::{PudError, PudOp};
 
     let (cfg, sys, exp) = load_configs(args)?;
     let mut policy = DriftPolicy::default();
@@ -395,10 +401,22 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         policy.max_serve_ecr = v;
         policy.accept_max_ecr = v;
     }
+    // Opt-in environment-match fast accept on rehydration (both axes
+    // must be given for the fast path to engage).
+    if let Some(v) = args.f64_opt("env-match-temp").map_err(anyhow::Error::msg)? {
+        policy.env_match_temp_c = v;
+    }
+    if let Some(v) = args.f64_opt("env-match-hours").map_err(anyhow::Error::msg)? {
+        policy.env_match_hours = v;
+    }
     let ticks = args.usize("ticks", 6).map_err(anyhow::Error::msg)?;
     let tick_hours = args.f64("tick-hours", 1.0).map_err(anyhow::Error::msg)?;
     let excursion_temp = args.f64_opt("excursion-temp").map_err(anyhow::Error::msg)?;
     let excursion_tick = args.usize("excursion-tick", 3).map_err(anyhow::Error::msg)?;
+    let workers = args
+        .usize("workers", worker::default_threads())
+        .map_err(anyhow::Error::msg)?;
+    let burst = args.usize("burst", 4).map_err(anyhow::Error::msg)?;
     let svc = ServiceConfig {
         policy,
         serve_samples: exp.ecr_samples,
@@ -411,12 +429,15 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         ..ServiceConfig::default()
     };
     let engine = engine_for(args, &cfg);
-    let mut service = RecalibService::new(cfg.clone(), svc, engine).map_err(anyhow::Error::msg)?;
+    let service =
+        Arc::new(RecalibService::new(cfg.clone(), svc, engine).map_err(anyhow::Error::msg)?);
     for b in 0..exp.banks {
         service.register(SubarrayId::new(0, b, 0), 32, sys.cols, exp.seed);
     }
 
-    // Rehydrate from the non-volatile store, if one is given.
+    // Rehydrate from the non-volatile store, if one is given — before
+    // the background workers start, so the cold-start queue is already
+    // pruned to the entries the store could not satisfy.
     let store_path = args.str("store").map(std::path::PathBuf::from);
     if let Some(path) = &store_path {
         if path.exists() {
@@ -428,6 +449,10 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
                         "  bank {}: accepted (spot ECR {:.2}%)",
                         id.bank,
                         spot_ecr * 100.0
+                    ),
+                    LoadOutcome::AcceptedOnEnv { temp_delta_c, hours_delta } => println!(
+                        "  bank {}: accepted on env match (d{:.2} C, d{:.2} h), no spot check",
+                        id.bank, temp_delta_c, hours_delta
                     ),
                     LoadOutcome::Rejected { spot_ecr } => println!(
                         "  bank {}: REJECTED (spot ECR {:.2}%), recalibrating",
@@ -451,7 +476,15 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         println!("calibrated {} banks from scratch", fresh.len());
     }
 
-    // The serving loop.
+    // The concurrent serving loop: background workers own drift polls,
+    // scrubs and recalibration; this thread keeps serving batteries
+    // and arithmetic bursts against them.
+    println!("starting server: {workers} recalibration workers + maintenance ticker");
+    let server = ServiceServer::start(service.clone(), workers);
+    let plan = Arc::new(pudtune::pud::plan::WorkloadPlan::compile(PudOp::Add { width: 2 })?);
+    let a: Vec<u64> = (0..sys.cols as u64).map(|c| c % 4).collect();
+    let b: Vec<u64> = (0..sys.cols as u64).map(|c| (c * 5 + 2) % 4).collect();
+    let operands = [a, b];
     for tick in 1..=ticks {
         if let (Some(temp), true) = (excursion_temp, tick == excursion_tick) {
             println!("\n-- tick {tick}: temperature excursion to {temp:.0} C --");
@@ -479,23 +512,43 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
                 ecrs.iter().cloned().fold(0.0f64, f64::max) * 100.0
             );
         }
-        for (id, signal) in service.poll_drift() {
-            println!("  drift on bank {}: {signal}", id.bank);
-        }
-        let recals = service.run_pending(usize::MAX);
-        for (id, r) in &recals {
-            match r {
-                Ok(()) => println!("  recalibrated bank {}", id.bank),
-                Err(e) => println!("  recalibration of bank {} failed: {e}", id.bank),
+        // Arithmetic burst: admission-controlled, served under the
+        // battery-refreshed masks while repairs run in the background.
+        let (mut correct, mut active, mut rejected) = (0usize, 0usize, 0usize);
+        for _ in 0..burst {
+            match service.serve_plan(&plan, &operands) {
+                Ok(outs) => {
+                    for o in &outs {
+                        correct += o.golden_correct;
+                        active += o.active_cols;
+                    }
+                }
+                Err(PudError::Overloaded { .. }) => rejected += 1,
+                Err(e) => return Err(anyhow!("serve burst failed: {e}")),
             }
+        }
+        println!(
+            "  burst: {burst} workloads, {correct}/{active} golden-correct columns\
+             {}",
+            if rejected > 0 { format!(", {rejected} rejected on backpressure") } else { String::new() }
+        );
+        if service.pending() > 0 {
+            println!("  {} banks queued for background recalibration", service.pending());
         }
         service.advance_time(tick_hours);
     }
 
-    // Persist the refreshed calibrations.
+    // Graceful drain: background workers finish every queued repair,
+    // then hand back the persistable store.
+    let store = server.drain();
+    println!(
+        "\ndrained: {} entries persisted in {:.3}s",
+        store.entries.len(),
+        service.metrics.seconds("drain.seconds")
+    );
     if let Some(path) = &store_path {
-        service.snapshot_store().save_file(path)?;
-        println!("\nstore written to {}", path.display());
+        store.save_file(path)?;
+        println!("store written to {}", path.display());
     }
     println!("\nservice metrics:\n{}", service.metrics.render());
     Ok(())
@@ -557,9 +610,9 @@ fn cmd_campaign(args: &cli::Args) -> Result<()> {
         params,
         ..ServiceConfig::default()
     };
-    let mut protected = RecalibService::new(cfg.clone(), protected_svc, engine_for(args, &cfg))
+    let protected = RecalibService::new(cfg.clone(), protected_svc, engine_for(args, &cfg))
         .map_err(anyhow::Error::msg)?;
-    let mut baseline = RecalibService::new(cfg.clone(), baseline_svc, engine_for(args, &cfg))
+    let baseline = RecalibService::new(cfg.clone(), baseline_svc, engine_for(args, &cfg))
         .map_err(anyhow::Error::msg)?;
     for b in 0..exp.banks {
         let id = SubarrayId::new(0, b, 0);

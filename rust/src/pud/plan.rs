@@ -46,6 +46,13 @@ pub enum PudError {
     /// rejected the plan; `code` is the stable `P###` diagnostic code
     /// and `message` the rendered diagnostic (with fix hint).
     Verification { code: &'static str, message: String },
+    /// Admission control rejected the request: the serve path already
+    /// holds its configured bound of in-flight requests (backpressure
+    /// — the caller should retry once in-flight work completes).
+    Overloaded { inflight: usize, limit: usize },
+    /// The service is draining (or shut down) and admits no new work;
+    /// in-flight requests still complete.
+    Draining,
 }
 
 impl fmt::Display for PudError {
@@ -67,6 +74,16 @@ impl fmt::Display for PudError {
             PudError::MalformedCircuit(msg) => write!(f, "malformed circuit: {msg}"),
             PudError::Verification { code, message } => {
                 write!(f, "plan rejected by verifier ({code}): {message}")
+            }
+            PudError::Overloaded { inflight, limit } => {
+                write!(
+                    f,
+                    "service overloaded: {inflight} requests in flight \
+                     (admission bound {limit}); retry after in-flight work completes"
+                )
+            }
+            PudError::Draining => {
+                write!(f, "service is draining and admits no new work")
             }
         }
     }

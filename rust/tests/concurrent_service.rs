@@ -1,0 +1,448 @@
+//! Concurrency suite for the threaded `RecalibService` server (runs
+//! under ThreadSanitizer in CI): multi-client serving interleaved with
+//! drift-triggered background recalibration, scrub passes, injected
+//! worker panics, admission-control backpressure and graceful drain.
+//!
+//! Device/geometry are kept deliberately small — TSan runs these tests
+//! with every memory access instrumented — and the *quiet* device
+//! (vanishing analog noise, zero tempco) makes every served column
+//! golden-model-correct at every lifecycle stage, so correctness
+//! assertions are exact, not statistical.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use pudtune::analysis::ecr::EcrReport;
+use pudtune::calib::algorithm::{CalibParams, Calibration, NativeEngine};
+use pudtune::calib::engine::{
+    CalibEngine, CalibRequest, ComputeEngine, ComputeRequest, ComputeResult, EcrRequest,
+};
+use pudtune::config::device::DeviceConfig;
+use pudtune::coordinator::service::{
+    EntryState, RecalibService, ServiceConfig, ServiceServer,
+};
+use pudtune::dram::geometry::SubarrayId;
+use pudtune::pud::plan::{PudError, PudOp, WorkloadPlan};
+use pudtune::util::rng::{derive_seed, Rng};
+
+/// Vanishing analog noise AND zero tempco: a temperature excursion
+/// still trips the drift *policy* (the monitor compares environments),
+/// but the device itself stays perfect, so serving must stay golden
+/// straight through the stale window and the background repair.
+fn quiet_cfg() -> DeviceConfig {
+    DeviceConfig {
+        sigma_sa: 1e-6,
+        tail_weight: 0.0,
+        sigma_noise: 1e-6,
+        tempco: 0.0,
+        tempco_jitter: 0.0,
+        ..DeviceConfig::default()
+    }
+}
+
+fn service_cfg() -> ServiceConfig {
+    ServiceConfig {
+        serve_samples: 128,
+        params: CalibParams::quick(),
+        maintain_every_ms: 5,
+        ..ServiceConfig::default()
+    }
+}
+
+fn register_banks<E: CalibEngine + Sync>(
+    s: &RecalibService<E>,
+    channels: usize,
+    banks_per_channel: usize,
+    rows: usize,
+    cols: usize,
+) -> Vec<SubarrayId> {
+    let mut ids = Vec::new();
+    for ch in 0..channels {
+        for b in 0..banks_per_channel {
+            let id = SubarrayId::new(ch, b, 0);
+            s.register(id, rows, cols, 0x5EED);
+            ids.push(id);
+        }
+    }
+    ids
+}
+
+/// Spin until `cond` holds, failing the test after `secs` seconds.
+fn wait_for(secs: u64, what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn concurrent_serves_stay_golden_during_background_recalibration() {
+    let cols = 32;
+    let svc_cfg = ServiceConfig { scrub_every: 3, ..service_cfg() };
+    let cfg = quiet_cfg();
+    let s = Arc::new(RecalibService::new(cfg.clone(), svc_cfg, NativeEngine::new(cfg)).unwrap());
+    // Two channels: the serve path and the recalibration write-backs
+    // exercise distinct shards concurrently.
+    let ids = register_banks(&s, 2, 2, 32, cols);
+    s.run_pending(usize::MAX);
+    for o in s.serve() {
+        o.report.as_ref().expect("mask battery");
+    }
+
+    let server = ServiceServer::start(s.clone(), 2);
+    let plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 2 }).unwrap());
+    let a: Vec<u64> = (0..cols as u64).map(|c| c % 4).collect();
+    let b: Vec<u64> = (0..cols as u64).map(|c| (c * 5 + 2) % 4).collect();
+
+    // Three client threads serve workloads while the main thread
+    // injects a temperature excursion: the drift policy fires, the
+    // background workers recalibrate, and every in-between serve must
+    // still be golden on every active column.
+    let served = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..3 {
+            let (s, plan, a, b) = (&s, &plan, &a, &b);
+            let served = &served;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xC0FFEE + t as u64);
+                for _ in 0..15 {
+                    let outs = s.serve_plan(plan, &[a.clone(), b.clone()]).unwrap();
+                    assert_eq!(outs.len(), 4);
+                    for o in &outs {
+                        assert!(o.result.is_ok(), "{:?}: {:?}", o.id, o.result);
+                        assert!(o.active_cols > 0, "{:?} served no columns", o.id);
+                        assert_eq!(
+                            o.golden_correct, o.active_cols,
+                            "{:?} diverged from the golden model mid-lifecycle",
+                            o.id
+                        );
+                    }
+                    served.fetch_add(1, Ordering::Relaxed);
+                    if rng.next_u64() % 3 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+        // Let some serves land before the excursion so both the
+        // accepted and the stale windows are exercised.
+        wait_for(10, "first concurrent serves", || served.load(Ordering::Relaxed) >= 3);
+        for &id in &ids {
+            assert!(s.set_temperature(id, 85.0));
+        }
+        // The maintenance ticker turns the excursion into queued
+        // background repairs; the workers complete all of them.
+        wait_for(30, "background recalibration of every bank", || {
+            s.metrics.counter("recalib.completed") >= 2 * ids.len() as u64
+                && ids.iter().all(|&id| s.state(id) == Some(EntryState::Accepted))
+        });
+        // The scrub cadence fires on the background ticker too.
+        wait_for(30, "a background scrub pass", || s.metrics.counter("scrub.passes") >= 1);
+    });
+
+    assert_eq!(s.metrics.counter("recalib.scheduled"), ids.len() as u64);
+    assert_eq!(s.metrics.counter("compute.golden_mismatch"), 0);
+    assert_eq!(s.metrics.counter("compute.bank_failures"), 0);
+
+    // Graceful drain: queued work finishes, the store persists every
+    // bank, and the service stops admitting.
+    let store = server.drain();
+    assert_eq!(store.entries.len(), ids.len());
+    assert_eq!(s.pending(), 0);
+    assert!(!s.is_accepting());
+    assert!(s.metrics.counter("drain.persisted_entries") >= ids.len() as u64);
+}
+
+/// Counts calibration jobs per bank seed, so duplicated (or lost)
+/// background recalibrations are directly observable (the count map is
+/// shared with the test through the `Arc`).
+struct CountingEngine {
+    inner: NativeEngine,
+    calibrations: Arc<Mutex<std::collections::BTreeMap<u64, u32>>>,
+}
+
+impl CalibEngine for CountingEngine {
+    fn backend(&self) -> &'static str {
+        "counting"
+    }
+
+    fn calibrate_batch(&self, reqs: &[CalibRequest]) -> anyhow::Result<Vec<Calibration>> {
+        {
+            let mut counts = self.calibrations.lock().unwrap();
+            for r in reqs {
+                *counts.entry(r.bank.seed).or_insert(0) += 1;
+            }
+        }
+        self.inner.calibrate_batch(reqs)
+    }
+
+    fn measure_ecr_batch(&self, reqs: &[EcrRequest]) -> anyhow::Result<Vec<EcrReport>> {
+        self.inner.measure_ecr_batch(reqs)
+    }
+}
+
+impl ComputeEngine for CountingEngine {
+    fn compute_backend(&self) -> &'static str {
+        "counting"
+    }
+
+    fn execute_batch(&self, reqs: &[ComputeRequest]) -> anyhow::Result<Vec<ComputeResult>> {
+        self.inner.execute_batch(reqs)
+    }
+}
+
+#[test]
+fn background_recalibrations_are_exactly_once() {
+    let cfg = quiet_cfg();
+    let counts = Arc::new(Mutex::new(std::collections::BTreeMap::new()));
+    let engine = CountingEngine {
+        inner: NativeEngine::new(cfg.clone()),
+        calibrations: counts.clone(),
+    };
+    let s = Arc::new(RecalibService::new(cfg, service_cfg(), engine).unwrap());
+    let ids = register_banks(&s, 1, 3, 32, 32);
+    // Synchronous cold start: exactly one calibration per bank.
+    s.run_pending(usize::MAX);
+
+    let server = ServiceServer::start(s.clone(), 2);
+    // Each round flips every bank past the temperature threshold; one
+    // drift signal per bank per round must mean exactly one background
+    // recalibration per bank per round — the maintenance ticker keeps
+    // polling (fast) while the repair is in flight, and neither the
+    // queued flag nor the running window may let it double-schedule.
+    let rounds: &[f64] = &[85.0, 45.0, 85.0];
+    for (round, &temp) in rounds.iter().enumerate() {
+        for &id in &ids {
+            s.set_temperature(id, temp);
+        }
+        let want = ((round + 1) * ids.len()) as u64;
+        wait_for(30, "the round's background recalibrations", || {
+            s.metrics.counter("recalib.completed") >= want
+                && ids.iter().all(|&id| s.state(id) == Some(EntryState::Accepted))
+        });
+    }
+    let store = server.drain();
+    assert_eq!(store.entries.len(), ids.len());
+
+    assert_eq!(s.metrics.counter("recalib.failed"), 0);
+    assert_eq!(s.metrics.counter("recalib.scheduled"), (rounds.len() * ids.len()) as u64);
+    assert_eq!(
+        s.metrics.counter("recalib.completed"),
+        ((rounds.len() + 1) * ids.len()) as u64,
+        "cold start + one repair per bank per round, nothing lost or duplicated"
+    );
+    // The engine-level ground truth: every bank was calibrated exactly
+    // once per round plus its cold start — a duplicate (same drift
+    // signal recalibrated twice) or a loss (signal never repaired)
+    // would show directly in the per-seed counts.
+    let counts = counts.lock().unwrap();
+    for &id in &ids {
+        let seed = derive_seed(0x5EED, &id.seed_path());
+        assert_eq!(
+            counts.get(&seed).copied(),
+            Some(1 + rounds.len() as u32),
+            "{id:?} calibration count"
+        );
+    }
+}
+
+#[test]
+fn drain_finishes_every_queued_cold_start_job() {
+    let cfg = quiet_cfg();
+    let s = Arc::new(
+        RecalibService::new(cfg.clone(), service_cfg(), NativeEngine::new(cfg)).unwrap(),
+    );
+    let ids = register_banks(&s, 2, 2, 32, 32);
+    assert_eq!(s.pending(), ids.len());
+    // Start and immediately drain: the graceful path must still finish
+    // every queued cold-start calibration before persisting.
+    let server = ServiceServer::start(s.clone(), 3);
+    let store = server.drain();
+    assert_eq!(store.entries.len(), ids.len(), "drain abandons no queued job");
+    assert_eq!(s.pending(), 0);
+    for &id in &ids {
+        assert_eq!(s.state(id), Some(EntryState::Accepted));
+    }
+    assert_eq!(s.metrics.counter("recalib.completed"), ids.len() as u64);
+    assert!(s.metrics.counter("drain.pending_jobs") > 0);
+    assert_eq!(s.metrics.counter("drain.abandoned_jobs"), 0);
+}
+
+/// Panics whenever a calibration batch touches the poisoned bank —
+/// a hard backend fault injected on the *threaded* recalibration path.
+struct PanickingEngine {
+    inner: NativeEngine,
+    poison_seed: u64,
+}
+
+impl CalibEngine for PanickingEngine {
+    fn backend(&self) -> &'static str {
+        "panicking"
+    }
+
+    fn calibrate_batch(&self, reqs: &[CalibRequest]) -> anyhow::Result<Vec<Calibration>> {
+        for r in reqs {
+            assert_ne!(r.bank.seed, self.poison_seed, "injected backend fault");
+        }
+        self.inner.calibrate_batch(reqs)
+    }
+
+    fn measure_ecr_batch(&self, reqs: &[EcrRequest]) -> anyhow::Result<Vec<EcrReport>> {
+        self.inner.measure_ecr_batch(reqs)
+    }
+}
+
+impl ComputeEngine for PanickingEngine {
+    fn compute_backend(&self) -> &'static str {
+        "panicking"
+    }
+
+    fn execute_batch(&self, reqs: &[ComputeRequest]) -> anyhow::Result<Vec<ComputeResult>> {
+        self.inner.execute_batch(reqs)
+    }
+}
+
+#[test]
+fn worker_panic_mid_recalibration_degrades_one_bank_not_the_server() {
+    let cfg = quiet_cfg();
+    let device_seed = 0xBAD5EED;
+    let poison = SubarrayId::new(0, 1, 0);
+    let engine = PanickingEngine {
+        inner: NativeEngine::new(cfg.clone()),
+        poison_seed: derive_seed(device_seed, &poison.seed_path()),
+    };
+    // A slower ticker keeps the failed bank's retry churn bounded
+    // while the test asserts on the sharded map.
+    let svc_cfg = ServiceConfig { maintain_every_ms: 50, ..service_cfg() };
+    let s = Arc::new(RecalibService::new(cfg, svc_cfg, engine).unwrap());
+    let mut ids = Vec::new();
+    for b in 0..3 {
+        let id = SubarrayId::new(0, b, 0);
+        s.register(id, 32, 32, device_seed);
+        ids.push(id);
+    }
+
+    // Cold start runs ON the worker threads: bank 1's job panics
+    // inside a background worker, and must degrade to exactly that
+    // bank — no poisoned shard, no dead worker, no aborted process.
+    let server = ServiceServer::start(s.clone(), 2);
+    wait_for(30, "background cold start around the poisoned bank", || {
+        s.metrics.counter("recalib.completed") >= 2 && s.metrics.counter("recalib.failed") >= 1
+    });
+    assert_eq!(s.state(SubarrayId::new(0, 0, 0)), Some(EntryState::Accepted));
+    assert_eq!(s.state(poison), Some(EntryState::Uncalibrated));
+    assert_eq!(s.state(SubarrayId::new(0, 2, 0)), Some(EntryState::Accepted));
+
+    // The sharded map stays fully usable from concurrent clients: the
+    // quiet device serves golden even on the uncalibrated bank's
+    // neutral levels.
+    let plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 2 }).unwrap());
+    let a: Vec<u64> = (0..32u64).map(|c| c % 4).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..2 {
+            let (s, plan, a) = (&s, &plan, &a);
+            scope.spawn(move || {
+                for _ in 0..5 {
+                    let outs = s.serve_plan(plan, &[a.clone(), a.clone()]).unwrap();
+                    assert_eq!(outs.len(), 3);
+                    for o in &outs {
+                        assert!(o.result.is_ok(), "{:?}: {:?}", o.id, o.result);
+                        assert_eq!(o.golden_correct, o.active_cols);
+                    }
+                }
+            });
+        }
+    });
+    assert!(s.serve().iter().all(|o| o.report.is_ok()));
+    assert_eq!(s.quarantine(poison).map(|q| q.quarantined_cols()), Some(0));
+
+    // Drain still terminates: the maintenance ticker stops
+    // rescheduling once admission closes, the workers fail the last
+    // queued retry and exit cleanly.
+    let store = server.drain();
+    assert_eq!(store.entries.len(), 2, "only the calibrated banks persist");
+    assert_eq!(s.state(poison), Some(EntryState::Uncalibrated));
+}
+
+#[test]
+fn admission_backpressure_is_bounded_and_exactly_once() {
+    let cols = 64;
+    let cfg = quiet_cfg();
+    let svc_cfg = ServiceConfig { max_inflight_serves: 2, ..service_cfg() };
+    let s = Arc::new(RecalibService::new(cfg.clone(), svc_cfg, NativeEngine::new(cfg)).unwrap());
+    register_banks(&s, 1, 2, 96, cols);
+    s.run_pending(usize::MAX);
+    let server = ServiceServer::start(s.clone(), 1);
+
+    // Randomized burst: 8 clients, 25 calls each, random pauses. Every
+    // call must resolve to exactly one of {served, typed rejection
+    // carrying the configured bound} — nothing lost, nothing blocked.
+    let plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 4 }).unwrap());
+    let a: Vec<u64> = (0..cols as u64).map(|c| c % 16).collect();
+    let b: Vec<u64> = (0..cols as u64).map(|c| (c * 7 + 3) % 16).collect();
+    let served = AtomicUsize::new(0);
+    let rejected = AtomicUsize::new(0);
+    let threads = 8;
+    let calls_per_thread = 25;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let (s, plan, a, b) = (&s, &plan, &a, &b);
+            let (served, rejected) = (&served, &rejected);
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xAD417 + t as u64);
+                for _ in 0..calls_per_thread {
+                    match s.serve_plan(plan, &[a.clone(), b.clone()]) {
+                        Ok(outs) => {
+                            assert_eq!(outs.len(), 2);
+                            served.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(PudError::Overloaded { inflight, limit }) => {
+                            assert_eq!(limit, 2);
+                            assert!(inflight >= limit, "rejection below the bound");
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("unexpected serve error: {e}"),
+                    }
+                    if rng.next_u64() % 2 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+    });
+    let total = (threads * calls_per_thread) as u64;
+    let (served, rejected) =
+        (served.load(Ordering::Relaxed) as u64, rejected.load(Ordering::Relaxed) as u64);
+    assert_eq!(served + rejected, total, "every call served-or-rejected exactly once");
+    assert_eq!(s.metrics.counter("admission.accepted"), served);
+    assert_eq!(s.metrics.counter("admission.rejected"), rejected);
+    assert!(
+        s.metrics.counter("serve.concurrent") <= 2,
+        "in-flight serves exceeded the admission bound: {}",
+        s.metrics.counter("serve.concurrent")
+    );
+    assert!(served > 0, "the burst must serve something");
+    assert!(rejected > 0, "8 clients against a bound of 2 must hit backpressure");
+
+    // drain() always terminates, even right after a burst — run it on
+    // a helper thread and hold it to a deadline.
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let store = server.drain();
+        tx.send(store.entries.len()).unwrap();
+    });
+    let persisted = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("drain must terminate promptly after a serve burst");
+    handle.join().unwrap();
+    assert_eq!(persisted, 2);
+    // Post-drain serves are rejected with the draining error, not
+    // queued forever.
+    assert_eq!(
+        s.serve_plan(&plan, &[a, b]).unwrap_err(),
+        PudError::Draining
+    );
+    assert!(s.metrics.counter("admission.rejected_draining") >= 1);
+}

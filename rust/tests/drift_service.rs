@@ -17,7 +17,7 @@ fn drifty_cfg() -> DeviceConfig {
 
 fn service_over(cfg: &DeviceConfig, banks: usize, cols: usize) -> RecalibService<NativeEngine> {
     let svc = ServiceConfig { serve_samples: 2048, ..ServiceConfig::default() };
-    let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg.clone())).unwrap();
+    let s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg.clone())).unwrap();
     for b in 0..banks {
         s.register(SubarrayId::new(0, b, 0), 32, cols, 0xD21F7);
     }
@@ -58,7 +58,7 @@ fn full_lifecycle_detects_and_repairs_drift() {
     // ---- Reboot: fresh device state, rehydrate from the store. ----
     let store = CalibStore::load_file(&path).unwrap();
     let _ = std::fs::remove_file(&path);
-    let mut svc = service_over(&cfg, banks, cols);
+    let svc = service_over(&cfg, banks, cols);
     let outcomes = svc.load_store(&store);
     assert_eq!(outcomes.len(), banks);
     for (id, o) in &outcomes {
@@ -166,7 +166,7 @@ fn injected_worker_panic_degrades_exactly_one_bank() {
         serve_samples: 512,
         ..ServiceConfig::default()
     };
-    let mut svc = RecalibService::new(cfg, svc_cfg, engine).unwrap();
+    let svc = RecalibService::new(cfg, svc_cfg, engine).unwrap();
     for b in 0..banks {
         svc.register(SubarrayId::new(0, b, 0), 32, cols, device_seed);
     }

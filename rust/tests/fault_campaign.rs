@@ -24,7 +24,7 @@ const COLS: usize = 256;
 const SEED: u64 = 0xFA57;
 
 fn campaign_service(cfg: &DeviceConfig, svc: ServiceConfig) -> RecalibService<NativeEngine> {
-    let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg.clone())).unwrap();
+    let s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg.clone())).unwrap();
     for b in 0..BANKS {
         s.register(SubarrayId::new(0, b, 0), 32, COLS, SEED);
     }
@@ -61,7 +61,7 @@ fn active(outs: &[WorkloadOutcome]) -> usize {
 fn unprotected_service_keeps_serving_corrupted_outputs() {
     let cfg = standard_campaign(&DeviceConfig::default());
     let svc = ServiceConfig { serve_samples: 512, ..ServiceConfig::default() };
-    let mut service = campaign_service(&cfg, svc);
+    let service = campaign_service(&cfg, svc);
     let (plan, operands) = workload();
 
     let mut per_epoch = Vec::new();
@@ -96,7 +96,7 @@ fn quarantine_and_scrub_drive_steady_state_mismatches_to_zero() {
         scrub_every: 1,
         ..ServiceConfig::default()
     };
-    let mut service = campaign_service(&cfg, svc);
+    let service = campaign_service(&cfg, svc);
     let (plan, operands) = workload();
 
     let epochs = 6;

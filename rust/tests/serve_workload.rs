@@ -30,7 +30,7 @@ fn quiet_service(policy: DriftPolicy, banks: usize, cols: usize) -> RecalibServi
         params: CalibParams::quick(),
         ..ServiceConfig::default()
     };
-    let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg)).unwrap();
+    let s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg)).unwrap();
     for b in 0..banks {
         s.register(SubarrayId::new(0, b, 0), 96, cols, 0x5EED);
     }
@@ -45,7 +45,7 @@ fn serving_stays_golden_through_drift_and_recalibration() {
     // output must equal the golden model at every lifecycle stage.
     let policy = DriftPolicy { max_age_hours: 2.0, ..DriftPolicy::default() };
     let cols = 64;
-    let mut s = quiet_service(policy, 2, cols);
+    let s = quiet_service(policy, 2, cols);
     s.run_pending(usize::MAX);
     // One measurement battery establishes the per-bank masks.
     for o in s.serve() {
@@ -117,7 +117,7 @@ fn serving_stays_golden_through_drift_and_recalibration() {
 #[test]
 fn geometry_mismatched_bank_degrades_alone() {
     let cols = 64;
-    let mut s = quiet_service(DriftPolicy::default(), 1, cols);
+    let s = quiet_service(DriftPolicy::default(), 1, cols);
     // A second bank with a different geometry cannot serve 64-column
     // operands: it must fail alone, typed, without poisoning the pool.
     s.register(SubarrayId::new(0, 9, 0), 96, cols / 2, 0x5EED);

@@ -173,7 +173,7 @@ fn service_snapshot_env_metadata_gates_rehydration() {
     let (banks, cols) = (2usize, 256);
     let fresh = |cfg: &DeviceConfig| {
         let svc = ServiceConfig { serve_samples: 512, ..ServiceConfig::default() };
-        let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg.clone())).unwrap();
+        let s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg.clone())).unwrap();
         for b in 0..banks {
             s.register(SubarrayId::new(0, b, 0), 32, cols, 0xE27E);
         }

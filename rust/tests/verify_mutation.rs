@@ -295,7 +295,7 @@ fn serving_layer_rejects_corrupted_plans_at_admission() {
         params: CalibParams::quick(),
         ..ServiceConfig::default()
     };
-    let mut s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg)).unwrap();
+    let s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg)).unwrap();
     let cols = 16;
     s.register(SubarrayId::new(0, 0, 0), 64, cols, 0x5EED);
     s.run_pending(usize::MAX);
