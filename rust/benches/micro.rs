@@ -73,8 +73,12 @@ fn sweep_reference(
 /// arithmetic-usable (MAJ5 ∧ MAJ3 error-free) column masks. The
 /// derived values record each op's Eq. 1 *effective* throughput per
 /// mask and the PUDTune uplift — the Table I 1.88x/1.89x story as a
-/// machine-readable trajectory. `PUDTUNE_FAST_BENCH=1` shrinks the
-/// geometry/batteries for the CI smoke job.
+/// machine-readable trajectory — plus the batch-fusion win
+/// (`workload_fused_speedup_batch8`: one step-major dispatch for 8
+/// banks vs 8 per-request calls) and the per-step fallback count over
+/// the built-in vocabulary (`workload_pjrt_fallback_steps`, must stay
+/// 0). `PUDTUNE_FAST_BENCH=1` shrinks the geometry/batteries for the
+/// CI smoke job.
 fn workload_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
     use pudtune::analysis::throughput::ThroughputModel;
     use pudtune::calib::engine::{
@@ -136,6 +140,51 @@ fn workload_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
         suite.derive(&format!("{opname}_effective_ops_pudtune"), effective[1]);
         suite.derive(&format!("{opname}_effective_uplift"), effective[1] / effective[0]);
     }
+
+    // Fused vs looped dispatch: eight equal-geometry banks serving one
+    // plan as a single step-major worker-pool dispatch vs eight
+    // per-request calls. `workload_fused_speedup_batch8` records the
+    // batching win (bounded by the worker-pool width; must stay > 1).
+    let fused_plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 8 }).unwrap());
+    let batch: Vec<ComputeRequest> = (0..8u64)
+        .map(|i| {
+            let operands: Vec<Vec<u64>> = (0..fused_plan.op.n_operands())
+                .map(|_| (0..cols).map(|_| rng.below(256)).collect())
+                .collect();
+            ComputeRequest::from_subarray(
+                &sub,
+                seed ^ (i + 1),
+                fused_plan.clone(),
+                calib.clone(),
+                operands,
+            )
+            .with_mask(tune_mask.clone())
+        })
+        .collect();
+    let iters = if fast { 2 } else { 3 };
+    let looped = suite.bench(&format!("workload/add8-looped-batch8-{cols}cols"), 0, iters, || {
+        for req in &batch {
+            let res = eng.execute_one(req).unwrap();
+            std::hint::black_box(res.outputs[0]);
+        }
+    });
+    let fused = suite.bench(&format!("workload/add8-fused-batch8-{cols}cols"), 0, iters, || {
+        let res = eng.execute_batch(&batch).unwrap();
+        std::hint::black_box(res.len());
+    });
+    suite.derive("workload_fused_speedup_batch8", looped.min_s / fused.min_s);
+
+    // Per-step fallback classification over the whole built-in
+    // vocabulary: every op must lower with zero unfusable steps (the
+    // CI smoke asserts this stays 0).
+    let fallback_steps: usize = PudOp::vocabulary(8)
+        .into_iter()
+        .map(|op| {
+            let plan = WorkloadPlan::compile(op).unwrap();
+            pudtune::coordinator::engine::unfusable_steps(&plan.lowered().unwrap())
+        })
+        .sum();
+    suite.derive("workload_pjrt_fallback_steps", fallback_steps as f64);
     suite
 }
 

@@ -29,10 +29,14 @@
 //!   arithmetic*: a [`ComputeRequest`] pairs a compiled, bank-agnostic
 //!   [`WorkloadPlan`] with one bank (geometry + seed + environment),
 //!   its current [`Calibration`] and an optional error-free column
-//!   mask; `execute_batch` runs the whole slice (native: worker-pool
-//!   fan-out over [`crate::pud::exec::run_plan`]; PJRT: per-bank
-//!   native fallback until circuit-execution artifacts exist).
-//!   Malformed requests surface as typed
+//!   mask; `execute_batch` runs the whole slice **batch-fused**:
+//!   requests are grouped by (plan fingerprint, geometry) and every
+//!   group's banks walk the plan's canonical lowering
+//!   ([`WorkloadPlan::lowered`]) step-major in one worker-pool
+//!   dispatch — bit-identical to the per-request
+//!   [`crate::pud::exec::run_plan`] loop (PJRT: per-step native
+//!   fallback until circuit-execution artifacts exist, counted by
+//!   `pjrt.compute.fallback`). Malformed requests surface as typed
 //!   [`PudError`]s, and [`execute_isolated`] degrades a faulty bank to
 //!   one error slot exactly like [`calibrate_isolated`].
 //!
@@ -62,8 +66,10 @@ use crate::coordinator::worker;
 use crate::dram::geometry::RowMap;
 use crate::dram::subarray::Subarray;
 use crate::dram::temperature::Environment;
-use crate::pud::exec::run_plan;
+use crate::pud::exec::{run_plan, StepRunner};
+use crate::pud::majx::setup_subarray;
 use crate::pud::plan::{PudError, WorkloadPlan};
+use crate::pud::verify::LoweredPlan;
 use crate::runtime::Runtime;
 use crate::util::rng::derive_seed;
 use std::sync::Arc;
@@ -584,33 +590,225 @@ impl NativeEngine {
             fault_flips += f;
             all.push(outputs);
         }
-        let outputs: Vec<u64> = if runs == 1 {
-            all.pop().expect("one replica ran")
-        } else {
-            // Per-column bitwise majority vote across the replicas.
-            (0..req.cols)
-                .map(|c| {
-                    let mut v = 0u64;
-                    for bit in 0..u64::BITS {
-                        let votes =
-                            all.iter().filter(|o| (o[c] >> bit) & 1 != 0).count();
-                        if votes * 2 > runs {
-                            v |= 1u64 << bit;
-                        }
-                    }
-                    v
-                })
-                .collect()
-        };
+        let outputs = combine_replicas(all, req.cols);
         let mask = req.mask.clone().unwrap_or_else(|| vec![true; req.cols]);
         Ok(ComputeResult { outputs, mask, elapsed_ns, peak_rows, fault_flips })
     }
+
+    /// Validate one request exactly like the per-request path (same
+    /// checks, in the same order, producing the same error values) and
+    /// prepare what fused execution needs up front: the encoded input
+    /// bit-planes and the plan's canonical lowering.
+    fn prepare_request(
+        &self,
+        req: &ComputeRequest,
+    ) -> Result<(Vec<Vec<u8>>, Arc<LoweredPlan>), PudError> {
+        crate::pud::verify::admit(&req.plan)?;
+        for v in &req.operands {
+            if v.len() != req.cols {
+                return Err(PudError::WidthMismatch { expected: req.cols, got: v.len() });
+            }
+        }
+        if req.calib.cols() != req.cols {
+            return Err(PudError::WidthMismatch {
+                expected: req.cols,
+                got: req.calib.cols(),
+            });
+        }
+        if let Some(mask) = &req.mask {
+            if mask.len() != req.cols {
+                return Err(PudError::WidthMismatch { expected: req.cols, got: mask.len() });
+            }
+        }
+        if req.rows < 32 {
+            // `RowMap::standard` needs the reserved-row layout.
+            return Err(PudError::RowBudgetExceeded { needed: 32, available: req.rows });
+        }
+        let inputs = req.plan.encode_operands(&req.operands)?;
+        if inputs.len() != req.plan.circuit.n_inputs {
+            return Err(PudError::ArityMismatch {
+                expected: req.plan.circuit.n_inputs,
+                got: inputs.len(),
+            });
+        }
+        let available = req.rows.saturating_sub(RowMap::standard(req.rows).data_base);
+        if available == 0 || req.plan.peak_rows > available {
+            return Err(PudError::RowBudgetExceeded {
+                needed: req.plan.peak_rows.max(1),
+                available,
+            });
+        }
+        let lowered = req.plan.lowered()?;
+        Ok((inputs, lowered))
+    }
+
+    /// Execute validated, grouped requests as fused dispatches: every
+    /// group shares one lowered step program, its (request, replica)
+    /// instances are cut into at most `threads` contiguous chunks, and
+    /// a single worker-pool dispatch drives every chunk of every group
+    /// concurrently. Within a chunk the banks advance **step-major**
+    /// (step outer, banks inner) through the shared stream. Per-bank
+    /// RNG streams make the interleaving invisible: each subarray sees
+    /// exactly the operation sequence the per-request path would
+    /// issue, so results are bit-identical to the per-request loop.
+    fn execute_fused(
+        &self,
+        reqs: &[ComputeRequest],
+        prepared: &[(Vec<Vec<u8>>, Arc<LoweredPlan>)],
+        groups: &[Vec<usize>],
+    ) -> Vec<ComputeResult> {
+        let mut chunks: Vec<FusedChunk> = Vec::new();
+        for members in groups {
+            let mut instances = Vec::new();
+            for &ri in members {
+                let runs = reqs[ri].replicas.max(1);
+                for i in 0..runs {
+                    let seed = if i == 0 {
+                        reqs[ri].seed
+                    } else {
+                        derive_seed(reqs[ri].seed, &[SPARE_STREAM, i as u64])
+                    };
+                    instances.push(FusedInstance { req: ri, seed });
+                }
+            }
+            // Contiguous cuts: chunk-major flattening preserves the
+            // group's global instance order.
+            let n = instances.len();
+            let n_chunks = self.threads.max(1).min(n.max(1));
+            let mut it = instances.into_iter();
+            for k in 0..n_chunks {
+                let take = (n * (k + 1)) / n_chunks - (n * k) / n_chunks;
+                let part: Vec<FusedInstance> = it.by_ref().take(take).collect();
+                if !part.is_empty() {
+                    chunks.push(FusedChunk { lowered_of: members[0], instances: part });
+                }
+            }
+        }
+        let chunk_results: Vec<Vec<(Vec<u64>, f64, usize, u64)>> =
+            worker::parallel_map(chunks, self.threads, |chunk| {
+                self.run_chunk(reqs, prepared, &chunk)
+            });
+        // Stitch instances back into per-request results, replicas
+        // combined in replica order (bit-identical f64 summation).
+        let mut inst_results = chunk_results.into_iter().flatten();
+        let mut results: Vec<Option<ComputeResult>> = (0..reqs.len()).map(|_| None).collect();
+        for members in groups {
+            for &ri in members {
+                let req = &reqs[ri];
+                let runs = req.replicas.max(1);
+                let mut all = Vec::with_capacity(runs);
+                let mut elapsed_ns = 0.0;
+                let mut peak_rows = 0usize;
+                let mut fault_flips = 0u64;
+                for _ in 0..runs {
+                    let (outputs, e, p, f) =
+                        inst_results.next().expect("one result per instance");
+                    elapsed_ns += e;
+                    peak_rows = peak_rows.max(p);
+                    fault_flips += f;
+                    all.push(outputs);
+                }
+                let outputs = combine_replicas(all, req.cols);
+                let mask = req.mask.clone().unwrap_or_else(|| vec![true; req.cols]);
+                results[ri] =
+                    Some(ComputeResult { outputs, mask, elapsed_ns, peak_rows, fault_flips });
+            }
+        }
+        results.into_iter().map(|r| r.expect("every request executed")).collect()
+    }
+
+    /// Walk one chunk of banks through its shared lowered step stream
+    /// step-major: materialise and set up every bank, then advance all
+    /// of them one [`crate::pud::verify::LoweredStep`] at a time.
+    fn run_chunk(
+        &self,
+        reqs: &[ComputeRequest],
+        prepared: &[(Vec<Vec<u8>>, Arc<LoweredPlan>)],
+        chunk: &FusedChunk,
+    ) -> Vec<(Vec<u64>, f64, usize, u64)> {
+        let lowered = &prepared[chunk.lowered_of].1;
+        let mut states: Vec<(Subarray, RowMap, FracConfig, StepRunner)> = chunk
+            .instances
+            .iter()
+            .map(|inst| {
+                let req = &reqs[inst.req];
+                let mut sub = Subarray::with_geometry(&self.cfg, req.rows, req.cols, inst.seed);
+                if let Some(env) = req.env {
+                    sub.env = env;
+                }
+                let map = RowMap::standard(req.rows);
+                let fc = req.calib.lattice.config;
+                setup_subarray(&mut sub, &map, &req.calib);
+                (sub, map, fc, StepRunner::new(req.cols))
+            })
+            .collect();
+        for step in &lowered.steps {
+            for (inst, (sub, map, fc, runner)) in chunk.instances.iter().zip(states.iter_mut()) {
+                let req = &reqs[inst.req];
+                runner.apply(sub, map, fc, &req.grade, &prepared[inst.req].0, step);
+            }
+        }
+        chunk
+            .instances
+            .iter()
+            .zip(states)
+            .map(|(inst, (sub, _, _, runner))| {
+                let req = &reqs[inst.req];
+                let run = runner.finish(&sub, lowered.peak_rows());
+                let outputs =
+                    (0..req.cols).map(|c| req.plan.decode_output(&run.outputs, c)).collect();
+                (outputs, run.elapsed_ns, run.peak_rows, sub.fault_flips())
+            })
+            .collect()
+    }
+}
+
+/// One (request, replica) execution instance inside a fused group:
+/// which request it serves and which seed its bank's variation/fault
+/// field is drawn from.
+struct FusedInstance {
+    req: usize,
+    seed: u64,
+}
+
+/// A contiguous slice of a fused group's instances, executed by one
+/// worker. All instances share the lowering of request `lowered_of`
+/// (equal plan fingerprints lower to the same step program).
+struct FusedChunk {
+    lowered_of: usize,
+    instances: Vec<FusedInstance>,
+}
+
+/// Combine replica outputs: identity for a single replica, per-column
+/// bitwise majority vote across replicas otherwise.
+fn combine_replicas(mut all: Vec<Vec<u64>>, cols: usize) -> Vec<u64> {
+    let runs = all.len();
+    if runs == 1 {
+        return all.pop().expect("one replica ran");
+    }
+    (0..cols)
+        .map(|c| {
+            let mut v = 0u64;
+            for bit in 0..u64::BITS {
+                let votes = all.iter().filter(|o| (o[c] >> bit) & 1 != 0).count();
+                if votes * 2 > runs {
+                    v |= 1u64 << bit;
+                }
+            }
+            v
+        })
+        .collect()
 }
 
 /// The golden-model executor behind the compute trait: one request
-/// runs inline; multiple requests fan across the worker pool at bank
-/// grain (workload execution is serial per bank, so there is no inner
-/// tile fan-out to budget against).
+/// runs inline; larger batches are **batch-fused**. Requests are
+/// grouped by (plan fingerprint, geometry), each group shares one
+/// canonical lowering, and a single worker-pool dispatch walks every
+/// group's (request, replica) banks through the shared step program
+/// step-major. Validation runs up front in request order, so a
+/// malformed request fails the batch with the same first error the
+/// per-request loop would surface — and results stay bit-identical to
+/// that loop (pinned by `rust/tests/fused_exec.rs`).
 impl ComputeEngine for NativeEngine {
     fn compute_backend(&self) -> &'static str {
         "native"
@@ -623,12 +821,25 @@ impl ComputeEngine for NativeEngine {
                 .map(|r| self.execute_request(r).map_err(anyhow::Error::from))
                 .collect();
         }
-        worker::parallel_map((0..reqs.len()).collect(), self.threads, |i| {
-            self.execute_request(&reqs[i])
-        })
-        .into_iter()
-        .map(|r| r.map_err(anyhow::Error::from))
-        .collect()
+        let mut prepared = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            prepared.push(self.prepare_request(req).map_err(anyhow::Error::from)?);
+        }
+        // Group request indices by (plan fingerprint, geometry): group
+        // order follows first appearance, members stay in batch order.
+        let mut keys: Vec<(u64, usize, usize)> = Vec::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            let key = (req.plan.fingerprint(), req.rows, req.cols);
+            match keys.iter().position(|k| *k == key) {
+                Some(g) => groups[g].push(i),
+                None => {
+                    keys.push(key);
+                    groups.push(vec![i]);
+                }
+            }
+        }
+        Ok(self.execute_fused(reqs, &prepared, &groups))
     }
 }
 

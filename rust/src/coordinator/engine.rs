@@ -21,10 +21,26 @@
 //! so fusion is pure argument plumbing; when no artifact matches the
 //! stacked width the engine falls back to per-bank calls and counts
 //! the miss in [`Metrics`] (`pjrt.batch.unfused`).
+//!
+//! ## Compute: plan → lower → fuse → execute
+//!
+//! Arithmetic serving follows the same batch-first shape through the
+//! canonical lowering pipeline: a [`crate::pud::plan::PudOp`] compiles
+//! once into a [`crate::pud::plan::WorkloadPlan`], the plan lowers
+//! once into the verifier-checked step program
+//! ([`crate::pud::verify::LoweredPlan`], cached on the plan and in the
+//! process-wide [`crate::coordinator::plancache::PlanCache`]), and
+//! [`ComputeEngine::execute_batch`] **fuses** requests sharing a
+//! (plan fingerprint, geometry) group so N banks walk one step stream
+//! together instead of fanning out per request. On this PJRT engine
+//! the step program executes on a single lazily-built native fallback
+//! engine; `pjrt.compute.fallback` counts the **lowered steps** whose
+//! class has no fused lowering ([`unfusable_steps`]) — zero for the
+//! whole built-in vocabulary — rather than whole batches.
 
 use anyhow::{anyhow, Result};
 use std::fmt;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::analysis::ecr::EcrReport;
 use crate::calib::algorithm::{const_q, CalibParams, Calibration, NativeEngine};
@@ -39,6 +55,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::dram::sense_amp::SenseAmps;
 use crate::dram::subarray::Subarray;
 use crate::dram::temperature::Environment;
+use crate::pud::verify::{LoweredPlan, LoweredStep};
 use crate::runtime::buffers;
 use crate::runtime::{Executable, Runtime};
 use crate::util::rng::{derive_seed, Rng};
@@ -93,11 +110,20 @@ pub struct PjrtEngine {
     pub rt: Arc<Runtime>,
     pub cfg: DeviceConfig,
     pub metrics: Arc<Metrics>,
+    /// Lazily-built native engine the compute path falls back to for
+    /// step classes with no PJRT artifact — built once, not per call.
+    fallback: OnceLock<NativeEngine>,
 }
 
 impl PjrtEngine {
     pub fn new(rt: Arc<Runtime>, cfg: DeviceConfig) -> Self {
-        Self { rt, cfg, metrics: Arc::new(Metrics::new()) }
+        Self { rt, cfg, metrics: Arc::new(Metrics::new()), fallback: OnceLock::new() }
+    }
+
+    /// The native fallback engine, built on first use and reused for
+    /// the engine's lifetime.
+    fn fallback_engine(&self) -> &NativeEngine {
+        self.fallback.get_or_init(|| NativeEngine::new(self.cfg.clone()))
     }
 
     /// Find the artifact `maj{m}_{kind}_*` whose baked column count
@@ -386,23 +412,47 @@ impl CalibEngine for PjrtEngine {
     }
 }
 
-/// Arithmetic serving on the PJRT backend: no AOT circuit-execution
-/// artifacts exist yet, so every request falls back cleanly to the
-/// native golden-model executor **per bank**, with the misses counted
-/// in [`Metrics`] (`pjrt.compute.fallback`) the way unfusable
-/// calibration batches count `pjrt.batch.unfused`. The trait shape is
-/// already batch-first, so compiling circuit graphs to executables
-/// later is a drop-in change here.
+/// Classify a lowering against the fused per-step execution
+/// vocabulary: the number of steps with **no** batched lowering, which
+/// would fall back to bank-serial execution. Input/NOT/readout steps
+/// are column-interface traffic, releases are bookkeeping, and
+/// MAJ3/MAJ5 are the two SiMRA arities the kernel vocabulary
+/// implements — so every built-in [`crate::pud::plan::PudOp`] lowers
+/// with zero unfusable steps; only an exotic hand-built gate arity
+/// falls outside the vocabulary.
+pub fn unfusable_steps(lowered: &LoweredPlan) -> usize {
+    lowered
+        .steps
+        .iter()
+        .filter(|s| match s {
+            LoweredStep::Majx { m, .. } => *m != 3 && *m != 5,
+            _ => false,
+        })
+        .count()
+}
+
+/// Arithmetic serving on the PJRT backend: requests run through the
+/// same grouped, batch-fused lowered-step dispatch as the native
+/// engine, on one lazily-built fallback engine held for the engine's
+/// lifetime ([`PjrtEngine::fallback_engine`]) — not one constructed
+/// per call. `pjrt.compute.fallback` counts **per-step** fallbacks
+/// ([`unfusable_steps`], step classes outside the fused vocabulary),
+/// not whole batches: a built-in-vocabulary serve reports zero
+/// fallbacks, the way fully-stacked calibration batches report zero
+/// `pjrt.batch.unfused`. Compute wall-clock is timed under
+/// `pjrt.compute`.
 impl ComputeEngine for PjrtEngine {
     fn compute_backend(&self) -> &'static str {
         "pjrt-native-fallback"
     }
 
     fn execute_batch(&self, reqs: &[ComputeRequest]) -> Result<Vec<ComputeResult>> {
-        self.metrics.add("pjrt.compute.fallback", reqs.len() as u64);
-        self.metrics.time("pjrt.compute", || {
-            NativeEngine::new(self.cfg.clone()).execute_batch(reqs)
-        })
+        for req in reqs {
+            if let Ok(lowered) = req.plan.lowered() {
+                self.metrics.add("pjrt.compute.fallback", unfusable_steps(&lowered) as u64);
+            }
+        }
+        self.metrics.time("pjrt.compute", || self.fallback_engine().execute_batch(reqs))
     }
 }
 

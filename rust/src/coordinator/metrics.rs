@@ -9,11 +9,22 @@
 //!   by fused multi-bank calls;
 //! * `pjrt.batch.unfused` — fusable batches that fell back to per-bank
 //!   calls because no artifact matched the stacked width;
-//! * `pjrt.compute.fallback` — compute requests served by the native
-//!   golden-model executor because no circuit-execution artifact
-//!   exists yet (every PJRT compute request, for now);
+//! * `pjrt.compute.fallback` — **lowered steps** in served compute
+//!   requests whose step class has no fused lowering
+//!   (`coordinator::engine::unfusable_steps`) and would fall back to
+//!   bank-serial execution — zero for the whole built-in `PudOp`
+//!   vocabulary (pinned by the CI bench smoke);
 //! * `pjrt.step` / `pjrt.ecr` / `pjrt.compute` (timers) — seconds
 //!   inside the runtime (or its native fallback).
+//!
+//! Compiled-plan cache (`coordinator::plancache`, reported by
+//! `RecalibService::serve_workload` and the CLI):
+//!
+//! * `plan.cache.hit` — lookups answered from the cache (no compile,
+//!   no lowering, no re-verification);
+//! * `plan.cache.miss` — lookups that compiled + lowered a fresh plan
+//!   and inserted it;
+//! * `plan.cache.evicted` — entries evicted by the LRU capacity bound.
 //!
 //! Recalibration service (`coordinator::service`):
 //!

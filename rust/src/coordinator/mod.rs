@@ -19,8 +19,12 @@
 //!   iteration per executable call, multi-bank batches fused into one
 //!   call) and the device-level coordinator, generic over any
 //!   [`crate::calib::engine::CalibEngine`] backend; also the PJRT
-//!   `ComputeEngine` fallback (per-bank native execution until
-//!   circuit-execution artifacts exist);
+//!   `ComputeEngine` (per-lowered-step fallback accounting over one
+//!   shared native fallback engine until circuit-execution artifacts
+//!   exist);
+//! * [`plancache`] — process-wide LRU cache of compiled plans + their
+//!   canonical lowerings, keyed by (op, geometry); `serve_workload`
+//!   and the CLI resolve plans through it (`plan.cache.*` metrics);
 //! * [`service`] — the drift-aware recalibration **server**, built
 //!   around the threaded serve → admit → shard → worker → drain
 //!   lifecycle: any number of client threads serve measurement
@@ -46,5 +50,6 @@
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod plancache;
 pub mod service;
 pub mod worker;

@@ -1,0 +1,236 @@
+//! Process-wide compiled-plan cache: (op, geometry) → compiled
+//! [`WorkloadPlan`] + canonical [`LoweredPlan`].
+//!
+//! Compiling a plan (circuit synthesis, liveness analysis, the static
+//! charge-state verification self-check) and lowering it are pure
+//! functions of the op — paying them once per *serve* is pure waste on
+//! a hot serving path. [`PlanCache`] memoizes the pair behind an
+//! `Arc`, keyed by the op plus an optional row-geometry pin (rows = 0
+//! means geometry-agnostic; a nonzero row count additionally
+//! pre-checks the plan's scratch peak against that geometry's data
+//! region, so impossible plans are rejected at lookup time, before any
+//! request is built). Entries are evicted least-recently-used beyond
+//! the configured capacity.
+//!
+//! `RecalibService::serve_workload` and the CLI (`pudtune run` /
+//! `serve` / `campaign`) resolve plans through the process-wide
+//! [`PlanCache::global`] instance; lookups report `plan.cache.hit` /
+//! `plan.cache.miss` / `plan.cache.evicted` into the caller's
+//! [`Metrics`] (catalogued in [`crate::coordinator::metrics`]).
+
+use crate::coordinator::metrics::Metrics;
+use crate::dram::geometry::RowMap;
+use crate::pud::plan::{PudError, PudOp, WorkloadPlan};
+use crate::pud::verify::LoweredPlan;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A compiled plan and its canonical lowering, shared via `Arc` by
+/// every serve that resolves the same (op, geometry) key.
+#[derive(Clone, Debug)]
+pub struct CompiledPlan {
+    /// The compiled, verifier-approved plan.
+    pub plan: Arc<WorkloadPlan>,
+    /// The plan's canonical lowering (the same `Arc` the plan itself
+    /// caches, so engines never re-lower).
+    pub lowered: Arc<LoweredPlan>,
+}
+
+/// Counters accumulated over a cache's lifetime ([`PlanCache::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that compiled (and inserted) a fresh plan.
+    pub misses: u64,
+    /// Entries evicted by the LRU capacity bound.
+    pub evicted: u64,
+}
+
+struct Entry {
+    op: PudOp,
+    rows: usize,
+    compiled: Arc<CompiledPlan>,
+    last_used: u64,
+}
+
+struct Inner {
+    entries: Vec<Entry>,
+    tick: u64,
+    stats: CacheStats,
+}
+
+/// An LRU cache of compiled plans keyed by (op, rows). `PudOp` has no
+/// `Hash`, and capacities are small (a serving vocabulary, not a
+/// corpus), so lookups are a linear scan under one mutex.
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+}
+
+/// Capacity of the process-wide cache ([`PlanCache::global`]).
+pub const GLOBAL_CAPACITY: usize = 128;
+
+impl PlanCache {
+    /// An empty cache holding at most `capacity` compiled plans
+    /// (`capacity` is clamped to at least 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                entries: Vec::new(),
+                tick: 0,
+                stats: CacheStats::default(),
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The process-wide cache the serving layer and CLI share.
+    pub fn global() -> &'static PlanCache {
+        static GLOBAL: OnceLock<PlanCache> = OnceLock::new();
+        GLOBAL.get_or_init(|| PlanCache::new(GLOBAL_CAPACITY))
+    }
+
+    /// Resolve `(op, rows)` to its compiled plan + lowering, compiling
+    /// on first use. `rows = 0` is the geometry-agnostic key; a
+    /// nonzero `rows` additionally pre-checks the plan's scratch peak
+    /// against that subarray geometry's data region and fails with
+    /// [`PudError::RowBudgetExceeded`] when the plan cannot fit.
+    /// Compile/lowering errors are returned and never cached. When
+    /// `metrics` is given, the lookup reports `plan.cache.hit` /
+    /// `plan.cache.miss` / `plan.cache.evicted`.
+    pub fn get_or_compile(
+        &self,
+        op: &PudOp,
+        rows: usize,
+        metrics: Option<&Metrics>,
+    ) -> Result<Arc<CompiledPlan>, PudError> {
+        {
+            let mut inner = self.inner.lock().expect("plan cache poisoned");
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.entries.iter_mut().find(|e| e.rows == rows && e.op == *op) {
+                e.last_used = tick;
+                let compiled = e.compiled.clone();
+                inner.stats.hits += 1;
+                if let Some(m) = metrics {
+                    m.incr("plan.cache.hit");
+                }
+                return Ok(compiled);
+            }
+        }
+        // Compile + lower outside the lock: concurrent misses on the
+        // same key race, but the loser adopts the winner's entry below
+        // so every caller still shares one `Arc`.
+        let plan = WorkloadPlan::compile(op.clone())?;
+        if rows > 0 {
+            if rows < 32 {
+                // `RowMap::standard` needs the reserved-row layout.
+                return Err(PudError::RowBudgetExceeded { needed: 32, available: rows });
+            }
+            let available = rows.saturating_sub(RowMap::standard(rows).data_base);
+            if available == 0 || plan.peak_rows > available {
+                return Err(PudError::RowBudgetExceeded {
+                    needed: plan.peak_rows.max(1),
+                    available,
+                });
+            }
+        }
+        let lowered = plan.lowered()?;
+        let compiled = Arc::new(CompiledPlan { plan: Arc::new(plan), lowered });
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.stats.misses += 1;
+        if let Some(m) = metrics {
+            m.incr("plan.cache.miss");
+        }
+        if let Some(e) = inner.entries.iter_mut().find(|e| e.rows == rows && e.op == *op) {
+            e.last_used = tick;
+            return Ok(e.compiled.clone());
+        }
+        inner.entries.push(Entry {
+            op: op.clone(),
+            rows,
+            compiled: compiled.clone(),
+            last_used: tick,
+        });
+        while inner.entries.len() > self.capacity {
+            let idx = inner
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("an overfull cache is nonempty");
+            inner.entries.remove(idx);
+            inner.stats.evicted += 1;
+            if let Some(m) = metrics {
+                m.incr("plan.cache.evicted");
+            }
+        }
+        Ok(compiled)
+    }
+
+    /// Lifetime hit/miss/eviction counters.
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().expect("plan cache poisoned").stats
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("plan cache poisoned").entries.len()
+    }
+
+    /// Whether the cache holds no plans.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_share_one_arc_and_count() {
+        let cache = PlanCache::new(4);
+        let op = PudOp::Add { width: 2 };
+        let a = cache.get_or_compile(&op, 0, None).unwrap();
+        let b = cache.get_or_compile(&op, 0, None).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the cached Arc");
+        assert!(Arc::ptr_eq(&a.lowered, &b.lowered));
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, evicted: 0 });
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn geometry_is_part_of_the_key() {
+        let cache = PlanCache::new(4);
+        let op = PudOp::Add { width: 2 };
+        let generic = cache.get_or_compile(&op, 0, None).unwrap();
+        let pinned = cache.get_or_compile(&op, 96, None).unwrap();
+        assert!(!Arc::ptr_eq(&generic, &pinned), "distinct geometry keys");
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 2, evicted: 0 });
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn impossible_geometry_is_rejected_not_cached() {
+        let cache = PlanCache::new(4);
+        let op = PudOp::Mul { width: 4 };
+        let err = cache.get_or_compile(&op, 16, None).unwrap_err();
+        assert!(matches!(err, PudError::RowBudgetExceeded { .. }), "{err:?}");
+        assert!(cache.is_empty(), "errors must not be cached");
+        // The same op still compiles under a workable geometry.
+        cache.get_or_compile(&op, 96, None).unwrap();
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn malformed_ops_error_through() {
+        let cache = PlanCache::new(4);
+        let err = cache.get_or_compile(&PudOp::Add { width: 0 }, 0, None).unwrap_err();
+        assert!(matches!(err, PudError::MalformedCircuit(_)), "{err:?}");
+        assert!(cache.is_empty());
+    }
+}

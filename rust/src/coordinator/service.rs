@@ -1073,16 +1073,23 @@ impl Drop for ServeGuard<'_> {
 
 /// Arithmetic serving (engines that also execute workloads).
 impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
-    /// Compile `op` once and serve it on every registered subarray —
-    /// see [`Self::serve_plan`]. An invalid op is a request-level
-    /// error; per-bank faults live inside the returned outcomes.
+    /// Resolve `op` through the process-wide
+    /// [`PlanCache`](crate::coordinator::plancache::PlanCache) (compile
+    /// + lower once per process, `plan.cache.*` metrics) and serve it
+    /// on every registered subarray — see [`Self::serve_plan`]. An
+    /// invalid op is a request-level error; per-bank faults live
+    /// inside the returned outcomes.
     pub fn serve_workload(
         &self,
         op: PudOp,
         operands: &[Vec<u64>],
     ) -> Result<Vec<WorkloadOutcome>, PudError> {
-        let plan = Arc::new(WorkloadPlan::compile(op)?);
-        self.serve_plan(&plan, operands)
+        let compiled = crate::coordinator::plancache::PlanCache::global().get_or_compile(
+            &op,
+            0,
+            Some(&*self.metrics),
+        )?;
+        self.serve_plan(&compiled.plan, operands)
     }
 
     /// Serve one compiled workload batch on every subarray (one

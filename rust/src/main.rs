@@ -239,9 +239,9 @@ fn cmd_ecr(args: &cli::Args) -> Result<()> {
 fn cmd_run(args: &cli::Args) -> Result<()> {
     use pudtune::analysis::throughput::ThroughputModel;
     use pudtune::calib::engine::{measure_arith_batteries, ComputeEngine, ComputeRequest};
-    use pudtune::pud::plan::{PudOp, WorkloadPlan};
+    use pudtune::coordinator::plancache::PlanCache;
+    use pudtune::pud::plan::PudOp;
     use pudtune::util::rng::Rng;
-    use std::sync::Arc;
 
     let (cfg, _, exp) = load_configs(args)?;
     let cols = args.usize("cols", 1024).map_err(anyhow::Error::msg)?;
@@ -291,7 +291,11 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
     let tput = ThroughputModel::new(&SystemConfig::paper());
     let mut rng = Rng::new(seed ^ 0x50D);
     for op in ops {
-        let plan = Arc::new(WorkloadPlan::compile(op).map_err(|e| anyhow!("{e}"))?);
+        // Compiled-plan cache, pinned to this run's geometry: repeated
+        // invocations of the same op pay compile + lower + verify once.
+        let compiled =
+            PlanCache::global().get_or_compile(&op, rows, None).map_err(|e| anyhow!("{e}"))?;
+        let plan = compiled.plan.clone();
         let width = plan.op.operand_width();
         let operands: Vec<Vec<u64>> = (0..plan.op.n_operands())
             .map(|_| (0..cols).map(|_| rng.below(1u64 << width)).collect())
@@ -481,7 +485,12 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     // and arithmetic bursts against them.
     println!("starting server: {workers} recalibration workers + maintenance ticker");
     let server = ServiceServer::start(service.clone(), workers);
-    let plan = Arc::new(pudtune::pud::plan::WorkloadPlan::compile(PudOp::Add { width: 2 })?);
+    let compiled = pudtune::coordinator::plancache::PlanCache::global().get_or_compile(
+        &PudOp::Add { width: 2 },
+        0,
+        Some(&*service.metrics),
+    )?;
+    let plan = compiled.plan.clone();
     let a: Vec<u64> = (0..sys.cols as u64).map(|c| c % 4).collect();
     let b: Vec<u64> = (0..sys.cols as u64).map(|c| (c * 5 + 2) % 4).collect();
     let operands = [a, b];
@@ -562,7 +571,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
 fn cmd_campaign(args: &cli::Args) -> Result<()> {
     use pudtune::coordinator::service::{RecalibService, ServiceConfig, WorkloadOutcome};
     use pudtune::dram::faults::standard_campaign;
-    use pudtune::pud::plan::{PudOp, WorkloadPlan};
+    use pudtune::pud::plan::PudOp;
     use pudtune::util::rng::Rng;
 
     /// Sum golden mismatches / served columns / bank failures over one
@@ -589,7 +598,12 @@ fn cmd_campaign(args: &cli::Args) -> Result<()> {
     let redundancy = args.usize("redundancy", 1).map_err(anyhow::Error::msg)?;
     let op_name = args.str("op").unwrap_or("add2");
     let op = PudOp::parse_or_list(op_name).map_err(|e| anyhow!(e))?;
-    let plan = Arc::new(WorkloadPlan::compile(op).map_err(|e| anyhow!("{e}"))?);
+    // Banks register with 32 rows below; pin the cached plan to that
+    // geometry so impossible ops are rejected before any serving runs.
+    let compiled = pudtune::coordinator::plancache::PlanCache::global()
+        .get_or_compile(&op, 32, None)
+        .map_err(|e| anyhow!("{e}"))?;
+    let plan = compiled.plan.clone();
     let params = CalibParams {
         iterations: exp.calib_iterations,
         samples: exp.calib_samples,

@@ -1,12 +1,16 @@
-//! Bit-serial circuit execution on the subarray.
+//! Bit-serial circuit execution on the subarray — an interpreter of
+//! the canonical lowering.
 //!
-//! Runs a compiled [`WorkloadPlan`] gate by gate through the full MAJX
-//! flow (RowCopy-in, Frac, SiMRA, copy-out), with wire rows recycled by
-//! the plan's precomputed last-use analysis. This is the functional
-//! path the compute engines use to run real arithmetic *in* the
-//! simulated DRAM; throughput numbers come from `analysis::throughput`
-//! which prices the same command-cost model over the plan's
-//! `CircuitCost`.
+//! [`run_plan`] no longer re-derives the setup/Frac/SiMRA/readout
+//! order itself: it admits the plan, obtains its canonical
+//! [`LoweredPlan`] ([`WorkloadPlan::lowered`] — the same single-pass
+//! artifact the static verifier's charge-state machine checks), and
+//! interprets the typed step stream against the subarray. One source
+//! of truth: the program that executes is — by construction — the
+//! program that was verified. The per-step interpreter
+//! ([`StepRunner`]) is shared with the batch-fused engine path
+//! ([`crate::calib::engine::ComputeEngine`]), which drives many banks
+//! through the same stream step-major.
 //!
 //! Request validation is typed: arity/width/row-budget violations
 //! surface as [`PudError`]s *before* the subarray is touched, so a
@@ -26,11 +30,10 @@ use crate::calib::lattice::FracConfig;
 use crate::config::system::Ddr4Timing;
 use crate::dram::geometry::RowMap;
 use crate::dram::subarray::Subarray;
-use crate::pud::graph::{MajCircuit, Signal};
+use crate::pud::graph::MajCircuit;
 use crate::pud::majx::{execute_majx, setup_subarray, MajX};
 use crate::pud::plan::{PudError, WorkloadPlan};
-use crate::pud::rowalloc::RowAlloc;
-use std::collections::HashMap;
+use crate::pud::verify::{LoweredPlan, LoweredStep, CALIB_STORE, CONST0, CONST1, DATA_BASE};
 
 /// Result of a circuit run.
 #[derive(Clone, Debug)]
@@ -65,6 +68,99 @@ pub fn run_circuit(
     run_plan(sub, map, calib, fc, grade, &plan, inputs)
 }
 
+/// Translate an abstract lowered-script row (the layout fixed by
+/// [`crate::pud::verify`]: SiMRA group, calibration stores, constants,
+/// then the data region from [`DATA_BASE`]) to the subarray's physical
+/// row through its [`RowMap`]. The lowering's replay allocator mirrors
+/// the executor's LIFO discipline, so abstract data row `DATA_BASE+k`
+/// is always physical row `map.data_base + k`.
+pub fn phys_row(map: &RowMap, row: usize) -> usize {
+    match row {
+        r if r >= DATA_BASE => map.data_base + (r - DATA_BASE),
+        r if r == CONST0 => map.const0,
+        r if r == CONST1 => map.const1,
+        r if CALIB_STORE.contains(&r) => map.calib_store[r - CALIB_STORE[0]],
+        // The abstract SiMRA group starts at row 0 (`SIMRA_BASE`).
+        r => map.simra_base + r,
+    }
+}
+
+/// Incremental interpreter for one subarray walking a [`LoweredPlan`]
+/// step stream. [`run_lowered`] drives it step-by-step for a single
+/// bank; the batch-fused engine path drives one runner per bank
+/// through the same stream step-major. Either way each subarray sees
+/// the exact same operation sequence, so results are bit-identical.
+#[derive(Clone, Debug)]
+pub struct StepRunner {
+    elapsed_ns: f64,
+    not_buf: Vec<u8>,
+    outputs: Vec<Vec<u8>>,
+}
+
+impl StepRunner {
+    /// A fresh runner for a subarray with `cols` columns. The subarray
+    /// must already be set up ([`setup_subarray`]) and validated
+    /// against the plan (see [`run_lowered`]).
+    pub fn new(cols: usize) -> Self {
+        Self { elapsed_ns: 0.0, not_buf: vec![0u8; cols], outputs: Vec::new() }
+    }
+
+    /// Apply one lowered step to the subarray. `inputs[i]` is the
+    /// bit-vector of primary input `i` (length = cols).
+    pub fn apply(
+        &mut self,
+        sub: &mut Subarray,
+        map: &RowMap,
+        fc: &FracConfig,
+        grade: &Ddr4Timing,
+        inputs: &[Vec<u8>],
+        step: &LoweredStep,
+    ) {
+        match step {
+            LoweredStep::WriteInput { input, row } => {
+                sub.write_row(phys_row(map, *row), &inputs[*input]);
+            }
+            LoweredStep::Not { src, dst } => {
+                sub.read_row_into(phys_row(map, *src), &mut self.not_buf);
+                for b in self.not_buf.iter_mut() {
+                    *b = 1 - *b;
+                }
+                sub.write_row(phys_row(map, *dst), &self.not_buf);
+                // NOT = readout + write-back through the column
+                // interface.
+                self.elapsed_ns += grade.t_rcd + 8.0 * grade.t_ck + grade.t_rp;
+                self.elapsed_ns += grade.t_rcd + 8.0 * grade.t_ck + grade.t_rp;
+            }
+            LoweredStep::Majx { m, operands, dst, .. } => {
+                let x = if *m == 3 { MajX::Maj3 } else { MajX::Maj5 };
+                let rows: Vec<usize> = operands.iter().map(|&r| phys_row(map, r)).collect();
+                let (bits, run) = execute_majx(sub, map, x, &rows, fc, grade);
+                self.elapsed_ns += run.elapsed_ns;
+                // Persist the result into a scratch row (copy out of
+                // the group).
+                sub.write_row(phys_row(map, *dst), &bits);
+            }
+            // Releases are bookkeeping: the lowering's replay allocator
+            // already baked the LIFO row reuse into the row ids.
+            LoweredStep::Release { .. } => {}
+            LoweredStep::ReadOutput { row, .. } => {
+                self.outputs.push(sub.read_row(phys_row(map, *row)));
+            }
+        }
+    }
+
+    /// Finish the run: package outputs, elapsed model time and the
+    /// lowering's replayed scratch peak into a [`CircuitRun`].
+    pub fn finish(self, sub: &Subarray, peak_rows: usize) -> CircuitRun {
+        CircuitRun {
+            outputs: self.outputs,
+            elapsed_ns: self.elapsed_ns,
+            peak_rows,
+            storage_bytes: sub.approx_bytes(),
+        }
+    }
+}
+
 /// Execute a compiled plan over per-column operand bit-vectors.
 ///
 /// `inputs[i]` is the bit-vector of primary input `i` (length = cols).
@@ -84,6 +180,27 @@ pub fn run_plan(
     // hand-assembled plans get the full charge-state verification and
     // are rejected here, before the subarray is touched.
     crate::pud::verify::admit(plan)?;
+    let lowered = plan.lowered()?;
+    run_lowered(sub, map, calib, fc, grade, plan, &lowered, inputs)
+}
+
+/// Execute an already-admitted plan's canonical lowering: validate the
+/// request shape against this subarray, set up the calibration and
+/// constant rows, then interpret the step stream. This is the single
+/// execution core behind both [`run_plan`] and the batch-fused engine
+/// path; callers are responsible for having [`crate::pud::verify::admit`]ted
+/// the plan the lowering came from.
+#[allow(clippy::too_many_arguments)]
+pub fn run_lowered(
+    sub: &mut Subarray,
+    map: &RowMap,
+    calib: &Calibration,
+    fc: &FracConfig,
+    grade: &Ddr4Timing,
+    plan: &WorkloadPlan,
+    lowered: &LoweredPlan,
+    inputs: &[Vec<u8>],
+) -> Result<CircuitRun, PudError> {
     let circuit = &plan.circuit;
     if inputs.len() != circuit.n_inputs {
         return Err(PudError::ArityMismatch {
@@ -108,102 +225,10 @@ pub fn run_plan(
     }
     setup_subarray(sub, map, calib);
 
-    let mut elapsed = 0.0f64;
-    let mut alloc = RowAlloc::new(map.data_base, sub.rows);
-
-    // Materialise primary inputs.
-    let mut input_rows = Vec::with_capacity(circuit.n_inputs);
-    for bits in inputs {
-        let r = alloc.alloc();
-        sub.write_row(r, bits);
-        input_rows.push(r);
+    let mut runner = StepRunner::new(sub.cols);
+    for step in &lowered.steps {
+        runner.apply(sub, map, fc, grade, inputs, step);
     }
-    let mut gate_rows: Vec<Option<usize>> = vec![None; circuit.gates.len()];
-    // Cache of materialised negations.
-    let mut not_rows: HashMap<Signal, usize> = HashMap::new();
-    // One reusable row buffer for every NOT materialisation.
-    let mut not_buf = vec![0u8; sub.cols];
-
-    // Resolve a signal to a readable row, materialising NOTs on demand.
-    // (Closures can't borrow everything mutably at once; a macro keeps
-    // the call sites readable.)
-    macro_rules! row_of {
-        ($sig:expr) => {{
-            let sig: Signal = $sig;
-            match sig {
-                Signal::Input(i) => input_rows[i],
-                Signal::Gate(g) => gate_rows[g].expect("gate row live"),
-                Signal::Const(false) => map.const0,
-                Signal::Const(true) => map.const1,
-                Signal::NotInput(_) | Signal::NotGate(_) => {
-                    if let Some(&r) = not_rows.get(&sig) {
-                        r
-                    } else {
-                        let src = match sig {
-                            Signal::NotInput(i) => input_rows[i],
-                            Signal::NotGate(g) => gate_rows[g].expect("gate row live"),
-                            _ => unreachable!(),
-                        };
-                        sub.read_row_into(src, &mut not_buf);
-                        for b in not_buf.iter_mut() {
-                            *b = 1 - *b;
-                        }
-                        let r = alloc.alloc();
-                        sub.write_row(r, &not_buf);
-                        // NOT = readout + write-back through the column
-                        // interface.
-                        elapsed += grade.t_rcd + 8.0 * grade.t_ck + grade.t_rp;
-                        elapsed += grade.t_rcd + 8.0 * grade.t_ck + grade.t_rp;
-                        not_rows.insert(sig, r);
-                        r
-                    }
-                }
-            }
-        }};
-    }
-
-    for (gi, gate) in circuit.gates.iter().enumerate() {
-        let op_rows: Vec<usize> = gate.args.iter().map(|&s| row_of!(s)).collect();
-        let x = if gate.arity() == 3 { MajX::Maj3 } else { MajX::Maj5 };
-        let (bits, run) = execute_majx(sub, map, x, &op_rows, fc, grade);
-        elapsed += run.elapsed_ns;
-        // Persist the result into a scratch row (copy out of the group).
-        let r = alloc.alloc();
-        sub.write_row(r, &bits);
-        gate_rows[gi] = Some(r);
-        // Recycle rows whose signals die at this gate (the plan's
-        // precomputed death lists). Death lists hold canonical signals,
-        // and a canonical last-use index covers *both* polarities — so
-        // a dying gate releases its own row and any materialised
-        // negation of it.
-        for &sig in plan.deaths(gi) {
-            match sig {
-                Signal::Gate(g) => {
-                    if let Some(r) = gate_rows[g].take() {
-                        alloc.release(r);
-                    }
-                    if let Some(r) = not_rows.remove(&Signal::NotGate(g)) {
-                        alloc.release(r);
-                    }
-                }
-                Signal::Input(i) => {
-                    if let Some(r) = not_rows.remove(&Signal::NotInput(i)) {
-                        alloc.release(r);
-                    }
-                }
-                _ => {}
-            }
-        }
-    }
-
-    let outputs = circuit
-        .outputs
-        .iter()
-        .map(|&s| {
-            let r = row_of!(s);
-            sub.read_row(r)
-        })
-        .collect();
     // Every gate's SiMRA restored its group to full swing; only the
     // calibration rows re-Frac'd by the *next* MAJX will leave the
     // packed representation again. (Scoped to the SiMRA group: rows the
@@ -214,12 +239,7 @@ pub fn run_plan(
             || (map.simra_base..map.simra_base + 8).all(|r| sub.row_is_packed(r)),
         "circuit must leave its SiMRA group fully restored"
     );
-    Ok(CircuitRun {
-        outputs,
-        elapsed_ns: elapsed,
-        peak_rows: alloc.high_water,
-        storage_bytes: sub.approx_bytes(),
-    })
+    Ok(runner.finish(sub, lowered.peak_rows()))
 }
 
 #[cfg(test)]

@@ -8,26 +8,43 @@
 //! shift-and-add multiplication, plus a small majority-graph IR with a
 //! row allocator so circuits schedule onto the subarray's row budget.
 //!
-//! ## Plan → engine → serve layering
+//! ## Plan → lower → fuse → execute layering
 //!
-//! Workloads flow through three layers, mirroring the calibration
-//! stack's request/engine/service split:
+//! Workloads flow through one canonical pipeline, mirroring the
+//! calibration stack's request/engine/service split:
 //!
 //! 1. **plan** — a [`plan::PudOp`] names the workload; compiling it
 //!    into a [`plan::WorkloadPlan`] runs circuit synthesis, last-use
 //!    analysis and command-cost pricing *once*, yielding a bank-
 //!    agnostic, `Arc`-shareable artifact. Malformed shapes surface as
 //!    typed [`plan::PudError`]s, not panics;
-//! 2. **engine** — [`crate::calib::engine::ComputeEngine`] executes
-//!    batches of `ComputeRequest`s (plan + bank + calibration +
-//!    error-free column mask) on a backend: the native engine fans
-//!    across the worker pool via [`exec::run_plan`], the PJRT engine
-//!    currently falls back per bank;
-//! 3. **serve** — `RecalibService::serve_workload`
-//!    ([`crate::coordinator::service`]) runs workloads on every
-//!    registered subarray under its *current* calibration and drift
-//!    state, so arithmetic serving and drift-scheduled recalibration
-//!    share one lifecycle.
+//! 2. **lower** — the plan lowers once into the canonical
+//!    [`verify::LoweredPlan`]: a typed step stream
+//!    ([`verify::LoweredStep`]) plus the flat abstract command script
+//!    the static verifier's charge-state machine checks. Lowering and
+//!    verification are **the same single pass**
+//!    ([`verify::lower_plan_full`]), so the program that executes is —
+//!    by construction — the program that was verified. The lowering is
+//!    cached on the plan ([`plan::WorkloadPlan::lowered`]) and, for
+//!    serving/CLI paths, in the process-wide
+//!    [`crate::coordinator::plancache::PlanCache`] keyed by
+//!    (op, geometry);
+//! 3. **fuse** — [`crate::calib::engine::ComputeEngine::execute_batch`]
+//!    groups requests by ([`plan::WorkloadPlan::fingerprint`],
+//!    geometry) and walks each group's banks through the shared step
+//!    stream **step-major** in one worker-pool dispatch per batch
+//!    (per-bank RNG streams make the interleaving bit-invisible); the
+//!    PJRT engine accounts unfusable step classes per step
+//!    (`pjrt.compute.fallback`) and runs the same fused dispatch on
+//!    its resident native fallback engine;
+//! 4. **execute** — [`exec::run_plan`] / [`exec::run_lowered`]
+//!    interpret the step stream against a subarray
+//!    ([`exec::StepRunner`], the same interpreter the fused path
+//!    drives per bank), and `RecalibService::serve_workload`
+//!    ([`crate::coordinator::service`]) serves it on every registered
+//!    subarray under its *current* calibration and drift state, so
+//!    arithmetic serving and drift-scheduled recalibration share one
+//!    lifecycle.
 //!
 //! * [`majx`] — MAJX execution flows, conventional and PUDTune;
 //! * [`logic`] — AND / OR / NOT;
@@ -38,8 +55,10 @@
 //! * [`plan`] — the `PudOp` workload vocabulary and one-time plan
 //!   compilation (typed errors, death lists, peak-row precomputation);
 //! * [`rowalloc`] — scratch-row allocation inside the subarray;
-//! * [`exec`] — plan execution against the golden model;
-//! * [`verify`] — the static charge-state verifier (below).
+//! * [`exec`] — the lowered-step interpreter (single-bank and the
+//!   per-bank core of fused batches);
+//! * [`verify`] — the canonical lowering + static charge-state
+//!   verifier (below).
 //!
 //! ## Diagnostics
 //!

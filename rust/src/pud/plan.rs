@@ -27,6 +27,8 @@ use crate::pud::graph::{CircuitCost, Gate, MajCircuit, Signal};
 use crate::pud::multiplier::array_multiplier;
 use std::collections::{HashMap, HashSet};
 use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, OnceLock};
 
 /// Why a PUD workload request could not be planned or executed.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -321,6 +323,9 @@ pub struct WorkloadPlan {
     /// ([`crate::pud::verify`]) passed its output — the admission
     /// layers trust it and skip re-verification.
     verified: bool,
+    /// Lazily-built canonical lowering ([`WorkloadPlan::lowered`]).
+    /// Cloning a plan shares the already-computed lowering.
+    lowered: OnceLock<Arc<crate::pud::verify::LoweredPlan>>,
 }
 
 impl WorkloadPlan {
@@ -339,8 +344,7 @@ impl WorkloadPlan {
             )));
         }
         let (deaths, peak_rows) = analyse(&circuit);
-        let cost = circuit.cost();
-        let mut plan = Self { op, circuit, cost, peak_rows, deaths, verified: false };
+        let mut plan = Self::assemble(op, circuit, deaths, peak_rows);
         let report = crate::pud::verify::verify_plan(&plan);
         if let Some(d) = report.errors().next() {
             return Err(d.clone().into());
@@ -365,13 +369,47 @@ impl WorkloadPlan {
         peak_rows: usize,
     ) -> Self {
         let cost = circuit.cost();
-        Self { op, circuit, cost, peak_rows, deaths, verified: false }
+        Self { op, circuit, cost, peak_rows, deaths, verified: false, lowered: OnceLock::new() }
     }
 
     /// Whether this plan came out of [`WorkloadPlan::compile`] with a
     /// clean verifier report (admission layers skip re-verification).
     pub fn is_verified(&self) -> bool {
         self.verified
+    }
+
+    /// The canonical backend-neutral lowering of this plan — the step
+    /// stream every engine interprets, which is the same artifact the
+    /// static verifier checks ([`crate::pud::verify::lower_plan_full`]).
+    /// Computed on first use and cached for the plan's lifetime;
+    /// clones of the plan share the cached lowering.
+    pub fn lowered(&self) -> Result<Arc<crate::pud::verify::LoweredPlan>, PudError> {
+        if let Some(l) = self.lowered.get() {
+            return Ok(l.clone());
+        }
+        let l = Arc::new(crate::pud::verify::lower_plan_full(self).map_err(PudError::from)?);
+        Ok(self.lowered.get_or_init(|| l).clone())
+    }
+
+    /// Structural fingerprint over everything execution depends on:
+    /// the op's identity/arity/width, the circuit (inputs, gates,
+    /// outputs), the death lists and the compiled peak. Two plans with
+    /// equal fingerprints lower to the same step program, so batched
+    /// engines group requests by it and the admission memo keys on it.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.op.label().hash(&mut h);
+        self.op.n_operands().hash(&mut h);
+        self.op.operand_width().hash(&mut h);
+        self.circuit.n_inputs.hash(&mut h);
+        self.circuit.gates.len().hash(&mut h);
+        for gate in &self.circuit.gates {
+            gate.args.hash(&mut h);
+        }
+        self.circuit.outputs.hash(&mut h);
+        self.deaths.hash(&mut h);
+        self.peak_rows.hash(&mut h);
+        h.finish()
     }
 
     /// Canonical signals dying at gate `gi`.

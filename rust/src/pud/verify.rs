@@ -37,6 +37,7 @@ use crate::pud::graph::{Gate, MajCircuit, Signal};
 use crate::pud::plan::{PudError, PudOp, WorkloadPlan};
 use std::collections::{HashMap, HashSet};
 use std::fmt;
+use std::sync::{Mutex, OnceLock};
 
 /// Stable diagnostic codes. The numbering is part of the tool's
 /// contract (CI, lint output parsers); never renumber, only append.
@@ -354,6 +355,54 @@ pub struct ChargeScript {
     pub peak_rows: usize,
 }
 
+/// One backend-neutral executor step — the typed, coarse view of the
+/// same lowering [`ChargeScript`] records command by command. Engines
+/// interpret this stream instead of re-deriving the
+/// setup/Frac/SiMRA/readout order themselves; all rows are abstract
+/// ([`SIMRA_BASE`]/[`CALIB_STORE`]/[`CONST0`]/[`CONST1`]/[`DATA_BASE`]
+/// layout) and must be translated through the subarray's `RowMap`
+/// before touching DRAM.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LoweredStep {
+    /// Write input plane `input` into abstract data row `row`.
+    WriteInput { input: usize, row: usize },
+    /// Materialise a negation: read `src`, invert, write `dst`.
+    Not { src: usize, dst: usize },
+    /// One full MAJX flow for gate `gate`: stage the `operands` rows
+    /// (plus calibration stores and, for MAJ3, the constant rows) into
+    /// the SiMRA group, Frac the calibration rows, fire the restoring
+    /// SiMRA, and write the per-column decision into data row `dst`.
+    Majx { gate: usize, m: usize, operands: Vec<usize>, dst: usize },
+    /// Scratch rows released after a gate's death list — a physical
+    /// no-op at execution time (the abstract row ids already bake in
+    /// the allocator's LIFO reuse order), kept so backends can audit
+    /// per-step liveness and the verifier can replay releases.
+    Release { rows: Vec<usize> },
+    /// Read output plane `output` back from abstract data row `row`.
+    ReadOutput { output: usize, row: usize },
+}
+
+/// The canonical backend-neutral lowering of a
+/// [`WorkloadPlan`]: the typed step stream every
+/// engine interprets ([`LoweredStep`]) plus the flat [`ChargeScript`]
+/// the verifier's charge-state machine checks. Both views are emitted
+/// by the same single pass ([`lower_plan_full`]), so the program that
+/// executes is — by construction — the program that was verified.
+#[derive(Clone, Debug)]
+pub struct LoweredPlan {
+    /// Executor steps in issue order.
+    pub steps: Vec<LoweredStep>,
+    /// The command-level view of the same lowering (verifier input).
+    pub script: ChargeScript,
+}
+
+impl LoweredPlan {
+    /// Peak simultaneous scratch rows during the lowering replay.
+    pub fn peak_rows(&self) -> usize {
+        self.script.peak_rows
+    }
+}
+
 /// Replay of [`crate::pud::rowalloc::RowAlloc`]'s discipline (LIFO
 /// free list, unbounded) so the abstract script reuses rows in exactly
 /// the order the executor would.
@@ -386,15 +435,23 @@ impl ReplayAlloc {
     }
 }
 
-/// Lower a plan to its abstract command stream, mirroring
-/// [`crate::pud::exec::run_plan`] step for step: setup writes, inputs
-/// materialised up front, NOT rows at first use, per-gate
+/// Lower a plan to its abstract command stream only (the verifier's
+/// historical entry point). Equivalent to
+/// [`lower_plan_full`]`(plan).map(|l| l.script)`.
+pub fn lower_plan(plan: &WorkloadPlan) -> Result<ChargeScript, Diagnostic> {
+    lower_plan_full(plan).map(|l| l.script)
+}
+
+/// Lower a plan to the canonical [`LoweredPlan`]: the typed executor
+/// step stream and the abstract command stream, emitted together in
+/// one pass that mirrors the execution order exactly — setup writes,
+/// inputs materialised up front, NOT rows at first use, per-gate
 /// stage/Frac/SiMRA/copy-out, death-list releases, output readout.
 ///
 /// Fails (with a P007/P008 diagnostic) only when the circuit or death
 /// lists are too malformed to walk — out-of-range references the
 /// abstract machine cannot even name rows for.
-pub fn lower_plan(plan: &WorkloadPlan) -> Result<ChargeScript, Diagnostic> {
+pub fn lower_plan_full(plan: &WorkloadPlan) -> Result<LoweredPlan, Diagnostic> {
     let circuit = &plan.circuit;
     let n_gates = circuit.gates.len();
     if plan.death_lists().len() != n_gates {
@@ -437,8 +494,11 @@ pub fn lower_plan(plan: &WorkloadPlan) -> Result<ChargeScript, Diagnostic> {
     }
 
     let mut ops = Vec::new();
+    let mut steps = Vec::new();
     let mut alloc = ReplayAlloc::new();
-    // setup_subarray: calibration stores + constants.
+    // setup_subarray: calibration stores + constants. These are issued
+    // by `setup_subarray` itself, so they appear only in the command
+    // stream, not as typed executor steps.
     for &r in &CALIB_STORE {
         ops.push(ChargeOp::Write { row: r, gate: None });
     }
@@ -447,9 +507,10 @@ pub fn lower_plan(plan: &WorkloadPlan) -> Result<ChargeScript, Diagnostic> {
 
     // Primary inputs.
     let mut input_rows = Vec::with_capacity(circuit.n_inputs);
-    for _ in 0..circuit.n_inputs {
+    for i in 0..circuit.n_inputs {
         let r = alloc.alloc();
         ops.push(ChargeOp::Write { row: r, gate: None });
+        steps.push(LoweredStep::WriteInput { input: i, row: r });
         input_rows.push(r);
     }
     // Gate result rows keep their id after release so a corrupt plan's
@@ -482,6 +543,7 @@ pub fn lower_plan(plan: &WorkloadPlan) -> Result<ChargeScript, Diagnostic> {
                         ops.push(ChargeOp::Read { row: src, gate: $gate });
                         let r = alloc.alloc();
                         ops.push(ChargeOp::Write { row: r, gate: $gate });
+                        steps.push(LoweredStep::Not { src, dst: r });
                         not_rows.insert(sig, r);
                         r
                     }
@@ -514,9 +576,11 @@ pub fn lower_plan(plan: &WorkloadPlan) -> Result<ChargeScript, Diagnostic> {
         // ④ copy the result out of the group.
         let r = alloc.alloc();
         ops.push(ChargeOp::Write { row: r, gate: Some(gi) });
+        steps.push(LoweredStep::Majx { gate: gi, m, operands: op_rows, dst: r });
         gate_rows[gi] = Some(r);
         // Death-list releases (both polarities at the canonical death,
         // mirroring the executor's take()-guarded releases).
+        let mut released = Vec::new();
         for &sig in plan.deaths(gi) {
             match sig {
                 Signal::Gate(g) if g < n_gates => {
@@ -525,31 +589,38 @@ pub fn lower_plan(plan: &WorkloadPlan) -> Result<ChargeScript, Diagnostic> {
                             gate_released[g] = true;
                             alloc.release(row);
                             ops.push(ChargeOp::Release { row, gate: Some(gi) });
+                            released.push(row);
                         }
                     }
                     if let Some(row) = not_rows.remove(&Signal::NotGate(g)) {
                         alloc.release(row);
                         ops.push(ChargeOp::Release { row, gate: Some(gi) });
+                        released.push(row);
                     }
                 }
                 Signal::Input(i) if i < circuit.n_inputs => {
                     if let Some(row) = not_rows.remove(&Signal::NotInput(i)) {
                         alloc.release(row);
                         ops.push(ChargeOp::Release { row, gate: Some(gi) });
+                        released.push(row);
                     }
                 }
                 _ => {}
             }
         }
+        if !released.is_empty() {
+            steps.push(LoweredStep::Release { rows: released });
+        }
     }
 
     // Output readout (negated outputs materialise one more NOT row).
-    for &s in &circuit.outputs {
+    for (oi, &s) in circuit.outputs.iter().enumerate() {
         let r = row_of!(s, None);
         ops.push(ChargeOp::Read { row: r, gate: None });
+        steps.push(LoweredStep::ReadOutput { output: oi, row: r });
     }
 
-    Ok(ChargeScript { ops, peak_rows: alloc.high })
+    Ok(LoweredPlan { steps, script: ChargeScript { ops, peak_rows: alloc.high } })
 }
 
 /// Abstract row state during script interpretation.
@@ -1013,18 +1084,46 @@ pub fn verify_circuit_with_budget(circuit: &MajCircuit, budget: Option<usize>) -
     verify_plan_with_budget(&plan, budget)
 }
 
+/// Bound on the admission memo below: if the process ever admits more
+/// distinct hand-assembled plans than this, the memo is cleared
+/// wholesale (re-verification is always safe, only slower).
+const VERIFIED_MEMO_CAP: usize = 1024;
+
+/// Fingerprints of hand-assembled plans that already passed full
+/// verification — [`admit`]'s process-wide memo.
+fn verified_memo() -> &'static Mutex<HashSet<u64>> {
+    static MEMO: OnceLock<Mutex<HashSet<u64>>> = OnceLock::new();
+    MEMO.get_or_init(|| Mutex::new(HashSet::new()))
+}
+
 /// Admission gate for the executor, compute engines and the serving
 /// layer: a compiler-verified plan passes in O(1); anything else (a
-/// hand-assembled plan) is fully verified here and rejected on the
-/// first error-severity diagnostic.
+/// hand-assembled plan) is fully verified once per process — admission
+/// results are memoized by [`WorkloadPlan::fingerprint`], so a custom
+/// plan served repeatedly through `serve_plan` pays full
+/// re-verification only on its first serve. Only admissible plans are
+/// memoized (warning-only reports included, matching the non-memoized
+/// semantics); rejections are always re-derived so the caller gets the
+/// full diagnostic every time.
 pub fn admit(plan: &WorkloadPlan) -> Result<(), PudError> {
     if plan.is_verified() {
+        return Ok(());
+    }
+    let fp = plan.fingerprint();
+    if verified_memo().lock().expect("admission memo poisoned").contains(&fp) {
         return Ok(());
     }
     let report = verify_plan(plan);
     match report.errors().next() {
         Some(d) => Err(d.clone().into()),
-        None => Ok(()),
+        None => {
+            let mut memo = verified_memo().lock().expect("admission memo poisoned");
+            if memo.len() >= VERIFIED_MEMO_CAP {
+                memo.clear();
+            }
+            memo.insert(fp);
+            Ok(())
+        }
     }
 }
 

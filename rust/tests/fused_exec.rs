@@ -1,0 +1,257 @@
+//! Fused-execution parity suite: batch-fused multi-bank execution must
+//! be **bit-identical** to the per-bank request loop — same decoded
+//! outputs, same f64 latency bits, same peak scratch rows, same fault
+//! flips, same RNG fingerprints — across backends, batch sizes and the
+//! whole built-in vocabulary. Also pins the [`PlanCache`] hit/miss/
+//! eviction contract the serving path and CLI rely on.
+
+use pudtune::calib::algorithm::Calibration;
+use pudtune::calib::engine::{AnyEngine, ComputeEngine, ComputeRequest, ComputeResult};
+use pudtune::calib::lattice::{FracConfig, OffsetLattice};
+use pudtune::config::device::DeviceConfig;
+use pudtune::config::system::Ddr4Timing;
+use pudtune::coordinator::metrics::Metrics;
+use pudtune::coordinator::plancache::{CacheStats, PlanCache};
+use pudtune::dram::geometry::RowMap;
+use pudtune::dram::subarray::Subarray;
+use pudtune::prelude::NativeEngine;
+use pudtune::pud::exec::{run_plan, StepRunner};
+use pudtune::pud::majx::setup_subarray;
+use pudtune::pud::plan::{PudError, PudOp, WorkloadPlan};
+use pudtune::util::rng::Rng;
+use std::sync::Arc;
+
+const ROWS: usize = 128;
+
+fn quiet_cfg() -> DeviceConfig {
+    DeviceConfig {
+        sigma_sa: 1e-6,
+        tail_weight: 0.0,
+        sigma_noise: 1e-6,
+        ..DeviceConfig::default()
+    }
+}
+
+fn calib_for(cfg: &DeviceConfig, cols: usize) -> Calibration {
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    Calibration::uniform(OffsetLattice::build(cfg, &fc), cols)
+}
+
+fn request_for(
+    plan: &Arc<WorkloadPlan>,
+    cfg: &DeviceConfig,
+    cols: usize,
+    seed: u64,
+    rng: &mut Rng,
+) -> ComputeRequest {
+    let width = plan.op.operand_width();
+    let operands: Vec<Vec<u64>> = (0..plan.op.n_operands())
+        .map(|_| (0..cols).map(|_| rng.below(1u64 << width)).collect())
+        .collect();
+    ComputeRequest::new(plan.clone(), ROWS, cols, seed, calib_for(cfg, cols), operands)
+}
+
+/// Bit-exact result comparison: `elapsed_ns` must match to the bit, not
+/// approximately — the fused path promises the *same* f64 additions in
+/// the same order as the per-bank loop.
+fn assert_result_eq(a: &ComputeResult, b: &ComputeResult, ctx: &str) {
+    assert_eq!(a.outputs, b.outputs, "{ctx}: outputs diverged");
+    assert_eq!(a.mask, b.mask, "{ctx}: masks diverged");
+    assert_eq!(
+        a.elapsed_ns.to_bits(),
+        b.elapsed_ns.to_bits(),
+        "{ctx}: elapsed_ns not bit-identical ({} vs {})",
+        a.elapsed_ns,
+        b.elapsed_ns
+    );
+    assert_eq!(a.peak_rows, b.peak_rows, "{ctx}: peak_rows diverged");
+    assert_eq!(a.fault_flips, b.fault_flips, "{ctx}: fault_flips diverged");
+}
+
+/// A mixed batch: several ops, two geometries, a mask here and there, a
+/// replicated request, an env-carrying request — fused execution must
+/// reproduce the per-request loop exactly at every batch size.
+#[test]
+fn fused_batches_match_the_per_bank_loop_bit_for_bit() {
+    let cfg = DeviceConfig::default();
+    let eng = NativeEngine::new(cfg.clone());
+    let ops = [
+        Arc::new(WorkloadPlan::compile(PudOp::Add { width: 4 }).unwrap()),
+        Arc::new(WorkloadPlan::compile(PudOp::Mul { width: 3 }).unwrap()),
+        Arc::new(WorkloadPlan::compile(PudOp::Add { width: 2 }).unwrap()),
+    ];
+    let mut rng = Rng::new(0xF05E);
+    for batch in [1usize, 3, 16] {
+        let mut reqs = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let plan = &ops[i % ops.len()];
+            let cols = if i % 2 == 0 { 8 } else { 16 };
+            let mut req = request_for(plan, &cfg, cols, 0x5EED + i as u64, &mut rng);
+            if i % 4 == 1 {
+                req = req.with_mask((0..cols).map(|c| c % 3 != 0).collect());
+            }
+            if i % 5 == 2 {
+                req = req.with_replicas(3);
+            }
+            if i % 6 == 3 {
+                // Environment override, as serving requests carry.
+                let sub = Subarray::with_geometry(&cfg, ROWS, cols, req.seed);
+                req.env = Some(sub.env);
+            }
+            reqs.push(req);
+        }
+        let fused = eng.execute_batch(&reqs).unwrap();
+        assert_eq!(fused.len(), reqs.len());
+        for (i, (req, got)) in reqs.iter().zip(&fused).enumerate() {
+            let single = eng.execute_one(req).unwrap();
+            assert_result_eq(got, &single, &format!("batch {batch}, request {i}"));
+        }
+    }
+}
+
+/// Every built-in op: a fused batch of three differently-seeded banks
+/// equals three single executions, and on a quiet device all of them
+/// equal the software golden model.
+#[test]
+fn vocabulary_fuses_to_golden_outputs() {
+    let cfg = quiet_cfg();
+    let eng = NativeEngine::new(cfg.clone());
+    let mut rng = Rng::new(0x70CA);
+    for op in PudOp::vocabulary(4) {
+        let plan = Arc::new(WorkloadPlan::compile(op).unwrap());
+        let reqs: Vec<ComputeRequest> = (0..3)
+            .map(|i| request_for(&plan, &cfg, 8, 0xBA5E + i, &mut rng))
+            .collect();
+        let fused = eng.execute_batch(&reqs).unwrap();
+        for (i, (req, got)) in reqs.iter().zip(&fused).enumerate() {
+            let single = eng.execute_one(req).unwrap();
+            let label = plan.op.label();
+            assert_result_eq(got, &single, &format!("{label}, bank {i}"));
+            let golden = req.golden_outputs().unwrap();
+            assert_eq!(got.outputs, golden, "{label}, bank {i}: diverged from golden");
+        }
+    }
+}
+
+/// The fused path's request-order error semantics match the loop: the
+/// first malformed request fails the whole batch with the same typed
+/// error `execute_one` would surface.
+#[test]
+fn fused_batches_surface_the_first_request_error() {
+    let cfg = quiet_cfg();
+    let eng = NativeEngine::new(cfg.clone());
+    let plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 2 }).unwrap());
+    let mut rng = Rng::new(0xE44);
+    let good = request_for(&plan, &cfg, 8, 1, &mut rng);
+    let mut bad = request_for(&plan, &cfg, 8, 2, &mut rng);
+    bad.operands.pop();
+    let err = eng.execute_batch(&[good.clone(), bad, good]).unwrap_err();
+    assert!(err.to_string().contains("arity"), "unexpected error: {err}");
+}
+
+/// `run_plan` is an interpreter of the canonical lowering: driving a
+/// [`StepRunner`] by hand over `plan.lowered()` on an identically
+/// seeded subarray reproduces it exactly — outputs, latency bits, op
+/// counts and the RNG fingerprint.
+#[test]
+fn step_runner_replays_run_plan_exactly() {
+    let cfg = quiet_cfg();
+    let plan = WorkloadPlan::compile(PudOp::Add { width: 4 }).unwrap();
+    let cols = 8;
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let calib = calib_for(&cfg, cols);
+    let grade = Ddr4Timing::ddr4_2133();
+    let mut rng = Rng::new(0x51E9);
+    let operands: Vec<Vec<u64>> =
+        (0..2).map(|_| (0..cols).map(|_| rng.below(16)).collect()).collect();
+    let inputs = plan.encode_operands(&operands).unwrap();
+
+    let mut sub_a = Subarray::with_geometry(&cfg, ROWS, cols, 11);
+    let map = RowMap::standard(ROWS);
+    let run_a = run_plan(&mut sub_a, &map, &calib, &fc, &grade, &plan, &inputs).unwrap();
+
+    let mut sub_b = Subarray::with_geometry(&cfg, ROWS, cols, 11);
+    let lowered = plan.lowered().unwrap();
+    setup_subarray(&mut sub_b, &map, &calib);
+    let mut runner = StepRunner::new(cols);
+    for step in &lowered.steps {
+        runner.apply(&mut sub_b, &map, &fc, &grade, &inputs, step);
+    }
+    let run_b = runner.finish(&sub_b, lowered.peak_rows());
+
+    assert_eq!(run_a.outputs, run_b.outputs);
+    assert_eq!(run_a.elapsed_ns.to_bits(), run_b.elapsed_ns.to_bits());
+    assert_eq!(run_a.peak_rows, run_b.peak_rows);
+    assert_eq!(sub_a.counts, sub_b.counts, "op counts diverged");
+    assert_eq!(sub_a.rng_fingerprint(), sub_b.rng_fingerprint(), "RNG streams diverged");
+}
+
+/// Cross-backend parity: whatever backend `AnyEngine::auto` lands on
+/// (PJRT with its resident native fallback, or plain native) must
+/// produce results bit-identical to the native engine — and a built-in
+/// vocabulary batch must report **zero** per-step fallbacks.
+#[test]
+fn backends_agree_and_builtin_vocabulary_reports_zero_fallbacks() {
+    let cfg = DeviceConfig::default();
+    let native = AnyEngine::native(cfg.clone());
+    let auto = AnyEngine::auto(cfg.clone());
+    let mut rng = Rng::new(0xACC0);
+    let plan = Arc::new(WorkloadPlan::compile(PudOp::Add { width: 4 }).unwrap());
+    let reqs: Vec<ComputeRequest> =
+        (0..3).map(|i| request_for(&plan, &cfg, 16, 0xD1CE + i, &mut rng)).collect();
+    let a = native.execute_batch(&reqs).unwrap();
+    let b = auto.execute_batch(&reqs).unwrap();
+    for (i, (ra, rb)) in a.iter().zip(&b).enumerate() {
+        assert_result_eq(ra, rb, &format!("native vs {}, request {i}", auto.compute_backend()));
+    }
+    if let Some(m) = auto.metrics() {
+        assert_eq!(
+            m.counter("pjrt.compute.fallback"),
+            0,
+            "built-in ops must lower without per-step fallbacks"
+        );
+    }
+}
+
+/// The compiled-plan cache contract: hits share one `Arc`, misses
+/// compile + insert, LRU eviction honours recency, stats and the
+/// `plan.cache.*` metrics agree, and errors are never cached.
+#[test]
+fn plan_cache_hit_miss_eviction_properties() {
+    let m = Metrics::new();
+    let cache = PlanCache::new(2);
+    let add1 = PudOp::Add { width: 1 };
+    let add2 = PudOp::Add { width: 2 };
+    let add3 = PudOp::Add { width: 3 };
+
+    let a = cache.get_or_compile(&add1, 0, Some(&m)).unwrap();
+    let a2 = cache.get_or_compile(&add1, 0, Some(&m)).unwrap();
+    assert!(Arc::ptr_eq(&a, &a2), "a hit must return the cached Arc");
+    assert!(Arc::ptr_eq(&a.lowered, &a2.lowered));
+    assert!(a.plan.is_verified());
+    cache.get_or_compile(&add2, 0, Some(&m)).unwrap();
+    assert_eq!(cache.len(), 2);
+
+    // Third distinct key on capacity 2: the LRU entry (add1) goes.
+    cache.get_or_compile(&add3, 0, Some(&m)).unwrap();
+    assert_eq!(cache.len(), 2);
+    assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 3, evicted: 1 });
+
+    // add2 is still resident (hit); re-resolving add1 recompiles and
+    // evicts the now-least-recent add3.
+    cache.get_or_compile(&add2, 0, Some(&m)).unwrap();
+    let a3 = cache.get_or_compile(&add1, 0, Some(&m)).unwrap();
+    assert!(!Arc::ptr_eq(&a, &a3), "evicted entries recompile to a fresh Arc");
+    assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 4, evicted: 2 });
+    assert_eq!(m.counter("plan.cache.hit"), 2);
+    assert_eq!(m.counter("plan.cache.miss"), 4);
+    assert_eq!(m.counter("plan.cache.evicted"), 2);
+
+    // Geometry-pinned keys are distinct entries; impossible geometry is
+    // a typed error and never cached.
+    let pinned = cache.get_or_compile(&add1, 96, Some(&m)).unwrap();
+    assert!(!Arc::ptr_eq(&a3, &pinned), "geometry is part of the key");
+    let err = cache.get_or_compile(&add1, 16, Some(&m)).unwrap_err();
+    assert_eq!(err, PudError::RowBudgetExceeded { needed: 32, available: 16 });
+    assert_eq!(cache.len(), 2, "errors must not occupy cache slots");
+}
