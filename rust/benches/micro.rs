@@ -75,10 +75,12 @@ fn sweep_reference(
 /// mask and the PUDTune uplift — the Table I 1.88x/1.89x story as a
 /// machine-readable trajectory — plus the batch-fusion win
 /// (`workload_fused_speedup_batch8`: one step-major dispatch for 8
-/// banks vs 8 per-request calls) and the per-step fallback count over
-/// the built-in vocabulary (`workload_pjrt_fallback_steps`, must stay
-/// 0). `PUDTUNE_FAST_BENCH=1` shrinks the geometry/batteries for the
-/// CI smoke job.
+/// banks vs 8 per-request calls), the width-narrowing win on skewed
+/// operands (`workload_narrowed_uplift`: Eq. 1 throughput of the
+/// range-narrowed add8/mul8 variants over the wide plans, must stay
+/// > 1) and the per-step fallback count over the built-in vocabulary
+/// (`workload_pjrt_fallback_steps`, must stay 0). `PUDTUNE_FAST_BENCH=1`
+/// shrinks the geometry/batteries for the CI smoke job.
 fn workload_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
     use pudtune::analysis::throughput::ThroughputModel;
     use pudtune::calib::engine::{
@@ -139,6 +141,55 @@ fn workload_suite(cfg: &DeviceConfig, fast: bool) -> BenchSuite {
         suite.derive(&format!("{opname}_effective_ops_conventional"), effective[0]);
         suite.derive(&format!("{opname}_effective_ops_pudtune"), effective[1]);
         suite.derive(&format!("{opname}_effective_uplift"), effective[1] / effective[0]);
+    }
+
+    // Width-narrowed serving: nibble-valued operands declared as such
+    // (`pud::ranges`), the wide 8-bit plans vs their
+    // `WorkloadPlan::narrowed` variants on the same inputs. The timing
+    // cases record the measured win; the `*_narrowed_uplift` deriveds
+    // record the Eq. 1 uplift from the narrowed plans' smaller gate
+    // cost (add8 16 -> 8 gates, mul8 176 -> 40), which the CI smoke
+    // asserts stays > 1 via `workload_narrowed_uplift`.
+    {
+        use pudtune::pud::ranges::OperandRange;
+        let nibble = vec![OperandRange::new(0, 15), OperandRange::new(0, 15)];
+        let free = tune_mask.iter().filter(|&&m| m).count() as f64 / cols as f64;
+        let mut narrowed_uplift = f64::INFINITY;
+        for (op, iters) in [
+            (PudOp::Add { width: 8 }, if fast { 2 } else { 3 }),
+            (PudOp::Mul { width: 8 }, if fast { 1 } else { 2 }),
+        ] {
+            let wide = Arc::new(WorkloadPlan::compile(op).unwrap());
+            let opname = wide.op.label();
+            let narrow = Arc::new(wide.narrowed(&nibble).unwrap());
+            let operands: Vec<Vec<u64>> = (0..wide.op.n_operands())
+                .map(|_| (0..cols).map(|_| rng.below(16)).collect())
+                .collect();
+            for (label, plan) in [("wide", &wide), ("narrowed", &narrow)] {
+                let req = ComputeRequest::from_subarray(
+                    &sub,
+                    seed,
+                    plan.clone(),
+                    calib.clone(),
+                    operands.clone(),
+                )
+                .with_mask(tune_mask.clone());
+                suite.bench(
+                    &format!("workload/{opname}-nibble-{label}-{cols}cols"),
+                    0,
+                    iters,
+                    || {
+                        let res = eng.execute_one(&req).unwrap();
+                        std::hint::black_box(res.outputs[0]);
+                    },
+                );
+            }
+            let op_uplift = tput.workload_ops(&narrow.cost, &tune, free)
+                / tput.workload_ops(&wide.cost, &tune, free);
+            suite.derive(&format!("{opname}_narrowed_uplift"), op_uplift);
+            narrowed_uplift = narrowed_uplift.min(op_uplift);
+        }
+        suite.derive("workload_narrowed_uplift", narrowed_uplift);
     }
 
     // Fused vs looped dispatch: eight equal-geometry banks serving one
@@ -441,6 +492,25 @@ fn main() {
             let report = verify_plan(&mul8);
             assert!(report.is_clean());
             std::hint::black_box(report.peak_rows);
+        });
+
+        // Bit-level range analysis + width narrowing: the cost of
+        // proving the nibble range class and rewriting the plan to its
+        // minimal safe width — paid once per (op, geometry, range
+        // class) in production thanks to the plan cache.
+        use pudtune::pud::ranges::{analyze_plan, OperandRange};
+        let nibble = [OperandRange::new(0, 15), OperandRange::new(0, 15)];
+        suite.bench("micro/analyze-add8", 2, 20, || {
+            let report = analyze_plan(&add8, &nibble).unwrap();
+            let narrowed = add8.narrowed(&nibble).unwrap();
+            assert_eq!(narrowed.circuit.gates.len(), report.narrowed_gates());
+            std::hint::black_box(narrowed.peak_rows);
+        });
+        suite.bench("micro/analyze-mul8", 2, 20, || {
+            let report = analyze_plan(&mul8, &nibble).unwrap();
+            let narrowed = mul8.narrowed(&nibble).unwrap();
+            assert_eq!(narrowed.circuit.gates.len(), report.narrowed_gates());
+            std::hint::black_box(narrowed.peak_rows);
         });
     }
 

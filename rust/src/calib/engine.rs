@@ -69,9 +69,11 @@ use crate::dram::temperature::Environment;
 use crate::pud::exec::{run_plan, StepRunner};
 use crate::pud::majx::setup_subarray;
 use crate::pud::plan::{PudError, WorkloadPlan};
+use crate::pud::ranges::{OperandRange, RangeClass};
 use crate::pud::verify::LoweredPlan;
 use crate::runtime::Runtime;
 use crate::util::rng::derive_seed;
+use std::borrow::Cow;
 use std::sync::Arc;
 
 /// One bank's calibration job (Algorithm 1 under one Frac config).
@@ -280,6 +282,13 @@ pub struct ComputeRequest {
     /// default; `0` is treated as `1`). Latency is accounted as the
     /// sum of all replica runs — redundancy is never free.
     pub replicas: usize,
+    /// Declared per-operand value ranges (`None` = full width). When
+    /// set, operands are validated against them
+    /// ([`PudError::RangeViolation`]) and the engine transparently
+    /// substitutes the width-narrowed plan variant for the ranges'
+    /// [`RangeClass`] from the process-wide `PlanCache` — bit-identical
+    /// outputs for in-range operands, fewer gates and steps.
+    pub declared_ranges: Option<Vec<OperandRange>>,
 }
 
 impl ComputeRequest {
@@ -302,6 +311,7 @@ impl ComputeRequest {
             operands,
             mask: None,
             replicas: 1,
+            declared_ranges: None,
         }
     }
 
@@ -331,6 +341,34 @@ impl ComputeRequest {
     pub fn with_replicas(mut self, n: usize) -> Self {
         self.replicas = n;
         self
+    }
+
+    /// Declare per-operand value ranges (see
+    /// [`Self::declared_ranges`]): operands outside them are rejected,
+    /// and the engine may serve a width-narrowed plan variant.
+    pub fn with_ranges(mut self, ranges: Vec<OperandRange>) -> Self {
+        self.declared_ranges = Some(ranges);
+        self
+    }
+
+    /// Validate the operands against the declared ranges (no-op when
+    /// none are declared): the narrowed variant is only bit-identical
+    /// inside them, so a violation is a typed rejection, never a wrong
+    /// answer.
+    pub fn validate_ranges(&self) -> Result<(), PudError> {
+        let Some(ranges) = &self.declared_ranges else { return Ok(()) };
+        if ranges.len() != self.plan.op.n_operands() {
+            return Err(PudError::ArityMismatch {
+                expected: self.plan.op.n_operands(),
+                got: ranges.len(),
+            });
+        }
+        for (i, (r, vals)) in ranges.iter().zip(&self.operands).enumerate() {
+            if let Some(&v) = vals.iter().find(|v| !r.contains(**v)) {
+                return Err(PudError::RangeViolation { operand: i, value: v, lo: r.lo, hi: r.hi });
+            }
+        }
+        Ok(())
     }
 
     /// Software golden model of this request: the expected per-column
@@ -779,6 +817,41 @@ struct FusedChunk {
     instances: Vec<FusedInstance>,
 }
 
+/// Resolve each request's declared operand ranges: validate the
+/// operands against them ([`ComputeRequest::validate_ranges`]) and,
+/// for verified plans whose range class is strictly narrower than the
+/// compiled width, substitute the width-narrowed plan variant from the
+/// process-wide [`PlanCache`](crate::coordinator::plancache::PlanCache)
+/// (bit-identical outputs for in-range operands). Requests without
+/// declared ranges — and unverified plans, which must keep reaching
+/// the admission layer untouched — pass through unchanged; the
+/// borrowed slice is returned as-is when nothing substitutes.
+fn narrow_requests(reqs: &[ComputeRequest]) -> Result<Cow<'_, [ComputeRequest]>, PudError> {
+    for req in reqs {
+        req.validate_ranges()?;
+    }
+    let wants_narrow = |req: &ComputeRequest| {
+        req.declared_ranges.as_ref().is_some_and(|ranges| {
+            req.plan.is_verified() && RangeClass::of(ranges).narrows(&req.plan.op)
+        })
+    };
+    if !reqs.iter().any(wants_narrow) {
+        return Ok(Cow::Borrowed(reqs));
+    }
+    let cache = crate::coordinator::plancache::PlanCache::global();
+    let mut owned = reqs.to_vec();
+    for req in &mut owned {
+        if !wants_narrow(req) {
+            continue;
+        }
+        let ranges = req.declared_ranges.as_ref().expect("wants_narrow checked");
+        let class = RangeClass::of(ranges);
+        let compiled = cache.get_or_narrow(&req.plan, 0, &class, None)?;
+        req.plan = compiled.plan.clone();
+    }
+    Ok(Cow::Owned(owned))
+}
+
 /// Combine replica outputs: identity for a single replica, per-column
 /// bitwise majority vote across replicas otherwise.
 fn combine_replicas(mut all: Vec<Vec<u64>>, cols: usize) -> Vec<u64> {
@@ -815,6 +888,10 @@ impl ComputeEngine for NativeEngine {
     }
 
     fn execute_batch(&self, reqs: &[ComputeRequest]) -> Result<Vec<ComputeResult>> {
+        // Declared-range handling first: operand validation, then the
+        // transparent narrowed-variant substitution (`narrow_requests`).
+        let reqs = narrow_requests(reqs).map_err(anyhow::Error::from)?;
+        let reqs: &[ComputeRequest] = &reqs;
         if reqs.len() <= 1 {
             return reqs
                 .iter()

@@ -158,6 +158,19 @@ mod tests {
     }
 
     #[test]
+    fn boolean_flags_still_take_values_in_equals_form() {
+        // `lint --ranges` is a boolean, but `analyze --ranges=0:15,0:15`
+        // must still parse as an option: the `=` form always wins.
+        let a = parse(&v(&["lint", "--ranges"]), &["ranges"]).unwrap();
+        assert!(a.flag("ranges"));
+        assert_eq!(a.str("ranges"), None);
+        let b = parse(&v(&["analyze", "--ranges=0:15,0:15"]), &["ranges"]).unwrap();
+        assert!(!b.flag("ranges"));
+        assert_eq!(b.str("ranges"), Some("0:15,0:15"));
+        assert_eq!(b.list("ranges"), vec!["0:15".to_string(), "0:15".to_string()]);
+    }
+
+    #[test]
     fn missing_value_errors() {
         assert!(parse(&v(&["x", "--key"]), &[]).is_err());
         let a = parse(&v(&["x", "--num", "abc"]), &[]).unwrap();

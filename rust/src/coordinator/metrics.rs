@@ -24,7 +24,11 @@
 //!   no lowering, no re-verification);
 //! * `plan.cache.miss` — lookups that compiled + lowered a fresh plan
 //!   and inserted it;
-//! * `plan.cache.evicted` — entries evicted by the LRU capacity bound.
+//! * `plan.cache.evicted` — entries evicted by the LRU capacity bound;
+//! * `plan.narrow.served` — serves that picked a width-narrowed plan
+//!   variant (`pud::ranges`): the operand values' covering bit-lengths
+//!   were strictly narrower than the compiled width, so the serve ran
+//!   the `PlanCache`'s (op, geometry, range-class) variant instead.
 //!
 //! Recalibration service (`coordinator::service`):
 //!

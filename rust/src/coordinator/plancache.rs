@@ -17,10 +17,17 @@
 //! [`PlanCache::global`] instance; lookups report `plan.cache.hit` /
 //! `plan.cache.miss` / `plan.cache.evicted` into the caller's
 //! [`Metrics`] (catalogued in [`crate::coordinator::metrics`]).
+//!
+//! Width-narrowed variants ([`WorkloadPlan::narrowed`]) live in the
+//! same cache under an extended (op, geometry, range-class) key:
+//! [`PlanCache::get_or_narrow`] resolves the narrowed plan for a
+//! [`RangeClass`] (per-operand covering bit-lengths), so every serve
+//! whose operands fit the same class shares one narrowed compile.
 
 use crate::coordinator::metrics::Metrics;
 use crate::dram::geometry::RowMap;
 use crate::pud::plan::{PudError, PudOp, WorkloadPlan};
+use crate::pud::ranges::RangeClass;
 use crate::pud::verify::LoweredPlan;
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -49,6 +56,9 @@ pub struct CacheStats {
 struct Entry {
     op: PudOp,
     rows: usize,
+    /// `None` for the full-width compile; `Some` for a width-narrowed
+    /// variant keyed by its range class.
+    class: Option<RangeClass>,
     compiled: Arc<CompiledPlan>,
     last_used: u64,
 }
@@ -104,24 +114,45 @@ impl PlanCache {
         rows: usize,
         metrics: Option<&Metrics>,
     ) -> Result<Arc<CompiledPlan>, PudError> {
-        {
-            let mut inner = self.inner.lock().expect("plan cache poisoned");
-            inner.tick += 1;
-            let tick = inner.tick;
-            if let Some(e) = inner.entries.iter_mut().find(|e| e.rows == rows && e.op == *op) {
-                e.last_used = tick;
-                let compiled = e.compiled.clone();
-                inner.stats.hits += 1;
-                if let Some(m) = metrics {
-                    m.incr("plan.cache.hit");
-                }
-                return Ok(compiled);
-            }
+        if let Some(hit) = self.lookup(op, rows, None, metrics) {
+            return Ok(hit);
         }
         // Compile + lower outside the lock: concurrent misses on the
         // same key race, but the loser adopts the winner's entry below
         // so every caller still shares one `Arc`.
         let plan = WorkloadPlan::compile(op.clone())?;
+        Self::check_geometry(&plan, rows)?;
+        let lowered = plan.lowered()?;
+        let compiled = Arc::new(CompiledPlan { plan: Arc::new(plan), lowered });
+        Ok(self.insert(op, rows, None, compiled, metrics))
+    }
+
+    /// Resolve the width-narrowed variant of an already-compiled
+    /// `base` plan for a [`RangeClass`], narrowing on first use. The
+    /// cache key is (op, rows, class), so every request whose operands
+    /// cover the same per-operand bit-lengths shares one narrowed
+    /// compile; the narrowed plan is re-verified by
+    /// [`WorkloadPlan::narrowed`] before it is cached. Geometry
+    /// pre-checks and metrics behave as in
+    /// [`PlanCache::get_or_compile`].
+    pub fn get_or_narrow(
+        &self,
+        base: &WorkloadPlan,
+        rows: usize,
+        class: &RangeClass,
+        metrics: Option<&Metrics>,
+    ) -> Result<Arc<CompiledPlan>, PudError> {
+        if let Some(hit) = self.lookup(&base.op, rows, Some(class), metrics) {
+            return Ok(hit);
+        }
+        let plan = base.narrowed(&class.ranges())?;
+        Self::check_geometry(&plan, rows)?;
+        let lowered = plan.lowered()?;
+        let compiled = Arc::new(CompiledPlan { plan: Arc::new(plan), lowered });
+        Ok(self.insert(&base.op, rows, Some(class), compiled, metrics))
+    }
+
+    fn check_geometry(plan: &WorkloadPlan, rows: usize) -> Result<(), PudError> {
         if rows > 0 {
             if rows < 32 {
                 // `RowMap::standard` needs the reserved-row layout.
@@ -135,8 +166,40 @@ impl PlanCache {
                 });
             }
         }
-        let lowered = plan.lowered()?;
-        let compiled = Arc::new(CompiledPlan { plan: Arc::new(plan), lowered });
+        Ok(())
+    }
+
+    fn lookup(
+        &self,
+        op: &PudOp,
+        rows: usize,
+        class: Option<&RangeClass>,
+        metrics: Option<&Metrics>,
+    ) -> Option<Arc<CompiledPlan>> {
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        let e = inner
+            .entries
+            .iter_mut()
+            .find(|e| e.rows == rows && e.class.as_ref() == class && e.op == *op)?;
+        e.last_used = tick;
+        let compiled = e.compiled.clone();
+        inner.stats.hits += 1;
+        if let Some(m) = metrics {
+            m.incr("plan.cache.hit");
+        }
+        Some(compiled)
+    }
+
+    fn insert(
+        &self,
+        op: &PudOp,
+        rows: usize,
+        class: Option<&RangeClass>,
+        compiled: Arc<CompiledPlan>,
+        metrics: Option<&Metrics>,
+    ) -> Arc<CompiledPlan> {
         let mut inner = self.inner.lock().expect("plan cache poisoned");
         inner.tick += 1;
         let tick = inner.tick;
@@ -144,13 +207,18 @@ impl PlanCache {
         if let Some(m) = metrics {
             m.incr("plan.cache.miss");
         }
-        if let Some(e) = inner.entries.iter_mut().find(|e| e.rows == rows && e.op == *op) {
+        if let Some(e) = inner
+            .entries
+            .iter_mut()
+            .find(|e| e.rows == rows && e.class.as_ref() == class && e.op == *op)
+        {
             e.last_used = tick;
-            return Ok(e.compiled.clone());
+            return e.compiled.clone();
         }
         inner.entries.push(Entry {
             op: op.clone(),
             rows,
+            class: class.cloned(),
             compiled: compiled.clone(),
             last_used: tick,
         });
@@ -168,7 +236,7 @@ impl PlanCache {
                 m.incr("plan.cache.evicted");
             }
         }
-        Ok(compiled)
+        compiled
     }
 
     /// Lifetime hit/miss/eviction counters.
@@ -232,5 +300,30 @@ mod tests {
         let err = cache.get_or_compile(&PudOp::Add { width: 0 }, 0, None).unwrap_err();
         assert!(matches!(err, PudError::MalformedCircuit(_)), "{err:?}");
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn narrowed_variants_key_on_the_range_class() {
+        use crate::pud::ranges::OperandRange;
+        let cache = PlanCache::new(8);
+        let op = PudOp::Add { width: 8 };
+        let base = cache.get_or_compile(&op, 0, None).unwrap();
+        let class = RangeClass::of(&[OperandRange::new(0, 15); 2]);
+        let narrow = cache.get_or_narrow(&base.plan, 0, &class, None).unwrap();
+        assert!(
+            narrow.plan.circuit.gates.len() < base.plan.circuit.gates.len(),
+            "narrowed variant must strip gates"
+        );
+        assert!(narrow.plan.is_verified(), "narrowed plans are re-verified");
+        // Same class → the cached Arc; the full-width entry is untouched.
+        let again = cache.get_or_narrow(&base.plan, 0, &class, None).unwrap();
+        assert!(Arc::ptr_eq(&narrow, &again));
+        let full = cache.get_or_compile(&op, 0, None).unwrap();
+        assert!(Arc::ptr_eq(&base, &full));
+        // A different class is a distinct entry.
+        let wider = RangeClass::of(&[OperandRange::new(0, 63); 2]);
+        let other = cache.get_or_narrow(&base.plan, 0, &wider, None).unwrap();
+        assert!(!Arc::ptr_eq(&narrow, &other));
+        assert_eq!(cache.len(), 3);
     }
 }

@@ -99,6 +99,7 @@ use crate::coordinator::worker;
 use crate::dram::geometry::SubarrayId;
 use crate::dram::subarray::Subarray;
 use crate::pud::plan::{PudError, PudOp, WorkloadPlan};
+use crate::pud::ranges::{OperandRange, RangeClass};
 use crate::util::rng::derive_seed;
 
 /// Stream-domain tag of served workload batteries (each serve call
@@ -1079,16 +1080,31 @@ impl<E: CalibEngine + ComputeEngine + Sync> RecalibService<E> {
     /// on every registered subarray — see [`Self::serve_plan`]. An
     /// invalid op is a request-level error; per-bank faults live
     /// inside the returned outcomes.
+    ///
+    /// The serve inspects the actual operand values: when their
+    /// covering bit-lengths ([`RangeClass`]) are strictly narrower
+    /// than the op's compiled width, the width-narrowed plan variant
+    /// is resolved from the same cache and served instead —
+    /// bit-identical outputs (the operands are inside the derived
+    /// ranges by construction), fewer gates and steps. Narrowed serves
+    /// are counted by `plan.narrow.served`.
     pub fn serve_workload(
         &self,
         op: PudOp,
         operands: &[Vec<u64>],
     ) -> Result<Vec<WorkloadOutcome>, PudError> {
-        let compiled = crate::coordinator::plancache::PlanCache::global().get_or_compile(
-            &op,
-            0,
-            Some(&*self.metrics),
-        )?;
+        let cache = crate::coordinator::plancache::PlanCache::global();
+        let compiled = cache.get_or_compile(&op, 0, Some(&*self.metrics))?;
+        if operands.len() == op.n_operands() && !operands.is_empty() {
+            let ranges: Vec<OperandRange> =
+                operands.iter().map(|vals| OperandRange::of_values(vals)).collect();
+            let class = RangeClass::of(&ranges);
+            if class.narrows(&op) {
+                let narrow = cache.get_or_narrow(&compiled.plan, 0, &class, Some(&*self.metrics))?;
+                self.metrics.incr("plan.narrow.served");
+                return self.serve_plan(&narrow.plan, operands);
+            }
+        }
         self.serve_plan(&compiled.plan, operands)
     }
 

@@ -99,16 +99,29 @@
 //! executor would issue and checks a four-state charge machine
 //! (Uninitialized → Packed ⇄ Fracd-analog → Dead) plus independent
 //! liveness and shape analyses, reporting violations as stable
-//! `P001`–`P008` diagnostics (catalogued in the [`pud`] module docs).
+//! `P001`–`P012` diagnostics (catalogued in the [`pud`] module docs).
 //! `WorkloadPlan::compile` self-checks its output, the engines and
 //! `RecalibService` reject unverified custom plans at admission, and
 //! `pudtune lint` sweeps the whole built-in op vocabulary — plus
-//! user-supplied circuit files — exiting nonzero on any diagnostic.
+//! user-supplied circuit files — exiting nonzero on any error-severity
+//! diagnostic (`--deny-warnings` promotes the advisory ones).
+//!
+//! On top of verification sits a **bit-level range analysis**
+//! ([`pud::ranges`]): declared per-operand value ranges flow through
+//! the MAJ/NOT dataflow as a ternary bit lattice plus a value
+//! interval, proving output bits constant and gates unobservable —
+//! and [`pud::plan::WorkloadPlan::narrowed`] rewrites the plan to the
+//! minimal safe width. The serving layer picks narrowed variants
+//! transparently: `ComputeRequest::with_ranges` and
+//! `RecalibService::serve_workload` resolve them through the
+//! process-wide plan cache keyed by (op, geometry, range class).
+//! `pudtune analyze` runs the analysis over the vocabulary and
+//! cross-checks every claim against the executable circuit.
 //!
 //! The `pudtune` binary exposes every experiment in the paper
 //! (`pudtune table1`, `pudtune fig5`, `pudtune run --op add8`,
-//! `pudtune lint`, ...); `rust/benches/` regenerates each table and
-//! figure.
+//! `pudtune lint`, `pudtune analyze`, ...); `rust/benches/`
+//! regenerates each table and figure.
 
 pub mod analysis;
 pub mod calib;
@@ -153,6 +166,7 @@ pub mod prelude {
     pub use crate::dram::subarray::{OpCounts, RowStorage, Subarray};
     pub use crate::pud::majx::MajX;
     pub use crate::pud::plan::{BitwiseOp, PudError, PudOp, WorkloadPlan};
+    pub use crate::pud::ranges::{analyze_plan, OperandRange, RangeClass, RangeReport};
     pub use crate::pud::verify::{
         verify_circuit, verify_plan, DiagCode, Diagnostic, VerifyReport,
     };

@@ -17,7 +17,10 @@
 //!                  [--env-match-hours H]
 //! pudtune campaign [--banks N] [--cols N] [--epochs N] [--op add2]
 //!                  [--redundancy N] [--native]
-//! pudtune lint     [--max-width N] [--json] [circuit.pud ...]
+//! pudtune lint     [--max-width N] [--ranges] [--deny-warnings] [--json]
+//!                  [circuit.pud ...]
+//! pudtune analyze  [--op add8,mul8] [--max-width N] [--ranges=lo:hi,...]
+//!                  [--check N] [--json]
 //! pudtune fit-model [--target 0.466]
 //! pudtune trace    [maj5|maj3] [--fracs x,y,z]
 //! pudtune artifacts
@@ -47,7 +50,8 @@ use pudtune::experiments;
 use pudtune::runtime::Runtime;
 use pudtune::util::table;
 
-const BOOL_FLAGS: &[&str] = &["native", "timed", "full", "help", "json"];
+const BOOL_FLAGS: &[&str] =
+    &["native", "timed", "full", "help", "json", "ranges", "deny-warnings"];
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -95,6 +99,7 @@ fn run(raw: &[String]) -> Result<()> {
         "serve" => cmd_serve(&args),
         "campaign" => cmd_campaign(&args),
         "lint" => cmd_lint(&args),
+        "analyze" => cmd_analyze(&args),
         "fit-model" => cmd_fit_model(&args),
         "trace" => cmd_trace(&args),
         "artifacts" => cmd_artifacts(),
@@ -335,7 +340,12 @@ fn cmd_run(args: &cli::Args) -> Result<()> {
             plan.op.label()
         );
     }
-    println!("\nelapsed: {:.1}s", t0.elapsed().as_secs_f64());
+    let cs = PlanCache::global().stats();
+    println!(
+        "\nplan cache: {} hit(s), {} miss(es), {} evicted",
+        cs.hits, cs.misses, cs.evicted
+    );
+    println!("elapsed: {:.1}s", t0.elapsed().as_secs_f64());
     Ok(())
 }
 
@@ -559,6 +569,11 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         store.save_file(path)?;
         println!("store written to {}", path.display());
     }
+    let cs = pudtune::coordinator::plancache::PlanCache::global().stats();
+    println!(
+        "plan cache: {} hit(s), {} miss(es), {} evicted",
+        cs.hits, cs.misses, cs.evicted
+    );
     println!("\nservice metrics:\n{}", service.metrics.render());
     Ok(())
 }
@@ -685,39 +700,74 @@ fn cmd_campaign(args: &cli::Args) -> Result<()> {
 
 /// Statically verify the entire built-in op vocabulary (arithmetic
 /// widths up to `--max-width`) and any user-supplied circuit files
-/// against the charge-state verifier, and exit nonzero on **any**
-/// diagnostic — warnings included. `--json` renders one
-/// machine-readable report line per target.
+/// against the charge-state verifier. Error-severity diagnostics exit
+/// nonzero; warnings are reported but tolerated unless
+/// `--deny-warnings` promotes them. `--ranges` additionally runs the
+/// bit-level range analysis (`pud::ranges`, full-width ranges) on
+/// every target that compiles, folding its P009–P012 findings into the
+/// same tally. `--json` renders one machine-readable report line per
+/// target.
 fn cmd_lint(args: &cli::Args) -> Result<()> {
     use pudtune::pud::plan::{PudOp, WorkloadPlan};
-    use pudtune::pud::verify;
+    use pudtune::pud::ranges::{analyze_plan, OperandRange};
+    use pudtune::pud::verify::{self, Severity};
 
     let max_width = args.usize("max-width", 16).map_err(anyhow::Error::msg)?;
     let json = args.flag("json");
-    let mut total = 0usize;
+    let with_ranges = args.flag("ranges");
+    let deny_warnings = args.flag("deny-warnings");
+    let mut errors = 0usize;
+    let mut warnings = 0usize;
     let mut targets = 0usize;
 
-    let report_one = |label: &str, report: &verify::VerifyReport| -> usize {
+    // Returns this target's (error, warning) diagnostic counts.
+    let report_one = |label: &str,
+                      report: &verify::VerifyReport,
+                      plan: Option<&WorkloadPlan>|
+     -> (usize, usize) {
+        let mut diags = report.diagnostics.clone();
+        let mut range_part = String::new();
+        if with_ranges {
+            if let Some(plan) = plan {
+                let full: Vec<OperandRange> = (0..plan.op.n_operands())
+                    .map(|_| OperandRange::full(plan.op.operand_width()))
+                    .collect();
+                let rep = analyze_plan(plan, &full)
+                    .expect("full-width ranges are always admissible");
+                if json {
+                    range_part = format!(",\"ranges\":{}", rep.to_json());
+                }
+                diags.extend(rep.diagnostics);
+            }
+        }
+        let n_err = diags.iter().filter(|d| d.severity() == Severity::Error).count();
         if json {
-            println!("{{\"target\":\"{label}\",\"report\":{}}}", report.to_json());
-        } else if report.is_clean() {
+            println!(
+                "{{\"target\":\"{label}\",\"report\":{}{range_part}}}",
+                report.to_json()
+            );
+        } else if diags.is_empty() {
             println!("{label}: clean (peak {} rows)", report.peak_rows);
         } else {
-            println!("{label}: {} diagnostic(s)", report.diagnostics.len());
-            for d in &report.diagnostics {
+            println!("{label}: {} diagnostic(s), {n_err} error(s)", diags.len());
+            for d in &diags {
                 println!("  {d}");
             }
         }
-        report.diagnostics.len()
+        (n_err, diags.len() - n_err)
     };
 
     for op in PudOp::vocabulary(max_width) {
         let label = op.label();
         targets += 1;
         match WorkloadPlan::compile(op) {
-            Ok(plan) => total += report_one(&label, &verify::verify_plan(&plan)),
+            Ok(plan) => {
+                let (e, w) = report_one(&label, &verify::verify_plan(&plan), Some(&plan));
+                errors += e;
+                warnings += w;
+            }
             Err(e) => {
-                total += 1;
+                errors += 1;
                 println!("{label}: failed to compile: {e}");
             }
         }
@@ -726,12 +776,119 @@ fn cmd_lint(args: &cli::Args) -> Result<()> {
         let text = std::fs::read_to_string(path)?;
         let circuit = verify::parse_circuit(&text).map_err(|e| anyhow!("{path}: {e}"))?;
         targets += 1;
-        total += report_one(path, &verify::verify_circuit(&circuit));
+        let report = verify::verify_circuit(&circuit);
+        let plan = WorkloadPlan::from_circuit(circuit).ok();
+        let (e, w) = report_one(path, &report, plan.as_ref());
+        errors += e;
+        warnings += w;
     }
-    if total > 0 {
-        return Err(anyhow!("lint found {total} diagnostic(s) across {targets} target(s)"));
+    if errors > 0 || (deny_warnings && warnings > 0) {
+        return Err(anyhow!(
+            "lint found {errors} error(s) and {warnings} warning(s) across {targets} target(s)"
+        ));
     }
-    println!("lint: {targets} target(s) clean");
+    if warnings > 0 {
+        println!(
+            "lint: {targets} target(s), {warnings} warning(s) tolerated \
+             (use --deny-warnings to fail on them)"
+        );
+    } else {
+        println!("lint: {targets} target(s) clean");
+    }
+    Ok(())
+}
+
+/// Bit-level range analysis (`pud::ranges`): analyze each op under the
+/// declared operand ranges (`--ranges=lo:hi,...`; full width when
+/// omitted), report the constant/dead/narrowing findings, and
+/// cross-check every claim concretely against the executable circuit
+/// (`soundness_check`, `--check` evaluation budget per op) — exiting
+/// nonzero when any claim is unsound.
+fn cmd_analyze(args: &cli::Args) -> Result<()> {
+    use pudtune::pud::plan::{PudOp, WorkloadPlan};
+    use pudtune::pud::ranges::{analyze_plan, soundness_check, OperandRange};
+    use pudtune::pud::verify::DiagCode;
+
+    let max_width = args.usize("max-width", 16).map_err(anyhow::Error::msg)?;
+    let budget = args.usize("check", 4096).map_err(anyhow::Error::msg)?;
+    let json = args.flag("json");
+    let declared: Option<Vec<OperandRange>> = match args.str("ranges") {
+        None => None,
+        Some(spec) => Some(
+            spec.split(',')
+                .map(|s| OperandRange::parse(s.trim()).map_err(|e| anyhow!("--ranges: {e}")))
+                .collect::<Result<Vec<_>>>()?,
+        ),
+    };
+    let op_names = args.list("op");
+    let ops: Vec<PudOp> = if op_names.is_empty() {
+        PudOp::vocabulary(max_width)
+    } else {
+        op_names
+            .iter()
+            .map(|n| PudOp::parse_or_list(n).map_err(|e| anyhow!(e)))
+            .collect::<Result<Vec<_>>>()?
+    };
+
+    let mut unsound = 0usize;
+    let mut narrowable = 0usize;
+    for op in ops {
+        let label = op.label();
+        let plan = WorkloadPlan::compile(op).map_err(|e| anyhow!("{label}: {e}"))?;
+        let ranges: Vec<OperandRange> = match &declared {
+            Some(r) => {
+                if r.len() != plan.op.n_operands() {
+                    return Err(anyhow!(
+                        "--ranges: {} range(s) given but {label} takes {} operand(s)",
+                        r.len(),
+                        plan.op.n_operands()
+                    ));
+                }
+                r.clone()
+            }
+            None => (0..plan.op.n_operands())
+                .map(|_| OperandRange::full(plan.op.operand_width()))
+                .collect(),
+        };
+        let report = analyze_plan(&plan, &ranges).map_err(|e| anyhow!("{label}: {e}"))?;
+        let findings = soundness_check(&plan, &report, budget, 0xA7A);
+        let span: Vec<String> = ranges.iter().map(|r| r.to_string()).collect();
+        let span = span.join(",");
+        if json {
+            let fs: Vec<String> = findings.iter().map(|f| format!("{f:?}")).collect();
+            println!(
+                "{{\"target\":\"{label}\",\"analysis\":{},\"unsound\":[{}]}}",
+                report.to_json(),
+                fs.join(",")
+            );
+        } else if report.is_clean() {
+            println!("{label} ({span}): clean, {} gates", report.gates);
+        } else {
+            println!(
+                "{label} ({span}): {} finding(s), {} -> {} gates",
+                report.diagnostics.len(),
+                report.gates,
+                report.narrowed_gates()
+            );
+            for d in &report.diagnostics {
+                println!("  {d}");
+            }
+        }
+        if !json {
+            for f in &findings {
+                println!("  UNSOUND: {f}");
+            }
+        }
+        unsound += findings.len();
+        if report.has(DiagCode::NarrowingOpportunity) {
+            narrowable += 1;
+        }
+    }
+    println!("narrowable: {narrowable}");
+    println!("unsound: {unsound}");
+    if unsound > 0 {
+        return Err(anyhow!("range analysis is unsound on {unsound} claim(s)"));
+    }
     Ok(())
 }
 

@@ -344,6 +344,58 @@ mod tests {
     }
 
     #[test]
+    fn narrowed_plans_run_in_dram_and_match_the_wide_plan() {
+        // A width-narrowed variant (pud::ranges) keeps the original
+        // interface — same operand encoding, same output count — so it
+        // drops into the executor unchanged and must produce identical
+        // sums for in-range operands.
+        use crate::pud::ranges::OperandRange;
+        let wide = WorkloadPlan::compile(PudOp::Add { width: 8 }).unwrap();
+        let narrow = wide
+            .narrowed(&[OperandRange::new(0, 15), OperandRange::new(0, 15)])
+            .unwrap();
+        assert!(narrow.is_verified());
+        assert!(
+            narrow.circuit.gates.len() < wide.circuit.gates.len(),
+            "nibble-range add8 must narrow ({} vs {})",
+            narrow.circuit.gates.len(),
+            wide.circuit.gates.len()
+        );
+        let a: Vec<u64> = vec![3, 7, 15, 0, 9, 5, 12, 1];
+        let b: Vec<u64> = vec![4, 9, 1, 0, 6, 5, 3, 14];
+        let mut decoded = Vec::new();
+        for plan in [&wide, &narrow] {
+            let mut sub = quiet(8);
+            let map = RowMap::standard(sub.rows);
+            let fc = FracConfig::pudtune([2, 1, 0]);
+            let calib =
+                Calibration::uniform(OffsetLattice::build(&sub.cfg, &fc), sub.cols);
+            let inputs = plan.encode_operands(&[a.clone(), b.clone()]).unwrap();
+            let run = run_plan(
+                &mut sub,
+                &map,
+                &calib,
+                &fc,
+                &Ddr4Timing::ddr4_2133(),
+                plan,
+                &inputs,
+            )
+            .unwrap();
+            let mut vals = vec![0u64; 8];
+            for (bit, out) in run.outputs.iter().enumerate() {
+                for col in 0..8 {
+                    vals[col] |= (out[col] as u64) << bit;
+                }
+            }
+            decoded.push(vals);
+        }
+        for col in 0..8 {
+            assert_eq!(decoded[0][col], a[col] + b[col], "wide col {col}");
+            assert_eq!(decoded[1][col], a[col] + b[col], "narrow col {col}");
+        }
+    }
+
+    #[test]
     fn not_rows_are_recycled() {
         // A chain of identity gates each consuming the negation of the
         // previous one: MAJ3(!prev, 0, 1) = !prev. Every gate

@@ -58,7 +58,12 @@
 //! * [`exec`] — the lowered-step interpreter (single-bank and the
 //!   per-bank core of fused batches);
 //! * [`verify`] — the canonical lowering + static charge-state
-//!   verifier (below).
+//!   verifier (below);
+//! * [`ranges`] — bit-level range analysis over the gate DAG and the
+//!   width-narrowing transform ([`plan::WorkloadPlan::narrowed`]):
+//!   declared operand ranges fold provably-constant bits, strip
+//!   unobservable gates, and let the serving paths transparently pick
+//!   a narrower (fewer gates, fewer steps) variant per range class.
 //!
 //! ## Diagnostics
 //!
@@ -77,14 +82,21 @@
 //! | `P006` | error | plan exits with analog rows un-restored | end every MAJX flow with its SiMRA restore |
 //! | `P007` | error | death lists disagree with independent last-use analysis | recompile the plan instead of editing death lists |
 //! | `P008` | error | gate arity / signal range / operand shape mismatch | use 3- or 5-ary gates over in-range, already-defined signals |
+//! | `P009` | warning | output bit is provably constant under the declared operand ranges | serve a narrowed variant (`WorkloadPlan::narrowed`) or widen the declared ranges |
+//! | `P010` | warning | gate is consumed but unobservable at any output under the declared ranges | narrow the plan to strip the gate, or widen the declared ranges |
+//! | `P011` | warning | carry/overflow bit is impossible by value-interval analysis | serve a narrowed variant; the carry chain above this bit is unnecessary |
+//! | `P012` | warning | plan admits a strictly smaller width-narrowed variant for these ranges | register the narrowed variant in the `PlanCache` under its range class |
 //!
 //! [`plan::WorkloadPlan::compile`] verifies its own output (errors fail
 //! the compile as [`plan::PudError::Verification`]); the executor,
 //! compute engines and `RecalibService::serve_plan` re-verify any plan
 //! that did not come out of `compile` before admission; and `pudtune
 //! lint` sweeps the whole built-in vocabulary plus user-supplied
-//! circuit files, exiting nonzero on any diagnostic (warnings
-//! included).
+//! circuit files, exiting nonzero on error-severity diagnostics
+//! (warnings too under `--deny-warnings`). `pudtune analyze` runs the
+//! [`ranges`] pass (P009–P012) over the vocabulary (or `--op`-selected
+//! ops) under declared operand ranges, cross-checked by a concrete
+//! soundness sweep.
 
 pub mod adder;
 pub mod exec;
@@ -94,5 +106,6 @@ pub mod logic;
 pub mod majx;
 pub mod multiplier;
 pub mod plan;
+pub mod ranges;
 pub mod rowalloc;
 pub mod verify;

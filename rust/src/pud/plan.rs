@@ -55,6 +55,11 @@ pub enum PudError {
     /// The service is draining (or shut down) and admits no new work;
     /// in-flight requests still complete.
     Draining,
+    /// An operand (or a declared range bound) falls outside the range
+    /// contract in force — a width-narrowed plan is only
+    /// bit-identical to the original *inside* its declared ranges, so
+    /// out-of-range operands are rejected rather than miscomputed.
+    RangeViolation { operand: usize, value: u64, lo: u64, hi: u64 },
 }
 
 impl fmt::Display for PudError {
@@ -86,6 +91,12 @@ impl fmt::Display for PudError {
             }
             PudError::Draining => {
                 write!(f, "service is draining and admits no new work")
+            }
+            PudError::RangeViolation { operand, value, lo, hi } => {
+                write!(
+                    f,
+                    "operand {operand} value {value} violates the declared range [{lo}, {hi}]"
+                )
             }
         }
     }
@@ -356,6 +367,44 @@ impl WorkloadPlan {
     /// Plan an arbitrary circuit (sugar for [`PudOp::Custom`]).
     pub fn from_circuit(circuit: MajCircuit) -> Result<Self, PudError> {
         Self::compile(PudOp::Custom(circuit))
+    }
+
+    /// Width-narrow a verified plan to declared per-operand ranges
+    /// (see `pud::ranges` for the contract): run the bit-level range
+    /// analysis, keep only gates observable at an output, substitute
+    /// folded constants/aliases, replace provably-constant output bits
+    /// with `Const` signals — then recompile the result through the
+    /// same last-use analysis and charge-state verifier as
+    /// [`WorkloadPlan::compile`]. The narrowed plan keeps the op,
+    /// operand layout and output count, and is bit-identical to `self`
+    /// for every operand inside `ranges`.
+    ///
+    /// Returns a clone of `self` when the analysis finds nothing to
+    /// strip; refuses unverified plans (narrowing trusts the circuit).
+    pub fn narrowed(
+        &self,
+        ranges: &[crate::pud::ranges::OperandRange],
+    ) -> Result<Self, PudError> {
+        if !self.verified {
+            return Err(PudError::Verification {
+                code: "P007",
+                message: "narrowing requires a verified plan; compile it first".into(),
+            });
+        }
+        let report = crate::pud::ranges::analyze_plan(self, ranges)?;
+        if report.narrowed_gates() == self.circuit.gates.len() {
+            return Ok(self.clone());
+        }
+        let circuit = report.narrowed;
+        circuit.validate()?;
+        let (deaths, peak_rows) = analyse(&circuit);
+        let mut plan = Self::assemble(self.op.clone(), circuit, deaths, peak_rows);
+        let verify = crate::pud::verify::verify_plan(&plan);
+        if let Some(d) = verify.errors().next() {
+            return Err(d.clone().into());
+        }
+        plan.verified = true;
+        Ok(plan)
     }
 
     /// Assemble a plan from raw parts **without** compiling or

@@ -1,0 +1,991 @@
+//! Bit-level range analysis and static width narrowing.
+//!
+//! The PR-7 verifier proves a plan is *charge-state* safe; this module
+//! is the sibling **value** analysis. Most served operands do not need
+//! the full compiled width (Proteus, arxiv 2501.17466): an `add8` whose
+//! operands live in `[0, 15]` wastes half its SiMRA flows computing
+//! bits that are provably zero. The analysis here proves which bits
+//! those are, and [`crate::pud::plan::WorkloadPlan::narrowed`] strips
+//! them — so narrower variants need fewer gates and fewer steps, more
+//! circuits fit under the row budget, and effective throughput (Eq. 1)
+//! rises without new hardware modeling.
+//!
+//! ## The range lattice
+//!
+//! Every wire carries a ternary bit value ([`BitVal`]):
+//!
+//! ```text
+//!        Top            (unknown: 0 or 1 depending on operands)
+//!       /   \
+//!    Zero    One        (provably constant under the declared ranges)
+//! ```
+//!
+//! Input bits come from declared per-operand [`OperandRange`]s: every
+//! value in `[lo, hi]` shares the bits above the highest bit where
+//! `lo` and `hi` differ, so those bits are constant and the rest are
+//! `Top`. The abstract transfer for a MAJ gate is strictly stronger
+//! than per-bit counting — each wire's abstract value is a *resolved
+//! signal* (constant, input polarity, or live-gate polarity), so the
+//! interpreter folds:
+//!
+//! * **constant votes** — enough known ones (or zeros) decide the gate;
+//! * **complement pairs** — `(x, ¬x)` contributes exactly one 1 and
+//!   one 0 whatever `x` is (how `MAJ5(a,b,cin,¬cout,¬cout)` folds);
+//! * **dominant roots** — when one unknown root's multiplicity alone
+//!   decides the vote both ways (`MAJ3(0,1,c) = c`, `MAJ3(x,x,y) = x`),
+//!   the gate folds to an *alias* of that root.
+//!
+//! On top of the bit lattice, `Add`/`Mul` outputs get a **value
+//! interval** refinement: the output interval `[lo_a ⊕ lo_b, hi_a ⊕
+//! hi_b]` (monotone ops over unsigned ranges) proves carries impossible
+//! that per-bit propagation cannot — e.g. `add8` over `[0,160] +
+//! [0,90]` can never set its carry-out (sum ≤ 250) even though bit 7 of
+//! the first operand is unknown.
+//!
+//! ## Diagnostics
+//!
+//! Findings surface through the stable `P###` catalogue
+//! ([`crate::pud::verify::DiagCode`]), all warning-severity:
+//!
+//! * **P009** — an output bit is provably constant under the analyzed
+//!   ranges (and is not already a syntactic `Const` in the IR);
+//! * **P010** — a gate is consumed syntactically but provably
+//!   unobservable at any output (folded away or feeding only folded
+//!   logic) — disjoint from P005, which flags *never-consumed* gates;
+//! * **P011** — a carry/overflow output bit the value-interval
+//!   refinement proves constant where the bit lattice cannot;
+//! * **P012** — the plan admits a strictly smaller narrowed variant
+//!   under the declared ranges.
+//!
+//! Under full-width ranges the whole built-in vocabulary analyzes
+//! clean (asserted by `pudtune analyze` in CI) — nothing folds when
+//! nothing is known.
+//!
+//! ## The narrowing contract
+//!
+//! [`crate::pud::plan::WorkloadPlan::narrowed`] consumes a verified
+//! plan plus one [`OperandRange`] per operand and returns a plan that:
+//!
+//! * keeps the same op, operand count/width, and output count;
+//! * produces **bit-identical outputs for every operand inside the
+//!   declared ranges** (pinned by an exhaustive ≤ 6-bit suite and
+//!   randomized add8/mul8 property tests) — outside the ranges the
+//!   outputs are unspecified;
+//! * contains only gates observable at an output, with folded
+//!   constants/aliases substituted into surviving gate arguments and
+//!   provably-constant output bits replaced by `Const` signals;
+//! * is re-verified by the PR-7 charge-state verifier before it is
+//!   returned (fresh death lists and peak via the compiler's own
+//!   last-use analysis).
+//!
+//! Operands are validated against the declared ranges at execution
+//! time ([`PudError::RangeViolation`]) — a narrowed plan is only ever
+//! asked questions inside its contract.
+
+use crate::pud::graph::{Gate, MajCircuit, Signal};
+use crate::pud::logic::not;
+use crate::pud::plan::{PudError, PudOp, WorkloadPlan};
+use crate::pud::verify::{DiagCode, Diagnostic};
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// One wire bit in the ternary lattice: provably 0, provably 1, or
+/// operand-dependent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BitVal {
+    Zero,
+    One,
+    Top,
+}
+
+impl BitVal {
+    /// The known constant, if any.
+    pub fn known(self) -> Option<bool> {
+        match self {
+            BitVal::Zero => Some(false),
+            BitVal::One => Some(true),
+            BitVal::Top => None,
+        }
+    }
+
+    fn of(b: bool) -> BitVal {
+        if b {
+            BitVal::One
+        } else {
+            BitVal::Zero
+        }
+    }
+}
+
+impl fmt::Display for BitVal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BitVal::Zero => write!(f, "0"),
+            BitVal::One => write!(f, "1"),
+            BitVal::Top => write!(f, "?"),
+        }
+    }
+}
+
+/// A declared inclusive value range `[lo, hi]` for one operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct OperandRange {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl OperandRange {
+    /// `[lo, hi]`, normalised so `lo <= hi`.
+    pub fn new(lo: u64, hi: u64) -> Self {
+        Self { lo: lo.min(hi), hi: lo.max(hi) }
+    }
+
+    /// The full range of a `width`-bit operand.
+    pub fn full(width: usize) -> Self {
+        let hi = if width >= 64 { u64::MAX } else { (1u64 << width) - 1 };
+        Self { lo: 0, hi }
+    }
+
+    /// The singleton range `[v, v]`.
+    pub fn exact(v: u64) -> Self {
+        Self { lo: v, hi: v }
+    }
+
+    /// The tightest range covering every value in `vals` (empty input
+    /// covers only 0).
+    pub fn of_values(vals: &[u64]) -> Self {
+        let lo = vals.iter().copied().min().unwrap_or(0);
+        let hi = vals.iter().copied().max().unwrap_or(0);
+        Self { lo, hi }
+    }
+
+    /// Whether `v` lies inside the range.
+    pub fn contains(&self, v: u64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+
+    /// Minimal bits covering every value in the range (`bitlen(hi)`;
+    /// 0 for the singleton `[0, 0]`).
+    pub fn bits(&self) -> usize {
+        (64 - self.hi.leading_zeros()) as usize
+    }
+
+    /// Whether the range covers all of a `width`-bit operand.
+    pub fn is_full(&self, width: usize) -> bool {
+        *self == Self::full(width)
+    }
+
+    /// Lattice value of bit `i`: every value in `[lo, hi]` agrees on
+    /// the bits above the most significant bit where `lo` and `hi`
+    /// differ (the common prefix), so those bits are constant.
+    pub fn bit(&self, i: usize) -> BitVal {
+        if i >= 64 {
+            return BitVal::Zero;
+        }
+        let diff = self.lo ^ self.hi;
+        let first_unknown = 64 - diff.leading_zeros() as usize; // bits >= this are shared
+        if i >= first_unknown {
+            BitVal::of((self.hi >> i) & 1 == 1)
+        } else {
+            BitVal::Top
+        }
+    }
+
+    /// Parse `"lo:hi"` (or a single `"v"` for an exact value).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let t = s.trim();
+        let parse_u64 =
+            |p: &str| p.trim().parse::<u64>().map_err(|_| format!("bad range bound '{p}'"));
+        match t.split_once(':') {
+            Some((lo, hi)) => Ok(Self::new(parse_u64(lo)?, parse_u64(hi)?)),
+            None => Ok(Self::exact(parse_u64(t)?)),
+        }
+    }
+}
+
+impl fmt::Display for OperandRange {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.lo, self.hi)
+    }
+}
+
+/// The cache key a set of operand ranges collapses to: the covering
+/// bit-length of each operand ([`OperandRange::bits`]). Two requests
+/// whose operands need the same bit-lengths share one narrowed plan —
+/// the class widens each range to `[0, 2^bits - 1]`, a sound superset.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct RangeClass {
+    widths: Vec<u8>,
+}
+
+impl RangeClass {
+    /// The class covering `ranges`.
+    pub fn of(ranges: &[OperandRange]) -> Self {
+        Self { widths: ranges.iter().map(|r| r.bits().min(64) as u8).collect() }
+    }
+
+    /// The widened ranges this class stands for (`[0, 2^bits - 1]`
+    /// per operand).
+    pub fn ranges(&self) -> Vec<OperandRange> {
+        self.widths.iter().map(|&b| OperandRange::full(b as usize)).collect()
+    }
+
+    /// Per-operand covering bit-lengths.
+    pub fn widths(&self) -> &[u8] {
+        &self.widths
+    }
+
+    /// Whether this class is strictly narrower than `op`'s declared
+    /// operand width for at least one operand — the cheap pre-check
+    /// serving paths use before paying for a narrowed compile.
+    pub fn narrows(&self, op: &PudOp) -> bool {
+        let w = op.operand_width();
+        self.widths.len() == op.n_operands() && self.widths.iter().any(|&b| (b as usize) < w)
+    }
+
+    /// Short label for logs/bench cases (`"4x8"` for a 4-bit and an
+    /// 8-bit operand).
+    pub fn label(&self) -> String {
+        let parts: Vec<String> = self.widths.iter().map(|b| b.to_string()).collect();
+        parts.join("x")
+    }
+}
+
+/// Flip a resolved signal's polarity.
+fn neg(s: Signal) -> Signal {
+    not(s)
+}
+
+fn gate_of(s: Signal) -> Option<usize> {
+    match s {
+        Signal::Gate(g) | Signal::NotGate(g) => Some(g),
+        _ => None,
+    }
+}
+
+/// Resolve a raw circuit signal to its abstract value: a constant, an
+/// (unknown) input polarity, or a live-gate polarity. `abs` entries
+/// are fully resolved by induction, so resolution is one step deep.
+fn resolve(s: Signal, inputs: &[BitVal], abs: &[Signal]) -> Signal {
+    match s {
+        Signal::Const(_) => s,
+        Signal::Input(i) => match inputs.get(i).copied().unwrap_or(BitVal::Top).known() {
+            Some(b) => Signal::Const(b),
+            None => s,
+        },
+        Signal::NotInput(i) => neg(resolve(Signal::Input(i), inputs, abs)),
+        Signal::Gate(g) => abs[g],
+        Signal::NotGate(g) => neg(abs[g]),
+    }
+}
+
+/// Abstract MAJ transfer over resolved arguments: fold to a constant,
+/// fold to an alias of a dominant root, or stay live as `Gate(gi)`.
+fn fold_gate(gi: usize, args: &[Signal]) -> Signal {
+    let m = args.len();
+    let t = m / 2 + 1; // majority threshold (m odd)
+    let mut ones = 0usize;
+    let mut zeros = 0usize;
+    // Positive/negative occurrence counts per canonical unknown root.
+    let mut roots: Vec<(Signal, usize, usize)> = Vec::new();
+    for &a in args {
+        match a {
+            Signal::Const(true) => ones += 1,
+            Signal::Const(false) => zeros += 1,
+            _ => {
+                let (canon, negd) = match a {
+                    Signal::NotInput(i) => (Signal::Input(i), true),
+                    Signal::NotGate(g) => (Signal::Gate(g), true),
+                    other => (other, false),
+                };
+                match roots.iter_mut().find(|(c, _, _)| *c == canon) {
+                    Some((_, p, n)) => {
+                        if negd {
+                            *n += 1
+                        } else {
+                            *p += 1
+                        }
+                    }
+                    None => roots.push((canon, usize::from(!negd), usize::from(negd))),
+                }
+            }
+        }
+    }
+    // A complement pair (x, ¬x) is one guaranteed 1 and one guaranteed
+    // 0 whatever x is; what survives is a signed leftover per root.
+    let mut leftovers: Vec<(Signal, usize)> = Vec::new();
+    for (canon, p, n) in roots {
+        let pairs = p.min(n);
+        ones += pairs;
+        zeros += pairs;
+        if p > n {
+            leftovers.push((canon, p - n));
+        } else if n > p {
+            leftovers.push((neg(canon), n - p));
+        }
+    }
+    let unknown: usize = leftovers.iter().map(|(_, k)| k).sum();
+    if ones >= t {
+        return Signal::Const(true);
+    }
+    if zeros >= t {
+        return Signal::Const(false);
+    }
+    if ones + unknown < t {
+        return Signal::Const(false);
+    }
+    if zeros + unknown < t {
+        return Signal::Const(true);
+    }
+    // Dominant root: r's value alone decides the vote both ways —
+    // r = 1 forces a majority of ones, and with r = 0 every other
+    // unknown being 1 still falls short.
+    for &(sig, k) in &leftovers {
+        if ones + k >= t && ones + (unknown - k) < t {
+            return sig;
+        }
+    }
+    Signal::Gate(gi)
+}
+
+/// The forward pass over one circuit: per-gate abstract values,
+/// resolved output signals, the semantic needed set and the syntactic
+/// consumed set.
+#[derive(Clone, Debug)]
+pub struct CircuitAnalysis {
+    /// Abstract value per gate. `Gate(g)` for gate `g` itself means
+    /// "live"; anything else is the folded constant or alias.
+    pub abs: Vec<Signal>,
+    /// Output signals after folding (before interval refinement).
+    pub outs: Vec<Signal>,
+    /// Gates transitively observable at some output *through the
+    /// folded dataflow*.
+    pub needed: Vec<bool>,
+    /// Gates syntactically consumed by a gate argument or an output
+    /// (the complement of what P005 flags).
+    pub consumed: Vec<bool>,
+}
+
+impl CircuitAnalysis {
+    /// Lattice value of gate `g`'s output bit.
+    pub fn gate_bit(&self, g: usize) -> BitVal {
+        match self.abs[g] {
+            Signal::Const(b) => BitVal::of(b),
+            _ => BitVal::Top,
+        }
+    }
+
+    /// Lattice value of output `j` (before interval refinement).
+    pub fn out_bit(&self, j: usize) -> BitVal {
+        match self.outs[j] {
+            Signal::Const(b) => BitVal::of(b),
+            _ => BitVal::Top,
+        }
+    }
+
+    /// Number of gates the folded dataflow still needs.
+    pub fn live_gates(&self) -> usize {
+        self.needed.iter().filter(|&&n| n).count()
+    }
+}
+
+/// Run the abstract interpreter over a bare circuit with the given
+/// per-input bit lattice (`inputs.len()` may be short; missing bits
+/// are `Top`).
+pub fn analyze_circuit(circuit: &MajCircuit, inputs: &[BitVal]) -> CircuitAnalysis {
+    let mut abs: Vec<Signal> = Vec::with_capacity(circuit.gates.len());
+    for (gi, gate) in circuit.gates.iter().enumerate() {
+        let args: Vec<Signal> =
+            gate.args.iter().map(|&a| resolve(a, inputs, &abs)).collect();
+        abs.push(fold_gate(gi, &args));
+    }
+    let outs: Vec<Signal> =
+        circuit.outputs.iter().map(|&o| resolve(o, inputs, &abs)).collect();
+    let mut consumed = vec![false; circuit.gates.len()];
+    for gate in &circuit.gates {
+        for &a in &gate.args {
+            if let Some(g) = gate_of(a) {
+                consumed[g] = true;
+            }
+        }
+    }
+    for &o in &circuit.outputs {
+        if let Some(g) = gate_of(o) {
+            consumed[g] = true;
+        }
+    }
+    let needed = needed_gates(circuit, inputs, &abs, &outs);
+    CircuitAnalysis { abs, outs, needed, consumed }
+}
+
+/// BFS from the (folded) outputs over resolved gate arguments: the
+/// gates whose result can still influence an output.
+fn needed_gates(
+    circuit: &MajCircuit,
+    inputs: &[BitVal],
+    abs: &[Signal],
+    outs: &[Signal],
+) -> Vec<bool> {
+    let mut needed = vec![false; circuit.gates.len()];
+    let mut stack: Vec<usize> = outs.iter().filter_map(|&o| gate_of(o)).collect();
+    while let Some(g) = stack.pop() {
+        if needed[g] {
+            continue;
+        }
+        needed[g] = true;
+        for &a in &circuit.gates[g].args {
+            if let Some(h) = gate_of(resolve(a, inputs, abs)) {
+                if !needed[h] {
+                    stack.push(h);
+                }
+            }
+        }
+    }
+    needed
+}
+
+/// The per-input bit lattice an op's declared operand ranges induce
+/// (operand-major, LSB first — the same layout
+/// [`WorkloadPlan::encode_operands`] materialises).
+pub fn input_bits(op: &PudOp, ranges: &[OperandRange]) -> Result<Vec<BitVal>, PudError> {
+    let n = op.n_operands();
+    if ranges.len() != n {
+        return Err(PudError::ArityMismatch { expected: n, got: ranges.len() });
+    }
+    let w = op.operand_width();
+    for (i, r) in ranges.iter().enumerate() {
+        if !OperandRange::full(w).contains(r.hi) {
+            return Err(PudError::RangeViolation {
+                operand: i,
+                value: r.hi,
+                lo: 0,
+                hi: OperandRange::full(w).hi,
+            });
+        }
+    }
+    let mut bits = Vec::with_capacity(n * w);
+    for r in ranges {
+        for b in 0..w {
+            bits.push(r.bit(b));
+        }
+    }
+    Ok(bits)
+}
+
+/// Value-interval of the op's decoded output under the declared
+/// ranges, for the ops whose value semantics the analysis knows
+/// (`Add`/`Mul` are monotone over unsigned ranges, so the interval
+/// ends are the images of the range ends).
+fn output_interval(op: &PudOp, ranges: &[OperandRange]) -> Option<OperandRange> {
+    match op {
+        PudOp::Add { .. } => Some(OperandRange::new(
+            ranges[0].lo.saturating_add(ranges[1].lo),
+            ranges[0].hi.saturating_add(ranges[1].hi),
+        )),
+        PudOp::Mul { .. } => Some(OperandRange::new(
+            ranges[0].lo.saturating_mul(ranges[1].lo),
+            ranges[0].hi.saturating_mul(ranges[1].hi),
+        )),
+        _ => None,
+    }
+}
+
+/// Everything one plan analysis produced: per-bit verdicts, the
+/// diagnostics, and the narrowed circuit (gates the folded dataflow
+/// still needs, constants substituted).
+#[derive(Clone, Debug)]
+pub struct RangeReport {
+    /// The analyzed op's label.
+    pub op_label: String,
+    /// The ranges the analysis ran under.
+    pub ranges: Vec<OperandRange>,
+    /// The forward pass (per-gate values, needed/consumed sets).
+    pub analysis: CircuitAnalysis,
+    /// Final per-output-bit verdicts (bit lattice ⊔ interval).
+    pub out_bits: Vec<BitVal>,
+    /// Per-output-bit verdicts from the bit lattice alone.
+    pub lattice_out_bits: Vec<BitVal>,
+    /// P009–P012 findings (all warning severity).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Gate count of the analyzed circuit.
+    pub gates: usize,
+    /// The narrowed circuit: needed gates only, folded constants and
+    /// aliases substituted, provably-constant output bits overridden.
+    pub narrowed: MajCircuit,
+}
+
+impl RangeReport {
+    /// Whether any finding carries `code`.
+    pub fn has(&self, code: DiagCode) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    /// No findings at all (how the full-range vocabulary analyzes).
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Gates the narrowed circuit retains.
+    pub fn narrowed_gates(&self) -> usize {
+        self.narrowed.gates.len()
+    }
+
+    /// Machine-readable rendering of the whole report.
+    pub fn to_json(&self) -> String {
+        let ranges: Vec<String> =
+            self.ranges.iter().map(|r| format!("\"{r}\"")).collect();
+        let bits: Vec<String> =
+            self.out_bits.iter().map(|b| format!("\"{b}\"")).collect();
+        let diags: Vec<String> = self.diagnostics.iter().map(|d| d.to_json()).collect();
+        format!(
+            "{{\"op\":\"{}\",\"ranges\":[{}],\"gates\":{},\"narrowed_gates\":{},\
+             \"live_gates\":{},\"out_bits\":[{}],\"clean\":{},\"diagnostics\":[{}]}}",
+            self.op_label,
+            ranges.join(","),
+            self.gates,
+            self.narrowed_gates(),
+            self.analysis.live_gates(),
+            bits.join(","),
+            self.is_clean(),
+            diags.join(",")
+        )
+    }
+}
+
+/// Analyze a plan under declared per-operand ranges: run the forward
+/// bit-lattice pass, refine the outputs with the value interval, build
+/// the narrowed circuit, and emit P009–P012.
+pub fn analyze_plan(
+    plan: &WorkloadPlan,
+    ranges: &[OperandRange],
+) -> Result<RangeReport, PudError> {
+    let inputs = input_bits(&plan.op, ranges)?;
+    let circuit = &plan.circuit;
+    let analysis = analyze_circuit(circuit, &inputs);
+
+    // Per-output verdicts: the bit lattice, then the value-interval
+    // refinement for the ops whose decoded-value semantics we know.
+    let n_out = circuit.outputs.len();
+    let lattice_out_bits: Vec<BitVal> = (0..n_out).map(|j| analysis.out_bit(j)).collect();
+    let mut out_bits = lattice_out_bits.clone();
+    let mut interval_bits: Vec<usize> = Vec::new();
+    if let Some(iv) = output_interval(&plan.op, ranges) {
+        for (j, slot) in out_bits.iter_mut().enumerate() {
+            if slot.known().is_none() {
+                if let Some(b) = iv.bit(j).known() {
+                    *slot = BitVal::of(b);
+                    interval_bits.push(j);
+                }
+            }
+        }
+    }
+
+    let mut diagnostics = Vec::new();
+    // P009: an output bit the lattice proves constant that is not
+    // already a syntactic constant in the IR (mul1's high bit *is*
+    // `Const(false)` by construction — nothing to report there).
+    for (j, &bit) in lattice_out_bits.iter().enumerate() {
+        if let Some(b) = bit.known() {
+            if !matches!(circuit.outputs[j], Signal::Const(_)) {
+                diagnostics.push(Diagnostic {
+                    code: DiagCode::ConstantOutputBit,
+                    gate: gate_of(circuit.outputs[j]),
+                    row: None,
+                    message: format!(
+                        "output bit {j} of {} is provably {} for every operand in {}",
+                        plan.op.label(),
+                        u8::from(b),
+                        render_ranges(ranges)
+                    ),
+                });
+            }
+        }
+    }
+    // P011: interval-only constant bits (the impossible carries).
+    for &j in &interval_bits {
+        diagnostics.push(Diagnostic {
+            code: DiagCode::RangeOverflowImpossibleCarry,
+            gate: gate_of(circuit.outputs[j]),
+            row: None,
+            message: format!(
+                "output bit {j} of {} cannot fire: the value interval for operands in {} \
+                 proves the carry impossible (bit lattice alone could not)",
+                plan.op.label(),
+                render_ranges(ranges)
+            ),
+        });
+    }
+    // P010: consumed but unobservable gates. Disjoint from P005 by
+    // construction — P005 flags gates *nothing* consumes.
+    for g in 0..circuit.gates.len() {
+        if analysis.consumed[g] && !analysis.needed[g] {
+            let why = match analysis.abs[g] {
+                Signal::Const(b) => format!("folds to constant {}", u8::from(b)),
+                Signal::Gate(h) if h == g => "feeds only folded logic".into(),
+                alias => format!("folds to an alias of {alias:?}"),
+            };
+            diagnostics.push(Diagnostic {
+                code: DiagCode::DeadGateByDataflow,
+                gate: Some(g),
+                row: None,
+                message: format!(
+                    "gate {g} is consumed but unobservable under operand ranges {}: {why}",
+                    render_ranges(ranges)
+                ),
+            });
+        }
+    }
+
+    let narrowed = narrowed_circuit(circuit, &inputs, &out_bits, &analysis);
+    // P012: the narrowed variant is strictly smaller.
+    if narrowed.gates.len() < circuit.gates.len() {
+        diagnostics.push(Diagnostic {
+            code: DiagCode::NarrowingOpportunity,
+            gate: None,
+            row: None,
+            message: format!(
+                "{} narrows from {} to {} gates under operand ranges {} \
+                 (range class {})",
+                plan.op.label(),
+                circuit.gates.len(),
+                narrowed.gates.len(),
+                render_ranges(ranges),
+                RangeClass::of(ranges).label()
+            ),
+        });
+    }
+
+    Ok(RangeReport {
+        op_label: plan.op.label(),
+        ranges: ranges.to_vec(),
+        gates: circuit.gates.len(),
+        analysis,
+        out_bits,
+        lattice_out_bits,
+        diagnostics,
+        narrowed,
+    })
+}
+
+fn render_ranges(ranges: &[OperandRange]) -> String {
+    let parts: Vec<String> = ranges.iter().map(|r| format!("[{},{}]", r.lo, r.hi)).collect();
+    format!("({})", parts.join(", "))
+}
+
+/// Rebuild the circuit keeping only gates observable at an output:
+/// folded constants/aliases substituted into surviving arguments,
+/// provably-constant output bits overridden with `Const` signals.
+/// Keeps `n_inputs` and the output count — only in-range behavior is
+/// preserved.
+fn narrowed_circuit(
+    circuit: &MajCircuit,
+    inputs: &[BitVal],
+    out_bits: &[BitVal],
+    analysis: &CircuitAnalysis,
+) -> MajCircuit {
+    // Outputs after overrides, then the needed set those outputs pin
+    // (an interval-overridden output can strand further gates).
+    let overridden: Vec<Signal> = analysis
+        .outs
+        .iter()
+        .zip(out_bits)
+        .map(|(&o, bit)| match bit.known() {
+            Some(b) => Signal::Const(b),
+            None => o,
+        })
+        .collect();
+    let needed = needed_gates(circuit, inputs, &analysis.abs, &overridden);
+
+    let mut nc = MajCircuit::new(circuit.n_inputs);
+    let mut remap: Vec<Option<usize>> = vec![None; circuit.gates.len()];
+    let remap_sig = |s: Signal, remap: &[Option<usize>]| -> Signal {
+        match s {
+            Signal::Gate(g) => Signal::Gate(remap[g].expect("needed gates emitted in order")),
+            Signal::NotGate(g) => {
+                Signal::NotGate(remap[g].expect("needed gates emitted in order"))
+            }
+            other => other,
+        }
+    };
+    for (gi, gate) in circuit.gates.iter().enumerate() {
+        if !needed[gi] {
+            continue;
+        }
+        let args: Vec<Signal> = gate
+            .args
+            .iter()
+            .map(|&a| remap_sig(resolve(a, inputs, &analysis.abs), &remap))
+            .collect();
+        let s = nc.push(Gate { args });
+        let Signal::Gate(idx) = s else { unreachable!("push returns a gate signal") };
+        remap[gi] = Some(idx);
+    }
+    for &o in &overridden {
+        nc.output(remap_sig(o, &remap));
+    }
+    nc
+}
+
+/// Concrete cross-check of an analysis' claims: evaluate the original
+/// and narrowed circuits on operand tuples inside the declared ranges
+/// (exhaustively when the product of range sizes is ≤ `budget`,
+/// else `budget` seeded samples) and collect every contradiction —
+/// a claimed-constant output bit that varies, or a narrowed output
+/// that disagrees with the original. An empty return is what the CI
+/// `analyze-vocabulary` step asserts.
+pub fn soundness_check(
+    plan: &WorkloadPlan,
+    report: &RangeReport,
+    budget: usize,
+    seed: u64,
+) -> Vec<String> {
+    let ranges = &report.ranges;
+    let mut findings = Vec::new();
+    let sizes: Vec<u64> = ranges.iter().map(|r| (r.hi - r.lo).saturating_add(1)).collect();
+    let total: u128 = sizes.iter().map(|&s| s as u128).product();
+    let exhaustive = total <= budget as u128;
+    let n_cases = if exhaustive { total as usize } else { budget };
+    let mut rng = Rng::new(seed);
+    let w = plan.op.operand_width();
+    for case in 0..n_cases {
+        let vals: Vec<u64> = if exhaustive {
+            let mut ix = case as u64;
+            sizes
+                .iter()
+                .zip(ranges)
+                .map(|(&s, r)| {
+                    let v = r.lo + ix % s;
+                    ix /= s;
+                    v
+                })
+                .collect()
+        } else {
+            ranges
+                .iter()
+                .map(|r| r.lo + rng.below((r.hi - r.lo).saturating_add(1)))
+                .collect()
+        };
+        let mut bits = Vec::with_capacity(plan.circuit.n_inputs);
+        for &v in &vals {
+            for b in 0..w {
+                bits.push((v >> b) & 1 == 1);
+            }
+        }
+        let original = plan.circuit.eval(&bits);
+        let narrow = report.narrowed.eval(&bits);
+        for (j, (&o, &n)) in original.iter().zip(&narrow).enumerate() {
+            if o != n {
+                findings.push(format!(
+                    "{}: narrowed output bit {j} disagrees on operands {vals:?} \
+                     (original {}, narrowed {})",
+                    report.op_label,
+                    u8::from(o),
+                    u8::from(n)
+                ));
+            }
+            if let Some(claimed) = report.out_bits[j].known() {
+                if o != claimed {
+                    findings.push(format!(
+                        "{}: output bit {j} claimed constant {} but is {} on operands {vals:?}",
+                        report.op_label,
+                        u8::from(claimed),
+                        u8::from(o)
+                    ));
+                }
+            }
+        }
+        if findings.len() > 16 {
+            break; // enough evidence; don't flood the report
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pud::plan::BitwiseOp;
+
+    fn plan(op: PudOp) -> WorkloadPlan {
+        WorkloadPlan::compile(op).unwrap()
+    }
+
+    #[test]
+    fn range_bits_follow_the_common_prefix() {
+        let r = OperandRange::new(8, 15); // 1xxx
+        assert_eq!(r.bit(3), BitVal::One);
+        assert_eq!(r.bit(2), BitVal::Top);
+        assert_eq!(r.bit(4), BitVal::Zero);
+        let e = OperandRange::exact(5); // 101 exactly
+        assert_eq!(e.bit(0), BitVal::One);
+        assert_eq!(e.bit(1), BitVal::Zero);
+        assert_eq!(e.bit(2), BitVal::One);
+        assert_eq!(OperandRange::full(4).bit(3), BitVal::Top);
+        assert_eq!(OperandRange::full(4).bit(4), BitVal::Zero);
+        assert_eq!(OperandRange::new(9, 3), OperandRange::new(3, 9), "normalised");
+    }
+
+    #[test]
+    fn range_parse_and_labels() {
+        assert_eq!(OperandRange::parse("0:15"), Ok(OperandRange::new(0, 15)));
+        assert_eq!(OperandRange::parse(" 7 "), Ok(OperandRange::exact(7)));
+        assert!(OperandRange::parse("a:b").is_err());
+        assert_eq!(OperandRange::new(0, 15).to_string(), "0:15");
+        let class = RangeClass::of(&[OperandRange::new(0, 15), OperandRange::new(0, 255)]);
+        assert_eq!(class.label(), "4x8");
+        assert_eq!(class.widths(), &[4, 8]);
+        assert!(class.narrows(&PudOp::Add { width: 8 }));
+        assert!(!class.narrows(&PudOp::Add { width: 4 }));
+        assert!(!RangeClass::of(&[OperandRange::full(8); 2]).narrows(&PudOp::Add { width: 8 }));
+    }
+
+    #[test]
+    fn fold_rules_cover_the_canonical_identities() {
+        let x = Signal::Input(0);
+        let y = Signal::Input(1);
+        // Constant votes.
+        assert_eq!(
+            fold_gate(0, &[Signal::Const(true), Signal::Const(true), x]),
+            Signal::Const(true)
+        );
+        assert_eq!(
+            fold_gate(0, &[Signal::Const(false), Signal::Const(false), x]),
+            Signal::Const(false)
+        );
+        // Dominant roots.
+        assert_eq!(fold_gate(0, &[Signal::Const(false), Signal::Const(true), x]), x);
+        assert_eq!(fold_gate(0, &[x, x, y]), x);
+        assert_eq!(
+            fold_gate(
+                0,
+                &[Signal::Const(false), Signal::Const(false), x, Signal::Const(true), Signal::Const(true)]
+            ),
+            x
+        );
+        // Complement pairs: MAJ3(x, ¬x, y) = y.
+        assert_eq!(fold_gate(0, &[x, neg(x), y]), y);
+        // MAJ5(a, b, c, ¬c, ¬c): one pair cancels, leaves MAJ-ish over
+        // a, b, ¬c with one guaranteed 1 and 0 — no fold.
+        let c = Signal::Input(2);
+        assert_eq!(fold_gate(7, &[x, y, c, neg(c), neg(c)]), Signal::Gate(7));
+        // Unknown-but-insufficient: MAJ5(0, 0, 0, x, y) = 0.
+        let zero = Signal::Const(false);
+        assert_eq!(fold_gate(0, &[zero, zero, zero, x, y]), Signal::Const(false));
+    }
+
+    #[test]
+    fn full_ranges_fold_nothing_and_are_clean() {
+        for op in PudOp::vocabulary(6) {
+            let p = plan(op.clone());
+            let full = vec![OperandRange::full(op.operand_width()); op.n_operands()];
+            let report = analyze_plan(&p, &full).unwrap();
+            assert!(report.is_clean(), "{}: {:?}", op.label(), report.diagnostics);
+            assert_eq!(
+                report.narrowed_gates(),
+                report.gates,
+                "{}: full ranges must not narrow",
+                op.label()
+            );
+        }
+    }
+
+    #[test]
+    fn skewed_add_folds_high_bits() {
+        let p = plan(PudOp::Add { width: 8 });
+        let ranges = [OperandRange::new(0, 15), OperandRange::new(0, 15)];
+        let report = analyze_plan(&p, &ranges).unwrap();
+        // Sum fits in 5 bits: bits 5..=8 are provably zero.
+        for j in 5..=8 {
+            assert_eq!(report.out_bits[j], BitVal::Zero, "bit {j}");
+        }
+        assert_eq!(report.out_bits[0], BitVal::Top);
+        assert!(report.has(DiagCode::ConstantOutputBit));
+        assert!(report.has(DiagCode::DeadGateByDataflow));
+        assert!(report.has(DiagCode::NarrowingOpportunity));
+        assert!(
+            report.narrowed_gates() < report.gates,
+            "{} -> {}",
+            report.gates,
+            report.narrowed_gates()
+        );
+        assert!(soundness_check(&p, &report, 4096, 7).is_empty());
+    }
+
+    #[test]
+    fn interval_beats_the_bit_lattice_on_impossible_carries() {
+        // add8 over [0,160] + [0,90]: bit 7 of the first operand is
+        // unknown, so the lattice cannot kill the carry-out — but the
+        // value interval (sum <= 250 < 256) can.
+        let p = plan(PudOp::Add { width: 8 });
+        let ranges = [OperandRange::new(0, 160), OperandRange::new(0, 90)];
+        let report = analyze_plan(&p, &ranges).unwrap();
+        assert_eq!(report.lattice_out_bits[8], BitVal::Top);
+        assert_eq!(report.out_bits[8], BitVal::Zero);
+        assert!(report.has(DiagCode::RangeOverflowImpossibleCarry));
+        assert!(soundness_check(&p, &report, 2048, 11).is_empty());
+    }
+
+    #[test]
+    fn exact_ranges_fold_to_constants() {
+        let p = plan(PudOp::Add { width: 4 });
+        let ranges = [OperandRange::exact(5), OperandRange::exact(9)];
+        let report = analyze_plan(&p, &ranges).unwrap();
+        let decoded = report
+            .out_bits
+            .iter()
+            .enumerate()
+            .fold(0u64, |acc, (j, b)| acc | (u64::from(b.known().unwrap()) << j));
+        assert_eq!(decoded, 14);
+        assert_eq!(report.narrowed_gates(), 0, "a constant plan needs no gates");
+        assert!(soundness_check(&p, &report, 16, 3).is_empty());
+    }
+
+    #[test]
+    fn bitwise_ops_fold_under_exact_single_bits() {
+        let and = plan(PudOp::Bitwise(BitwiseOp::And));
+        let ranges = [OperandRange::exact(0), OperandRange::full(1)];
+        let report = analyze_plan(&and, &ranges).unwrap();
+        assert_eq!(report.out_bits[0], BitVal::Zero);
+        assert!(report.has(DiagCode::ConstantOutputBit));
+        assert!(soundness_check(&and, &report, 8, 1).is_empty());
+        // OR with a known 1 is constant 1.
+        let or = plan(PudOp::Bitwise(BitwiseOp::Or));
+        let report =
+            analyze_plan(&or, &[OperandRange::exact(1), OperandRange::full(1)]).unwrap();
+        assert_eq!(report.out_bits[0], BitVal::One);
+    }
+
+    #[test]
+    fn syntactic_const_outputs_do_not_fire_p009() {
+        // mul1's high output bit is a literal `Const(false)` in the IR;
+        // P009 must only report *discovered* constants.
+        let p = plan(PudOp::Mul { width: 1 });
+        let full = vec![OperandRange::full(1); 2];
+        let report = analyze_plan(&p, &full).unwrap();
+        assert!(!report.has(DiagCode::ConstantOutputBit), "{:?}", report.diagnostics);
+        assert!(report.is_clean());
+    }
+
+    #[test]
+    fn bad_ranges_are_typed_errors() {
+        let p = plan(PudOp::Add { width: 4 });
+        let err = analyze_plan(&p, &[OperandRange::full(4)]).unwrap_err();
+        assert!(matches!(err, PudError::ArityMismatch { expected: 2, got: 1 }));
+        let err =
+            analyze_plan(&p, &[OperandRange::new(0, 99), OperandRange::full(4)]).unwrap_err();
+        assert!(matches!(err, PudError::RangeViolation { operand: 0, value: 99, .. }), "{err:?}");
+    }
+
+    #[test]
+    fn report_renders_json() {
+        let p = plan(PudOp::Add { width: 2 });
+        let report =
+            analyze_plan(&p, &[OperandRange::exact(1), OperandRange::full(2)]).unwrap();
+        let j = report.to_json();
+        assert!(j.contains("\"op\":\"add2\""), "{j}");
+        assert!(j.contains("\"ranges\":[\"1:1\",\"0:3\"]"), "{j}");
+        assert!(j.contains("\"gates\":"), "{j}");
+        assert!(j.contains("\"narrowed_gates\":"), "{j}");
+        assert!(j.contains("\"diagnostics\":["), "{j}");
+    }
+}

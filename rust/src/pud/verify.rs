@@ -31,7 +31,10 @@
 //!   so an unverified hand-assembled plan is rejected at admission;
 //! * `pudtune lint` verifies the built-in [`PudOp`] vocabulary and
 //!   user-supplied circuit files ([`parse_circuit`]), exiting nonzero
-//!   on any diagnostic.
+//!   on any error-severity diagnostic (warnings too with
+//!   `--deny-warnings`);
+//! * the range analysis (`pud::ranges`) reports its findings through
+//!   the same catalogue (P009–P012, all warnings).
 
 use crate::pud::graph::{Gate, MajCircuit, Signal};
 use crate::pud::plan::{PudError, PudOp, WorkloadPlan};
@@ -64,10 +67,26 @@ pub enum DiagCode {
     /// P008 — gate arity, signal range, operand shape or output count
     /// is inconsistent with the op.
     ShapeMismatch,
+    /// P009 — range analysis proves an output bit constant for every
+    /// operand inside the declared ranges (`pud::ranges`).
+    ConstantOutputBit,
+    /// P010 — a gate is consumed syntactically but range analysis
+    /// proves it unobservable at any output (folded constant/alias or
+    /// feeding only folded logic). Disjoint from P005, which flags
+    /// gates nothing consumes at all.
+    DeadGateByDataflow,
+    /// P011 — the value-interval refinement proves a carry/overflow
+    /// output bit impossible where the bit lattice alone could not.
+    RangeOverflowImpossibleCarry,
+    /// P012 — the plan admits a strictly smaller narrowed variant
+    /// under the declared operand ranges
+    /// (`WorkloadPlan::narrowed`).
+    NarrowingOpportunity,
 }
 
 /// Diagnostic severity. Errors block compilation and admission;
-/// warnings still fail `pudtune lint` (a clean vocabulary has zero
+/// warnings are advisory — `pudtune lint` tolerates them unless
+/// `--deny-warnings` is given (the built-in vocabulary has zero
 /// diagnostics of either severity).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Severity {
@@ -77,7 +96,7 @@ pub enum Severity {
 
 impl DiagCode {
     /// Every code, in numeric order.
-    pub const ALL: [DiagCode; 8] = [
+    pub const ALL: [DiagCode; 12] = [
         DiagCode::UseAfterDeath,
         DiagCode::DoubleFrac,
         DiagCode::ReadUninitialized,
@@ -86,6 +105,10 @@ impl DiagCode {
         DiagCode::UnrestoredExit,
         DiagCode::DeathListMismatch,
         DiagCode::ShapeMismatch,
+        DiagCode::ConstantOutputBit,
+        DiagCode::DeadGateByDataflow,
+        DiagCode::RangeOverflowImpossibleCarry,
+        DiagCode::NarrowingOpportunity,
     ];
 
     /// The stable `P###` code string.
@@ -99,6 +122,10 @@ impl DiagCode {
             DiagCode::UnrestoredExit => "P006",
             DiagCode::DeathListMismatch => "P007",
             DiagCode::ShapeMismatch => "P008",
+            DiagCode::ConstantOutputBit => "P009",
+            DiagCode::DeadGateByDataflow => "P010",
+            DiagCode::RangeOverflowImpossibleCarry => "P011",
+            DiagCode::NarrowingOpportunity => "P012",
         }
     }
 
@@ -119,6 +146,18 @@ impl DiagCode {
                 "death lists disagree with independent last-use analysis"
             }
             DiagCode::ShapeMismatch => "gate arity / signal range / operand shape mismatch",
+            DiagCode::ConstantOutputBit => {
+                "output bit is provably constant under the declared operand ranges"
+            }
+            DiagCode::DeadGateByDataflow => {
+                "gate is consumed but unobservable at any output under the declared ranges"
+            }
+            DiagCode::RangeOverflowImpossibleCarry => {
+                "carry/overflow bit is impossible by value-interval analysis"
+            }
+            DiagCode::NarrowingOpportunity => {
+                "plan admits a strictly smaller width-narrowed variant for these ranges"
+            }
         }
     }
 
@@ -139,14 +178,31 @@ impl DiagCode {
             DiagCode::ShapeMismatch => {
                 "use 3- or 5-ary gates over in-range, already-defined signals"
             }
+            DiagCode::ConstantOutputBit => {
+                "serve a narrowed variant (WorkloadPlan::narrowed) or widen the declared ranges"
+            }
+            DiagCode::DeadGateByDataflow => {
+                "narrow the plan to strip the gate, or widen the declared ranges"
+            }
+            DiagCode::RangeOverflowImpossibleCarry => {
+                "serve a narrowed variant; the carry chain above this bit is unnecessary"
+            }
+            DiagCode::NarrowingOpportunity => {
+                "register the narrowed variant in the PlanCache under its range class"
+            }
         }
     }
 
-    /// Default severity: everything except a dead gate blocks
-    /// compilation/admission.
+    /// Default severity: the charge-state violations block
+    /// compilation/admission; the dead-gate and range-analysis
+    /// findings (P005, P009–P012) are advisory.
     pub fn severity(&self) -> Severity {
         match self {
-            DiagCode::DeadGate => Severity::Warning,
+            DiagCode::DeadGate
+            | DiagCode::ConstantOutputBit
+            | DiagCode::DeadGateByDataflow
+            | DiagCode::RangeOverflowImpossibleCarry
+            | DiagCode::NarrowingOpportunity => Severity::Warning,
             _ => Severity::Error,
         }
     }
@@ -1225,7 +1281,10 @@ mod tests {
         let codes: Vec<&str> = DiagCode::ALL.iter().map(|c| c.code()).collect();
         assert_eq!(
             codes,
-            vec!["P001", "P002", "P003", "P004", "P005", "P006", "P007", "P008"]
+            vec![
+                "P001", "P002", "P003", "P004", "P005", "P006", "P007", "P008", "P009", "P010",
+                "P011", "P012"
+            ]
         );
         for c in DiagCode::ALL {
             assert!(!c.meaning().is_empty());

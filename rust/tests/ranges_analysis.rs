@@ -1,0 +1,180 @@
+//! Integration suite for the bit-level range analysis
+//! (`pud::ranges`): exhaustive in-range equivalence for every
+//! vocabulary op up to width 6, randomized add8/mul8 property tests,
+//! the clean full-width vocabulary the CI `analyze-vocabulary` step
+//! pins, and the transparent narrowed-variant substitution on both the
+//! engine batch path and `RecalibService::serve_workload`.
+
+use pudtune::calib::algorithm::{CalibParams, Calibration, NativeEngine};
+use pudtune::calib::engine::{ComputeEngine, ComputeRequest};
+use pudtune::calib::lattice::{FracConfig, OffsetLattice};
+use pudtune::config::device::DeviceConfig;
+use pudtune::coordinator::service::{RecalibService, ServiceConfig};
+use pudtune::dram::geometry::SubarrayId;
+use pudtune::pud::plan::{PudOp, WorkloadPlan};
+use pudtune::pud::ranges::{analyze_plan, soundness_check, OperandRange};
+use pudtune::util::rng::Rng;
+use std::sync::Arc;
+
+fn compiled(op: PudOp) -> WorkloadPlan {
+    WorkloadPlan::compile(op).unwrap()
+}
+
+fn quiet_cfg() -> DeviceConfig {
+    DeviceConfig {
+        sigma_sa: 1e-6,
+        tail_weight: 0.0,
+        sigma_noise: 1e-6,
+        ..DeviceConfig::default()
+    }
+}
+
+fn random_range(rng: &mut Rng, width: usize) -> OperandRange {
+    let hi = OperandRange::full(width).hi;
+    OperandRange::new(rng.below(hi + 1), rng.below(hi + 1))
+}
+
+#[test]
+fn the_full_width_vocabulary_analyzes_clean() {
+    // Full ranges fold nothing: no constant bits, no stranded gates,
+    // no narrowing — every compiled gate earns its place. This is the
+    // contract the CI `analyze-vocabulary` step asserts over JSON.
+    for op in PudOp::vocabulary(6) {
+        let plan = compiled(op);
+        let full: Vec<OperandRange> = (0..plan.op.n_operands())
+            .map(|_| OperandRange::full(plan.op.operand_width()))
+            .collect();
+        let report = analyze_plan(&plan, &full).unwrap();
+        assert!(
+            report.is_clean(),
+            "{}: full-width analysis must be clean, got {:?}",
+            plan.op.label(),
+            report.diagnostics
+        );
+        assert_eq!(
+            report.narrowed_gates(),
+            report.gates,
+            "{}: nothing to narrow at full width",
+            plan.op.label()
+        );
+        assert!(
+            soundness_check(&plan, &report, 1024, 0x50E).is_empty(),
+            "{}: the (vacuous) full-width claims must be sound",
+            plan.op.label()
+        );
+    }
+}
+
+#[test]
+fn narrowing_is_exhaustively_sound_up_to_width_6() {
+    // Every vocabulary op up to width 6, random declared ranges, and
+    // an exhaustive walk of every in-range operand tuple: the narrowed
+    // circuit and every claimed-constant bit must agree with the
+    // original circuit on all of them.
+    let mut rng = Rng::new(0x6A11);
+    for op in PudOp::vocabulary(6) {
+        let plan = compiled(op);
+        let w = plan.op.operand_width();
+        for _ in 0..4 {
+            let ranges: Vec<OperandRange> =
+                (0..plan.op.n_operands()).map(|_| random_range(&mut rng, w)).collect();
+            let report = analyze_plan(&plan, &ranges).unwrap();
+            let findings = soundness_check(&plan, &report, usize::MAX, 0);
+            assert!(
+                findings.is_empty(),
+                "{} under {ranges:?}: {findings:?}",
+                plan.op.label()
+            );
+            // The narrowed artifact re-verifies as a full plan.
+            let narrowed = plan.narrowed(&ranges).expect("narrowing re-verifies");
+            assert!(narrowed.is_verified());
+            assert!(narrowed.circuit.gates.len() <= plan.circuit.gates.len());
+        }
+    }
+}
+
+#[test]
+fn add8_and_mul8_hold_on_random_ranges_and_hit_the_known_gate_counts() {
+    // Randomized property test at a width too wide to enumerate.
+    let mut rng = Rng::new(0x8A8);
+    for op in [PudOp::Add { width: 8 }, PudOp::Mul { width: 8 }] {
+        let plan = compiled(op);
+        for round in 0..5 {
+            let ranges = vec![random_range(&mut rng, 8), random_range(&mut rng, 8)];
+            let report = analyze_plan(&plan, &ranges).unwrap();
+            let findings = soundness_check(&plan, &report, 2048, 0xF00 + round);
+            assert!(
+                findings.is_empty(),
+                "{} under {ranges:?}: {findings:?}",
+                plan.op.label()
+            );
+        }
+    }
+    // The canonical skewed class: nibble-valued operands in 8-bit
+    // plans. The gate counts are part of the bench uplift story.
+    let nibble = [OperandRange::new(0, 15); 2];
+    let add = analyze_plan(&compiled(PudOp::Add { width: 8 }), &nibble).unwrap();
+    assert_eq!((add.gates, add.narrowed_gates()), (16, 8), "add8 halves");
+    let mul = analyze_plan(&compiled(PudOp::Mul { width: 8 }), &nibble).unwrap();
+    assert_eq!((mul.gates, mul.narrowed_gates()), (176, 40), "mul8 drops 4.4x");
+}
+
+#[test]
+fn declared_ranges_substitute_narrowed_plans_transparently() {
+    // Two identical requests, one carrying declared ranges: the engine
+    // must substitute the narrowed variant (fewer gates, same
+    // interface) and produce bit-identical outputs.
+    let cfg = quiet_cfg();
+    let eng = NativeEngine::new(cfg.clone());
+    let cols = 16;
+    let plan = Arc::new(compiled(PudOp::Add { width: 8 }));
+    let mut rng = Rng::new(0xE2E);
+    let operands: Vec<Vec<u64>> =
+        (0..2).map(|_| (0..cols).map(|_| rng.below(16)).collect()).collect();
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let calib = Calibration::uniform(OffsetLattice::build(&cfg, &fc), cols);
+    let wide = ComputeRequest::new(plan, 128, cols, 0x5EED, calib, operands.clone());
+    let narrow = wide.clone().with_ranges(vec![OperandRange::new(0, 15); 2]);
+    let a = eng.execute_one(&wide).unwrap();
+    let b = eng.execute_one(&narrow).unwrap();
+    assert_eq!(a.outputs, b.outputs, "narrowed substitution must be bit-identical");
+    for (col, &out) in a.outputs.iter().enumerate() {
+        assert_eq!(out, operands[0][col] + operands[1][col], "col {col}");
+    }
+}
+
+#[test]
+fn serve_workload_picks_narrowed_variants_and_counts_them() {
+    let cfg = quiet_cfg();
+    let svc = ServiceConfig {
+        serve_samples: 256,
+        params: CalibParams::quick(),
+        ..ServiceConfig::default()
+    };
+    let s = RecalibService::new(cfg.clone(), svc, NativeEngine::new(cfg)).unwrap();
+    let cols = 16;
+    s.register(SubarrayId::new(0, 0, 0), 64, cols, 0x5EED);
+    s.run_pending(usize::MAX);
+
+    // Nibble-valued operands through an 8-bit op: the serve derives
+    // the range class from the values and picks the narrowed variant.
+    let op = PudOp::Add { width: 8 };
+    let operands: Vec<Vec<u64>> = (0..2u64)
+        .map(|i| (0..cols as u64).map(|c| (c * (i + 3)) % 16).collect())
+        .collect();
+    let outs = s.serve_workload(op.clone(), &operands).unwrap();
+    assert_eq!(s.metrics.counter("plan.narrow.served"), 1);
+    for o in &outs {
+        assert!(o.result.is_ok(), "bank must serve: {:?}", o.result);
+        assert_eq!(
+            o.golden_correct, o.active_cols,
+            "narrowed serving must stay golden-correct"
+        );
+    }
+
+    // Full-width operands do not narrow: the counter stays put.
+    let full: Vec<Vec<u64>> =
+        (0..2).map(|_| (0..cols as u64).map(|c| 128 + c).collect()).collect();
+    s.serve_workload(op, &full).unwrap();
+    assert_eq!(s.metrics.counter("plan.narrow.served"), 1);
+}

@@ -7,6 +7,13 @@
 //! Plan-level mutants go through `WorkloadPlan::assemble`, which never
 //! marks its result verified — exactly the hole a hand-crafted or
 //! bit-rotted plan would arrive through.
+//!
+//! Width-narrowed variants (`pud::ranges`) get the same treatment: a
+//! narrowed plan with a corrupted death list is rejected like any
+//! other mutant, a narrowing pipeline that skips the dead-gate strip
+//! re-reports P009/P010/P012 on re-analysis, and a lying range class
+//! is caught both by the concrete soundness cross-check and by the
+//! typed range validation on the serving path.
 
 use pudtune::calib::algorithm::{CalibParams, Calibration, NativeEngine};
 use pudtune::calib::engine::{ComputeEngine, ComputeRequest};
@@ -244,6 +251,105 @@ fn p008_shape_mutations_are_caught() {
     let report = verify::verify_circuit(&c);
     assert!(report.has(DiagCode::ShapeMismatch), "{report}");
     assert!(report.errors().count() >= 2, "both shape mutations must surface\n{report}");
+}
+
+#[test]
+fn corrupted_narrowed_plans_are_rejected_like_any_other_mutant() {
+    use pudtune::pud::ranges::OperandRange;
+    let base = compiled(PudOp::Add { width: 8 });
+    let narrow =
+        base.narrowed(&[OperandRange::new(0, 15); 2]).expect("nibble ranges narrow add8");
+    assert!(narrow.is_verified());
+    assert!(narrow.circuit.gates.len() < base.circuit.gates.len());
+
+    // Mutation: widen a death list — release one signal a second time
+    // in a later gate's list. The replay reads/releases a dead row
+    // (P001) and the lists disagree with liveness (P007).
+    let mut deaths = narrow.death_lists().to_vec();
+    let first = (0..deaths.len())
+        .find(|&g| !deaths[g].is_empty())
+        .expect("a narrowed adder still releases rows");
+    let last = (0..deaths.len()).rev().find(|&g| g > first).expect("multiple gates");
+    let sig = deaths[first][0];
+    deaths[last].push(sig);
+    let mutant = reassemble(&narrow, deaths, narrow.peak_rows);
+    assert!(!mutant.is_verified(), "assemble never marks its result verified");
+    let report = verify::verify_plan(&mutant);
+    assert!(
+        report.has(DiagCode::UseAfterDeath) || report.has(DiagCode::DeathListMismatch),
+        "widened death list must be P001/P007\n{report}"
+    );
+    match verify::admit(&mutant) {
+        Err(PudError::Verification { code, .. }) => assert!(code.starts_with('P'), "{code}"),
+        other => panic!("corrupted narrowed plan must be rejected, got {other:?}"),
+    }
+}
+
+#[test]
+fn dropped_dead_gate_strip_is_recaught_on_reanalysis() {
+    use pudtune::pud::ranges::{analyze_plan, OperandRange};
+    // A corrupt narrowing pipeline that "forgot" the strip would ship
+    // the original circuit as the narrowed variant. Re-analysis under
+    // the same ranges immediately re-reports the stranded gates
+    // (P010), the constant output bits (P009) and the missed strip
+    // (P012) — while an honestly narrowed plan re-analyzes clean and
+    // idempotent.
+    let base = compiled(PudOp::Add { width: 8 });
+    let nibble = [OperandRange::new(0, 15); 2];
+    let skipped = analyze_plan(&base, &nibble).unwrap();
+    assert!(skipped.has(DiagCode::ConstantOutputBit), "high bits are provably zero");
+    assert!(skipped.has(DiagCode::DeadGateByDataflow), "the high carry chain is stranded");
+    assert!(skipped.has(DiagCode::NarrowingOpportunity), "the strip was skipped");
+    assert!(skipped.narrowed_gates() < skipped.gates);
+
+    let honest = base.narrowed(&nibble).unwrap();
+    let again = analyze_plan(&honest, &nibble).unwrap();
+    assert!(again.is_clean(), "honest narrowing leaves nothing to report\n{again:?}");
+    assert_eq!(again.narrowed_gates(), again.gates, "narrowing is idempotent");
+}
+
+#[test]
+fn lying_ranges_are_caught_concretely_and_typed() {
+    use pudtune::pud::ranges::{analyze_plan, soundness_check, OperandRange};
+    let base = compiled(PudOp::Add { width: 8 });
+    let nibble = [OperandRange::new(0, 15); 2];
+    let report = analyze_plan(&base, &nibble).unwrap();
+    // The honest report survives an exhaustive in-range cross-check.
+    assert!(
+        soundness_check(&base, &report, 512, 0x11E).is_empty(),
+        "honest nibble analysis must be sound"
+    );
+    // Forge the declared ranges wider than the analysis ran under —
+    // the concrete cross-check contradicts the claimed-constant bits
+    // on the first out-of-nibble operand pair it draws.
+    let mut lying = report.clone();
+    lying.ranges = vec![OperandRange::new(0, 255); 2];
+    let findings = soundness_check(&base, &lying, 512, 0x11E);
+    assert!(!findings.is_empty(), "a lying range class must be caught as unsound");
+
+    // On the serving path the lie is typed: operands outside the
+    // declared ranges are rejected before any narrowed substitution.
+    let cfg = DeviceConfig {
+        sigma_sa: 1e-6,
+        tail_weight: 0.0,
+        sigma_noise: 1e-6,
+        ..DeviceConfig::default()
+    };
+    let eng = NativeEngine::new(cfg.clone());
+    let cols = 8;
+    let fc = FracConfig::pudtune([2, 1, 0]);
+    let calib = Calibration::uniform(OffsetLattice::build(&cfg, &fc), cols);
+    let mut operands: Vec<Vec<u64>> =
+        (0..2).map(|_| (0..cols as u64).map(|c| c % 16).collect()).collect();
+    operands[1][3] = 200; // outside the declared [0, 15]
+    let req = ComputeRequest::new(Arc::new(base), 128, cols, 0x5EED, calib, operands)
+        .with_ranges(vec![OperandRange::new(0, 15); 2]);
+    let err = eng.execute_one(&req).unwrap_err();
+    let rendered = format!("{err:#}");
+    assert!(
+        rendered.contains("violates the declared range"),
+        "out-of-range operand must be a typed rejection: {rendered}"
+    );
 }
 
 #[test]

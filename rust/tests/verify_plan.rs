@@ -181,7 +181,11 @@ fn reports_and_diagnostics_render_well_formed_json() {
 
     // Every code renders a distinct, stable identifier with docs.
     let codes: Vec<&str> = DiagCode::ALL.iter().map(|c| c.code()).collect();
-    assert_eq!(codes, ["P001", "P002", "P003", "P004", "P005", "P006", "P007", "P008"]);
+    assert_eq!(
+        codes,
+        ["P001", "P002", "P003", "P004", "P005", "P006", "P007", "P008", "P009", "P010", "P011",
+         "P012"]
+    );
     for c in DiagCode::ALL {
         assert!(!c.meaning().is_empty() && !c.hint().is_empty());
     }
